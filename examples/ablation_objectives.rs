@@ -1,0 +1,116 @@
+//! Ablation example: the four layer-wise objectives head-to-head on one
+//! block, measuring the *layer-local* objective values the paper's Figure 2
+//! taxonomy is about — before any refinement, without full-model eval.
+//!
+//! Demonstrates the library's lower-level API: covariance accumulation,
+//! objective assembly, the Theorem 3.2 closed form, and objective_value.
+
+use aasvd::compress::layer::objective_value;
+use aasvd::compress::{compress_model, CovTriple, Method, Objective, ALL_OBJECTIVES};
+use aasvd::eval::Table;
+use aasvd::experiments::{setup, Knobs};
+use aasvd::util::cli::Args;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env("per-layer objective ablation on one block");
+    let knobs = Knobs::parse(&args, "small");
+    let ratio = args.f64("ratio", 0.6, "compression ratio");
+    args.finish_or_help();
+    let ctx = setup(&knobs)?;
+
+    // compress with the anchored objective so upstream blocks shift the
+    // inputs of the block we analyze
+    let method = Method::ablation(Objective::Anchored, None);
+    let cm = compress_model(&ctx.engine, &ctx.cfg, &ctx.params, &ctx.calib, &method, ratio)?;
+
+    // rebuild the covariance state of the *last* block's q/k/v tap by
+    // replaying calibration data through dense vs compressed streams
+    let last = ctx.cfg.n_layers - 1;
+    let mut xs = aasvd::compress::pipeline::embed_batches(&ctx.cfg, &ctx.params, &ctx.calib);
+    let mut xs_shift = xs.clone();
+    for i in 0..last {
+        let bp = aasvd::compress::pipeline::pack_block_params(&ctx.cfg, &ctx.params, i);
+        for x in xs.iter_mut() {
+            let out = ctx.engine.run(
+                &ctx.cfg.name,
+                "block_fwd",
+                &[aasvd::runtime::Value::F32(&bp), aasvd::runtime::Value::F32(x)],
+            )?;
+            *x = out[0].f32.clone();
+        }
+        for x in xs_shift.iter_mut() {
+            let out = ctx.engine.run(
+                &ctx.cfg.name,
+                "block_lr_fwd",
+                &[
+                    aasvd::runtime::Value::F32(&cm.blocks[i].factors.data),
+                    aasvd::runtime::Value::F32(&cm.blocks[i].masks.data),
+                    aasvd::runtime::Value::F32(x),
+                ],
+            )?;
+            *x = out[0].f32.clone();
+        }
+    }
+    // a_in taps of the last block on both streams
+    let bp = aasvd::compress::pipeline::pack_block_params(&ctx.cfg, &ctx.params, last);
+    let mut cov = CovTriple::new(ctx.cfg.d_model);
+    for (x, xsft) in xs.iter().zip(&xs_shift) {
+        let dense = ctx.engine.run(
+            &ctx.cfg.name,
+            "block_collect",
+            &[aasvd::runtime::Value::F32(&bp), aasvd::runtime::Value::F32(x)],
+        )?;
+        let comp = ctx.engine.run(
+            &ctx.cfg.name,
+            "block_lr_collect",
+            &[
+                aasvd::runtime::Value::F32(&cm.blocks[last].factors.data),
+                aasvd::runtime::Value::F32(&cm.blocks[last].masks.data),
+                aasvd::runtime::Value::F32(xsft),
+            ],
+        )?;
+        cov.add_chunk(&dense[1].f32, &comp[1].f32);
+    }
+
+    // solve wq under each objective; report the ANCHORED metric
+    // ‖W X − W' X'‖² for all of them (the quantity that matters downstream)
+    let (m, n) = ctx.cfg.linear_dims("wq");
+    let w = ctx.params.view(&format!("blocks.{last}.wq"));
+    let k = cm.allocation.rank_of("wq");
+    let mut table = Table::new(
+        &format!("objective ablation — block {last} wq, rank {k}"),
+        &["objective", "‖WX−W'X'‖²", "vs best"],
+    );
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    for obj in ALL_OBJECTIVES {
+        let factors = match obj.assemble(&cov) {
+            None => aasvd::compress::compress_layer_plain(w, m, n, k),
+            Some((c, s)) => aasvd::compress::compress_layer(w, m, n, &c, &s, k),
+        };
+        let err = objective_value(
+            w,
+            &factors.dense(),
+            m,
+            n,
+            &cov.s_orig,
+            &cov.c_cross,
+            &cov.s_shift,
+        );
+        rows.push((obj.name().to_string(), err));
+    }
+    let best = rows.iter().map(|(_, e)| *e).fold(f64::INFINITY, f64::min);
+    for (name, err) in rows {
+        table.row(vec![
+            name,
+            format!("{err:.4e}"),
+            format!("{:.2}x", err / best),
+        ]);
+    }
+    table.emit("ablation_objectives")?;
+    println!(
+        "(anchored solves exactly the reported metric, so it is optimal by \
+         Theorem 3.2 — the gap quantifies what ②/③ lose to distribution shift)"
+    );
+    Ok(())
+}

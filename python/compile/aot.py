@@ -1,0 +1,171 @@
+"""AOT lowering: JAX entry points -> HLO text artifacts + manifest.
+
+Interchange format is HLO *text* (not serialized HloModuleProto): jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Usage (from python/):
+    python -m compile.aot --out-dir ../artifacts --configs tiny,base
+    python -m compile.aot --out-dir ../artifacts --all
+
+The manifest (manifest.json) tells the Rust runtime everything it needs:
+per-config dims, flat parameter/factor layouts (name, shape, offset), and
+per-artifact input/output shape+dtype signatures.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import cov as cov_k
+from .kernels import lowrank as lowrank_k
+from .kernels import attention as attn_k
+
+# Calibration activations are streamed to the covariance kernels in chunks
+# of this many tokens (must divide batch*seq of every config; 4*16=64 is the
+# smallest batch*seq across configs and divides all others).
+COV_CHUNK = 256
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_json(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def layout_json(specs) -> list:
+    out, off = [], 0
+    for name, shape in specs:
+        size = int(np.prod(shape))
+        out.append({"name": name, "shape": list(shape), "offset": off})
+        off += size
+    return out
+
+
+def kernel_entry_points(cfg: M.Config):
+    """Pallas-kernel artifacts, shape-specialized per config."""
+    d, ff = cfg.d_model, cfg.d_ff
+    f32 = jnp.float32
+
+    def S(*shape, dtype=f32):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    eps = {}
+    for dim, tag in ((d, "d"), (ff, "ff")):
+        eps[f"cov_accum_{tag}"] = (
+            lambda c, x: (cov_k.cov_accum(c, x),),
+            [S(dim, dim), S(COV_CHUNK, dim)],
+        )
+    # cross-covariance X^T X' (anchored objective) — needed for d and ff
+    for dim, tag in ((d, "d"), (ff, "ff")):
+        eps[f"cross_cov_accum_{tag}"] = (
+            lambda c, a, b: (cov_k.cross_cov_accum(c, a, b),),
+            [S(dim, dim), S(COV_CHUNK, dim), S(COV_CHUNK, dim)],
+        )
+    # fused low-rank apply demo (integration test + bench target)
+    kq = d // 4
+    eps["lowrank_apply"] = (
+        lambda u, v, x: (lowrank_k.lowrank_apply(u, v, x),),
+        [S(d, kq), S(d, kq), S(COV_CHUNK, d)],
+    )
+    hd = cfg.head_dim
+    eps["attention_head"] = (
+        lambda q, k, v: (attn_k.attention_head(q, k, v, 1.0 / np.sqrt(hd)),),
+        [S(cfg.seq, hd), S(cfg.seq, hd), S(cfg.seq, hd)],
+    )
+    return eps
+
+
+def lower_config(cfg: M.Config, out_dir: str, verbose: bool = True) -> dict:
+    eps = dict(M.entry_points(cfg))
+    eps.update(kernel_entry_points(cfg))
+    artifacts = {}
+    for name, (fn, args) in eps.items():
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{cfg.name}__{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        artifacts[name] = {
+            "file": fname,
+            "inputs": [spec_json(a) for a in args],
+            "outputs": [spec_json(o) for o in lowered.out_info],
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        if verbose:
+            print(f"  [{cfg.name}] {name:>20s}: {len(text)/1e3:8.1f} kB "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+    return {
+        "dims": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads, "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff, "head_dim": cfg.head_dim,
+            "batch": cfg.batch, "seq": cfg.seq,
+            "refine_batch": cfg.refine_batch, "train_batch": cfg.train_batch,
+            "rope_theta": cfg.rope_theta, "cov_chunk": COV_CHUNK,
+        },
+        "param_layout": layout_json(M.param_specs(cfg)),
+        "block_param_layout": layout_json(M.block_param_specs(cfg, 0)),
+        "factor_layout": layout_json(M.factor_specs_one_block(cfg)),
+        "mask_layout": layout_json(M.mask_specs_one_block(cfg)),
+        "block_linears": [
+            {"name": n, "out_dim": M.linear_dims(cfg, n)[0],
+             "in_dim": M.linear_dims(cfg, n)[1], "kmax": M.kmax(cfg, n)}
+            for n in M.BLOCK_LINEARS
+        ],
+        "artifacts": artifacts,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,base",
+                    help="comma-separated config names")
+    ap.add_argument("--all", action="store_true",
+                    help="lower every config in model.CONFIGS")
+    args = ap.parse_args()
+
+    names = list(M.CONFIGS) if args.all else args.configs.split(",")
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"version": 1, "configs": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    t0 = time.time()
+    for name in names:
+        cfg = M.CONFIGS[name]
+        print(f"lowering config '{name}' "
+              f"(d={cfg.d_model}, L={cfg.n_layers}, ff={cfg.d_ff})",
+              flush=True)
+        manifest["configs"][name] = lower_config(cfg, args.out_dir)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {manifest_path} ({time.time()-t0:.0f}s total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Layer-1 Pallas kernel: flash-style causal attention (single head).
+
+Used by the runtime integration test + kernel benches; the full-model HLO
+artifacts use the jnp attention (XLA fuses it well on CPU), but this kernel
+demonstrates the paper-relevant point that the compressed models' attention
+remains a standard dense kernel — factorization only touches the
+projections.
+
+Hardware adaptation of GPU flash attention: the (q_tiles, kv_tiles) grid
+streams K/V tiles through VMEM while the running max / normalizer / output
+accumulator stay resident in VMEM scratch across the kv axis (kv fastest).
+Causality is handled per-tile via global index comparison, skipping nothing
+(no masking shortcut) to keep the schedule static.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .cov import pick_block
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale, bq, bkv):
+    qi = pl.program_id(0)
+    ki = pl.program_id(1)
+    nkv = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    # causal mask on global indices
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    kpos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == nkv - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...] / l_ref[...]
+
+
+def attention_head(q, k, v, scale, *, block_q: int | None = None,
+                   block_kv: int | None = None, interpret: bool = True):
+    """Causal single-head attention. q,k,v: [t, hd] -> [t, hd]."""
+    t, hd = q.shape
+    bq = block_q or pick_block(t, 64)
+    bkv = block_kv or pick_block(t, 64)
+    grid = (t // bq, t // bkv)
+    import functools
+    kern = functools.partial(_flash_kernel, scale=scale, bq=bq, bkv=bkv)
+    scratch = [
+        pltpu.VMEM((bq, 1), jnp.float32),   # running max
+        pltpu.VMEM((bq, 1), jnp.float32),   # running normalizer
+        pltpu.VMEM((bq, hd), jnp.float32),  # output accumulator
+    ]
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, hd), lambda i, j: (i, 0)),
+            pl.BlockSpec((bkv, hd), lambda i, j: (j, 0)),
+            pl.BlockSpec((bkv, hd), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, hd), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, hd), jnp.float32),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(q, k, v)

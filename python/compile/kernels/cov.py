@@ -1,0 +1,80 @@
+"""Layer-1 Pallas kernel: streaming covariance accumulation.
+
+The covariance matrices S = B B^T and C = A B^T (paper Algorithm 1, step 2)
+are the data-movement hot spot of AA-SVD's compression path: activations are
+huge (l = N_cal * seq tokens) while the result is a fixed d x d matrix.
+
+Hardware adaptation (paper used CUDA/cuBLAS outer-product streaming through
+SMEM): we tile the token axis into VMEM-sized chunks with BlockSpec and keep
+the C tile resident across the reduction axis of the grid — the output block
+index_map ignores the token-grid coordinate, so Pallas revisits the same VMEM
+tile while the MXU accumulates X_tile^T X_tile. HBM traffic is O(l*d) reads
+plus a single O(d^2) write, instead of O(d^2 * l / l_tile) for a naive
+blocked GEMM that spills partial sums.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are identical, and real-TPU efficiency is estimated
+analytically in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pick_block(dim: int, target: int = 128) -> int:
+    """Largest divisor of `dim` that is <= target (VMEM tile sizing)."""
+    for b in range(min(dim, target), 0, -1):
+        if dim % b == 0:
+            return b
+    return dim
+
+
+def _cov_kernel(c_ref, xi_ref, xj_ref, o_ref):
+    """One (i, j, l) grid step: o[i,j] (+)= x_l[:, i]^T x_l[:, j]."""
+    li = pl.program_id(2)
+
+    @pl.when(li == 0)
+    def _init():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] += jnp.dot(
+        xi_ref[...].T, xj_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def cov_accum(c, x, *, block_d: int | None = None, block_l: int | None = None,
+              interpret: bool = True):
+    """C + X^T X with X: [l, d] (rows = tokens), C: [d, d]."""
+    return cross_cov_accum(c, x, x, block_d=block_d, block_l=block_l,
+                           interpret=interpret)
+
+
+def cross_cov_accum(c, a, b, *, block_d: int | None = None,
+                    block_l: int | None = None, interpret: bool = True):
+    """C + A^T B with A: [l, da], B: [l, db], C: [da, db].
+
+    A == B gives the plain covariance; A = original activations X and
+    B = shifted activations X' gives the anchored cross term.
+    """
+    l, da = a.shape
+    _, db = b.shape
+    assert c.shape == (da, db) and b.shape[0] == l
+    bi = block_d or pick_block(da)
+    bj = block_d or pick_block(db)
+    bl = block_l or pick_block(l, 256)
+    grid = (da // bi, db // bj, l // bl)
+    return pl.pallas_call(
+        _cov_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, bj), lambda i, j, k: (i, j)),   # C (init)
+            pl.BlockSpec((bl, bi), lambda i, j, k: (k, i)),   # A tile
+            pl.BlockSpec((bl, bj), lambda i, j, k: (k, j)),   # B tile
+        ],
+        out_specs=pl.BlockSpec((bi, bj), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((da, db), jnp.float32),
+        interpret=interpret,
+    )(c, a, b)

@@ -1,0 +1,63 @@
+"""Layer-1 Pallas kernel: fused low-rank linear  y = x V U^T.
+
+This is the inference hot spot of every SVD-compressed model: each dense
+W[m,n] is replaced by U[m,k] V[n,k]^T and the whole point of factorization
+(paper §B.3) is that the rank-k intermediate z = V^T x never needs to hit
+HBM.
+
+Hardware adaptation: the CUDA version fuses the two GEMMs inside one
+threadblock, staging z in shared memory. Here the z tile lives in VMEM
+scratch: the grid is (l_tiles, m_tiles) with the m axis fastest; at m==0 we
+compute z = x_tile V once per l tile (first MXU pass) and every m step then
+consumes the resident scratch for y_tile = z U_tile^T (second MXU pass).
+BlockSpec expresses the HBM<->VMEM schedule the paper's GPU kernels express
+with threadblock tiling.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .cov import pick_block
+
+
+def _lowrank_kernel(x_ref, v_ref, u_ref, o_ref, z_ref):
+    mi = pl.program_id(1)
+
+    @pl.when(mi == 0)
+    def _stage():
+        # first GEMM: z = x_tile @ V   (staged in VMEM scratch)
+        z_ref[...] = jnp.dot(
+            x_ref[...], v_ref[...], preferred_element_type=jnp.float32
+        )
+
+    # second GEMM: y_tile = z @ U_tile^T, consuming the resident scratch
+    o_ref[...] = jnp.dot(
+        z_ref[...], u_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+def lowrank_apply(u, v, x, *, block_l: int | None = None,
+                  block_m: int | None = None, interpret: bool = True):
+    """y = (x @ V) @ U^T.  u: [m, k], v: [n, k], x: [l, n] -> y: [l, m]."""
+    m, k = u.shape
+    n, k2 = v.shape
+    l, n2 = x.shape
+    assert k == k2 and n == n2
+    bl = block_l or pick_block(l, 128)
+    bm = block_m or pick_block(m, 128)
+    grid = (l // bl, m // bm)
+    return pl.pallas_call(
+        _lowrank_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bl, n), lambda i, j: (i, 0)),   # x tile (full n)
+            pl.BlockSpec((n, k), lambda i, j: (0, 0)),    # V resident
+            pl.BlockSpec((bm, k), lambda i, j: (j, 0)),   # U tile
+        ],
+        out_specs=pl.BlockSpec((bl, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((l, m), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bl, k), jnp.float32)],
+        interpret=interpret,
+    )(x, v, u)

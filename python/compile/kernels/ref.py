@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every kernel in this package is validated against these references by
+python/tests/test_kernels.py across a sweep of shapes and seeds.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def cov_accum(c, x):
+    """C + X^T X over the token axis. x: [l, d] row-major tokens."""
+    return c + x.T @ x
+
+
+def cross_cov_accum(c, a, b):
+    """C + A^T B — the cross-covariance term of the anchored objective.
+
+    In the paper's column-major notation this is  C += A B^T  with
+    A = X (original inputs) and B = X' (shifted inputs).
+    """
+    return c + a.T @ b
+
+
+def lowrank_apply(u, v, x):
+    """y = x V U^T, i.e. the factorized linear (U V^T) applied to rows of x.
+
+    u: [m, k], v: [n, k], x: [l, n] -> [l, m].
+    """
+    return (x @ v) @ u.T
+
+
+def attention_head(q, k, v, scale):
+    """Single-head causal attention. q,k,v: [t, hd] -> [t, hd]."""
+    t = q.shape[0]
+    scores = (q @ k.T) * scale
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return probs @ v

@@ -1,0 +1,413 @@
+"""Layer-2: JAX model definitions for the AA-SVD reproduction.
+
+Everything here is build-time only: `aot.py` lowers the jitted entry points
+to HLO text that the Rust coordinator loads through PJRT. Python never runs
+on the request path.
+
+Model family: small LLaMA-style decoders (RMSNorm, RoPE, causal MHA, SwiGLU)
+with a byte-level vocabulary. Parameters travel as a single flat f32 vector
+whose layout (`param_specs`) is exported in the artifact manifest so the
+Rust side can pack/unpack by name.
+
+Low-rank ("compressed") blocks replace every linear W[m,n] by
+(U * mask) @ V^T with U[m,kmax], V[n,kmax], kmax = min(m,n). The rank mask
+zero-pads unused components so one HLO artifact serves every rank
+allocation; masking U also zeroes gradients of padded components during
+block-level refinement (Algorithm 2, step 9).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Config(NamedTuple):
+    """Transformer hyper-parameters (mirrors rust/src/model/config.rs)."""
+
+    name: str
+    vocab: int = 256
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 352
+    rope_theta: float = 10000.0
+    # shapes baked into the AOT artifacts
+    batch: int = 8        # calibration/eval batch
+    seq: int = 64         # sequence length
+    refine_batch: int = 32
+    train_batch: int = 16
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# The model-family configs double as stand-ins for the paper's model zoo
+# (LLaMA-7B ... Qwen-2.5-7B); see DESIGN.md §3.
+CONFIGS = {
+    "tiny": Config("tiny", d_model=64, n_heads=2, n_layers=2, d_ff=176,
+                   batch=4, seq=16, refine_batch=8, train_batch=8),
+    "small": Config("small", d_model=128, n_heads=4, n_layers=4, d_ff=352),
+    "base": Config("base", d_model=256, n_heads=4, n_layers=6, d_ff=704),
+    # Table-2 family (roles: llama2-13b, llama3-1b, llama3-8b, qwen2.5-7b)
+    "wide": Config("wide", d_model=320, n_heads=5, n_layers=7, d_ff=880),
+    "compact": Config("compact", d_model=96, n_heads=3, n_layers=5, d_ff=264),
+    "deep": Config("deep", d_model=192, n_heads=4, n_layers=8, d_ff=528),
+    "alt": Config("alt", d_model=256, n_heads=8, n_layers=6, d_ff=640),
+}
+
+# The seven linear layers inside every block, with (out, in) dims as a
+# function of (d_model, d_ff). Order is the canonical flattening order.
+BLOCK_LINEARS = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+def linear_dims(cfg: Config, name: str) -> tuple[int, int]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+        "w_gate": (f, d), "w_up": (f, d), "w_down": (d, f),
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# Flat parameter layout
+# ---------------------------------------------------------------------------
+
+def block_param_specs(cfg: Config, i: int) -> list:
+    d = cfg.d_model
+    specs = [(f"blocks.{i}.attn_norm", (d,))]
+    for name in ("wq", "wk", "wv", "wo"):
+        specs.append((f"blocks.{i}.{name}", linear_dims(cfg, name)))
+    specs.append((f"blocks.{i}.mlp_norm", (d,)))
+    for name in ("w_gate", "w_up", "w_down"):
+        specs.append((f"blocks.{i}.{name}", linear_dims(cfg, name)))
+    return specs
+
+
+def param_specs(cfg: Config) -> list:
+    specs = [("embed", (cfg.vocab, cfg.d_model))]
+    for i in range(cfg.n_layers):
+        specs.extend(block_param_specs(cfg, i))
+    specs.append(("final_norm", (cfg.d_model,)))
+    specs.append(("lm_head", (cfg.vocab, cfg.d_model)))
+    return specs
+
+
+def kmax(cfg: Config, name: str) -> int:
+    m, n = linear_dims(cfg, name)
+    return min(m, n)
+
+
+def factor_specs_one_block(cfg: Config) -> list:
+    """Trainable tensors of one compressed block, canonical order."""
+    d = cfg.d_model
+    specs = [("attn_norm", (d,)), ("mlp_norm", (d,))]
+    for name in BLOCK_LINEARS:
+        m, n = linear_dims(cfg, name)
+        k = kmax(cfg, name)
+        specs.append((f"{name}.u", (m, k)))
+        specs.append((f"{name}.v", (n, k)))
+    return specs
+
+
+def mask_specs_one_block(cfg: Config) -> list:
+    return [(f"{name}.mask", (kmax(cfg, name),)) for name in BLOCK_LINEARS]
+
+
+def _sizes(specs):
+    return [int(np.prod(s)) for _, s in specs]
+
+
+def unflatten(flat, specs):
+    """Split a flat vector into a dict of named, shaped arrays."""
+    out, off = {}, 0
+    for (name, shape), size in zip(specs, _sizes(specs)):
+        out[name] = jax.lax.dynamic_slice_in_dim(flat, off, size).reshape(shape)
+        off += size
+    return out
+
+
+def flatten(tree, specs):
+    return jnp.concatenate([tree[name].reshape(-1) for name, _ in specs])
+
+
+def total_size(specs) -> int:
+    return sum(_sizes(specs))
+
+
+# ---------------------------------------------------------------------------
+# Core ops
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, g, eps: float = 1e-5):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def rope_tables(cfg: Config, t: int):
+    hd = cfg.head_dim
+    inv = 1.0 / (cfg.rope_theta ** (np.arange(0, hd, 2) / hd))
+    ang = np.arange(t)[:, None] * inv[None, :]
+    return jnp.asarray(np.cos(ang), jnp.float32), jnp.asarray(np.sin(ang), jnp.float32)
+
+
+def apply_rope(x, cos, sin):
+    # x: [B, H, T, hd]; tables [T, hd/2]; pairs are (even, odd) interleaved.
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    return jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+
+
+def attention(cfg: Config, q, k, v):
+    # q,k,v: [B, T, d] -> causal MHA -> [B, T, d]
+    b, t, d = q.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    cos, sin = rope_tables(cfg, t)
+
+    def split(x):
+        return x.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(q), split(k), split(v)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    return out.transpose(0, 2, 1, 3).reshape(b, t, d)
+
+
+def _lin(x, w):
+    """y = W x with row-major W[m,n]; x[..., n] -> [..., m]."""
+    return x @ w.T
+
+
+def block_inner(cfg: Config, p: dict, x, prefix: str = ""):
+    """Dense block forward returning intermediate activations.
+
+    Returns (y, a_in, o_in, m_in, d_in): the inputs seen by q/k/v, wo,
+    gate/up, and w_down — exactly the X_j matrices Algorithm 2 collects.
+    """
+    g = lambda n: p[prefix + n]
+    a_in = rmsnorm(x, g("attn_norm"))
+    q, k, v = _lin(a_in, g("wq")), _lin(a_in, g("wk")), _lin(a_in, g("wv"))
+    o_in = attention(cfg, q, k, v)
+    h = x + _lin(o_in, g("wo"))
+    m_in = rmsnorm(h, g("mlp_norm"))
+    gate = jax.nn.silu(_lin(m_in, g("w_gate")))
+    d_in = gate * _lin(m_in, g("w_up"))
+    y = h + _lin(d_in, g("w_down"))
+    return y, a_in, o_in, m_in, d_in
+
+
+def block_fwd(cfg: Config, p: dict, x, prefix: str = ""):
+    return block_inner(cfg, p, x, prefix)[0]
+
+
+# ---------------------------------------------------------------------------
+# Low-rank (compressed) block
+# ---------------------------------------------------------------------------
+
+def _lr_lin(x, u, v, mask):
+    """y = (U*mask) (V^T x): rank-masked factorized linear."""
+    z = x @ v                      # [..., k]
+    return (z * mask) @ u.T        # [..., m]
+
+
+def block_lr_inner(cfg: Config, f: dict, masks: dict, x):
+    lr = lambda n, h: _lr_lin(h, f[f"{n}.u"], f[f"{n}.v"], masks[f"{n}.mask"])
+    a_in = rmsnorm(x, f["attn_norm"])
+    q, k, v = lr("wq", a_in), lr("wk", a_in), lr("wv", a_in)
+    o_in = attention(cfg, q, k, v)
+    h = x + lr("wo", o_in)
+    m_in = rmsnorm(h, f["mlp_norm"])
+    gate = jax.nn.silu(lr("w_gate", m_in))
+    d_in = gate * lr("w_up", m_in)
+    y = h + lr("w_down", d_in)
+    return y, a_in, o_in, m_in, d_in
+
+
+def block_lr_fwd(cfg: Config, f: dict, masks: dict, x):
+    return block_lr_inner(cfg, f, masks, x)[0]
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def model_hidden(cfg: Config, p: dict, tokens):
+    x = p["embed"][tokens]
+    for i in range(cfg.n_layers):
+        x = block_fwd(cfg, p, x, prefix=f"blocks.{i}.")
+    return rmsnorm(x, p["final_norm"])
+
+
+def model_fwd(cfg: Config, p: dict, tokens):
+    return _lin(model_hidden(cfg, p, tokens), p["lm_head"])
+
+
+def model_lr_fwd(cfg: Config, p: dict, fs: list, masks: list, tokens):
+    """Compressed model: dense embed/final_norm/head + low-rank blocks."""
+    x = p["embed"][tokens]
+    for f, m in zip(fs, masks):
+        x = block_lr_fwd(cfg, f, m, x)
+    return _lin(rmsnorm(x, p["final_norm"]), p["lm_head"])
+
+
+def nll(logits, targets):
+    """Per-token negative log-likelihood [B, T]."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return logz - tgt
+
+
+# ---------------------------------------------------------------------------
+# Fused AdamW steps (pretraining + block refinement)
+# ---------------------------------------------------------------------------
+
+def adamw_update(g, w, m, v, step, lr, wd=0.01, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * jnp.square(g)
+    t = step.astype(jnp.float32) + 1.0
+    mhat = m / (1 - b1 ** t)
+    vhat = v / (1 - b2 ** t)
+    w = w - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * w)
+    return w, m, v
+
+
+def train_step(cfg: Config, params, m, v, step, lr, tokens, targets):
+    specs = param_specs(cfg)
+
+    def loss_fn(flat):
+        logits = model_fwd(cfg, unflatten(flat, specs), tokens)
+        return jnp.mean(nll(logits, targets))
+
+    loss, g = jax.value_and_grad(loss_fn)(params)
+    params, m, v = adamw_update(g, params, m, v, step, lr, wd=0.01)
+    return params, m, v, loss
+
+
+def refine_step(cfg: Config, train, m, v, step, lr, masks_flat, x_shift, y_target):
+    """One AdamW step of block-level local refinement (Alg. 2, step 9).
+
+    Minimizes || L_i(X) - L'_i(X') ||^2 over the block's low-rank factors
+    and norm gains; `y_target = L_i(X)` is precomputed by the coordinator
+    from the *dense* block on *original* inputs, anchoring the objective.
+    """
+    fspecs = factor_specs_one_block(cfg)
+    mspecs = mask_specs_one_block(cfg)
+    masks = unflatten(masks_flat, mspecs)
+
+    def loss_fn(flat):
+        f = unflatten(flat, fspecs)
+        y = block_lr_fwd(cfg, f, masks, x_shift)
+        return jnp.mean(jnp.square(y - y_target))
+
+    loss, g = jax.value_and_grad(loss_fn)(train)
+    train, m, v = adamw_update(g, train, m, v, step, lr, wd=0.0)
+    return train, m, v, loss
+
+
+# ---------------------------------------------------------------------------
+# Jitted entry points (flat-vector signatures, ready for AOT lowering)
+# ---------------------------------------------------------------------------
+
+def entry_points(cfg: Config):
+    """name -> (fn, example_args). All tensor args are flat f32 / i32."""
+    specs = param_specs(cfg)
+    fspecs = factor_specs_one_block(cfg)
+    bspecs = block_param_specs(cfg, 0)
+    mspecs = mask_specs_one_block(cfg)
+    msize = total_size(mspecs)
+    psize, fsize, bsize = total_size(specs), total_size(fspecs), total_size(bspecs)
+    B, T, BR = cfg.batch, cfg.seq, cfg.refine_batch
+    d = cfg.d_model
+    f32, i32 = jnp.float32, jnp.int32
+
+    def S(*shape, dtype=f32):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    def strip(block_params):
+        # block params arrive with bare names (no "blocks.i." prefix)
+        return {name.split(".", 2)[-1]: val for name, val in block_params.items()}
+
+    def split_all(factors_all, masks_all):
+        fs, ms = [], []
+        for i in range(cfg.n_layers):
+            fflat = jax.lax.dynamic_slice_in_dim(factors_all, i * fsize, fsize)
+            mflat = jax.lax.dynamic_slice_in_dim(masks_all, i * msize, msize)
+            fs.append(unflatten(fflat, fspecs))
+            ms.append(unflatten(mflat, mspecs))
+        return fs, ms
+
+    def ep_model_fwd(params, tokens):
+        return (model_fwd(cfg, unflatten(params, specs), tokens),)
+
+    def ep_model_nll(params, tokens, targets):
+        logits = model_fwd(cfg, unflatten(params, specs), tokens)
+        return (nll(logits, targets),)
+
+    def ep_model_lr_nll(params, factors_all, masks_all, tokens, targets):
+        p = unflatten(params, specs)
+        fs, ms = split_all(factors_all, masks_all)
+        logits = model_lr_fwd(cfg, p, fs, ms, tokens)
+        return (nll(logits, targets),)
+
+    def ep_model_lr_fwd(params, factors_all, masks_all, tokens):
+        p = unflatten(params, specs)
+        fs, ms = split_all(factors_all, masks_all)
+        return (model_lr_fwd(cfg, p, fs, ms, tokens),)
+
+    def ep_block_fwd(bp, x):
+        return (block_fwd(cfg, strip(unflatten(bp, bspecs)), x),)
+
+    def ep_block_collect(bp, x):
+        return block_inner(cfg, strip(unflatten(bp, bspecs)), x)
+
+    def ep_block_lr_fwd(fp, masks_flat, x):
+        f = unflatten(fp, fspecs)
+        mk = unflatten(masks_flat, mspecs)
+        return (block_lr_fwd(cfg, f, mk, x),)
+
+    def ep_block_lr_collect(fp, masks_flat, x):
+        f = unflatten(fp, fspecs)
+        mk = unflatten(masks_flat, mspecs)
+        return block_lr_inner(cfg, f, mk, x)
+
+    def ep_refine_step(train, m, v, step, lr, masks_flat, x_shift, y_target):
+        return refine_step(cfg, train, m, v, step, lr, masks_flat,
+                           x_shift, y_target)
+
+    def ep_train_step(params, m, v, step, lr, tokens, targets):
+        return train_step(cfg, params, m, v, step, lr, tokens, targets)
+
+    return {
+        "model_fwd": (ep_model_fwd, [S(psize), S(B, T, dtype=i32)]),
+        "model_nll": (ep_model_nll,
+                      [S(psize), S(B, T, dtype=i32), S(B, T, dtype=i32)]),
+        "model_lr_nll": (ep_model_lr_nll,
+                         [S(psize), S(cfg.n_layers * fsize),
+                          S(cfg.n_layers * msize),
+                          S(B, T, dtype=i32), S(B, T, dtype=i32)]),
+        "model_lr_fwd": (ep_model_lr_fwd,
+                         [S(psize), S(cfg.n_layers * fsize),
+                          S(cfg.n_layers * msize), S(B, T, dtype=i32)]),
+        "block_fwd": (ep_block_fwd, [S(bsize), S(B, T, d)]),
+        "block_collect": (ep_block_collect, [S(bsize), S(B, T, d)]),
+        "block_lr_fwd": (ep_block_lr_fwd, [S(fsize), S(msize), S(B, T, d)]),
+        "block_lr_collect": (ep_block_lr_collect,
+                             [S(fsize), S(msize), S(B, T, d)]),
+        "refine_step": (ep_refine_step,
+                        [S(fsize), S(fsize), S(fsize), S(dtype=i32), S(),
+                         S(msize), S(BR, T, d), S(BR, T, d)]),
+        "train_step": (ep_train_step,
+                       [S(psize), S(psize), S(psize), S(dtype=i32), S(),
+                        S(cfg.train_batch, T, dtype=i32),
+                        S(cfg.train_batch, T, dtype=i32)]),
+    }

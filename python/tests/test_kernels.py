@@ -1,0 +1,148 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Shape/seed sweeps in the spirit of hypothesis: every parametrized case is a
+distinct (shape, seed) draw; tolerances are f32 matmul-accumulation level.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import attention, cov, lowrank, ref
+
+
+def rs(seed):
+    return np.random.RandomState(seed)
+
+
+TOL = dict(rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("d,l,seed", [
+    (16, 32, 0), (64, 256, 1), (96, 64, 2), (128, 512, 3),
+    (176, 256, 4), (256, 256, 5), (352, 512, 6),
+])
+def test_cov_accum_matches_ref(d, l, seed):
+    r = rs(seed)
+    c = r.randn(d, d).astype(np.float32)
+    x = r.randn(l, d).astype(np.float32)
+    got = cov.cov_accum(jnp.asarray(c), jnp.asarray(x))
+    want = ref.cov_accum(c, x)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("da,db,l,seed", [
+    (16, 16, 32, 0), (64, 96, 256, 1), (128, 64, 128, 2),
+    (176, 176, 256, 3), (96, 352, 256, 4),
+])
+def test_cross_cov_accum_matches_ref(da, db, l, seed):
+    r = rs(seed)
+    c = r.randn(da, db).astype(np.float32)
+    a = r.randn(l, da).astype(np.float32)
+    b = r.randn(l, db).astype(np.float32)
+    got = cov.cross_cov_accum(jnp.asarray(c), jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(got, ref.cross_cov_accum(c, a, b),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_cov_accum_zero_rows_are_noops():
+    """Zero-padding the token axis must not change the accumulator —
+    the Rust coordinator relies on this to pad final partial chunks."""
+    r = rs(7)
+    d = 64
+    c = r.randn(d, d).astype(np.float32)
+    x = np.zeros((256, d), np.float32)
+    x[:100] = r.randn(100, d)
+    got = cov.cov_accum(jnp.asarray(c), jnp.asarray(x))
+    want = ref.cov_accum(c, x[:100])
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_cov_accum_is_streamable():
+    """Accumulating two chunks == one covariance over the concatenation."""
+    r = rs(8)
+    d, l = 96, 128
+    x1 = r.randn(l, d).astype(np.float32)
+    x2 = r.randn(l, d).astype(np.float32)
+    c0 = np.zeros((d, d), np.float32)
+    step = cov.cov_accum(cov.cov_accum(jnp.asarray(c0), jnp.asarray(x1)),
+                         jnp.asarray(x2))
+    whole = ref.cov_accum(c0, np.concatenate([x1, x2]))
+    np.testing.assert_allclose(step, whole, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("m,n,k,l,seed", [
+    (32, 32, 8, 64, 0), (192, 128, 32, 256, 1), (128, 352, 64, 128, 2),
+    (352, 128, 128, 256, 3), (64, 64, 64, 64, 4),  # full rank
+    (256, 256, 16, 512, 5),
+])
+def test_lowrank_apply_matches_ref(m, n, k, l, seed):
+    r = rs(seed)
+    u = r.randn(m, k).astype(np.float32)
+    v = r.randn(n, k).astype(np.float32)
+    x = r.randn(l, n).astype(np.float32)
+    got = lowrank.lowrank_apply(jnp.asarray(u), jnp.asarray(v), jnp.asarray(x))
+    np.testing.assert_allclose(got, ref.lowrank_apply(u, v, x),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_lowrank_apply_rank_zero_mask_equivalent():
+    """Zeroed trailing factor columns = lower-rank product (padding trick)."""
+    r = rs(9)
+    m = n = 64
+    k, k_eff, l = 32, 8, 64
+    u = r.randn(m, k).astype(np.float32)
+    v = r.randn(n, k).astype(np.float32)
+    u[:, k_eff:] = 0.0
+    x = r.randn(l, n).astype(np.float32)
+    got = lowrank.lowrank_apply(jnp.asarray(u), jnp.asarray(v), jnp.asarray(x))
+    want = ref.lowrank_apply(u[:, :k_eff], v[:, :k_eff], x)
+    np.testing.assert_allclose(got, want, rtol=3e-3, atol=3e-3)
+
+
+@pytest.mark.parametrize("t,hd,seed", [
+    (16, 16, 0), (64, 32, 1), (128, 64, 2), (64, 48, 3), (256, 32, 4),
+])
+def test_attention_head_matches_ref(t, hd, seed):
+    r = rs(seed)
+    q = r.randn(t, hd).astype(np.float32)
+    k = r.randn(t, hd).astype(np.float32)
+    v = r.randn(t, hd).astype(np.float32)
+    scale = 1.0 / np.sqrt(hd)
+    got = attention.attention_head(jnp.asarray(q), jnp.asarray(k),
+                                   jnp.asarray(v), scale)
+    np.testing.assert_allclose(got, ref.attention_head(q, k, v, scale),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_attention_head_is_causal():
+    """Perturbing future keys/values must not change earlier outputs."""
+    r = rs(10)
+    t, hd = 64, 32
+    q = r.randn(t, hd).astype(np.float32)
+    k = r.randn(t, hd).astype(np.float32)
+    v = r.randn(t, hd).astype(np.float32)
+    scale = 1.0 / np.sqrt(hd)
+    base = np.asarray(attention.attention_head(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), scale))
+    k2, v2 = k.copy(), v.copy()
+    k2[40:] += 100.0
+    v2[40:] -= 100.0
+    pert = np.asarray(attention.attention_head(
+        jnp.asarray(q), jnp.asarray(k2), jnp.asarray(v2), scale))
+    np.testing.assert_allclose(base[:40], pert[:40], rtol=1e-5, atol=1e-5)
+    assert np.abs(base[41:] - pert[41:]).max() > 1e-3
+
+
+@pytest.mark.parametrize("block_l,block_m", [(32, 32), (64, 128), (128, 64)])
+def test_lowrank_apply_block_shape_invariance(block_l, block_m):
+    """Result must not depend on the VMEM tiling schedule."""
+    r = rs(11)
+    m, n, k, l = 128, 128, 32, 128
+    u = r.randn(m, k).astype(np.float32)
+    v = r.randn(n, k).astype(np.float32)
+    x = r.randn(l, n).astype(np.float32)
+    got = lowrank.lowrank_apply(jnp.asarray(u), jnp.asarray(v), jnp.asarray(x),
+                                block_l=block_l, block_m=block_m)
+    np.testing.assert_allclose(got, ref.lowrank_apply(u, v, x),
+                               rtol=3e-3, atol=3e-3)

@@ -1,0 +1,73 @@
+//! Compression-path perf: covariance accumulation (Rust f64 vs the Pallas
+//! cov_accum artifact through PJRT) and the CompressLayer closed form at
+//! `base` shapes. These are the hot loops of Algorithm 1/2.
+
+use aasvd::bench::Bench;
+use aasvd::compress::{compress_layer, CovTriple};
+use aasvd::runtime::{Engine, Value};
+use aasvd::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Rng::new(2);
+    let d = 256usize;
+    let chunk = 512usize;
+
+    let x: Vec<f32> = (0..chunk * d).map(|_| rng.normal()).collect();
+    let y: Vec<f32> = (0..chunk * d).map(|_| rng.normal()).collect();
+    let flops = 3.0 * 2.0 * (chunk * d * d) as f64; // three accumulators
+
+    b.run(
+        &format!("cov_triple rust f64 d={d} chunk={chunk}"),
+        Some(flops),
+        || {
+            let mut cov = CovTriple::new(d);
+            cov.add_chunk(&x, &y);
+            std::hint::black_box(cov);
+        },
+    );
+    b.run(
+        &format!("cov same-path rust f64 d={d} chunk={chunk}"),
+        Some(flops / 3.0),
+        || {
+            let mut cov = CovTriple::new(d);
+            cov.add_chunk_same(&x);
+            std::hint::black_box(cov);
+        },
+    );
+
+    // Pallas kernel through PJRT (includes literal transfer per call)
+    if let Ok(engine) = Engine::new("artifacts") {
+        if engine.entry("base").is_ok() {
+            let chunk_k = engine.entry("base").unwrap().cov_chunk;
+            let xk: Vec<f32> = (0..chunk_k * d).map(|_| rng.normal()).collect();
+            let c = vec![0f32; d * d];
+            engine.warmup("base", &["cov_accum_d"]).unwrap();
+            b.run(
+                &format!("cov pallas/pjrt d={d} chunk={chunk_k}"),
+                Some(2.0 * (chunk_k * d * d) as f64),
+                || {
+                    std::hint::black_box(
+                        engine
+                            .run("base", "cov_accum_d", &[Value::F32(&c), Value::F32(&xk)])
+                            .unwrap(),
+                    );
+                },
+            );
+        }
+    }
+
+    // full CompressLayer closed form at base attention / MLP shapes
+    for (m, n, k) in [(256usize, 256usize, 85usize), (704, 256, 128)] {
+        let w: Vec<f32> = (0..m * n).map(|_| rng.normal() * 0.02).collect();
+        let a: Vec<f32> = (0..4 * n * n).map(|_| rng.normal()).collect();
+        let mut cov = CovTriple::new(n);
+        cov.add_chunk_same(&a);
+        cov.mirror_same();
+        let (c, s) = aasvd::compress::Objective::Anchored.assemble(&cov).unwrap();
+        b.run(&format!("compress_layer {m}x{n} k={k}"), None, || {
+            std::hint::black_box(compress_layer(&w, m, n, &c, &s, k));
+        });
+    }
+    b.save("compress");
+}

@@ -1,0 +1,43 @@
+//! L3 perf: the pure-Rust linalg kernels on compression-realistic shapes
+//! (d_model=256, d_ff=704 from `base`; plus the 1k-class sizes).
+
+use aasvd::bench::Bench;
+use aasvd::linalg::{cholesky, eigh, svd_k, Matrix};
+use aasvd::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Rng::new(1);
+
+    for n in [256usize, 512, 704] {
+        let a = Matrix::random(n, n, &mut rng, 1.0);
+        let c = Matrix::random(n, n, &mut rng, 1.0);
+        let flops = 2.0 * (n as f64).powi(3);
+        b.run(&format!("matmul {n}x{n}"), Some(flops), || {
+            std::hint::black_box(a.matmul(&c));
+        });
+    }
+
+    for n in [256usize, 704] {
+        let s = Matrix::random_spd(n, &mut rng);
+        b.run(&format!("cholesky {n}"), Some((n as f64).powi(3) / 3.0), || {
+            std::hint::black_box(cholesky(&s).unwrap());
+        });
+    }
+
+    for n in [128usize, 256] {
+        let s = Matrix::random_spd(n, &mut rng);
+        b.run(&format!("eigh(jacobi) {n}"), None, || {
+            std::hint::black_box(eigh(&s));
+        });
+    }
+
+    // the actual CompressLayer SVD shapes: M is [m, n] with min side = d
+    for (m, n, k) in [(256usize, 256usize, 85usize), (704, 256, 128), (256, 704, 85)] {
+        let a = Matrix::random(m, n, &mut rng, 1.0);
+        b.run(&format!("svd_k {m}x{n} k={k}"), None, || {
+            std::hint::black_box(svd_k(&a, k));
+        });
+    }
+    b.save("linalg");
+}

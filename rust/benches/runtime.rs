@@ -1,0 +1,71 @@
+//! PJRT runtime perf: per-dispatch overhead and the block/model forward
+//! throughput that bounds calibration sweeps, refinement and serving.
+
+use aasvd::bench::Bench;
+use aasvd::model::init::init_params;
+use aasvd::model::Config;
+use aasvd::runtime::{Engine, Value};
+use aasvd::util::rng::Rng;
+
+fn main() {
+    let Ok(engine) = Engine::new("artifacts") else {
+        eprintln!("no artifacts — run `make artifacts` first");
+        return;
+    };
+    let mut b = Bench::new();
+    for cfg_name in ["tiny", "base"] {
+        if engine.entry(cfg_name).is_err() {
+            continue;
+        }
+        let cfg: Config = engine.entry(cfg_name).unwrap().config.clone();
+        let params = init_params(&cfg, &mut Rng::new(1));
+        let tokens: Vec<i32> = (0..cfg.batch * cfg.seq)
+            .map(|i| (i % cfg.vocab) as i32)
+            .collect();
+        engine
+            .warmup(cfg_name, &["model_fwd", "block_fwd", "model_nll"])
+            .unwrap();
+        let toks_per_call = (cfg.batch * cfg.seq) as f64;
+
+        b.run(
+            &format!("[{cfg_name}] model_fwd B={} T={}", cfg.batch, cfg.seq),
+            Some(toks_per_call),
+            || {
+                std::hint::black_box(
+                    engine
+                        .run(
+                            cfg_name,
+                            "model_fwd",
+                            &[Value::F32(&params.data), Value::I32(&tokens)],
+                        )
+                        .unwrap(),
+                );
+            },
+        );
+
+        let bp = aasvd::compress::pipeline::pack_block_params(&cfg, &params, 0);
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..cfg.batch * cfg.seq * cfg.d_model)
+            .map(|_| rng.normal() * 0.5)
+            .collect();
+        b.run(
+            &format!("[{cfg_name}] block_fwd"),
+            Some(toks_per_call),
+            || {
+                std::hint::black_box(
+                    engine
+                        .run(cfg_name, "block_fwd", &[Value::F32(&bp), Value::F32(&x)])
+                        .unwrap(),
+                );
+            },
+        );
+    }
+    let stats = engine.stats_snapshot();
+    println!(
+        "engine stats: {} executions, {:.1} MB h2d, {:.3}s exec total",
+        stats.executions,
+        stats.h2d_bytes as f64 / 1e6,
+        stats.execute_secs
+    );
+    b.save("runtime");
+}

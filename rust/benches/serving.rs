@@ -1,0 +1,78 @@
+//! Serving perf: closed-loop throughput + batch-occupancy of the
+//! continuous-batching engine on the tiny model (bench-speed), dense vs
+//! compressed-with-exact-factors (isolates low-rank kernel cost).
+
+use aasvd::bench::Bench;
+use aasvd::model::init::init_params;
+use aasvd::model::lowrank::exact_factors;
+use aasvd::model::Config;
+use aasvd::runtime::Engine;
+use aasvd::serve::batcher::bench_prompts;
+use aasvd::serve::{GenParams, ServedModel, Server};
+use aasvd::util::rng::Rng;
+
+fn main() {
+    if Engine::new("artifacts")
+        .map(|e| e.entry("tiny").is_err())
+        .unwrap_or(true)
+    {
+        eprintln!("no artifacts — run `make artifacts` first");
+        return;
+    }
+    let cfg = Config::builtin("tiny").unwrap();
+    let params = init_params(&cfg, &mut Rng::new(1));
+    let blocks: Vec<_> = (0..cfg.n_layers)
+        .map(|i| exact_factors(&cfg, &params, i))
+        .collect();
+    let prompts = bench_prompts(16, 5);
+
+    let mut b = Bench::new();
+    b.min_iters = 3;
+    b.max_iters = 6;
+    let variants: Vec<(&str, Box<dyn Fn() -> ServedModel>)> = vec![
+        (
+            "dense",
+            Box::new({
+                let p = params.clone();
+                move || ServedModel::Dense(p.clone())
+            }),
+        ),
+        (
+            "lowrank",
+            Box::new({
+                let p = params.clone();
+                let bl = blocks.clone();
+                move || ServedModel::Compressed(p.clone(), bl.clone())
+            }),
+        ),
+    ];
+    for (label, make_model) in variants {
+        b.run(
+            &format!("serve[{label}] 16 reqs x 8 toks (closed loop)"),
+            Some(16.0 * 8.0),
+            || {
+                let server =
+                    Server::start("artifacts".into(), cfg.clone(), make_model());
+                let rxs: Vec<_> = prompts
+                    .iter()
+                    .map(|p| {
+                        server.submit(
+                            p,
+                            GenParams {
+                                max_new_tokens: 8,
+                                temperature: 0.0,
+                                stop_byte: None,
+                            },
+                        )
+                    })
+                    .collect();
+                for rx in rxs {
+                    rx.recv().unwrap();
+                }
+                let m = server.shutdown();
+                std::hint::black_box(m);
+            },
+        );
+    }
+    b.save("serving");
+}

@@ -1,0 +1,91 @@
+//! Figures 1 & 4: layer-wise error evolution across depth.
+//!
+//! Paper: LLaMA-7B @ ratio 0.8, MSE + cosine distance between original and
+//! compressed outputs for O-proj / down-proj / block outputs, evaluated on
+//! held-out WikiText2, for naive SVD vs SVD-LLM vs AA-SVD. Figure 1 is the
+//! cosine-distance view with each method's final-layer distortion linked to
+//! its perplexity — emitted here as the same series plus the PPL column.
+
+use aasvd::compress::{compress_model, error::depth_profile, Method};
+use aasvd::data::Domain;
+use aasvd::eval::{compressed_ppl, display_ppl, Table};
+use aasvd::experiments::{setup, Knobs};
+use aasvd::util::cli::Args;
+use aasvd::util::json::Json;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env("Figures 1+4: depth-wise error profiles");
+    let mut knobs = Knobs::parse(&args, "small");
+    knobs.ratios = vec![args.f64("ratio", 0.8, "compression ratio")];
+    args.finish_or_help();
+    let ctx = setup(&knobs)?;
+    let ratio = knobs.ratios[0];
+
+    let methods = vec![
+        Method::naive_svd(),
+        Method::svd_llm(),
+        Method::aa_svd(knobs.refine()),
+    ];
+    // held-out eval data (wiki test)
+    let eval = &ctx.eval.iter().find(|(d, _)| *d == Domain::Wiki).unwrap().1;
+    let eval: Vec<_> = eval
+        .iter()
+        .filter(|b| b.real_rows == ctx.cfg.batch)
+        .take(4)
+        .cloned()
+        .collect();
+
+    let mut series = Vec::new();
+    let mut table = Table::new(
+        &format!("Fig 4 — per-layer errors @ ratio {ratio} (final layer shown)"),
+        &["method", "oproj_mse[L]", "oproj_cos[L]", "down_cos[L]", "block_mse[L]", "wiki_ppl"],
+    );
+    for method in &methods {
+        let cm = compress_model(&ctx.engine, &ctx.cfg, &ctx.params, &ctx.calib, method, ratio)?;
+        let prof = depth_profile(&ctx.engine, &ctx.cfg, &ctx.params, &cm.blocks, &eval)?;
+        let ppl = compressed_ppl(&ctx.engine, &ctx.cfg, &ctx.params, &cm.blocks, eval.as_slice())?;
+        let last = prof.block_mse.len() - 1;
+        table.row(vec![
+            method.name.clone(),
+            format!("{:.2e}", prof.o_proj_mse[last]),
+            format!("{:.3}", prof.o_proj_cos[last]),
+            format!("{:.3}", prof.down_cos[last]),
+            format!("{:.2e}", prof.block_mse[last]),
+            display_ppl(ppl),
+        ]);
+        // full per-layer series to results/
+        let j = Json::obj()
+            .set("method", method.name.as_str())
+            .set("ratio", ratio)
+            .set("wiki_ppl", ppl)
+            .set("o_proj_mse", prof.o_proj_mse.clone())
+            .set("o_proj_cos", prof.o_proj_cos.clone())
+            .set("down_mse", prof.down_mse.clone())
+            .set("down_cos", prof.down_cos.clone())
+            .set("block_mse", prof.block_mse.clone())
+            .set("block_cos", prof.block_cos.clone());
+        series.push(j);
+
+        // ascii sparkline of block-output cosine distance across depth
+        println!(
+            "{:>12} block cos across depth: {}",
+            method.name,
+            sparkline(&prof.block_cos)
+        );
+    }
+    table.emit("fig4_summary")?;
+    aasvd::util::io::write_text(
+        "results/fig1_fig4_series.json",
+        &Json::Arr(series).to_string_pretty(),
+    )?;
+    Ok(())
+}
+
+fn sparkline(xs: &[f64]) -> String {
+    const TICKS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let max = xs.iter().cloned().fold(f64::MIN, f64::max).max(1e-12);
+    xs.iter()
+        .map(|&x| TICKS[((x / max) * 7.0).round().clamp(0.0, 7.0) as usize])
+        .collect()
+}

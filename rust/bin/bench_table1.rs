@@ -1,0 +1,77 @@
+//! Table 1: SVD-compression method comparison across ratios.
+//!
+//! Paper: LLaMA-7B, {ASVD, SVD-LLM, Dobi-SVD, Dip-SVD, SAES-SVD, AA-SVD}
+//! ± remapping at ratios {0.8, 0.6, 0.4}; 3 perplexity corpora + 7
+//! zero-shot tasks. Here: the pretrained `small` model, our in-repo method
+//! family at the same ratios, same metric battery; paper LLaMA-7B numbers
+//! are printed alongside for shape comparison.
+
+use aasvd::compress::Method;
+use aasvd::data::Domain;
+use aasvd::eval::{display_ppl, Table};
+use aasvd::experiments::{
+    eval_compressed_method, eval_dense, paper_ref_table1, setup, Knobs,
+};
+use aasvd::util::cli::Args;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env("Table 1: SVD-method comparison across ratios");
+    let knobs = Knobs::parse(&args, "small");
+    args.finish_or_help();
+    let ctx = setup(&knobs)?;
+
+    let mut table = Table::new(
+        &format!("Table 1 — model '{}' (paper: LLaMA-7B)", ctx.cfg.name),
+        &[
+            "ratio", "method", "wiki", "ptb", "c4", "acc", "drop%",
+            "paper:wiki", "paper:acc",
+        ],
+    );
+
+    let dense = eval_dense(&ctx)?;
+    table.row(vec![
+        "1.0".into(),
+        "dense".into(),
+        display_ppl(dense.ppl_of(Domain::Wiki)),
+        display_ppl(dense.ppl_of(Domain::Ptb)),
+        display_ppl(dense.ppl_of(Domain::C4)),
+        format!("{:.3}", dense.avg_acc),
+        "-".into(),
+        "5.68".into(),
+        "0.55".into(),
+    ]);
+
+    let methods: Vec<Method> = vec![
+        Method::naive_svd(),
+        Method::asvd(),
+        Method::svd_llm(),
+        Method::dobi(),
+        Method::aa_svd(knobs.refine()),
+        Method::dobi_q(),
+        Method::aa_svd_q(knobs.refine()),
+    ];
+
+    for &ratio in &knobs.ratios {
+        for method in &methods {
+            let (ev, _) = eval_compressed_method(&ctx, method, ratio)?;
+            let drop = 100.0 * (dense.avg_acc - ev.avg_acc) / dense.avg_acc;
+            let (pw, pa) = paper_ref_table1(ratio, &method.name)
+                .map(|(w, a)| (display_ppl(w), format!("{a:.2}")))
+                .unwrap_or(("-".into(), "-".into()));
+            table.row(vec![
+                format!("{ratio}"),
+                ev.method.clone(),
+                display_ppl(ev.ppl_of(Domain::Wiki)),
+                display_ppl(ev.ppl_of(Domain::Ptb)),
+                display_ppl(ev.ppl_of(Domain::C4)),
+                format!("{:.3}", ev.avg_acc),
+                format!("{drop:.1}%"),
+                pw,
+                pa,
+            ]);
+        }
+    }
+    table.emit("table1")?;
+    Ok(())
+}

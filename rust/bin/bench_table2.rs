@@ -1,0 +1,114 @@
+//! Table 2 (+ appendix Tables 6–10 with --full): SVD-LLM vs AA-SVD across
+//! the model family at ratios {0.8, 0.6}.
+//!
+//! Paper: LLaMA-2-7B/13B, LLaMA-3-1B/8B, Qwen-2.5-7B. Here: the config
+//! family small/base/compact/deep/alt playing those roles (DESIGN.md §3).
+
+use aasvd::compress::Method;
+use aasvd::data::Domain;
+use aasvd::eval::{display_ppl, Table};
+use aasvd::experiments::{eval_compressed_method, eval_dense, setup, Knobs};
+use aasvd::util::cli::Args;
+use anyhow::Result;
+
+const FAMILY: [(&str, &str); 5] = [
+    ("small", "LLaMA-2-7B"),
+    ("base", "LLaMA-2-13B"),
+    ("compact", "LLaMA-3-1B"),
+    ("deep", "LLaMA-3-8B"),
+    ("alt", "Qwen-2.5-7B"),
+];
+
+/// Paper Table 2 (wiki ppl, avg acc) for (model role, ratio, method).
+const PAPER: [(&str, f64, &str, f64, f64); 20] = [
+    ("LLaMA-2-7B", 0.8, "svd_llm", 8.41, 0.43),
+    ("LLaMA-2-7B", 0.8, "aa_svd", 6.84, 0.50),
+    ("LLaMA-2-7B", 0.6, "svd_llm", 16.47, 0.35),
+    ("LLaMA-2-7B", 0.6, "aa_svd", 8.55, 0.44),
+    ("LLaMA-2-13B", 0.8, "svd_llm", 6.65, 0.48),
+    ("LLaMA-2-13B", 0.8, "aa_svd", 5.95, 0.53),
+    ("LLaMA-2-13B", 0.6, "svd_llm", 10.79, 0.38),
+    ("LLaMA-2-13B", 0.6, "aa_svd", 7.44, 0.46),
+    ("LLaMA-3-1B", 0.8, "svd_llm", 45.62, 0.32),
+    ("LLaMA-3-1B", 0.8, "aa_svd", 15.12, 0.39),
+    ("LLaMA-3-1B", 0.6, "svd_llm", 402.76, 0.30),
+    ("LLaMA-3-1B", 0.6, "aa_svd", 23.74, 0.35),
+    ("LLaMA-3-8B", 0.8, "svd_llm", 14.16, 0.44),
+    ("LLaMA-3-8B", 0.8, "aa_svd", 9.58, 0.50),
+    ("LLaMA-3-8B", 0.6, "svd_llm", 76.31, 0.32),
+    ("LLaMA-3-8B", 0.6, "aa_svd", 13.66, 0.41),
+    ("Qwen-2.5-7B", 0.8, "svd_llm", 10.69, 0.47),
+    ("Qwen-2.5-7B", 0.8, "aa_svd", 8.53, 0.53),
+    ("Qwen-2.5-7B", 0.6, "svd_llm", 28.67, 0.33),
+    ("Qwen-2.5-7B", 0.6, "aa_svd", 11.00, 0.44),
+];
+
+fn main() -> Result<()> {
+    let args = Args::parse_env("Table 2: model-family generalization");
+    let mut knobs = Knobs::parse(&args, "small");
+    let full = args.flag("full", "emit per-task appendix breakdowns (Tables 6-10)");
+    let models = args.list("models", "small,base,compact,deep,alt", "family configs");
+    knobs.ratios = args
+        .list("ratios", "0.8,0.6", "ratios")
+        .iter()
+        .map(|s| s.parse().unwrap())
+        .collect();
+    args.finish_or_help();
+
+    let mut table = Table::new(
+        "Table 2 — model family (paper roles in brackets)",
+        &["model", "ratio", "method", "ppl", "acc", "paper:ppl", "paper:acc"],
+    );
+
+    for cfg_name in &models {
+        let role = FAMILY
+            .iter()
+            .find(|(c, _)| c == cfg_name)
+            .map(|(_, r)| *r)
+            .unwrap_or("-");
+        knobs.config = cfg_name.clone();
+        let ctx = setup(&knobs)?;
+        let dense = eval_dense(&ctx)?;
+        table.row(vec![
+            format!("{cfg_name} [{role}]"),
+            "1.0".into(),
+            "dense".into(),
+            display_ppl(dense.ppl_of(Domain::Wiki)),
+            format!("{:.3}", dense.avg_acc),
+            "-".into(),
+            "-".into(),
+        ]);
+        for &ratio in &knobs.ratios {
+            for method in [Method::svd_llm(), Method::aa_svd(knobs.refine())] {
+                let (ev, _) = eval_compressed_method(&ctx, &method, ratio)?;
+                let paper = PAPER
+                    .iter()
+                    .find(|(r, rr, m, ..)| *r == role && *rr == ratio && *m == method.name)
+                    .map(|&(_, _, _, p, a)| (display_ppl(p), format!("{a:.2}")))
+                    .unwrap_or(("-".into(), "-".into()));
+                table.row(vec![
+                    format!("{cfg_name} [{role}]"),
+                    format!("{ratio}"),
+                    ev.method.clone(),
+                    display_ppl(ev.ppl_of(Domain::Wiki)),
+                    format!("{:.3}", ev.avg_acc),
+                    paper.0,
+                    paper.1,
+                ]);
+                if full {
+                    // appendix breakdown: per-task accuracy row
+                    let mut t = Table::new(
+                        &format!("Appendix — {cfg_name} {} @{ratio}", ev.method),
+                        &["task", "acc"],
+                    );
+                    for (task, acc) in &ev.task_acc {
+                        t.row(vec![task.name().into(), format!("{acc:.3}")]);
+                    }
+                    t.emit(&format!("table2_full_{cfg_name}_{}_{ratio}", ev.method))?;
+                }
+            }
+        }
+    }
+    table.emit("table2")?;
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! Micro/meso benchmark harness: warmup + timed iterations + robust stats,
+//! used by every `cargo bench` target (`[[bench]] harness = false`).
+
+use crate::util::stats::{mean, percentile, std_dev};
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub std_secs: f64,
+    pub p50_secs: f64,
+    pub p95_secs: f64,
+    /// optional work metric (flops, tokens, bytes) per iteration
+    pub work_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.work_per_iter.map(|w| w / self.mean_secs)
+    }
+
+    pub fn report(&self) -> String {
+        let tp = match (self.work_per_iter, self.throughput()) {
+            (Some(_), Some(tp)) if tp >= 1e9 => format!("  {:.2} G/s", tp / 1e9),
+            (Some(_), Some(tp)) if tp >= 1e6 => format!("  {:.2} M/s", tp / 1e6),
+            (Some(_), Some(tp)) => format!("  {tp:.1} /s"),
+            _ => String::new(),
+        };
+        format!(
+            "{:<44} {:>10.3} ms ±{:>7.3}  p95 {:>9.3} ms  ({} iters){}",
+            self.name,
+            self.mean_secs * 1e3,
+            self.std_secs * 1e3,
+            self.p95_secs * 1e3,
+            self.iters,
+            tp
+        )
+    }
+}
+
+pub struct Bench {
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_secs: f64,
+    pub warmup: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            min_iters: 5,
+            max_iters: 200,
+            target_secs: 2.0,
+            warmup: 2,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        let mut b = Bench::default();
+        if let Ok(t) = std::env::var("BENCH_TARGET_SECS") {
+            if let Ok(t) = t.parse() {
+                b.target_secs = t;
+            }
+        }
+        b
+    }
+
+    /// Time `f`, auto-scaling iteration count to `target_secs`.
+    pub fn run<F: FnMut()>(&mut self, name: &str, work_per_iter: Option<f64>, mut f: F) {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while times.len() < self.min_iters
+            || (start.elapsed().as_secs_f64() < self.target_secs
+                && times.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: times.len(),
+            mean_secs: mean(&times),
+            std_secs: std_dev(&times),
+            p50_secs: percentile(&times, 50.0),
+            p95_secs: percentile(&times, 95.0),
+            work_per_iter,
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+    }
+
+    /// Dump all results to results/bench_<id>.json.
+    pub fn save(&self, id: &str) {
+        use crate::util::json::Json;
+        let rows: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .set("name", r.name.as_str())
+                    .set("mean_ms", r.mean_secs * 1e3)
+                    .set("p95_ms", r.p95_secs * 1e3)
+                    .set("iters", r.iters)
+                    .set(
+                        "throughput",
+                        r.throughput().unwrap_or(0.0),
+                    )
+            })
+            .collect();
+        let _ = crate::util::io::write_text(
+            format!("results/bench_{id}.json"),
+            &Json::obj().set("bench", id).set("results", Json::Arr(rows)).to_string_pretty(),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let mut b = Bench {
+            min_iters: 3,
+            max_iters: 5,
+            target_secs: 0.01,
+            warmup: 1,
+            results: Vec::new(),
+        };
+        let mut count = 0u64;
+        b.run("noop", Some(1.0), || count += 1);
+        assert!(count >= 4); // warmup + iters
+        let r = &b.results[0];
+        assert!(r.iters >= 3 && r.iters <= 5);
+        assert!(r.report().contains("noop"));
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,5 @@
+//! Criterion-free benchmarking harness (offline build has no criterion).
+
+pub mod harness;
+
+pub use harness::{Bench, BenchResult};

@@ -1,0 +1,189 @@
+//! Streaming covariance accumulation (Algorithm 1, step 2).
+//!
+//! The closed form needs only fixed-size covariance matrices, never the raw
+//! activation matrices (paper §B.1): for every tap position we accumulate
+//!   S_orig  = Σ x xᵀ     (original inputs X)
+//!   S_shift = Σ x' x'ᵀ   (shifted inputs X' from the partially-compressed net)
+//!   C_cross = Σ x x'ᵀ    (the anchored cross term)
+//! over token chunks. Accumulation is f64 (condition numbers grow with
+//! calibration size); the Pallas cov_accum artifact provides an f32
+//! MXU-shaped alternative used by benches and integration tests.
+
+use crate::linalg::Matrix;
+
+/// Accumulates the three covariance matrices of one tap position.
+#[derive(Clone, Debug)]
+pub struct CovTriple {
+    pub dim: usize,
+    pub s_orig: Matrix,
+    pub s_shift: Matrix,
+    pub c_cross: Matrix,
+    pub tokens: usize,
+}
+
+impl CovTriple {
+    pub fn new(dim: usize) -> CovTriple {
+        CovTriple {
+            dim,
+            s_orig: Matrix::zeros(dim, dim),
+            s_shift: Matrix::zeros(dim, dim),
+            c_cross: Matrix::zeros(dim, dim),
+            tokens: 0,
+        }
+    }
+
+    /// Add a chunk: `x`/`x_shift` are [rows, dim] row-major activations.
+    pub fn add_chunk(&mut self, x: &[f32], x_shift: &[f32]) {
+        let d = self.dim;
+        assert_eq!(x.len(), x_shift.len());
+        assert_eq!(x.len() % d, 0);
+        let rows = x.len() / d;
+        // accumulate outer products in f64; row-blocked for cache locality
+        for r in 0..rows {
+            let xr = &x[r * d..(r + 1) * d];
+            let sr = &x_shift[r * d..(r + 1) * d];
+            for i in 0..d {
+                let xi = xr[i] as f64;
+                let si = sr[i] as f64;
+                let so_row = &mut self.s_orig.data[i * d..(i + 1) * d];
+                let ss_row = &mut self.s_shift.data[i * d..(i + 1) * d];
+                let cc_row = &mut self.c_cross.data[i * d..(i + 1) * d];
+                if xi != 0.0 {
+                    for (j, v) in so_row.iter_mut().enumerate() {
+                        *v += xi * xr[j] as f64;
+                    }
+                    for (j, v) in cc_row.iter_mut().enumerate() {
+                        *v += xi * sr[j] as f64;
+                    }
+                }
+                if si != 0.0 {
+                    for (j, v) in ss_row.iter_mut().enumerate() {
+                        *v += si * sr[j] as f64;
+                    }
+                }
+            }
+        }
+        self.tokens += rows;
+    }
+
+    /// Identical-input fast path (X == X'): accumulates S_orig only and
+    /// mirrors it into the other two at `finish` time via `mirrored()`.
+    pub fn add_chunk_same(&mut self, x: &[f32]) {
+        let d = self.dim;
+        let rows = x.len() / d;
+        for r in 0..rows {
+            let xr = &x[r * d..(r + 1) * d];
+            for i in 0..d {
+                let xi = xr[i] as f64;
+                if xi == 0.0 {
+                    continue;
+                }
+                let so_row = &mut self.s_orig.data[i * d..(i + 1) * d];
+                for (j, v) in so_row.iter_mut().enumerate() {
+                    *v += xi * xr[j] as f64;
+                }
+            }
+        }
+        self.tokens += rows;
+    }
+
+    /// After `add_chunk_same`, make S_shift and C_cross copies of S_orig.
+    pub fn mirror_same(&mut self) {
+        self.s_shift = self.s_orig.clone();
+        self.c_cross = self.s_orig.clone();
+    }
+
+    /// Mean absolute activation per channel from S_orig diagonal
+    /// (the ASVD-style sensitivity scale: sqrt(E[x²])).
+    pub fn channel_scales(&self) -> Vec<f64> {
+        let n = self.tokens.max(1) as f64;
+        (0..self.dim)
+            .map(|i| (self.s_orig.get(i, i) / n).sqrt().max(1e-12))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::approx::assert_close;
+    use crate::util::rng::Rng;
+
+    fn dense_cov(a: &[f32], b: &[f32], d: usize) -> Matrix {
+        let rows = a.len() / d;
+        let ma = Matrix::from_f32(rows, d, a);
+        let mb = Matrix::from_f32(rows, d, b);
+        ma.matmul_at(&mb)
+    }
+
+    #[test]
+    fn matches_dense_computation() {
+        let mut rng = Rng::new(1);
+        let d = 9;
+        let rows = 40;
+        let x: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+        let y: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+        let mut cov = CovTriple::new(d);
+        cov.add_chunk(&x, &y);
+        assert_close(&cov.s_orig.data, &dense_cov(&x, &x, d).data, 1e-9);
+        assert_close(&cov.s_shift.data, &dense_cov(&y, &y, d).data, 1e-9);
+        assert_close(&cov.c_cross.data, &dense_cov(&x, &y, d).data, 1e-9);
+        assert_eq!(cov.tokens, rows);
+    }
+
+    #[test]
+    fn streaming_equals_batch() {
+        let mut rng = Rng::new(2);
+        let d = 7;
+        let x: Vec<f32> = (0..50 * d).map(|_| rng.normal()).collect();
+        let y: Vec<f32> = (0..50 * d).map(|_| rng.normal()).collect();
+        let mut whole = CovTriple::new(d);
+        whole.add_chunk(&x, &y);
+        let mut parts = CovTriple::new(d);
+        parts.add_chunk(&x[..20 * d], &y[..20 * d]);
+        parts.add_chunk(&x[20 * d..], &y[20 * d..]);
+        assert_close(&whole.c_cross.data, &parts.c_cross.data, 1e-9);
+        assert_close(&whole.s_shift.data, &parts.s_shift.data, 1e-9);
+    }
+
+    #[test]
+    fn same_path_mirrors() {
+        let mut rng = Rng::new(3);
+        let d = 5;
+        let x: Vec<f32> = (0..30 * d).map(|_| rng.normal()).collect();
+        let mut cov = CovTriple::new(d);
+        cov.add_chunk_same(&x);
+        cov.mirror_same();
+        let want = dense_cov(&x, &x, d);
+        assert_close(&cov.s_orig.data, &want.data, 1e-9);
+        assert_close(&cov.s_shift.data, &want.data, 1e-9);
+        assert_close(&cov.c_cross.data, &want.data, 1e-9);
+    }
+
+    #[test]
+    fn covariances_are_symmetric_psd_diag() {
+        let mut rng = Rng::new(4);
+        let d = 6;
+        let x: Vec<f32> = (0..100 * d).map(|_| rng.normal()).collect();
+        let mut cov = CovTriple::new(d);
+        cov.add_chunk_same(&x);
+        let asym = cov.s_orig.sub(&cov.s_orig.transpose()).max_abs();
+        assert!(asym < 1e-9);
+        for i in 0..d {
+            assert!(cov.s_orig.get(i, i) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn channel_scales_reflect_energy() {
+        let d = 3;
+        // channel 0 twice as large as channel 1; channel 2 silent
+        let x = vec![2.0f32, 1.0, 0.0, 2.0, 1.0, 0.0, 2.0, 1.0, 0.0];
+        let mut cov = CovTriple::new(d);
+        cov.add_chunk_same(&x);
+        let s = cov.channel_scales();
+        assert!((s[0] - 2.0).abs() < 1e-6);
+        assert!((s[1] - 1.0).abs() < 1e-6);
+        assert!(s[2] <= 1e-12 * 2.0 + 1e-12);
+    }
+}

@@ -1,0 +1,159 @@
+//! Layer-wise error profiling (Figures 1 and 4).
+//!
+//! Runs the dense and compressed models side by side on held-out data and
+//! records, per block: MSE and cosine distance of the attention output
+//! projection (O-proj), the MLP down projection, and the full block output
+//! — the three series of Figure 4. The dense stream propagates dense
+//! activations; the compressed stream propagates compressed activations, so
+//! profiles include accumulated upstream error exactly as in the paper.
+
+use super::pipeline::pack_block_params;
+use crate::data::TokenBatch;
+use crate::model::forward::linear;
+use crate::model::lowrank::BlockFactors;
+use crate::model::{Config, FlatStore};
+use crate::runtime::{Engine, Value};
+use crate::util::stats::{cosine_distance, mse};
+use anyhow::Result;
+
+#[derive(Clone, Debug, Default)]
+pub struct LayerErrors {
+    pub o_proj_mse: Vec<f64>,
+    pub o_proj_cos: Vec<f64>,
+    pub down_mse: Vec<f64>,
+    pub down_cos: Vec<f64>,
+    pub block_mse: Vec<f64>,
+    pub block_cos: Vec<f64>,
+}
+
+/// Profile errors across depth on `eval` batches (uses the first batch set
+/// only — profiles are qualitative curves, not precision statistics).
+pub fn depth_profile(
+    engine: &Engine,
+    cfg: &Config,
+    params: &FlatStore,
+    blocks: &[BlockFactors],
+    eval: &[TokenBatch],
+) -> Result<LayerErrors> {
+    let mut errs = LayerErrors::default();
+    let mut xs_dense = super::pipeline::embed_batches(cfg, params, eval);
+    let mut xs_comp = xs_dense.clone();
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+
+    for (i, bf) in blocks.iter().enumerate() {
+        let bp = pack_block_params(cfg, params, i);
+        let mut o_mse = 0.0;
+        let mut o_cos = 0.0;
+        let mut d_mse = 0.0;
+        let mut d_cos = 0.0;
+        let mut b_mse = 0.0;
+        let mut b_cos = 0.0;
+
+        for (xd, xc) in xs_dense.iter_mut().zip(xs_comp.iter_mut()) {
+            let dense = engine.run(
+                &cfg.name,
+                "block_collect",
+                &[Value::F32(&bp), Value::F32(xd)],
+            )?;
+            let comp = engine.run(
+                &cfg.name,
+                "block_lr_collect",
+                &[
+                    Value::F32(&bf.factors.data),
+                    Value::F32(&bf.masks.data),
+                    Value::F32(xc),
+                ],
+            )?;
+            let rows = xd.len() / d;
+            // O-proj outputs: wo(o_in) vs wo'(o_in')
+            let mut dense_o = vec![0f32; rows * d];
+            linear(
+                &dense[2].f32,
+                params.view(&format!("blocks.{i}.wo")),
+                d,
+                d,
+                &mut dense_o,
+            );
+            let mut comp_o = vec![0f32; rows * d];
+            bf.apply_linear(cfg, "wo", &comp[2].f32, &mut comp_o);
+            o_mse += mse(&comp_o, &dense_o);
+            o_cos += cosine_distance(&comp_o, &dense_o);
+            // down-proj outputs
+            let mut dense_d = vec![0f32; rows * d];
+            linear(
+                &dense[4].f32,
+                params.view(&format!("blocks.{i}.w_down")),
+                f,
+                d,
+                &mut dense_d,
+            );
+            let mut comp_d = vec![0f32; rows * d];
+            bf.apply_linear(cfg, "w_down", &comp[4].f32, &mut comp_d);
+            d_mse += mse(&comp_d, &dense_d);
+            d_cos += cosine_distance(&comp_d, &dense_d);
+            // block outputs
+            b_mse += mse(&comp[0].f32, &dense[0].f32);
+            b_cos += cosine_distance(&comp[0].f32, &dense[0].f32);
+            // advance both streams
+            *xd = dense[0].f32.clone();
+            *xc = comp[0].f32.clone();
+        }
+        let nb = xs_dense.len() as f64;
+        errs.o_proj_mse.push(o_mse / nb);
+        errs.o_proj_cos.push(o_cos / nb);
+        errs.down_mse.push(d_mse / nb);
+        errs.down_cos.push(d_cos / nb);
+        errs.block_mse.push(b_mse / nb);
+        errs.block_cos.push(b_cos / nb);
+    }
+    Ok(errs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_params;
+    use crate::model::lowrank::exact_factors;
+    use crate::util::rng::Rng;
+
+    /// With exact full-rank factors the profile must be ~zero everywhere;
+    /// with truncated factors it must be larger and grow with truncation.
+    #[test]
+    fn profile_zero_for_exact_and_grows_with_truncation() {
+        let Ok(engine) = Engine::new("artifacts") else { return };
+        if engine.entry("tiny").is_err() {
+            return;
+        }
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(5));
+        let corpus = crate::data::Corpus::generate(crate::data::Domain::Wiki, 20_000, 9);
+        let batcher = crate::data::Batcher::new(cfg.batch, cfg.seq);
+        let eval: Vec<_> = batcher
+            .sequential(&corpus.test, 2)
+            .into_iter()
+            .filter(|b| b.real_rows == cfg.batch)
+            .collect();
+
+        let exact: Vec<_> = (0..cfg.n_layers)
+            .map(|i| exact_factors(&cfg, &params, i))
+            .collect();
+        let p0 = depth_profile(&engine, &cfg, &params, &exact, &eval).unwrap();
+        assert!(p0.block_mse.iter().all(|&e| e < 1e-6), "{:?}", p0.block_mse);
+
+        let mut trunc = exact.clone();
+        for bf in trunc.iter_mut() {
+            for lin in crate::model::BLOCK_LINEARS {
+                bf.set_rank(lin, cfg.kmax(lin) / 4);
+            }
+        }
+        let p1 = depth_profile(&engine, &cfg, &params, &trunc, &eval).unwrap();
+        assert!(p1.block_mse[0] > p0.block_mse[0] * 100.0);
+        assert!(p1.o_proj_cos.iter().all(|&c| (0.0..=2.0).contains(&c)));
+        // error accumulates: last block >= first block (weak monotonicity)
+        assert!(
+            p1.block_mse[cfg.n_layers - 1] >= p1.block_mse[0] * 0.5,
+            "{:?}",
+            p1.block_mse
+        );
+    }
+}

@@ -1,0 +1,371 @@
+//! CompressLayer (Algorithm 1): the closed-form rank-k solution of
+//! min ‖W A − W' B‖²_F from Theorem 3.2, plus the input-agnostic and
+//! ASVD-style baselines.
+//!
+//! Steps (with C = A Bᵀ and S = B Bᵀ accumulated by cov.rs):
+//!   3. S = R Rᵀ           (jittered Cholesky — Appendix A rank-deficient remark)
+//!   4. M = W C S⁻¹ R = (W C) R⁻ᵀ      (identity S⁻¹R = R⁻ᵀ)
+//!   5. [U_k, Σ_k, V_k] = SVD_k(M)
+//!   6. U = U_k Σ_k,  V = R⁻ᵀ V_k      so  W' = U Vᵀ
+
+use crate::linalg::{cholesky_jittered, right_mul_inv_rt, solve_upper_t, svd_k, Matrix};
+
+/// Low-rank factors U [m×k], V [n×k] (active rank k, unpadded).
+#[derive(Clone, Debug)]
+pub struct Factors {
+    pub u: Vec<f32>,
+    pub v: Vec<f32>,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl Factors {
+    /// Materialize W' = U Vᵀ (row-major [m, n]).
+    pub fn dense(&self) -> Vec<f32> {
+        let (m, n, k) = (self.m, self.n, self.k);
+        let mut w = vec![0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let u = self.u[i * k + p];
+                if u == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    w[i * n + j] += u * self.v[j * k + p];
+                }
+            }
+        }
+        w
+    }
+}
+
+/// Default Tikhonov start for rank-deficient covariances.
+pub const DEFAULT_EPS0: f64 = 1e-6;
+
+/// Theorem 3.2 closed form. `w` is the dense weight [m, n] row-major;
+/// `c` = A Bᵀ and `s` = B Bᵀ are [n, n].
+pub fn compress_layer(w: &[f32], m: usize, n: usize, c: &Matrix, s: &Matrix, k: usize) -> Factors {
+    assert_eq!(w.len(), m * n);
+    assert_eq!((c.rows, c.cols), (n, n));
+    assert_eq!((s.rows, s.cols), (n, n));
+    let k = k.min(m).min(n).max(1);
+
+    let (r, _eps) = cholesky_jittered(s, DEFAULT_EPS0);
+    let wm = Matrix::from_f32(m, n, w);
+    // step 4: M = (W C) R^{-T}
+    let wc = wm.matmul(c);
+    let mmat = right_mul_inv_rt(&wc, &r);
+    // step 5
+    let svd = svd_k(&mmat, k);
+    // step 6: U = U_k Σ_k ; V = R^{-T} V_k
+    let mut u = vec![0f32; m * k];
+    for i in 0..m {
+        for p in 0..k {
+            u[i * k + p] = (svd.u.get(i, p) * svd.s[p]) as f32;
+        }
+    }
+    let v64 = solve_upper_t(&r, &svd.v); // R^T V = V_k  =>  V = R^{-T} V_k
+    let v = v64.to_f32();
+    Factors { u, v, m, n, k }
+}
+
+/// Objective ① baseline: plain truncated SVD of W (Eckart–Young).
+pub fn compress_layer_plain(w: &[f32], m: usize, n: usize, k: usize) -> Factors {
+    let k = k.min(m).min(n).max(1);
+    let wm = Matrix::from_f32(m, n, w);
+    let svd = svd_k(&wm, k);
+    let mut u = vec![0f32; m * k];
+    for i in 0..m {
+        for p in 0..k {
+            u[i * k + p] = (svd.u.get(i, p) * svd.s[p]) as f32;
+        }
+    }
+    Factors {
+        u,
+        v: svd.v.to_f32(),
+        m,
+        n,
+        k,
+    }
+}
+
+/// ASVD-style baseline: diagonal activation scaling,
+/// W' = SVD_k(W diag(s)) diag(s)⁻¹ with s_j = (E[x_j²])^{α/2}.
+pub fn compress_layer_asvd(
+    w: &[f32],
+    m: usize,
+    n: usize,
+    channel_scales: &[f64],
+    alpha: f64,
+    k: usize,
+) -> Factors {
+    assert_eq!(channel_scales.len(), n);
+    let k = k.min(m).min(n).max(1);
+    let s: Vec<f64> = channel_scales
+        .iter()
+        .map(|&x| x.powf(alpha).max(1e-8))
+        .collect();
+    // W diag(s)
+    let mut ws = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            ws.set(i, j, w[i * n + j] as f64 * s[j]);
+        }
+    }
+    let svd = svd_k(&ws, k);
+    let mut u = vec![0f32; m * k];
+    for i in 0..m {
+        for p in 0..k {
+            u[i * k + p] = (svd.u.get(i, p) * svd.s[p]) as f32;
+        }
+    }
+    // V = diag(s)^{-1} V_k
+    let mut v = vec![0f32; n * k];
+    for j in 0..n {
+        for p in 0..k {
+            v[j * k + p] = (svd.v.get(j, p) / s[j]) as f32;
+        }
+    }
+    Factors { u, v, m, n, k }
+}
+
+/// ‖W A − W' B‖²_F evaluated through covariances only:
+/// tr(W S_a Wᵀ) − 2 tr(W' C_crossᵀ Wᵀ)… expanded with
+/// C = A Bᵀ, S_a = A Aᵀ, S_b = B Bᵀ:
+///   tr(W S_a Wᵀ) − 2 tr(W C W'ᵀ) + tr(W' S_b W'ᵀ).
+pub fn objective_value(
+    w: &[f32],
+    wp: &[f32],
+    m: usize,
+    n: usize,
+    s_a: &Matrix,
+    c: &Matrix,
+    s_b: &Matrix,
+) -> f64 {
+    let wm = Matrix::from_f32(m, n, w);
+    let wpm = Matrix::from_f32(m, n, wp);
+    let t1 = trace_quad(&wm, s_a, &wm);
+    let t2 = trace_quad(&wm, c, &wpm);
+    let t3 = trace_quad(&wpm, s_b, &wpm);
+    t1 - 2.0 * t2 + t3
+}
+
+/// tr(A S Bᵀ) for A,B [m×n], S [n×n].
+fn trace_quad(a: &Matrix, s: &Matrix, b: &Matrix) -> f64 {
+    let as_ = a.matmul(s);
+    let mut tr = 0.0;
+    for i in 0..a.rows {
+        let ar = as_.row(i);
+        let br = b.row(i);
+        for j in 0..a.cols {
+            tr += ar[j] * br[j];
+        }
+    }
+    tr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::cov::CovTriple;
+    use crate::testkit::approx::rel_err;
+    use crate::testkit::prop;
+    use crate::util::rng::Rng;
+
+    /// direct ‖W A − W' B‖_F² on explicit activations
+    fn direct_obj(w: &[f32], wp: &[f32], m: usize, n: usize, a: &[f32], b: &[f32]) -> f64 {
+        let rows = a.len() / n;
+        let mut total = 0.0;
+        for r in 0..rows {
+            let ar = &a[r * n..(r + 1) * n];
+            let br = &b[r * n..(r + 1) * n];
+            for i in 0..m {
+                let wa: f64 = (0..n).map(|j| (w[i * n + j] * ar[j]) as f64).sum();
+                let wb: f64 = (0..n).map(|j| (wp[i * n + j] * br[j]) as f64).sum();
+                total += (wa - wb) * (wa - wb);
+            }
+        }
+        total
+    }
+
+    #[test]
+    fn objective_value_matches_direct() {
+        let mut rng = Rng::new(1);
+        let (m, n, rows) = (4, 6, 40);
+        let w: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let wp: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let a: Vec<f32> = (0..rows * n).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..rows * n).map(|_| rng.normal()).collect();
+        let mut cov = CovTriple::new(n);
+        cov.add_chunk(&a, &b);
+        let got = objective_value(&w, &wp, m, n, &cov.s_orig, &cov.c_cross, &cov.s_shift);
+        let want = direct_obj(&w, &wp, m, n, &a, &b);
+        assert!((got - want).abs() < 1e-6 * want.max(1.0), "{got} vs {want}");
+    }
+
+    #[test]
+    fn full_rank_recovers_exactly_when_b_eq_a() {
+        // k = min(m,n) and B = A (invertible S): W' must equal W
+        let mut rng = Rng::new(2);
+        let (m, n, rows) = (5, 5, 64);
+        let w: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let a: Vec<f32> = (0..rows * n).map(|_| rng.normal()).collect();
+        let mut cov = CovTriple::new(n);
+        cov.add_chunk(&a, &a);
+        let f = compress_layer(&w, m, n, &cov.c_cross, &cov.s_shift, 5);
+        assert!(rel_err(&f.dense(), &w) < 1e-4);
+    }
+
+    #[test]
+    fn theorem_solution_beats_perturbations_and_random() {
+        prop::check("thm32-optimality", 12, |case| {
+            let n = 3 + case.rng.below(5);
+            let m = 3 + case.rng.below(5);
+            let rows = 8 * n;
+            let k = 1 + case.rng.below(m.min(n) - 1);
+            let w: Vec<f32> = (0..m * n).map(|_| case.rng.normal()).collect();
+            let a: Vec<f32> = (0..rows * n).map(|_| case.rng.normal()).collect();
+            // X' = X + noise
+            let b: Vec<f32> = a.iter().map(|v| v + 0.2 * case.rng.normal()).collect();
+            let mut cov = CovTriple::new(n);
+            cov.add_chunk(&a, &b);
+            let f = compress_layer(&w, m, n, &cov.c_cross, &cov.s_shift, k);
+            let opt = direct_obj(&w, &f.dense(), m, n, &a, &b);
+            // random rank-k competitors are never better
+            for _ in 0..3 {
+                let ru: Vec<f32> = (0..m * k).map(|_| case.rng.normal()).collect();
+                let rv: Vec<f32> = (0..n * k).map(|_| case.rng.normal()).collect();
+                let cand = Factors {
+                    u: ru,
+                    v: rv,
+                    m,
+                    n,
+                    k,
+                };
+                assert!(direct_obj(&w, &cand.dense(), m, n, &a, &b) >= opt - 1e-6);
+            }
+            // small perturbations of the solution are never better
+            for scale in [1e-3, 1e-2] {
+                let pu: Vec<f32> = f
+                    .u
+                    .iter()
+                    .map(|v| v + scale * case.rng.normal())
+                    .collect();
+                let cand = Factors {
+                    u: pu,
+                    v: f.v.clone(),
+                    m,
+                    n,
+                    k,
+                };
+                assert!(
+                    direct_obj(&w, &cand.dense(), m, n, &a, &b) >= opt - 1e-5 * opt.abs().max(1.0)
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn corollary_reduces_to_whitening() {
+        // B = A: Theorem 3.2 solution == SVD_k(W L) L^{-1} (SVD-LLM form)
+        let mut rng = Rng::new(3);
+        let (m, n, rows, k) = (6, 5, 80, 2);
+        let w: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let a: Vec<f32> = (0..rows * n).map(|_| rng.normal()).collect();
+        let mut cov = CovTriple::new(n);
+        cov.add_chunk(&a, &a);
+        let f_thm = compress_layer(&w, m, n, &cov.c_cross, &cov.s_shift, k);
+        // explicit whitening construction
+        let (r, _) = cholesky_jittered(&cov.s_shift, DEFAULT_EPS0);
+        let wl = Matrix::from_f32(m, n, &w).matmul(&r);
+        let svd = svd_k(&wl, k);
+        let mut wrec = Matrix::zeros(m, k);
+        for i in 0..m {
+            for p in 0..k {
+                wrec.set(i, p, svd.u.get(i, p) * svd.s[p]);
+            }
+        }
+        let vwhite = solve_upper_t(&r, &svd.v);
+        let dense_white = wrec.matmul_bt(&vwhite).to_f32();
+        assert!(rel_err(&f_thm.dense(), &dense_white) < 1e-4);
+    }
+
+    #[test]
+    fn plain_svd_matches_eckart_young_error() {
+        let mut rng = Rng::new(4);
+        let (m, n, k) = (8, 6, 3);
+        let w: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let f = compress_layer_plain(&w, m, n, k);
+        let err: f64 = w
+            .iter()
+            .zip(&f.dense())
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        let tail = crate::linalg::svd::tail_energy(&Matrix::from_f32(m, n, &w), k);
+        assert!((err - tail).abs() < 1e-6 * tail.max(1e-9), "{err} vs {tail}");
+    }
+
+    #[test]
+    fn asvd_full_rank_recovers_weight() {
+        let mut rng = Rng::new(5);
+        let (m, n) = (5, 4);
+        let w: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let scales: Vec<f64> = (0..n).map(|_| 0.5 + rng.f64()).collect();
+        let f = compress_layer_asvd(&w, m, n, &scales, 0.5, n);
+        assert!(rel_err(&f.dense(), &w) < 1e-4);
+    }
+
+    #[test]
+    fn asvd_beats_plain_on_anisotropic_inputs() {
+        // when one input channel dominates, activation-aware truncation
+        // should reduce the *data* error vs plain SVD
+        let mut rng = Rng::new(6);
+        let (m, n, rows, k) = (8, 8, 200, 2);
+        let w: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        // activations: channel 0 has 10x the energy
+        let mut a = vec![0f32; rows * n];
+        for r in 0..rows {
+            for j in 0..n {
+                a[r * n + j] = rng.normal() * if j == 0 { 10.0 } else { 0.3 };
+            }
+        }
+        let mut cov = CovTriple::new(n);
+        cov.add_chunk_same(&a);
+        cov.mirror_same();
+        let plain = compress_layer_plain(&w, m, n, k);
+        let asvd = compress_layer_asvd(&w, m, n, &cov.channel_scales(), 0.5, k);
+        let e_plain = direct_obj(&w, &plain.dense(), m, n, &a, &a);
+        let e_asvd = direct_obj(&w, &asvd.dense(), m, n, &a, &a);
+        assert!(
+            e_asvd < e_plain,
+            "asvd {e_asvd} should beat plain {e_plain} on anisotropic data"
+        );
+    }
+
+    #[test]
+    fn handles_rank_deficient_covariance() {
+        // activations confined to a 2D subspace of R^5
+        let mut rng = Rng::new(7);
+        let (m, n, rows, k) = (4, 5, 60, 2);
+        let w: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let mut a = vec![0f32; rows * n];
+        for r in 0..rows {
+            let c1 = rng.normal();
+            let c2 = rng.normal();
+            for j in 0..n {
+                a[r * n + j] = c1 * (j as f32 + 1.0) + c2 * ((j * j) as f32 - 2.0);
+            }
+        }
+        let mut cov = CovTriple::new(n);
+        cov.add_chunk_same(&a);
+        cov.mirror_same();
+        let f = compress_layer(&w, m, n, &cov.c_cross, &cov.s_shift, k);
+        assert!(f.dense().iter().all(|v| v.is_finite()));
+        // rank-2 data, rank-2 approx: data error should be tiny relative
+        // to signal
+        let err = direct_obj(&w, &f.dense(), m, n, &a, &a);
+        let sig = direct_obj(&w, &vec![0f32; m * n], m, n, &a, &a);
+        assert!(err < 1e-3 * sig, "err {err} vs signal {sig}");
+    }
+}

@@ -1,0 +1,26 @@
+//! The paper's contribution: anchored & adaptive SVD compression.
+//!
+//! - `objective`: the four layer-wise objectives (Figure 2 left)
+//! - `cov`: streaming covariance accumulation (§B.1)
+//! - `layer`: CompressLayer closed form (Theorem 3.2 / Algorithm 1)
+//! - `rank` / `quant`: allocation schemes + Dobi-style remapping (§B.3/B.4)
+//! - `pipeline`: block-wise orchestration with refinement (Algorithm 2)
+//! - `pruning`: structured-pruning baselines (Tables 3/4)
+//! - `error`: depth-wise error profiling (Figures 1/4)
+
+pub mod cov;
+pub mod error;
+pub mod layer;
+pub mod objective;
+pub mod pipeline;
+pub mod pruning;
+pub mod quant;
+pub mod rank;
+
+pub use cov::CovTriple;
+pub use layer::{compress_layer, compress_layer_asvd, compress_layer_plain, Factors};
+pub use objective::{Objective, ALL_OBJECTIVES};
+pub use pipeline::{compress_model, CompressedModel, Method};
+pub use pruning::{prune_model, PruneMethod, PrunedModel, ALL_PRUNERS};
+pub use quant::QuantMatrix;
+pub use rank::{dense_params, ratio_for_budget, Allocation, RankScheme};

@@ -1,0 +1,127 @@
+//! The four layer-wise compression objectives (paper Figure 2, left).
+//!
+//! Each objective reduces to an instance of Theorem 3.2's problem
+//! min ‖W A − W' B‖²_F by choosing (A, B); the solver only ever sees the
+//! covariances C = A Bᵀ and S = B Bᵀ assembled here from a `CovTriple`.
+
+use super::cov::CovTriple;
+use crate::linalg::Matrix;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Objective {
+    /// ① ‖W − W'‖²: plain truncated SVD of the weights (Eckart–Young).
+    InputAgnostic,
+    /// ② ‖W X − W' X‖²: whitening on original activations
+    ///    (DRONE / ASVD / SVD-LLM family; A = B = X).
+    InputAware,
+    /// ③ ‖W X' − W' X'‖²: whitening on shifted activations
+    ///    (Dobi-SVD family; A = B = X').
+    ShiftAware,
+    /// ④ ‖W X − W' X'‖²: anchored to original outputs, conditioned on
+    ///    shifted inputs (this paper; A = X, B = X').
+    Anchored,
+}
+
+pub const ALL_OBJECTIVES: [Objective; 4] = [
+    Objective::InputAgnostic,
+    Objective::InputAware,
+    Objective::ShiftAware,
+    Objective::Anchored,
+];
+
+impl Objective {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::InputAgnostic => "input_agnostic",
+            Objective::InputAware => "input_aware",
+            Objective::ShiftAware => "shift_aware",
+            Objective::Anchored => "anchored",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Objective> {
+        ALL_OBJECTIVES.iter().copied().find(|o| o.name() == s)
+    }
+
+    /// Does this objective need the shifted activations X'?
+    /// (If not, the pipeline can skip the extra collection pass.)
+    pub fn needs_shift(&self) -> bool {
+        matches!(self, Objective::ShiftAware | Objective::Anchored)
+    }
+
+    /// Assemble (C = A Bᵀ, S = B Bᵀ) for Theorem 3.2, or None for the
+    /// data-free objective ①.
+    pub fn assemble(&self, cov: &CovTriple) -> Option<(Matrix, Matrix)> {
+        match self {
+            Objective::InputAgnostic => None,
+            Objective::InputAware => Some((cov.s_orig.clone(), cov.s_orig.clone())),
+            Objective::ShiftAware => Some((cov.s_shift.clone(), cov.s_shift.clone())),
+            Objective::Anchored => Some((cov.c_cross.clone(), cov.s_shift.clone())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::approx::assert_close;
+    use crate::util::rng::Rng;
+
+    fn triple(d: usize, seed: u64) -> CovTriple {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..64 * d).map(|_| rng.normal()).collect();
+        let y: Vec<f32> = x.iter().map(|v| v + 0.1 * rng.normal()).collect();
+        let mut cov = CovTriple::new(d);
+        cov.add_chunk(&x, &y);
+        cov
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for o in ALL_OBJECTIVES {
+            assert_eq!(Objective::from_name(o.name()), Some(o));
+        }
+        assert_eq!(Objective::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn input_agnostic_is_data_free() {
+        assert!(Objective::InputAgnostic.assemble(&triple(4, 1)).is_none());
+        assert!(!Objective::InputAgnostic.needs_shift());
+    }
+
+    #[test]
+    fn aware_variants_pick_right_matrices() {
+        let cov = triple(5, 2);
+        let (c, s) = Objective::InputAware.assemble(&cov).unwrap();
+        assert_close(&c.data, &cov.s_orig.data, 1e-12);
+        assert_close(&s.data, &cov.s_orig.data, 1e-12);
+        let (c, s) = Objective::ShiftAware.assemble(&cov).unwrap();
+        assert_close(&c.data, &cov.s_shift.data, 1e-12);
+        assert_close(&s.data, &cov.s_shift.data, 1e-12);
+        let (c, s) = Objective::Anchored.assemble(&cov).unwrap();
+        assert_close(&c.data, &cov.c_cross.data, 1e-12);
+        assert_close(&s.data, &cov.s_shift.data, 1e-12);
+    }
+
+    #[test]
+    fn anchored_equals_input_aware_when_no_shift() {
+        // X' == X  =>  objective ④ assembles the same (C, S) as ②
+        let d = 6;
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..32 * d).map(|_| rng.normal()).collect();
+        let mut cov = CovTriple::new(d);
+        cov.add_chunk(&x, &x);
+        let (c4, s4) = Objective::Anchored.assemble(&cov).unwrap();
+        let (c2, s2) = Objective::InputAware.assemble(&cov).unwrap();
+        assert_close(&c4.data, &c2.data, 1e-9);
+        assert_close(&s4.data, &s2.data, 1e-9);
+    }
+
+    #[test]
+    fn shift_requirements() {
+        assert!(Objective::Anchored.needs_shift());
+        assert!(Objective::ShiftAware.needs_shift());
+        assert!(!Objective::InputAware.needs_shift());
+    }
+}

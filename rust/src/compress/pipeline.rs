@@ -1,0 +1,529 @@
+//! Algorithm 2: end-to-end block-wise compression with local refinement.
+//!
+//! The coordinator walks the model block by block, maintaining two
+//! activation streams over the calibration set:
+//!   X  — inputs produced by the *original* dense network
+//!   X' — inputs produced by the *partially compressed* network
+//! Within a block, linears are compressed in topological groups sharing a
+//! tap position (q/k/v → wo → gate/up → w_down; covariances shared within a
+//! group, paper §B.1), re-collecting shifted taps after each group so X'_j
+//! always reflects a valid partial compression state. After all linears,
+//! block-level refinement (refine::driver) jointly tunes the factors
+//! against the dense block's outputs on original inputs.
+
+use super::cov::CovTriple;
+use super::layer::{compress_layer, compress_layer_asvd, compress_layer_plain};
+use super::objective::Objective;
+use super::quant::quantize_factors_inplace;
+use super::rank::{Allocation, RankScheme};
+use crate::data::TokenBatch;
+use crate::model::lowrank::{exact_factors, BlockFactors};
+use crate::model::{Config, FlatStore};
+#[cfg(test)]
+use crate::model::BLOCK_LINEARS;
+use crate::refine::{refine_block, RefineOptions, RefineReport};
+use crate::runtime::{Engine, Value};
+use anyhow::Result;
+use std::time::Instant;
+
+/// A named compression method (one table row).
+#[derive(Clone, Debug)]
+pub struct Method {
+    pub name: String,
+    pub objective: Objective,
+    /// use ASVD-style diagonal scaling instead of the full whitening solve
+    pub asvd_diag: bool,
+    pub scheme: RankScheme,
+    pub quant: bool,
+    pub refine: Option<RefineOptions>,
+}
+
+impl Method {
+    pub fn naive_svd() -> Method {
+        Method {
+            name: "naive_svd".into(),
+            objective: Objective::InputAgnostic,
+            asvd_diag: false,
+            scheme: RankScheme::Standard,
+            quant: false,
+            refine: None,
+        }
+    }
+
+    pub fn asvd() -> Method {
+        Method {
+            name: "asvd".into(),
+            objective: Objective::InputAware,
+            asvd_diag: true,
+            scheme: RankScheme::Standard,
+            quant: false,
+            refine: None,
+        }
+    }
+
+    pub fn svd_llm() -> Method {
+        Method {
+            name: "svd_llm".into(),
+            objective: Objective::InputAware,
+            asvd_diag: false,
+            scheme: RankScheme::Standard,
+            quant: false,
+            refine: None,
+        }
+    }
+
+    /// Dobi-SVD-like: shift-aware objective (+remap/quant in `dobi_q`).
+    pub fn dobi() -> Method {
+        Method {
+            name: "dobi".into(),
+            objective: Objective::ShiftAware,
+            asvd_diag: false,
+            scheme: RankScheme::Standard,
+            quant: false,
+            refine: None,
+        }
+    }
+
+    pub fn dobi_q() -> Method {
+        Method {
+            name: "dobi_q".into(),
+            objective: Objective::ShiftAware,
+            scheme: RankScheme::Remap,
+            quant: true,
+            asvd_diag: false,
+            refine: None,
+        }
+    }
+
+    /// AA-SVD: input-aware init + block-level refinement (paper §4.3 pairing).
+    pub fn aa_svd(refine: RefineOptions) -> Method {
+        Method {
+            name: "aa_svd".into(),
+            objective: Objective::InputAware,
+            asvd_diag: false,
+            scheme: RankScheme::Standard,
+            quant: false,
+            refine: Some(refine),
+        }
+    }
+
+    /// AA-SVDᵠ: remapped ranks + int8 factors + refinement.
+    pub fn aa_svd_q(refine: RefineOptions) -> Method {
+        Method {
+            name: "aa_svd_q".into(),
+            objective: Objective::InputAware,
+            asvd_diag: false,
+            scheme: RankScheme::Remap,
+            quant: true,
+            refine: Some(refine),
+        }
+    }
+
+    /// Ablation constructor: any objective × refinement (Table 5 rows).
+    pub fn ablation(objective: Objective, refine: Option<RefineOptions>) -> Method {
+        Method {
+            name: format!(
+                "{}{}",
+                objective.name(),
+                if refine.is_some() { "+refine" } else { "" }
+            ),
+            objective,
+            asvd_diag: false,
+            scheme: RankScheme::Standard,
+            quant: false,
+            refine,
+        }
+    }
+
+    /// Does this method ever need the shifted activation stream?
+    fn needs_shift(&self) -> bool {
+        self.objective.needs_shift() || self.refine.is_some() || self.quant
+    }
+}
+
+/// Result of compressing a model.
+pub struct CompressedModel {
+    pub blocks: Vec<BlockFactors>,
+    pub allocation: Allocation,
+    pub report: CompressReport,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct CompressReport {
+    pub refine: Vec<RefineReport>,
+    pub secs_collect: f64,
+    pub secs_solve: f64,
+    pub secs_refine: f64,
+    pub quant_err: f64,
+}
+
+/// The tap groups: (tap index into collect outputs, linears fed by it).
+/// Collect outputs are (y, a_in, o_in, m_in, d_in).
+const GROUPS: [(usize, &[&str]); 4] = [
+    (1, &["wq", "wk", "wv"]),
+    (2, &["wo"]),
+    (3, &["w_gate", "w_up"]),
+    (4, &["w_down"]),
+];
+
+/// Pack block `i`'s dense params into the bare-name block layout used by
+/// the block_fwd/block_collect artifacts.
+pub fn pack_block_params(cfg: &Config, params: &FlatStore, i: usize) -> Vec<f32> {
+    let lay = crate::model::params::block_param_layout(cfg);
+    let mut bp = vec![0f32; lay.total];
+    for e in &lay.entries {
+        let src = params.view(&format!("blocks.{i}.{}", e.name));
+        let size: usize = e.shape.iter().product();
+        bp[e.offset..e.offset + size].copy_from_slice(src);
+    }
+    bp
+}
+
+/// Embed calibration tokens (Rust-side gather — step 1 of Algorithm 2).
+pub fn embed_batches(cfg: &Config, params: &FlatStore, batches: &[TokenBatch]) -> Vec<Vec<f32>> {
+    let d = cfg.d_model;
+    let embed = params.view("embed");
+    batches
+        .iter()
+        .map(|tb| {
+            let mut x = vec![0f32; tb.tokens.len() * d];
+            for (i, &tok) in tb.tokens.iter().enumerate() {
+                let tok = tok as usize;
+                x[i * d..(i + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+            }
+            x
+        })
+        .collect()
+}
+
+/// Dense-block taps over all calibration batches.
+struct Taps {
+    y: Vec<Vec<f32>>,
+    per_tap: [Vec<Vec<f32>>; 4], // a_in, o_in, m_in, d_in
+}
+
+fn collect_dense(
+    engine: &Engine,
+    cfg: &Config,
+    bp: &[f32],
+    xs: &[Vec<f32>],
+) -> Result<Taps> {
+    let mut taps = Taps {
+        y: Vec::new(),
+        per_tap: [Vec::new(), Vec::new(), Vec::new(), Vec::new()],
+    };
+    for x in xs {
+        let out = engine.run(
+            &cfg.name,
+            "block_collect",
+            &[Value::F32(bp), Value::F32(x)],
+        )?;
+        taps.y.push(out[0].f32.clone());
+        for t in 0..4 {
+            taps.per_tap[t].push(out[t + 1].f32.clone());
+        }
+    }
+    Ok(taps)
+}
+
+fn collect_lr_tap(
+    engine: &Engine,
+    cfg: &Config,
+    bf: &BlockFactors,
+    xs: &[Vec<f32>],
+    tap: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let mut out_taps = Vec::new();
+    for x in xs {
+        let out = engine.run(
+            &cfg.name,
+            "block_lr_collect",
+            &[
+                Value::F32(&bf.factors.data),
+                Value::F32(&bf.masks.data),
+                Value::F32(x),
+            ],
+        )?;
+        out_taps.push(out[tap + 1].f32.clone());
+    }
+    Ok(out_taps)
+}
+
+/// Compress one linear according to the method; returns padded (U, V)
+/// written into `bf` with the mask set to rank k.
+#[allow(clippy::too_many_arguments)]
+fn compress_one(
+    method: &Method,
+    cfg: &Config,
+    params: &FlatStore,
+    block: usize,
+    lin: &str,
+    cov: &CovTriple,
+    k: usize,
+    bf: &mut BlockFactors,
+) -> f64 {
+    let (m, n) = cfg.linear_dims(lin);
+    let w = params.view(&format!("blocks.{block}.{lin}"));
+    let f = if method.asvd_diag {
+        compress_layer_asvd(w, m, n, &cov.channel_scales(), 0.5, k)
+    } else {
+        match method.objective.assemble(cov) {
+            None => compress_layer_plain(w, m, n, k),
+            Some((c, s)) => compress_layer(w, m, n, &c, &s, k),
+        }
+    };
+    let mut u = f.u;
+    let mut v = f.v;
+    let mut qerr = 0.0;
+    if method.quant {
+        let (eu, ev) = quantize_factors_inplace(&mut u, m, &mut v, n, f.k);
+        qerr = 0.5 * (eu + ev);
+    }
+    // write into the padded buffers
+    let kmax = cfg.kmax(lin);
+    {
+        let ub = bf.factors.view_mut(&format!("{lin}.u"));
+        ub.fill(0.0);
+        for i in 0..m {
+            ub[i * kmax..i * kmax + f.k].copy_from_slice(&u[i * f.k..(i + 1) * f.k]);
+        }
+    }
+    {
+        let vb = bf.factors.view_mut(&format!("{lin}.v"));
+        vb.fill(0.0);
+        for i in 0..n {
+            vb[i * kmax..i * kmax + f.k].copy_from_slice(&v[i * f.k..(i + 1) * f.k]);
+        }
+    }
+    bf.set_rank(lin, f.k);
+    qerr
+}
+
+/// Algorithm 2. `calib` batches must all be full (`real_rows == batch`).
+pub fn compress_model(
+    engine: &Engine,
+    cfg: &Config,
+    params: &FlatStore,
+    calib: &[TokenBatch],
+    method: &Method,
+    ratio: f64,
+) -> Result<CompressedModel> {
+    assert!(
+        calib.iter().all(|b| b.real_rows == cfg.batch),
+        "calibration batches must be full"
+    );
+    let allocation = Allocation::uniform(cfg, ratio, method.scheme);
+    let mut report = CompressReport::default();
+
+    // step 1: X <- X' <- embedding of calibration data
+    let mut xs = embed_batches(cfg, params, calib);
+    let mut xs_shift: Vec<Vec<f32>> = if method.needs_shift() {
+        xs.clone()
+    } else {
+        Vec::new()
+    };
+
+    let mut blocks: Vec<BlockFactors> = Vec::with_capacity(cfg.n_layers);
+    let mut quant_errs: Vec<f64> = Vec::new();
+
+    for i in 0..cfg.n_layers {
+        let bp = pack_block_params(cfg, params, i);
+        // dense taps on original inputs (X_j for every group, plus Y target)
+        let t0 = Instant::now();
+        let dense_taps = collect_dense(engine, cfg, &bp, &xs)?;
+        report.secs_collect += t0.elapsed().as_secs_f64();
+
+        // initialize L'_i <- L_i (exact full-rank factorization)
+        let mut bf = exact_factors(cfg, params, i);
+
+        for (tap_idx, linears) in GROUPS {
+            // collect shifted tap from the *current* partial state of L'_i
+            let t0 = Instant::now();
+            let shift_tap: Option<Vec<Vec<f32>>> = if method.objective.needs_shift() {
+                Some(collect_lr_tap(engine, cfg, &bf, &xs_shift, tap_idx - 1)?)
+            } else {
+                None
+            };
+            report.secs_collect += t0.elapsed().as_secs_f64();
+
+            // accumulate covariances (shared by all linears in the group)
+            let t0 = Instant::now();
+            let dim = if tap_idx == 4 { cfg.d_ff } else { cfg.d_model };
+            let mut cov = CovTriple::new(dim);
+            match &shift_tap {
+                Some(shift) => {
+                    for (o, s) in dense_taps.per_tap[tap_idx - 1].iter().zip(shift) {
+                        cov.add_chunk(o, s);
+                    }
+                }
+                None => {
+                    for o in &dense_taps.per_tap[tap_idx - 1] {
+                        cov.add_chunk_same(o);
+                    }
+                    cov.mirror_same();
+                }
+            }
+
+            for lin in linears {
+                let k = allocation.rank_of(lin);
+                let qerr =
+                    compress_one(method, cfg, params, i, lin, &cov, k, &mut bf);
+                if method.quant {
+                    quant_errs.push(qerr);
+                }
+            }
+            report.secs_solve += t0.elapsed().as_secs_f64();
+        }
+
+        // step 9: block-level local refinement
+        if let Some(ropts) = &method.refine {
+            let t0 = Instant::now();
+            let x_shift_flat = concat_batches(&xs_shift);
+            let y_flat = concat_batches(&dense_taps.y);
+            let rep = refine_block(engine, cfg, &mut bf, &x_shift_flat, &y_flat, ropts)?;
+            report.refine.push(rep);
+            report.secs_refine += t0.elapsed().as_secs_f64();
+        }
+
+        // step 10: advance both streams
+        if method.needs_shift() {
+            let t0 = Instant::now();
+            for x in xs_shift.iter_mut() {
+                let out = engine.run(
+                    &cfg.name,
+                    "block_lr_fwd",
+                    &[
+                        Value::F32(&bf.factors.data),
+                        Value::F32(&bf.masks.data),
+                        Value::F32(x),
+                    ],
+                )?;
+                *x = out[0].f32.clone();
+            }
+            report.secs_collect += t0.elapsed().as_secs_f64();
+        }
+        xs = dense_taps.y;
+        blocks.push(bf);
+    }
+
+    report.quant_err = if quant_errs.is_empty() {
+        0.0
+    } else {
+        quant_errs.iter().sum::<f64>() / quant_errs.len() as f64
+    };
+    Ok(CompressedModel {
+        blocks,
+        allocation,
+        report,
+    })
+}
+
+/// Chain dense block_collect across the whole model, accumulating
+/// (a_in, m_in, d_in) covariance triples per block (same-input mode).
+/// Used by the activation-aware pruning baselines.
+pub fn collect_dense_taps_for_pruning(
+    engine: &Engine,
+    cfg: &Config,
+    params: &FlatStore,
+    mut xs: Vec<Vec<f32>>,
+) -> Result<Vec<(CovTriple, CovTriple, CovTriple)>> {
+    let mut out = Vec::with_capacity(cfg.n_layers);
+    for i in 0..cfg.n_layers {
+        let bp = pack_block_params(cfg, params, i);
+        let taps = collect_dense(engine, cfg, &bp, &xs)?;
+        let mut a = CovTriple::new(cfg.d_model);
+        let mut m = CovTriple::new(cfg.d_model);
+        let mut d = CovTriple::new(cfg.d_ff);
+        for batch in &taps.per_tap[0] {
+            a.add_chunk_same(batch);
+        }
+        for batch in &taps.per_tap[2] {
+            m.add_chunk_same(batch);
+        }
+        for batch in &taps.per_tap[3] {
+            d.add_chunk_same(batch);
+        }
+        a.mirror_same();
+        m.mirror_same();
+        d.mirror_same();
+        out.push((a, m, d));
+        xs = taps.y;
+    }
+    Ok(out)
+}
+
+fn concat_batches(batches: &[Vec<f32>]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(batches.iter().map(|b| b.len()).sum());
+    for b in batches {
+        out.extend_from_slice(b);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_presets_are_consistent() {
+        assert!(!Method::svd_llm().needs_shift());
+        assert!(Method::dobi().needs_shift());
+        assert!(Method::aa_svd(RefineOptions::default()).needs_shift());
+        assert_eq!(Method::naive_svd().objective, Objective::InputAgnostic);
+        assert_eq!(Method::aa_svd_q(RefineOptions::default()).scheme, RankScheme::Remap);
+        assert!(Method::aa_svd_q(RefineOptions::default()).quant);
+    }
+
+    #[test]
+    fn ablation_names() {
+        let m = Method::ablation(Objective::Anchored, Some(RefineOptions::default()));
+        assert_eq!(m.name, "anchored+refine");
+        let m = Method::ablation(Objective::InputAgnostic, None);
+        assert_eq!(m.name, "input_agnostic");
+    }
+
+    #[test]
+    fn groups_cover_all_linears_once() {
+        let mut seen: Vec<&str> = GROUPS.iter().flat_map(|(_, l)| l.iter().copied()).collect();
+        seen.sort_unstable();
+        let mut want = BLOCK_LINEARS.to_vec();
+        want.sort_unstable();
+        assert_eq!(seen, want);
+    }
+
+    /// End-to-end pipeline on the tiny config (skips without artifacts).
+    /// This is the topological-order invariant test: compressing with the
+    /// anchored objective must produce finite factors with the allocated
+    /// ranks, and the compressed model must stay close to dense at high
+    /// ratio.
+    #[test]
+    fn pipeline_end_to_end_tiny() {
+        let Ok(engine) = Engine::new("artifacts") else { return };
+        if engine.entry("tiny").is_err() {
+            return;
+        }
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = crate::model::init::init_params(
+            &cfg,
+            &mut crate::util::rng::Rng::new(3),
+        );
+        let corpus = crate::data::Corpus::generate(crate::data::Domain::Wiki, 30_000, 7);
+        let batcher = crate::data::Batcher::new(cfg.batch, cfg.seq);
+        let calib: Vec<_> = batcher
+            .sequential(&corpus.train, 4)
+            .into_iter()
+            .filter(|b| b.real_rows == cfg.batch)
+            .collect();
+        assert!(calib.len() >= 2);
+
+        let method = Method::ablation(Objective::Anchored, None);
+        let cm = compress_model(&engine, &cfg, &params, &calib, &method, 0.9).unwrap();
+        assert_eq!(cm.blocks.len(), cfg.n_layers);
+        for bf in &cm.blocks {
+            for lin in BLOCK_LINEARS {
+                assert_eq!(bf.rank(lin), cm.allocation.rank_of(lin));
+            }
+            assert!(bf.factors.data.iter().all(|v| v.is_finite()));
+        }
+    }
+}

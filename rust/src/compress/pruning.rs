@@ -1,0 +1,342 @@
+//! Structured-pruning baselines for the Table 3/4 comparisons.
+//!
+//! Paper substitution (DESIGN.md §3): LLM-Pruner / Wanda-sp / SliceGPT /
+//! BlockPruner are closed testbeds, so we implement the corresponding
+//! mechanism classes in-repo, all budgeted by the same parameter-count
+//! accounting used for the SVD methods:
+//!  - magnitude channel pruning (LLM-Pruner-like): drop MLP channels and
+//!    attention head groups by weight norm,
+//!  - activation-aware channel pruning (Wanda-sp-like): importance =
+//!    ‖W_col‖ · E[x²]^0.5 from the calibration covariance diagonal,
+//!  - PCA slicing (SliceGPT-like): project every block linear onto the top
+//!    principal subspace of its calibration inputs,
+//!  - block dropping (BlockPruner-like): remove whole transformer blocks.
+//!
+//! All baselines *materialize modified dense parameters* so the unchanged
+//! model_fwd artifact evaluates them.
+
+use super::cov::CovTriple;
+use super::pipeline::{collect_dense_taps_for_pruning, embed_batches};
+use crate::data::TokenBatch;
+use crate::linalg::{eigh, Matrix};
+use crate::model::{Config, FlatStore};
+use crate::runtime::Engine;
+use anyhow::Result;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PruneMethod {
+    Magnitude,  // LLM-Pruner-like
+    WandaSp,    // activation-aware
+    SliceGpt,   // PCA slicing
+    BlockDrop,  // BlockPruner-like
+}
+
+pub const ALL_PRUNERS: [PruneMethod; 4] = [
+    PruneMethod::Magnitude,
+    PruneMethod::WandaSp,
+    PruneMethod::SliceGpt,
+    PruneMethod::BlockDrop,
+];
+
+impl PruneMethod {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PruneMethod::Magnitude => "llm_pruner",
+            PruneMethod::WandaSp => "wanda_sp",
+            PruneMethod::SliceGpt => "slicegpt",
+            PruneMethod::BlockDrop => "blockpruner",
+        }
+    }
+
+    pub fn needs_activations(&self) -> bool {
+        matches!(self, PruneMethod::WandaSp | PruneMethod::SliceGpt)
+    }
+}
+
+/// Result: modified dense parameters + surviving parameter count.
+pub struct PrunedModel {
+    pub params: FlatStore,
+    pub kept_params: f64,
+}
+
+/// Prune MLP hidden channels of one block to `keep` of `d_ff`, zeroing the
+/// dropped rows of gate/up and columns of down. Importance given per channel.
+fn prune_mlp_channels(cfg: &Config, params: &mut FlatStore, block: usize, importance: &[f64], keep: usize) {
+    let f = cfg.d_ff;
+    let d = cfg.d_model;
+    let mut idx: Vec<usize> = (0..f).collect();
+    idx.sort_by(|&a, &b| importance[b].partial_cmp(&importance[a]).unwrap());
+    let dropped: Vec<usize> = idx[keep..].to_vec();
+    for lin in ["w_gate", "w_up"] {
+        let w = params.view_mut(&format!("blocks.{block}.{lin}"));
+        for &ch in &dropped {
+            w[ch * d..(ch + 1) * d].fill(0.0);
+        }
+    }
+    let w = params.view_mut(&format!("blocks.{block}.w_down"));
+    for &ch in &dropped {
+        for row in 0..d {
+            w[row * f + ch] = 0.0;
+        }
+    }
+}
+
+/// Prune attention "channels" (head-dim groups): zero head h entirely in
+/// q/k/v rows and wo columns.
+fn prune_heads(cfg: &Config, params: &mut FlatStore, block: usize, importance: &[f64], keep: usize) {
+    let d = cfg.d_model;
+    let hd = cfg.head_dim();
+    let mut idx: Vec<usize> = (0..cfg.n_heads).collect();
+    idx.sort_by(|&a, &b| importance[b].partial_cmp(&importance[a]).unwrap());
+    for &h in &idx[keep..] {
+        for lin in ["wq", "wk", "wv"] {
+            let w = params.view_mut(&format!("blocks.{block}.{lin}"));
+            w[h * hd * d..(h + 1) * hd * d].fill(0.0);
+        }
+        let w = params.view_mut(&format!("blocks.{block}.wo"));
+        for row in 0..d {
+            w[row * d + h * hd..row * d + (h + 1) * hd].fill(0.0);
+        }
+    }
+}
+
+/// Weight-norm importance of MLP channels / heads.
+fn magnitude_importance(cfg: &Config, params: &FlatStore, block: usize) -> (Vec<f64>, Vec<f64>) {
+    let f = cfg.d_ff;
+    let d = cfg.d_model;
+    let mut mlp = vec![0f64; f];
+    for lin in ["w_gate", "w_up"] {
+        let w = params.view(&format!("blocks.{block}.{lin}"));
+        for ch in 0..f {
+            mlp[ch] += w[ch * d..(ch + 1) * d]
+                .iter()
+                .map(|&x| (x as f64).powi(2))
+                .sum::<f64>();
+        }
+    }
+    let hd = cfg.head_dim();
+    let mut heads = vec![0f64; cfg.n_heads];
+    let wv = params.view(&format!("blocks.{block}.wv"));
+    for h in 0..cfg.n_heads {
+        heads[h] = wv[h * hd * d..(h + 1) * hd * d]
+            .iter()
+            .map(|&x| (x as f64).powi(2))
+            .sum();
+    }
+    (mlp, heads)
+}
+
+/// Prune to parameter ratio `rho` with the chosen method.
+pub fn prune_model(
+    engine: &Engine,
+    cfg: &Config,
+    params: &FlatStore,
+    calib: &[TokenBatch],
+    method: PruneMethod,
+    rho: f64,
+) -> Result<PrunedModel> {
+    let mut out = params.clone();
+    let dense_block = cfg.block_linear_params() as f64;
+
+    match method {
+        PruneMethod::BlockDrop => {
+            // drop ceil((1-rho)·L) whole blocks, shallowest-importance =
+            // middle blocks first (standard BlockPruner heuristic shape)
+            let n_drop = ((1.0 - rho) * cfg.n_layers as f64).round() as usize;
+            let order = block_drop_order(cfg.n_layers);
+            for &b in order.iter().take(n_drop) {
+                // zero wo + w_down -> block output = input (residual pass)
+                out.view_mut(&format!("blocks.{b}.wo")).fill(0.0);
+                out.view_mut(&format!("blocks.{b}.w_down")).fill(0.0);
+            }
+            let kept = (cfg.n_layers - n_drop) as f64 * dense_block;
+            return Ok(PrunedModel {
+                params: out,
+                kept_params: kept + fixed_params(cfg),
+            });
+        }
+        _ => {}
+    }
+
+    // channel-level methods: split the budget between MLP and attention
+    // proportionally to their dense sizes
+    let mlp_params = (3 * cfg.d_model * cfg.d_ff) as f64;
+    let attn_params = (4 * cfg.d_model * cfg.d_model) as f64;
+    let keep_f = ((rho * mlp_params) / (3 * cfg.d_model) as f64).round() as usize;
+    let keep_f = keep_f.clamp(1, cfg.d_ff);
+    let keep_h = ((rho * attn_params) / (4 * cfg.d_model * cfg.head_dim()) as f64)
+        .round() as usize;
+    let keep_h = keep_h.clamp(1, cfg.n_heads);
+
+    // activations (for Wanda / SliceGPT)
+    let acts = if method.needs_activations() {
+        Some(collect_calibration_covs(engine, cfg, params, calib)?)
+    } else {
+        None
+    };
+
+    for b in 0..cfg.n_layers {
+        match method {
+            PruneMethod::Magnitude => {
+                let (mlp, heads) = magnitude_importance(cfg, params, b);
+                prune_mlp_channels(cfg, &mut out, b, &mlp, keep_f);
+                prune_heads(cfg, &mut out, b, &heads, keep_h);
+            }
+            PruneMethod::WandaSp => {
+                let (mut mlp, mut heads) = magnitude_importance(cfg, params, b);
+                let covs = acts.as_ref().unwrap();
+                // scale by input activation energy at the right taps
+                let m_scale = covs[b].1.channel_scales(); // m_in tap, dim d
+                let d_scale = covs[b].2.channel_scales(); // d_in tap, dim ff
+                // gate/up columns see m_in (dim d): use mean energy as a
+                // global factor; channel identity lives in d_in for w_down
+                let m_mean: f64 =
+                    m_scale.iter().sum::<f64>() / m_scale.len() as f64;
+                for ch in 0..cfg.d_ff {
+                    mlp[ch] = mlp[ch] * m_mean + d_scale[ch] * d_scale[ch];
+                }
+                let a_scale = covs[b].0.channel_scales(); // a_in, dim d
+                let hd = cfg.head_dim();
+                for h in 0..cfg.n_heads {
+                    let e: f64 = a_scale.iter().map(|s| s * s).sum::<f64>();
+                    heads[h] *= e / hd as f64;
+                }
+                prune_mlp_channels(cfg, &mut out, b, &mlp, keep_f);
+                prune_heads(cfg, &mut out, b, &heads, keep_h);
+            }
+            PruneMethod::SliceGpt => {
+                // project q/k/v/gate/up inputs onto top-q eigvecs of the
+                // block-input covariance: W <- W P Pᵀ (same storage shape;
+                // accounted as q/d of the input dim kept)
+                let covs = acts.as_ref().unwrap();
+                let q_keep = ((rho * cfg.d_model as f64).round() as usize)
+                    .clamp(1, cfg.d_model);
+                let (_, qmat) = eigh(&covs[b].0.s_orig);
+                let p = qmat.cols_range(0, q_keep); // [d, q]
+                let proj = p.matmul_bt(&p); // P Pᵀ [d, d]
+                for lin in ["wq", "wk", "wv", "w_gate", "w_up"] {
+                    let (m, n) = cfg.linear_dims(lin);
+                    let name = format!("blocks.{b}.{lin}");
+                    let w = Matrix::from_f32(m, n, params.view(&name));
+                    let wp = w.matmul(&proj).to_f32();
+                    out.view_mut(&name).copy_from_slice(&wp);
+                }
+            }
+            PruneMethod::BlockDrop => unreachable!(),
+        }
+    }
+
+    let kept_block = match method {
+        PruneMethod::Magnitude | PruneMethod::WandaSp => {
+            (3 * keep_f * cfg.d_model + 4 * keep_h * cfg.head_dim() * cfg.d_model) as f64
+        }
+        PruneMethod::SliceGpt => {
+            // sliced inputs: q/d of each projected linear + dense wo/w_down
+            let q_keep = ((rho * cfg.d_model as f64).round() as usize)
+                .clamp(1, cfg.d_model) as f64;
+            let dd = cfg.d_model as f64;
+            let ff = cfg.d_ff as f64;
+            3.0 * dd * q_keep + 2.0 * ff * q_keep + dd * dd + dd * ff
+        }
+        PruneMethod::BlockDrop => unreachable!(),
+    };
+    Ok(PrunedModel {
+        params: out,
+        kept_params: cfg.n_layers as f64 * kept_block + fixed_params(cfg),
+    })
+}
+
+fn fixed_params(cfg: &Config) -> f64 {
+    (2 * cfg.vocab * cfg.d_model + cfg.d_model + cfg.n_layers * 2 * cfg.d_model) as f64
+}
+
+/// Middle-out block drop order (first/last blocks are load-bearing).
+fn block_drop_order(n: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (1..n.saturating_sub(1)).collect();
+    let mid = (n / 2) as i64;
+    order.sort_by_key(|&b| (b as i64 - mid).abs());
+    for b in [n - 1, 0] {
+        if b < n && !order.contains(&b) {
+            order.push(b);
+        }
+    }
+    order
+}
+
+/// Per-block (a_in, m_in, d_in) covariance triples on calibration data.
+fn collect_calibration_covs(
+    engine: &Engine,
+    cfg: &Config,
+    params: &FlatStore,
+    calib: &[TokenBatch],
+) -> Result<Vec<(CovTriple, CovTriple, CovTriple)>> {
+    let xs = embed_batches(cfg, params, calib);
+    collect_dense_taps_for_pruning(engine, cfg, params, xs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_params;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn names_and_flags() {
+        assert_eq!(PruneMethod::Magnitude.name(), "llm_pruner");
+        assert!(PruneMethod::WandaSp.needs_activations());
+        assert!(!PruneMethod::BlockDrop.needs_activations());
+    }
+
+    #[test]
+    fn block_drop_order_prefers_middle() {
+        let order = block_drop_order(8);
+        assert_eq!(order[0], 4);
+        assert!(!order.contains(&0) || order.last() == Some(&0));
+    }
+
+    #[test]
+    fn magnitude_prune_zeroes_expected_counts() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(1));
+        let mut out = params.clone();
+        let (mlp, heads) = magnitude_importance(&cfg, &params, 0);
+        prune_mlp_channels(&cfg, &mut out, 0, &mlp, cfg.d_ff / 2);
+        prune_heads(&cfg, &mut out, 0, &heads, 1);
+        // half the gate rows must be zero
+        let w = out.view("blocks.0.w_gate");
+        let zero_rows = (0..cfg.d_ff)
+            .filter(|&ch| {
+                w[ch * cfg.d_model..(ch + 1) * cfg.d_model]
+                    .iter()
+                    .all(|&x| x == 0.0)
+            })
+            .count();
+        assert_eq!(zero_rows, cfg.d_ff - cfg.d_ff / 2);
+        // one head left in wv
+        let wv = out.view("blocks.0.wv");
+        let hd = cfg.head_dim();
+        let live_heads = (0..cfg.n_heads)
+            .filter(|&h| {
+                wv[h * hd * cfg.d_model..(h + 1) * hd * cfg.d_model]
+                    .iter()
+                    .any(|&x| x != 0.0)
+            })
+            .count();
+        assert_eq!(live_heads, 1);
+    }
+
+    #[test]
+    fn importance_ordering_respected() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(2));
+        let mut out = params.clone();
+        // hand importance: keep channels 0 and 1
+        let mut imp = vec![0.0; cfg.d_ff];
+        imp[0] = 10.0;
+        imp[1] = 9.0;
+        prune_mlp_channels(&cfg, &mut out, 0, &imp, 2);
+        let w = out.view("blocks.0.w_gate");
+        assert!(w[..cfg.d_model].iter().any(|&x| x != 0.0));
+        assert!(w[2 * cfg.d_model..3 * cfg.d_model].iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,204 @@
+//! Int8 factor quantization — the storage format behind Dobi-style
+//! remapping (paper §B.4, the AA-SVDᵠ rows).
+//!
+//! We implement the *actual* precision reduction, not just the accounting:
+//! factor matrices are quantized per-column (symmetric int8 with f32
+//! scales) and dequantized into the padded factor buffers at load time, so
+//! the quality effect of remapping is measured, not assumed.
+
+/// A per-column symmetric int8 quantized matrix [rows, cols].
+#[derive(Clone, Debug)]
+pub struct QuantMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i8>,
+    pub scales: Vec<f32>, // one per column
+}
+
+impl QuantMatrix {
+    pub fn quantize(x: &[f32], rows: usize, cols: usize) -> QuantMatrix {
+        assert_eq!(x.len(), rows * cols);
+        let mut scales = vec![0f32; cols];
+        for j in 0..cols {
+            let mut mx = 0f32;
+            for i in 0..rows {
+                mx = mx.max(x[i * cols + j].abs());
+            }
+            scales[j] = if mx > 0.0 { mx / 127.0 } else { 1.0 };
+        }
+        let data = (0..rows * cols)
+            .map(|idx| {
+                let j = idx % cols;
+                (x[idx] / scales[j]).round().clamp(-127.0, 127.0) as i8
+            })
+            .collect();
+        QuantMatrix {
+            rows,
+            cols,
+            data,
+            scales,
+        }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.data
+            .iter()
+            .enumerate()
+            .map(|(idx, &q)| q as f32 * self.scales[idx % self.cols])
+            .collect()
+    }
+
+    /// Storage in bytes: 1 byte/entry + 4 bytes/column scale.
+    pub fn bytes(&self) -> usize {
+        self.data.len() + 4 * self.scales.len()
+    }
+}
+
+/// Balance per-component column norms between U and V in place:
+/// (u_p, v_p) <- (u_p·s, v_p/s) with s = sqrt(‖v_p‖/‖u_p‖), leaving the
+/// product U Vᵀ unchanged. The whitening solve (V = R⁻ᵀ V_k) can give tail
+/// components tiny u_p but enormous v_p; int8 quantization error is
+/// relative *per column*, so an unbalanced pair converts small relative
+/// error into large absolute error in W'. This is the √Σ split Dobi-style
+/// remapping stores.
+pub fn balance_factor_columns(u: &mut [f32], m: usize, v: &mut [f32], n: usize, k: usize) {
+    for p in 0..k {
+        let nu: f64 = (0..m).map(|i| (u[i * k + p] as f64).powi(2)).sum::<f64>().sqrt();
+        let nv: f64 = (0..n).map(|i| (v[i * k + p] as f64).powi(2)).sum::<f64>().sqrt();
+        if nu <= 1e-30 || nv <= 1e-30 {
+            continue;
+        }
+        let s = (nv / nu).sqrt() as f32;
+        for i in 0..m {
+            u[i * k + p] *= s;
+        }
+        for i in 0..n {
+            v[i * k + p] /= s;
+        }
+    }
+}
+
+/// Quantize+dequantize a factor pair in place (simulating int8 storage),
+/// returning the round-trip relative error of each factor.
+/// Columns are norm-balanced first (see `balance_factor_columns`).
+pub fn quantize_factors_inplace(
+    u: &mut [f32],
+    m: usize,
+    v: &mut [f32],
+    n: usize,
+    k: usize,
+) -> (f64, f64) {
+    balance_factor_columns(u, m, v, n, k);
+    let qu = QuantMatrix::quantize(u, m, k);
+    let qv = QuantMatrix::quantize(v, n, k);
+    let du = qu.dequantize();
+    let dv = qv.dequantize();
+    let eu = rel(u, &du);
+    let ev = rel(v, &dv);
+    u.copy_from_slice(&du);
+    v.copy_from_slice(&dv);
+    (eu, ev)
+}
+
+fn rel(a: &[f32], b: &[f32]) -> f64 {
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        num += ((x - y) as f64).powi(2);
+        den += (x as f64).powi(2);
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_error_within_8bit_bound() {
+        let mut rng = Rng::new(1);
+        let (rows, cols) = (64, 16);
+        let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+        let q = QuantMatrix::quantize(&x, rows, cols);
+        let d = q.dequantize();
+        // max error per entry <= scale/2
+        for j in 0..cols {
+            for i in 0..rows {
+                let err = (x[i * cols + j] - d[i * cols + j]).abs();
+                assert!(err <= q.scales[j] * 0.5 + 1e-7);
+            }
+        }
+        assert!(rel(&x, &d) < 0.01, "rel {}", rel(&x, &d));
+    }
+
+    #[test]
+    fn zero_matrix_safe() {
+        let x = vec![0f32; 12];
+        let q = QuantMatrix::quantize(&x, 3, 4);
+        assert_eq!(q.dequantize(), x);
+    }
+
+    #[test]
+    fn per_column_scales_adapt() {
+        // column 1 is 100x column 0: per-column scaling keeps both accurate
+        let x = vec![0.01f32, 1.0, -0.02, 2.0, 0.015, -1.5];
+        let q = QuantMatrix::quantize(&x, 3, 2);
+        let d = q.dequantize();
+        assert!(rel(&x, &d) < 0.01);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let q = QuantMatrix::quantize(&vec![1.0; 50], 10, 5);
+        assert_eq!(q.bytes(), 50 + 20);
+    }
+
+    #[test]
+    fn balancing_preserves_product_and_fixes_quant_damage() {
+        let mut rng = Rng::new(3);
+        let (m, n, k) = (16, 16, 6);
+        // adversarial imbalance: column p has u ~ 1e-3, v ~ 1e3
+        let mut u: Vec<f32> = (0..m * k).map(|_| rng.normal() * 1e-3).collect();
+        let mut v: Vec<f32> = (0..n * k).map(|_| rng.normal() * 1e3).collect();
+        let dense = |u: &[f32], v: &[f32]| -> Vec<f32> {
+            let mut w = vec![0f32; m * n];
+            for i in 0..m {
+                for p in 0..k {
+                    for j in 0..n {
+                        w[i * n + j] += u[i * k + p] * v[j * k + p];
+                    }
+                }
+            }
+            w
+        };
+        let before = dense(&u, &v);
+        balance_factor_columns(&mut u, m, &mut v, n, k);
+        let after = dense(&u, &v);
+        assert!(rel(&before, &after) < 1e-5, "balance changed the product");
+        // per-column norms now equal
+        for p in 0..k {
+            let nu: f32 = (0..m).map(|i| u[i * k + p] * u[i * k + p]).sum::<f32>().sqrt();
+            let nv: f32 = (0..n).map(|i| v[i * k + p] * v[i * k + p]).sum::<f32>().sqrt();
+            assert!((nu / nv - 1.0).abs() < 1e-3);
+        }
+        // quantization after balancing keeps the product accurate
+        let (eu, ev) = quantize_factors_inplace(&mut u, m, &mut v, n, k);
+        assert!(eu < 0.02 && ev < 0.02);
+        let quantized = dense(&u, &v);
+        assert!(rel(&before, &quantized) < 0.05, "rel {}", rel(&before, &quantized));
+    }
+
+    #[test]
+    fn inplace_returns_errors() {
+        let mut rng = Rng::new(2);
+        let (m, n, k) = (20, 30, 8);
+        let mut u: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let mut v: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+        let orig_u = u.clone();
+        let (eu, ev) = quantize_factors_inplace(&mut u, m, &mut v, n, k);
+        assert!(eu > 0.0 && eu < 0.02);
+        assert!(ev > 0.0 && ev < 0.02);
+        assert_ne!(u, orig_u); // actually changed
+    }
+}

@@ -1,0 +1,200 @@
+//! Rank allocation and parameter-budget accounting (paper §B.3, §B.4).
+//!
+//! Standard scheme: a layer at ratio ρ stores k(m+n) of mn parameters,
+//!   k = ρ·mn/(m+n)          (restricts k ≤ mn/(m+n), i.e. ρ ≤ 1).
+//! Dobi-style remapping stores max(m,n)·k full-precision-equivalent units
+//! (smaller factor + top rows of the larger factor in 8-bit), so
+//!   k = ρ·min(m,n)          spanning the full rank range.
+
+use crate::model::config::{Config, BLOCK_LINEARS};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RankScheme {
+    Standard,
+    Remap,
+}
+
+impl RankScheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RankScheme::Standard => "standard",
+            RankScheme::Remap => "remap",
+        }
+    }
+
+    /// Truncation rank for one linear at parameter ratio `rho`.
+    pub fn rank(&self, m: usize, n: usize, rho: f64) -> usize {
+        let k = match self {
+            RankScheme::Standard => rho * (m * n) as f64 / (m + n) as f64,
+            RankScheme::Remap => rho * m.min(n) as f64,
+        };
+        (k.round() as usize).clamp(1, m.min(n))
+    }
+
+    /// Stored parameter count (full-precision-equivalent units) of one
+    /// linear at rank k.
+    pub fn stored(&self, m: usize, n: usize, k: usize) -> f64 {
+        match self {
+            RankScheme::Standard => (k * (m + n)) as f64,
+            // B.4: 0.5·2·min·k (8-bit halves) + (max−min)·k full precision
+            RankScheme::Remap => (m.max(n) * k) as f64,
+        }
+    }
+}
+
+/// Per-linear rank allocation for a whole model at a uniform ratio
+/// (the paper's default; §5 discusses non-uniform allocation as future work).
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    pub scheme: RankScheme,
+    pub ratio: f64,
+    /// rank per block linear, in BLOCK_LINEARS order (same for all blocks
+    /// under uniform allocation)
+    pub ranks: Vec<usize>,
+}
+
+impl Allocation {
+    pub fn uniform(cfg: &Config, ratio: f64, scheme: RankScheme) -> Allocation {
+        let ranks = BLOCK_LINEARS
+            .iter()
+            .map(|lin| {
+                let (m, n) = cfg.linear_dims(lin);
+                scheme.rank(m, n, ratio)
+            })
+            .collect();
+        Allocation {
+            scheme,
+            ratio,
+            ranks,
+        }
+    }
+
+    pub fn rank_of(&self, lin: &str) -> usize {
+        let idx = BLOCK_LINEARS.iter().position(|l| *l == lin).unwrap();
+        self.ranks[idx]
+    }
+
+    /// Achieved compression ratio over block-linear parameters.
+    pub fn achieved_ratio(&self, cfg: &Config) -> f64 {
+        let mut stored = 0.0;
+        let mut dense = 0.0;
+        for lin in BLOCK_LINEARS {
+            let (m, n) = cfg.linear_dims(lin);
+            stored += self.scheme.stored(m, n, self.rank_of(lin));
+            dense += (m * n) as f64;
+        }
+        stored / dense
+    }
+
+    /// Total model parameters (full-precision-equivalent) including the
+    /// uncompressed embed/head/norm tensors.
+    pub fn total_params(&self, cfg: &Config) -> f64 {
+        let fixed = (2 * cfg.vocab * cfg.d_model
+            + cfg.d_model
+            + cfg.n_layers * 2 * cfg.d_model) as f64;
+        let mut blocks = 0.0;
+        for lin in BLOCK_LINEARS {
+            let (m, n) = cfg.linear_dims(lin);
+            blocks += self.scheme.stored(m, n, self.rank_of(lin));
+        }
+        fixed + cfg.n_layers as f64 * blocks
+    }
+}
+
+/// Dense model parameter count.
+pub fn dense_params(cfg: &Config) -> f64 {
+    (2 * cfg.vocab * cfg.d_model
+        + cfg.d_model
+        + cfg.n_layers * (2 * cfg.d_model + cfg.block_linear_params())) as f64
+}
+
+/// Memory-budget row (Table 4): find the largest uniform ratio whose total
+/// parameter bytes fit `budget_frac` of the dense model.
+pub fn ratio_for_budget(cfg: &Config, budget_frac: f64, scheme: RankScheme) -> f64 {
+    let dense = dense_params(cfg);
+    let mut lo = 0.02;
+    let mut hi = 1.0;
+    for _ in 0..40 {
+        let mid = 0.5 * (lo + hi);
+        let total = Allocation::uniform(cfg, mid, scheme).total_params(cfg);
+        if total <= budget_frac * dense {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_rank_formula() {
+        // m = n = 100, rho = 0.5: k = 0.5*10000/200 = 25
+        assert_eq!(RankScheme::Standard.rank(100, 100, 0.5), 25);
+        // full ratio caps at mn/(m+n)
+        assert_eq!(RankScheme::Standard.rank(100, 100, 1.0), 50);
+    }
+
+    #[test]
+    fn remap_rank_formula() {
+        assert_eq!(RankScheme::Remap.rank(100, 100, 0.5), 50);
+        assert_eq!(RankScheme::Remap.rank(100, 300, 0.8), 80);
+        // spans the full valid range (footnote 4)
+        assert_eq!(RankScheme::Remap.rank(100, 100, 1.0), 100);
+    }
+
+    #[test]
+    fn ranks_clamped_to_valid() {
+        assert_eq!(RankScheme::Standard.rank(10, 10, 0.0001), 1);
+        assert!(RankScheme::Standard.rank(10, 10, 5.0) <= 10);
+    }
+
+    #[test]
+    fn achieved_ratio_tracks_request() {
+        let cfg = Config::builtin("base").unwrap();
+        for rho in [0.8, 0.6, 0.4] {
+            for scheme in [RankScheme::Standard, RankScheme::Remap] {
+                let a = Allocation::uniform(&cfg, rho, scheme);
+                let got = a.achieved_ratio(&cfg);
+                assert!(
+                    (got - rho).abs() < 0.05,
+                    "{scheme:?} rho={rho} achieved={got}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn remap_allows_higher_rank_at_same_budget() {
+        let cfg = Config::builtin("base").unwrap();
+        let std_a = Allocation::uniform(&cfg, 0.8, RankScheme::Standard);
+        let rem_a = Allocation::uniform(&cfg, 0.8, RankScheme::Remap);
+        // same nominal ratio, remap keeps more singular directions on the
+        // square attention projections
+        assert!(rem_a.rank_of("wq") > std_a.rank_of("wq"));
+    }
+
+    #[test]
+    fn budget_solver_hits_target() {
+        let cfg = Config::builtin("base").unwrap();
+        let dense = dense_params(&cfg);
+        for frac in [0.9, 0.7, 0.5] {
+            let rho = ratio_for_budget(&cfg, frac, RankScheme::Standard);
+            let total = Allocation::uniform(&cfg, rho, RankScheme::Standard)
+                .total_params(&cfg);
+            assert!(total <= frac * dense * 1.001);
+            // and not wastefully below target
+            assert!(total >= frac * dense * 0.9, "frac {frac}: {total}");
+        }
+    }
+
+    #[test]
+    fn dense_params_sanity() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let lay = crate::model::params::param_layout(&cfg);
+        assert_eq!(dense_params(&cfg) as usize, lay.total);
+    }
+}

@@ -1,0 +1,123 @@
+//! Batch assembly for training, calibration and evaluation.
+
+use crate::util::rng::Rng;
+
+/// Fixed-shape token batches [B, T] with next-token targets, drawn from a
+/// token stream. Pads the final partial batch by repeating earlier windows
+/// and reports the number of *real* rows so metrics can mask padding.
+pub struct Batcher {
+    pub batch: usize,
+    pub seq: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct TokenBatch {
+    pub tokens: Vec<i32>,  // [B * T]
+    pub targets: Vec<i32>, // [B * T]
+    pub real_rows: usize,
+}
+
+impl Batcher {
+    pub fn new(batch: usize, seq: usize) -> Batcher {
+        Batcher { batch, seq }
+    }
+
+    /// Deterministic contiguous windows (for eval / calibration).
+    pub fn sequential(&self, stream: &[u32], max_batches: usize) -> Vec<TokenBatch> {
+        let windows = super::corpus::Corpus::windows(
+            stream,
+            self.seq,
+            max_batches * self.batch,
+        );
+        self.pack(windows)
+    }
+
+    /// Random windows (for pretraining).
+    pub fn random(&self, stream: &[u32], n_batches: usize, rng: &mut Rng) -> Vec<TokenBatch> {
+        let mut windows = Vec::with_capacity(n_batches * self.batch);
+        let limit = stream.len().saturating_sub(self.seq + 1);
+        assert!(limit > 0, "stream shorter than seq");
+        for _ in 0..n_batches * self.batch {
+            let start = rng.below(limit);
+            windows.push((
+                stream[start..start + self.seq].to_vec(),
+                stream[start + 1..start + self.seq + 1].to_vec(),
+            ));
+        }
+        self.pack(windows)
+    }
+
+    fn pack(&self, windows: Vec<(Vec<u32>, Vec<u32>)>) -> Vec<TokenBatch> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < windows.len() {
+            let n_real = (windows.len() - i).min(self.batch);
+            let mut tokens = Vec::with_capacity(self.batch * self.seq);
+            let mut targets = Vec::with_capacity(self.batch * self.seq);
+            for row in 0..self.batch {
+                // pad by cycling through this batch's real rows
+                let (x, y) = &windows[i + row.min(n_real - 1).min(row % n_real)];
+                tokens.extend(x.iter().map(|&t| t as i32));
+                targets.extend(y.iter().map(|&t| t as i32));
+            }
+            out.push(TokenBatch {
+                tokens,
+                targets,
+                real_rows: n_real,
+            });
+            i += n_real;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_batches_cover_stream() {
+        let stream: Vec<u32> = (0..1000).map(|i| (i % 200) as u32).collect();
+        let b = Batcher::new(4, 16);
+        let batches = b.sequential(&stream, 100);
+        let total_real: usize = batches.iter().map(|x| x.real_rows).sum();
+        assert_eq!(total_real, 1000 / 16 - 1 + 1); // floor((1000-1)/16)=62
+        for tb in &batches {
+            assert_eq!(tb.tokens.len(), 4 * 16);
+            assert_eq!(tb.targets.len(), 4 * 16);
+        }
+    }
+
+    #[test]
+    fn targets_shift_by_one() {
+        let stream: Vec<u32> = (0..200).collect();
+        let b = Batcher::new(2, 10);
+        let batches = b.sequential(&stream, 3);
+        let tb = &batches[0];
+        for i in 0..9 {
+            assert_eq!(tb.tokens[i + 1], tb.targets[i]);
+        }
+    }
+
+    #[test]
+    fn partial_final_batch_pads() {
+        let stream: Vec<u32> = (0..50).collect(); // 3 windows of 16
+        let b = Batcher::new(4, 16);
+        let batches = b.sequential(&stream, 10);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].real_rows, 3);
+        assert_eq!(batches[0].tokens.len(), 4 * 16);
+    }
+
+    #[test]
+    fn random_is_seeded() {
+        let stream: Vec<u32> = (0..5000).map(|i| (i * 7 % 250) as u32).collect();
+        let b = Batcher::new(4, 32);
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = b.random(&stream, 3, &mut r1);
+        let c = b.random(&stream, 3, &mut r2);
+        assert_eq!(a[0].tokens, c[0].tokens);
+        assert_eq!(a.len(), 3);
+    }
+}

@@ -1,0 +1,289 @@
+//! Synthetic corpora in three styles standing in for WikiText2 / PTB / C4.
+//!
+//! All three domains express the *same* underlying facts (lang.rs) through
+//! different surface templates and mixture weights, so "wiki" (calibration
+//! domain), "ptb" (style shift) and "c4" (broad mixture) reproduce the
+//! in-domain vs out-of-domain axis of the paper's perplexity columns.
+
+use super::lang::*;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Domain {
+    Wiki,
+    Ptb,
+    C4,
+}
+
+impl Domain {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Domain::Wiki => "wiki",
+            Domain::Ptb => "ptb",
+            Domain::C4 => "c4",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Domain> {
+        match s {
+            "wiki" => Some(Domain::Wiki),
+            "ptb" => Some(Domain::Ptb),
+            "c4" => Some(Domain::C4),
+            _ => None,
+        }
+    }
+}
+
+/// Zipf-ish index sampler: favors small indices (natural-language flavor).
+fn zipf(rng: &mut Rng, n: usize) -> usize {
+    let w: Vec<f64> = (0..n).map(|i| 1.0 / (1.0 + i as f64)).collect();
+    rng.categorical(&w)
+}
+
+/// One sentence in the given domain style.
+pub fn sentence(rng: &mut Rng, domain: Domain) -> String {
+    // template mixture differs per domain
+    let weights: &[f64] = match domain {
+        Domain::Wiki => &[3.0, 3.0, 2.0, 2.0, 2.0, 2.0, 0.5],
+        Domain::Ptb => &[3.0, 3.0, 2.0, 2.0, 2.0, 2.0, 0.5],
+        Domain::C4 => &[2.0, 2.0, 1.5, 1.5, 1.5, 1.5, 4.0],
+    };
+    let t = rng.categorical(weights);
+    match t {
+        // color fact
+        0 => {
+            let a = zipf(rng, ANIMALS.len());
+            match domain {
+                Domain::Wiki => format!("the {} is {} .", ANIMALS[a], color_of(a)),
+                Domain::Ptb => format!("a {} appears {} .", ANIMALS[a], color_of(a)),
+                Domain::C4 => format!("i saw the {} and it is {} .", ANIMALS[a], color_of(a)),
+            }
+        }
+        // size comparison (consistent with the total order)
+        1 => {
+            let mut a = rng.below(ANIMALS.len());
+            let mut b = rng.below(ANIMALS.len());
+            if a == b {
+                b = (b + 1) % ANIMALS.len();
+            }
+            if a < b {
+                std::mem::swap(&mut a, &mut b);
+            }
+            match domain {
+                Domain::Wiki => {
+                    format!("the {} is bigger than the {} .", ANIMALS[a], ANIMALS[b])
+                }
+                Domain::Ptb => {
+                    format!("a {} is larger than a {} .", ANIMALS[a], ANIMALS[b])
+                }
+                Domain::C4 => format!(
+                    "everyone knows the {} is bigger than the {} .",
+                    ANIMALS[a], ANIMALS[b]
+                ),
+            }
+        }
+        // animate verb frame (plausibility regularity)
+        2 => {
+            let s = zipf(rng, ANIMALS.len());
+            let v = rng.below(ANIMATE_VERBS.len());
+            let o = rng.below(ANIMALS.len());
+            match domain {
+                Domain::Wiki => format!(
+                    "the {} {} the {} .",
+                    ANIMALS[s], ANIMATE_VERBS[v], ANIMALS[o]
+                ),
+                Domain::Ptb => format!(
+                    "a {} {} a {} .",
+                    ANIMALS[s], ANIMATE_VERBS[v], ANIMALS[o]
+                ),
+                Domain::C4 => format!(
+                    "yesterday the {} {} the {} .",
+                    ANIMALS[s], ANIMATE_VERBS[v], ANIMALS[o]
+                ),
+            }
+        }
+        // addition fact
+        3 => {
+            let a = rng.below(10);
+            let b = rng.below(10);
+            match domain {
+                Domain::Wiki => {
+                    format!("{} plus {} is {} .", DIGITS[a], DIGITS[b], plus(a, b))
+                }
+                Domain::Ptb => {
+                    format!("{} and {} make {} .", DIGITS[a], DIGITS[b], plus(a, b))
+                }
+                Domain::C4 => format!(
+                    "we computed {} plus {} is {} .",
+                    DIGITS[a], DIGITS[b], plus(a, b)
+                ),
+            }
+        }
+        // subtraction fact
+        4 => {
+            let a = rng.below(10);
+            let b = rng.below(10);
+            match domain {
+                Domain::Wiki => {
+                    format!("{} minus {} is {} .", DIGITS[a], DIGITS[b], minus(a, b))
+                }
+                Domain::Ptb => {
+                    format!("{} less {} leaves {} .", DIGITS[a], DIGITS[b], minus(a, b))
+                }
+                Domain::C4 => format!(
+                    "note that {} minus {} is {} .",
+                    DIGITS[a], DIGITS[b], minus(a, b)
+                ),
+            }
+        }
+        // weekday sequence
+        5 => {
+            let i = rng.below(7);
+            let j = (i + 1) % 7;
+            let k = (i + 2) % 7;
+            match domain {
+                Domain::Wiki => format!("after {} comes {} then {} .", DAYS[i], DAYS[j], DAYS[k]),
+                Domain::Ptb => format!("{} follows {} .", DAYS[j], DAYS[i]),
+                Domain::C4 => format!("{} {} {} and so on .", DAYS[i], DAYS[j], DAYS[k]),
+            }
+        }
+        // filler/noise sentence (dominant in c4)
+        _ => {
+            let f1 = FILLER[rng.below(FILLER.len())];
+            let o1 = OBJECTS[rng.below(OBJECTS.len())];
+            let o2 = OBJECTS[rng.below(OBJECTS.len())];
+            let a = ANIMALS[zipf(rng, ANIMALS.len())];
+            format!("the {a} is {f1} the {o1} {f1} the {o2} .")
+        }
+    }
+}
+
+/// A generated corpus: one long byte-token stream per split.
+pub struct Corpus {
+    pub domain: Domain,
+    pub train: Vec<u32>,
+    pub valid: Vec<u32>,
+    pub test: Vec<u32>,
+}
+
+impl Corpus {
+    /// Generate ~`total_bytes` of text, split 80/10/10 by sentence.
+    pub fn generate(domain: Domain, total_bytes: usize, seed: u64) -> Corpus {
+        // distinct stream per domain so corpora are decorrelated
+        let mut rng = Rng::with_stream(seed, 0x1000 + domain.name().len() as u64 * 7919);
+        let (mut train, mut valid, mut test) = (Vec::new(), Vec::new(), Vec::new());
+        let mut produced = 0usize;
+        while produced < total_bytes {
+            let s = sentence(&mut rng, domain);
+            let bytes: Vec<u32> = s.bytes().map(|b| b as u32).collect();
+            produced += bytes.len() + 1;
+            let split = rng.f64();
+            let dst = if split < 0.8 {
+                &mut train
+            } else if split < 0.9 {
+                &mut valid
+            } else {
+                &mut test
+            };
+            dst.extend(bytes);
+            dst.push(b' ' as u32);
+        }
+        Corpus {
+            domain,
+            train,
+            valid,
+            test,
+        }
+    }
+
+    /// Cut a split into non-overlapping (input, target) windows of length
+    /// `seq` (targets shifted by one).
+    pub fn windows(split: &[u32], seq: usize, max_windows: usize) -> Vec<(Vec<u32>, Vec<u32>)> {
+        let mut out = Vec::new();
+        let mut pos = 0;
+        while pos + seq + 1 <= split.len() && out.len() < max_windows {
+            let x = split[pos..pos + seq].to_vec();
+            let y = split[pos + 1..pos + seq + 1].to_vec();
+            out.push((x, y));
+            pos += seq;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let a = Corpus::generate(Domain::Wiki, 10_000, 1);
+        let b = Corpus::generate(Domain::Wiki, 10_000, 1);
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.test, b.test);
+    }
+
+    #[test]
+    fn seeds_and_domains_decorrelate() {
+        let a = Corpus::generate(Domain::Wiki, 5_000, 1);
+        let b = Corpus::generate(Domain::Wiki, 5_000, 2);
+        let c = Corpus::generate(Domain::Ptb, 5_000, 1);
+        assert_ne!(a.train, b.train);
+        assert_ne!(a.train, c.train);
+    }
+
+    #[test]
+    fn splits_cover_requested_size() {
+        let c = Corpus::generate(Domain::C4, 50_000, 3);
+        let total = c.train.len() + c.valid.len() + c.test.len();
+        assert!(total >= 50_000);
+        // rough 80/10/10
+        let frac = c.train.len() as f64 / total as f64;
+        assert!((0.7..0.9).contains(&frac), "train frac {frac}");
+    }
+
+    #[test]
+    fn tokens_are_printable_ascii() {
+        let c = Corpus::generate(Domain::Ptb, 5_000, 4);
+        assert!(c.train.iter().all(|&t| t >= 32 && t < 127));
+    }
+
+    #[test]
+    fn windows_shift_by_one() {
+        let split: Vec<u32> = (0..100).collect();
+        let w = Corpus::windows(&split, 10, 5);
+        assert_eq!(w.len(), 5);
+        for (x, y) in &w {
+            assert_eq!(x.len(), 10);
+            for i in 0..9 {
+                assert_eq!(x[i + 1], y[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn domains_share_facts() {
+        // every domain mentions the color fact for animal 0 eventually
+        for d in [Domain::Wiki, Domain::Ptb, Domain::C4] {
+            let mut rng = Rng::new(5);
+            let text: String = (0..500).map(|_| sentence(&mut rng, d) + " ").collect();
+            let fact = format!("{} ", color_of(0));
+            assert!(
+                text.contains(&format!("{} ", ANIMALS[0])) && text.contains(fact.trim()),
+                "domain {} missing shared facts",
+                d.name()
+            );
+        }
+    }
+
+    #[test]
+    fn wiki_and_ptb_styles_differ() {
+        let mut r1 = Rng::new(6);
+        let mut r2 = Rng::new(6);
+        let wiki: String = (0..200).map(|_| sentence(&mut r1, Domain::Wiki) + " ").collect();
+        let ptb: String = (0..200).map(|_| sentence(&mut r2, Domain::Ptb) + " ").collect();
+        assert!(wiki.contains("the "));
+        assert!(ptb.contains("a "));
+        assert!(!ptb.contains("after ")); // wiki-only template head
+    }
+}

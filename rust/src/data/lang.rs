@@ -1,0 +1,119 @@
+//! Shared synthetic language: the regularities that both the pretraining
+//! corpora and the zero-shot evaluation tasks are built from.
+//!
+//! Paper substitution (DESIGN.md §3): WikiText2/PTB/C4 and the seven
+//! commonsense benchmarks are unavailable offline, so we define a small
+//! world with learnable structure — color facts, a strict size order,
+//! subject/verb plausibility classes, modular arithmetic, and weekday
+//! sequences — sample corpora from it in three styles, and generate
+//! multiple-choice tasks that probe exactly those regularities.
+
+/// Animals (animate nouns). Index is also the size rank (ascending).
+pub const ANIMALS: [&str; 10] = [
+    "ant", "crab", "frog", "bird", "cat", "dog", "wolf", "deer", "lion", "bear",
+];
+
+/// Inanimate nouns (implausible subjects for animate verbs).
+pub const OBJECTS: [&str; 8] = [
+    "rock", "table", "chair", "cup", "door", "lamp", "book", "coin",
+];
+
+/// Colors; the fact table maps animal i -> COLORS[i % len].
+pub const COLORS: [&str; 5] = ["red", "blue", "green", "black", "white"];
+
+/// Verbs only animate subjects perform.
+pub const ANIMATE_VERBS: [&str; 5] = ["eats", "chases", "sees", "hears", "hunts"];
+
+/// Days cycle (sequence-completion regularity).
+pub const DAYS: [&str; 7] = [
+    "monday", "tuesday", "wednesday", "thursday", "friday", "saturday", "sunday",
+];
+
+/// Number words 0..=9 (arithmetic is mod 10).
+pub const DIGITS: [&str; 10] = [
+    "zero", "one", "two", "three", "four", "five", "six", "seven", "eight", "nine",
+];
+
+/// Filler words for noise sentences (c4-style breadth).
+pub const FILLER: [&str; 12] = [
+    "near", "under", "over", "behind", "beside", "inside", "outside",
+    "always", "often", "rarely", "quietly", "quickly",
+];
+
+/// The color fact: every animal has one fixed color.
+pub fn color_of(animal_idx: usize) -> &'static str {
+    COLORS[animal_idx % COLORS.len()]
+}
+
+/// Ground truth of the size order: is a bigger than b?
+pub fn bigger(a_idx: usize, b_idx: usize) -> bool {
+    a_idx > b_idx
+}
+
+/// Sum mod 10 in number words.
+pub fn plus(a: usize, b: usize) -> &'static str {
+    DIGITS[(a + b) % 10]
+}
+
+/// Difference mod 10 in number words.
+pub fn minus(a: usize, b: usize) -> &'static str {
+    DIGITS[(a + 10 - b) % 10]
+}
+
+/// Day after DAYS[i].
+pub fn next_day(i: usize) -> &'static str {
+    DAYS[(i + 1) % 7]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn facts_are_total_and_stable() {
+        for i in 0..ANIMALS.len() {
+            assert!(!color_of(i).is_empty());
+            assert_eq!(color_of(i), color_of(i)); // deterministic
+        }
+    }
+
+    #[test]
+    fn size_order_is_strict_total() {
+        for i in 0..ANIMALS.len() {
+            assert!(!bigger(i, i));
+            for j in 0..ANIMALS.len() {
+                if i != j {
+                    assert!(bigger(i, j) ^ bigger(j, i));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arithmetic_mod10() {
+        assert_eq!(plus(2, 3), "five");
+        assert_eq!(plus(7, 5), "two");
+        assert_eq!(minus(7, 2), "five");
+        assert_eq!(minus(2, 7), "five");
+    }
+
+    #[test]
+    fn day_cycle() {
+        assert_eq!(next_day(0), "tuesday");
+        assert_eq!(next_day(6), "monday");
+    }
+
+    #[test]
+    fn word_lists_disjoint() {
+        let mut all: Vec<&str> = Vec::new();
+        all.extend(ANIMALS);
+        all.extend(OBJECTS);
+        all.extend(COLORS);
+        all.extend(DIGITS);
+        all.extend(DAYS);
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "word lists must not overlap");
+    }
+}

@@ -1,0 +1,11 @@
+//! Synthetic data substrate: shared language, corpora (wiki/ptb/c4 roles),
+//! zero-shot tasks, and batch assembly.
+
+pub mod batcher;
+pub mod corpus;
+pub mod lang;
+pub mod tasks;
+
+pub use batcher::{Batcher, TokenBatch};
+pub use corpus::{Corpus, Domain};
+pub use tasks::{Task, TaskInstance, ALL_TASKS};

@@ -1,0 +1,278 @@
+//! Seven synthetic multiple-choice tasks standing in for the paper's
+//! zero-shot commonsense benchmarks (OpenbookQA, ARC-e, ARC-c, WinoGrande,
+//! PIQA, MathQA, HellaSwag).
+//!
+//! Each task probes one regularity of the shared language with the same
+//! scoring protocol as lm-eval-harness: length-normalized LM likelihood of
+//! each choice continuation given the context; argmin NLL wins.
+
+use super::lang::*;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TaskInstance {
+    pub context: String,
+    pub choices: Vec<String>,
+    pub answer: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Task {
+    Openb,  // color fact recall (4-way)
+    ArcE,   // weekday continuation (4-way)
+    ArcC,   // addition (5-way)
+    Winog,  // size-order consistency (2-way)
+    Piqa,   // subject plausibility (2-way)
+    MathQa, // subtraction (5-way)
+    HellaS, // sentence completion vs corrupted continuations (4-way)
+}
+
+pub const ALL_TASKS: [Task; 7] = [
+    Task::Openb,
+    Task::ArcE,
+    Task::ArcC,
+    Task::Winog,
+    Task::Piqa,
+    Task::MathQa,
+    Task::HellaS,
+];
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Openb => "openb",
+            Task::ArcE => "arc_e",
+            Task::ArcC => "arc_c",
+            Task::Winog => "winog",
+            Task::Piqa => "piqa",
+            Task::MathQa => "mathqa",
+            Task::HellaS => "hellas",
+        }
+    }
+
+    pub fn n_choices(&self) -> usize {
+        match self {
+            Task::Openb | Task::ArcE | Task::HellaS => 4,
+            Task::ArcC | Task::MathQa => 5,
+            Task::Winog | Task::Piqa => 2,
+        }
+    }
+
+    pub fn chance(&self) -> f64 {
+        1.0 / self.n_choices() as f64
+    }
+
+    /// Generate one instance.
+    pub fn instance(&self, rng: &mut Rng) -> TaskInstance {
+        match self {
+            Task::Openb => {
+                let a = rng.below(ANIMALS.len());
+                let correct = color_of(a);
+                let mut choices = vec![correct.to_string()];
+                let mut pool: Vec<&str> =
+                    COLORS.iter().filter(|&&c| c != correct).cloned().collect();
+                rng.shuffle(&mut pool);
+                choices.extend(pool[..3].iter().map(|s| s.to_string()));
+                let answer = shuffle_with_answer(rng, &mut choices);
+                TaskInstance {
+                    context: format!("the {} is", ANIMALS[a]),
+                    choices,
+                    answer,
+                }
+            }
+            Task::ArcE => {
+                let i = rng.below(7);
+                let correct = next_day(i).to_string();
+                let mut choices = vec![correct.clone()];
+                let mut pool: Vec<&str> = DAYS
+                    .iter()
+                    .filter(|&&d| d != correct && d != DAYS[i])
+                    .cloned()
+                    .collect();
+                rng.shuffle(&mut pool);
+                choices.extend(pool[..3].iter().map(|s| s.to_string()));
+                let answer = shuffle_with_answer(rng, &mut choices);
+                TaskInstance {
+                    context: format!("after {} comes", DAYS[i]),
+                    choices,
+                    answer,
+                }
+            }
+            Task::ArcC => {
+                let a = rng.below(10);
+                let b = rng.below(10);
+                let correct = plus(a, b);
+                let mut choices = vec![correct.to_string()];
+                let mut pool: Vec<&str> =
+                    DIGITS.iter().filter(|&&d| d != correct).cloned().collect();
+                rng.shuffle(&mut pool);
+                choices.extend(pool[..4].iter().map(|s| s.to_string()));
+                let answer = shuffle_with_answer(rng, &mut choices);
+                TaskInstance {
+                    context: format!("{} plus {} is", DIGITS[a], DIGITS[b]),
+                    choices,
+                    answer,
+                }
+            }
+            Task::Winog => {
+                // "the X is bigger than the ___": animal smaller than X is
+                // corpus-consistent, larger contradicts the total order.
+                let x = 1 + rng.below(ANIMALS.len() - 2); // not extremes
+                let smaller = rng.below(x);
+                let larger = x + 1 + rng.below(ANIMALS.len() - x - 1);
+                let mut choices =
+                    vec![ANIMALS[smaller].to_string(), ANIMALS[larger].to_string()];
+                let answer = shuffle_with_answer(rng, &mut choices);
+                TaskInstance {
+                    context: format!("the {} is bigger than the", ANIMALS[x]),
+                    choices,
+                    answer,
+                }
+            }
+            Task::Piqa => {
+                // plausible subject for an animate verb: animal vs object
+                let v = rng.below(ANIMATE_VERBS.len());
+                let o = rng.below(ANIMALS.len());
+                let animal = ANIMALS[rng.below(ANIMALS.len())];
+                let object = OBJECTS[rng.below(OBJECTS.len())];
+                let mut choices = vec![
+                    format!("{animal} {} the {}", ANIMATE_VERBS[v], ANIMALS[o]),
+                    format!("{object} {} the {}", ANIMATE_VERBS[v], ANIMALS[o]),
+                ];
+                let answer = shuffle_with_answer(rng, &mut choices);
+                TaskInstance {
+                    context: "the".to_string(),
+                    choices,
+                    answer,
+                }
+            }
+            Task::MathQa => {
+                let a = rng.below(10);
+                let b = rng.below(10);
+                let correct = minus(a, b);
+                let mut choices = vec![correct.to_string()];
+                let mut pool: Vec<&str> =
+                    DIGITS.iter().filter(|&&d| d != correct).cloned().collect();
+                rng.shuffle(&mut pool);
+                choices.extend(pool[..4].iter().map(|s| s.to_string()));
+                let answer = shuffle_with_answer(rng, &mut choices);
+                TaskInstance {
+                    context: format!("{} minus {} is", DIGITS[a], DIGITS[b]),
+                    choices,
+                    answer,
+                }
+            }
+            Task::HellaS => {
+                // complete a canonical sentence; distractors shuffle word
+                // order or swap in an implausible noun
+                let s = rng.below(ANIMALS.len());
+                let v = rng.below(ANIMATE_VERBS.len());
+                let o = rng.below(ANIMALS.len());
+                let verb = ANIMATE_VERBS[v];
+                let obj = ANIMALS[o];
+                let correct = format!("{verb} the {obj} ."); // canonical
+                let mut choices = vec![
+                    correct,
+                    format!("the {obj} {verb} ."),               // scrambled
+                    format!("{verb} {obj} the ."),               // scrambled
+                    format!("{verb} the {} .", OBJECTS[rng.below(OBJECTS.len())]),
+                ];
+                let answer = shuffle_with_answer(rng, &mut choices);
+                TaskInstance {
+                    context: format!("the {}", ANIMALS[s]),
+                    choices,
+                    answer,
+                }
+            }
+        }
+    }
+
+    /// A deterministic evaluation set for this task.
+    pub fn dataset(&self, n: usize, seed: u64) -> Vec<TaskInstance> {
+        let mut rng = Rng::with_stream(seed, 0x7a5c + self.name().len() as u64);
+        (0..n).map(|_| self.instance(&mut rng)).collect()
+    }
+}
+
+/// Shuffle `choices` (currently correct-first) and return the new index of
+/// the correct answer.
+fn shuffle_with_answer(rng: &mut Rng, choices: &mut [String]) -> usize {
+    let correct = choices[0].clone();
+    rng.shuffle(choices);
+    choices.iter().position(|c| *c == correct).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instances_have_declared_arity() {
+        let mut rng = Rng::new(1);
+        for task in ALL_TASKS {
+            for _ in 0..20 {
+                let inst = task.instance(&mut rng);
+                assert_eq!(inst.choices.len(), task.n_choices(), "{}", task.name());
+                assert!(inst.answer < inst.choices.len());
+                // choices distinct
+                let mut c = inst.choices.clone();
+                c.sort();
+                c.dedup();
+                assert_eq!(c.len(), inst.choices.len(), "{}", task.name());
+            }
+        }
+    }
+
+    #[test]
+    fn datasets_deterministic() {
+        for task in ALL_TASKS {
+            let a = task.dataset(10, 42);
+            let b = task.dataset(10, 42);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.context, y.context);
+                assert_eq!(x.choices, y.choices);
+                assert_eq!(x.answer, y.answer);
+            }
+        }
+    }
+
+    #[test]
+    fn answers_not_always_first() {
+        // shuffle must distribute the correct answer across positions
+        let insts = Task::Openb.dataset(200, 7);
+        let first = insts.iter().filter(|i| i.answer == 0).count();
+        assert!(first < 120, "answer position biased: {first}/200");
+    }
+
+    #[test]
+    fn openb_answer_is_the_fact() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let inst = Task::Openb.instance(&mut rng);
+            // context names the animal; the correct choice is its color
+            let animal = inst.context.split_whitespace().nth(1).unwrap();
+            let idx = ANIMALS.iter().position(|&a| a == animal).unwrap();
+            assert_eq!(inst.choices[inst.answer], color_of(idx));
+        }
+    }
+
+    #[test]
+    fn winog_answer_is_smaller_animal() {
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let inst = Task::Winog.instance(&mut rng);
+            let subject = inst.context.split_whitespace().nth(1).unwrap();
+            let si = ANIMALS.iter().position(|&a| a == subject).unwrap();
+            let ans = &inst.choices[inst.answer];
+            let ai = ANIMALS.iter().position(|a| a == ans).unwrap();
+            assert!(bigger(si, ai), "{subject} must be bigger than {ans}");
+        }
+    }
+
+    #[test]
+    fn chance_levels() {
+        assert_eq!(Task::Winog.chance(), 0.5);
+        assert_eq!(Task::ArcC.chance(), 0.2);
+        assert_eq!(Task::Openb.chance(), 0.25);
+    }
+}

@@ -1,0 +1,9 @@
+//! Evaluation harness: perplexity, zero-shot accuracy, table rendering.
+
+pub mod perplexity;
+pub mod report;
+pub mod zeroshot;
+
+pub use perplexity::{compressed_ppl, dense_ppl, display_ppl};
+pub use report::Table;
+pub use zeroshot::{all_tasks_accuracy, task_accuracy, ModelRef};

@@ -1,0 +1,134 @@
+//! Perplexity evaluation over held-out corpora (the PPL columns of every
+//! table): exp(mean per-token NLL) via the model_nll / model_lr_nll
+//! artifacts, masking padded batch rows.
+
+use crate::data::TokenBatch;
+use crate::model::lowrank::{concat_factors, BlockFactors};
+use crate::model::{Config, FlatStore};
+use crate::runtime::{Engine, Value};
+use anyhow::Result;
+
+/// Mean NLL -> PPL over the real rows of `batches` for the dense model.
+pub fn dense_ppl(
+    engine: &Engine,
+    cfg: &Config,
+    params: &FlatStore,
+    batches: &[TokenBatch],
+) -> Result<f64> {
+    let mut total = 0f64;
+    let mut count = 0usize;
+    for tb in batches {
+        let out = engine.run(
+            &cfg.name,
+            "model_nll",
+            &[
+                Value::F32(&params.data),
+                Value::I32(&tb.tokens),
+                Value::I32(&tb.targets),
+            ],
+        )?;
+        accumulate(&out[0].f32, tb, cfg, &mut total, &mut count);
+    }
+    Ok((total / count.max(1) as f64).exp())
+}
+
+/// PPL of a compressed model (dense embed/head + low-rank blocks).
+pub fn compressed_ppl(
+    engine: &Engine,
+    cfg: &Config,
+    params: &FlatStore,
+    blocks: &[BlockFactors],
+    batches: &[TokenBatch],
+) -> Result<f64> {
+    let (fs, ms) = concat_factors(blocks);
+    let mut total = 0f64;
+    let mut count = 0usize;
+    for tb in batches {
+        let out = engine.run(
+            &cfg.name,
+            "model_lr_nll",
+            &[
+                Value::F32(&params.data),
+                Value::F32(&fs),
+                Value::F32(&ms),
+                Value::I32(&tb.tokens),
+                Value::I32(&tb.targets),
+            ],
+        )?;
+        accumulate(&out[0].f32, tb, cfg, &mut total, &mut count);
+    }
+    Ok((total / count.max(1) as f64).exp())
+}
+
+fn accumulate(nll: &[f32], tb: &TokenBatch, cfg: &Config, total: &mut f64, count: &mut usize) {
+    let t = cfg.seq;
+    for row in 0..tb.real_rows {
+        for v in &nll[row * t..(row + 1) * t] {
+            *total += *v as f64;
+        }
+        *count += t;
+    }
+}
+
+/// Cap a PPL for display the way the paper does for degenerate models.
+pub fn display_ppl(p: f64) -> String {
+    if !p.is_finite() || p > 1e6 {
+        format!("{:.0e}", p.min(1e30))
+    } else if p >= 100.0 {
+        format!("{p:.0}")
+    } else {
+        format!("{p:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Batcher, Corpus, Domain};
+    use crate::model::init::init_params;
+    use crate::model::lowrank::exact_factors;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(display_ppl(5.684), "5.68");
+        assert_eq!(display_ppl(438.58), "439");
+        assert_eq!(display_ppl(5e7), "5e7");
+        assert_eq!(display_ppl(f64::INFINITY), "1e30");
+    }
+
+    #[test]
+    fn random_model_ppl_near_vocab_size() {
+        let Ok(engine) = Engine::new("artifacts") else { return };
+        if engine.entry("tiny").is_err() {
+            return;
+        }
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(1));
+        let corpus = Corpus::generate(Domain::Wiki, 20_000, 1);
+        let batches: Vec<_> = Batcher::new(cfg.batch, cfg.seq)
+            .sequential(&corpus.test, 4);
+        let ppl = dense_ppl(&engine, &cfg, &params, &batches).unwrap();
+        // untrained byte model: ppl should be near 256 (uniform)
+        assert!((100.0..400.0).contains(&ppl), "ppl={ppl}");
+    }
+
+    #[test]
+    fn exact_compressed_ppl_matches_dense() {
+        let Ok(engine) = Engine::new("artifacts") else { return };
+        if engine.entry("tiny").is_err() {
+            return;
+        }
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(2));
+        let corpus = Corpus::generate(Domain::Wiki, 20_000, 2);
+        let batches: Vec<_> = Batcher::new(cfg.batch, cfg.seq)
+            .sequential(&corpus.valid, 3);
+        let blocks: Vec<_> = (0..cfg.n_layers)
+            .map(|i| exact_factors(&cfg, &params, i))
+            .collect();
+        let d = dense_ppl(&engine, &cfg, &params, &batches).unwrap();
+        let c = compressed_ppl(&engine, &cfg, &params, &blocks, &batches).unwrap();
+        assert!((d - c).abs() < 0.02 * d, "dense {d} vs exact-compressed {c}");
+    }
+}

@@ -1,0 +1,136 @@
+//! Result-table rendering: aligned ASCII tables for stdout + JSON dumps
+//! under results/, each row carrying the paper's reference numbers next to
+//! our measured ones so the shape comparison is explicit.
+
+use crate::util::json::Json;
+use anyhow::Result;
+
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i == 0 {
+                    line.push_str(&format!("{:<w$}", c, w = widths[i]));
+                } else {
+                    line.push_str(&format!("  {:>w$}", c, w = widths[i]));
+                }
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        out.push_str(&format!("{}\n", "-".repeat(total)));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::Obj(
+                    self.headers
+                        .iter()
+                        .zip(r)
+                        .map(|(h, c)| (h.clone(), Json::Str(c.clone())))
+                        .collect(),
+                )
+            })
+            .collect();
+        Json::obj()
+            .set("title", self.title.as_str())
+            .set("rows", Json::Arr(rows))
+    }
+
+    /// Print to stdout and save under results/<id>.json.
+    pub fn emit(&self, id: &str) -> Result<()> {
+        println!("{}", self.render());
+        crate::util::io::write_text(
+            format!("results/{id}.json"),
+            &self.to_json().to_string_pretty(),
+        )
+    }
+}
+
+/// Format helpers shared by the harnesses.
+pub fn fmt_acc(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn fmt_drop(dense: f64, acc: f64) -> String {
+    format!("{:.1}%", 100.0 * (dense - acc) / dense.max(1e-9))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["method", "ppl"]);
+        t.row(vec!["dense".into(), "5.68".into()]);
+        t.row(vec!["aa_svd".into(), "6.89".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("dense"));
+        let lines: Vec<&str> = s.lines().filter(|l| !l.is_empty()).collect();
+        // header + separator + 2 rows + title
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let j = t.to_json();
+        assert_eq!(
+            j.req("rows").as_arr().unwrap()[0].req("b").as_str(),
+            Some("2")
+        );
+    }
+
+    #[test]
+    fn drop_format() {
+        assert_eq!(fmt_drop(0.55, 0.50), "9.1%");
+    }
+}

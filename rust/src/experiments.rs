@@ -1,0 +1,244 @@
+//! Shared experiment harness: model setup, method evaluation, and the
+//! paper's reference numbers — used by every bench_table*/bench_fig*
+//! binary (DESIGN.md §5 experiment index).
+
+use crate::compress::{compress_model, CompressedModel, Method};
+use crate::data::{Batcher, Corpus, Domain, TokenBatch, ALL_TASKS};
+use crate::eval::{all_tasks_accuracy, compressed_ppl, dense_ppl, ModelRef};
+use crate::model::{Config, FlatStore};
+use crate::refine::RefineOptions;
+use crate::runtime::Engine;
+use crate::train::{load_or_pretrain, PretrainOptions};
+use crate::util::cli::Args;
+use anyhow::Result;
+
+/// Everything a harness needs.
+pub struct Ctx {
+    pub engine: Engine,
+    pub cfg: Config,
+    pub params: FlatStore,
+    /// calibration batches (wiki train, all full)
+    pub calib: Vec<TokenBatch>,
+    /// eval batches per domain (wiki/ptb/c4 test splits)
+    pub eval: Vec<(Domain, Vec<TokenBatch>)>,
+    pub n_task_instances: usize,
+    pub task_seed: u64,
+}
+
+/// Standard experiment knobs, parsed uniformly across harnesses.
+pub struct Knobs {
+    pub config: String,
+    pub calib_seqs: usize,
+    pub eval_batches: usize,
+    pub n_task_instances: usize,
+    pub pretrain_steps: usize,
+    pub refine_epochs: usize,
+    pub refine_lr: f64,
+    pub ratios: Vec<f64>,
+}
+
+impl Knobs {
+    pub fn parse(args: &Args, default_cfg: &str) -> Knobs {
+        Knobs {
+            config: args.str("config", default_cfg, "model config name"),
+            calib_seqs: args.usize("calib", 128, "calibration sequences"),
+            eval_batches: args.usize("eval-batches", 10, "eval batches per domain"),
+            n_task_instances: args.usize("task-n", 40, "instances per zero-shot task"),
+            pretrain_steps: args.usize("pretrain-steps", 220, "pretraining steps"),
+            refine_epochs: args.usize("refine-epochs", 8, "refinement epochs"),
+            refine_lr: args.f64("refine-lr", 3e-5, "refinement base lr"),
+            ratios: args
+                .list("ratios", "0.8,0.6,0.4", "compression ratios")
+                .iter()
+                .map(|s| s.parse().expect("ratio"))
+                .collect(),
+        }
+    }
+
+    pub fn refine(&self) -> RefineOptions {
+        RefineOptions {
+            epochs: self.refine_epochs,
+            base_lr: self.refine_lr,
+            ..Default::default()
+        }
+    }
+}
+
+pub fn setup(knobs: &Knobs) -> Result<Ctx> {
+    let engine = Engine::new("artifacts")?;
+    let cfg = engine.entry(&knobs.config)?.config.clone();
+    let params = load_or_pretrain(
+        &engine,
+        &cfg,
+        &PretrainOptions {
+            steps: knobs.pretrain_steps,
+            ..Default::default()
+        },
+    )?;
+    let batcher = Batcher::new(cfg.batch, cfg.seq);
+    let n_calib_batches = knobs.calib_seqs.div_ceil(cfg.batch);
+    let wiki = Corpus::generate(Domain::Wiki, 1_500_000, 42);
+    let calib: Vec<TokenBatch> = batcher
+        .sequential(&wiki.train, n_calib_batches)
+        .into_iter()
+        .filter(|b| b.real_rows == cfg.batch)
+        .collect();
+    let mut eval = Vec::new();
+    for domain in [Domain::Wiki, Domain::Ptb, Domain::C4] {
+        let corpus = if domain == Domain::Wiki {
+            wiki.test.clone()
+        } else {
+            Corpus::generate(domain, 400_000, 42).test
+        };
+        eval.push((domain, batcher.sequential(&corpus, knobs.eval_batches)));
+    }
+    Ok(Ctx {
+        engine,
+        cfg,
+        params,
+        calib,
+        eval,
+        n_task_instances: knobs.n_task_instances,
+        task_seed: 2026,
+    })
+}
+
+/// One evaluated table row.
+#[derive(Clone, Debug)]
+pub struct MethodEval {
+    pub method: String,
+    pub ratio: f64,
+    pub ppl: Vec<(Domain, f64)>,
+    pub task_acc: Vec<(crate::data::Task, f64)>,
+    pub avg_acc: f64,
+    pub secs: f64,
+}
+
+impl MethodEval {
+    pub fn ppl_of(&self, d: Domain) -> f64 {
+        self.ppl.iter().find(|(dd, _)| *dd == d).unwrap().1
+    }
+}
+
+/// Evaluate the dense model (the "Dense / ratio 1.0" row).
+pub fn eval_dense(ctx: &Ctx) -> Result<MethodEval> {
+    let t0 = std::time::Instant::now();
+    let mut ppl = Vec::new();
+    for (domain, batches) in &ctx.eval {
+        ppl.push((*domain, dense_ppl(&ctx.engine, &ctx.cfg, &ctx.params, batches)?));
+    }
+    let (task_acc, avg_acc) = all_tasks_accuracy(
+        &ctx.engine,
+        &ctx.cfg,
+        &ModelRef::Dense(&ctx.params),
+        ctx.n_task_instances,
+        ctx.task_seed,
+    )?;
+    Ok(MethodEval {
+        method: "dense".into(),
+        ratio: 1.0,
+        ppl,
+        task_acc,
+        avg_acc,
+        secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Compress with `method` at `ratio`, then evaluate PPL + all tasks.
+pub fn eval_compressed_method(
+    ctx: &Ctx,
+    method: &Method,
+    ratio: f64,
+) -> Result<(MethodEval, CompressedModel)> {
+    let t0 = std::time::Instant::now();
+    let cm = compress_model(&ctx.engine, &ctx.cfg, &ctx.params, &ctx.calib, method, ratio)?;
+    let mut ppl = Vec::new();
+    for (domain, batches) in &ctx.eval {
+        ppl.push((
+            *domain,
+            compressed_ppl(&ctx.engine, &ctx.cfg, &ctx.params, &cm.blocks, batches)?,
+        ));
+    }
+    let (task_acc, avg_acc) = all_tasks_accuracy(
+        &ctx.engine,
+        &ctx.cfg,
+        &ModelRef::Compressed(&ctx.params, &cm.blocks),
+        ctx.n_task_instances,
+        ctx.task_seed,
+    )?;
+    crate::log_info!(
+        "{} @ {ratio}: wiki ppl {:.2}, avg acc {:.3} ({:.0}s)",
+        method.name,
+        ppl[0].1,
+        avg_acc,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok((
+        MethodEval {
+            method: method.name.clone(),
+            ratio,
+            ppl,
+            task_acc,
+            avg_acc,
+            secs: t0.elapsed().as_secs_f64(),
+        },
+        cm,
+    ))
+}
+
+/// Task names in column order (paper Table 1 column set).
+pub fn task_columns() -> Vec<&'static str> {
+    ALL_TASKS.iter().map(|t| t.name()).collect()
+}
+
+/// Paper reference rows (LLaMA-7B, Table 1) for side-by-side display:
+/// (ratio, method, wiki2 ppl, ptb ppl, c4 ppl, avg acc, drop %).
+pub const PAPER_TABLE1: &[(f64, &str, f64, f64, f64, f64, f64)] = &[
+    (1.0, "dense", 5.68, 8.34, 7.34, 0.55, 0.0),
+    (0.8, "asvd", 11.14, 16.55, 15.93, 0.43, 21.1),
+    (0.8, "svd_llm", 7.94, 16.22, 15.84, 0.44, 19.6),
+    (0.8, "dobi", 8.54, 14.83, 10.01, 0.46, 16.7),
+    (0.8, "aa_svd", 6.89, 12.30, 12.04, 0.50, 8.9),
+    (0.8, "dobi_q", 6.08, 15.39, 7.83, 0.51, 7.3),
+    (0.8, "aa_svd_q", 6.01, 8.97, 8.37, 0.53, 3.4),
+    (0.6, "asvd", 1407.0, 3292.0, 1109.0, 0.30, 44.9),
+    (0.6, "svd_llm", 13.11, 63.75, 49.83, 0.37, 32.6),
+    (0.6, "dobi", 13.54, 46.38, 23.54, 0.38, 30.5),
+    (0.6, "aa_svd", 8.35, 24.94, 18.97, 0.44, 19.1),
+    (0.6, "dobi_q", 8.12, 43.85, 12.63, 0.47, 14.1),
+    (0.6, "aa_svd_q", 7.09, 11.07, 11.25, 0.50, 8.9),
+    (0.4, "asvd", 57057.0, 45218.0, 43036.0, 0.29, 46.5),
+    (0.4, "svd_llm", 53.74, 438.58, 383.07, 0.31, 43.3),
+    (0.4, "dobi", 46.18, 238.91, 190.62, 0.32, 42.0),
+    (0.4, "aa_svd", 13.67, 74.64, 46.14, 0.37, 33.2),
+    (0.4, "dobi_q", 9.95, 67.62, 17.94, 0.40, 26.6),
+    (0.4, "aa_svd_q", 8.61, 24.44, 19.69, 0.44, 20.4),
+];
+
+pub fn paper_ref_table1(ratio: f64, method: &str) -> Option<(f64, f64)> {
+    PAPER_TABLE1
+        .iter()
+        .find(|(r, m, ..)| *r == ratio && *m == method)
+        .map(|&(_, _, wiki, _, _, acc, _)| (wiki, acc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table_lookup() {
+        let (wiki, acc) = paper_ref_table1(0.8, "aa_svd").unwrap();
+        assert_eq!(wiki, 6.89);
+        assert_eq!(acc, 0.50);
+        assert!(paper_ref_table1(0.9, "aa_svd").is_none());
+    }
+
+    #[test]
+    fn knobs_defaults() {
+        let args = Args::parse(&["prog".to_string()], "");
+        let k = Knobs::parse(&args, "small");
+        assert_eq!(k.config, "small");
+        assert_eq!(k.ratios, vec![0.8, 0.6, 0.4]);
+    }
+}

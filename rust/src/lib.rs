@@ -1,0 +1,21 @@
+//! AA-SVD: Anchored and Adaptive SVD for LLM compression.
+//!
+//! Three-layer reproduction of the paper: a Rust coordinator (this crate)
+//! drives AOT-compiled JAX/Pallas artifacts through PJRT. Python never runs
+//! on the request path. See DESIGN.md for the architecture and experiment
+//! index, EXPERIMENTS.md for measured results.
+
+pub mod bench;
+pub mod compress;
+pub mod data;
+pub mod experiments;
+pub mod eval;
+
+pub mod linalg;
+pub mod model;
+pub mod refine;
+pub mod runtime;
+pub mod serve;
+pub mod testkit;
+pub mod train;
+pub mod util;

@@ -1,0 +1,231 @@
+//! Cholesky factorization + triangular solves.
+//!
+//! Algorithm 1 step 3 factorizes the shifted-input covariance S = B B^T as
+//! S = R R^T. Calibration covariances can be numerically rank-deficient
+//! (activations live in an anisotropic subspace — the very reason
+//! activation-aware compression works), so `cholesky_jittered` escalates a
+//! Tikhonov ε until factorization succeeds, implementing the paper's
+//! Appendix A remark.
+
+use super::matrix::Matrix;
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor R with S = R R^T.
+/// Fails if S is not (numerically) positive definite.
+pub fn cholesky(s: &Matrix) -> Result<Matrix> {
+    assert_eq!(s.rows, s.cols, "cholesky needs a square matrix");
+    let n = s.rows;
+    let mut r = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = s.get(i, j);
+            for p in 0..j {
+                sum -= r.data[i * n + p] * r.data[j * n + p];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("matrix not positive definite at pivot {i} (sum={sum:.3e})");
+                }
+                r.data[i * n + i] = sum.sqrt();
+            } else {
+                r.data[i * n + j] = sum / r.data[j * n + j];
+            }
+        }
+    }
+    Ok(r)
+}
+
+/// Cholesky with escalating Tikhonov jitter: S + ε·tr(S)/n·I = R R^T.
+/// Returns (R, ε_used). ε doubles from `eps0` until success.
+pub fn cholesky_jittered(s: &Matrix, eps0: f64) -> (Matrix, f64) {
+    let n = s.rows;
+    let scale = (0..n).map(|i| s.get(i, i)).sum::<f64>().max(1e-300) / n as f64;
+    let mut eps = 0.0;
+    loop {
+        let mut sj = s.clone();
+        if eps > 0.0 {
+            for i in 0..n {
+                sj.data[i * n + i] += eps * scale;
+            }
+        }
+        match cholesky(&sj) {
+            Ok(r) => return (r, eps),
+            Err(_) => {
+                eps = if eps == 0.0 { eps0 } else { eps * 2.0 };
+                assert!(
+                    eps < 1e6,
+                    "cholesky_jittered failed to stabilize (eps={eps})"
+                );
+            }
+        }
+    }
+}
+
+/// Solve R X = B for X, with R lower-triangular (forward substitution).
+/// B is [n × m]; X overwrites a copy of B.
+pub fn solve_lower(r: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(r.rows, r.cols);
+    assert_eq!(r.rows, b.rows);
+    let (n, m) = (b.rows, b.cols);
+    let mut x = b.clone();
+    for i in 0..n {
+        let rii = r.get(i, i);
+        // x[i] = (b[i] - sum_{p<i} R[i,p] x[p]) / R[i,i]
+        let (done, rest) = x.data.split_at_mut(i * m);
+        let xi = &mut rest[..m];
+        for p in 0..i {
+            let rip = r.get(i, p);
+            if rip == 0.0 {
+                continue;
+            }
+            let xp = &done[p * m..(p + 1) * m];
+            for (v, &w) in xi.iter_mut().zip(xp) {
+                *v -= rip * w;
+            }
+        }
+        for v in xi.iter_mut() {
+            *v /= rii;
+        }
+    }
+    x
+}
+
+/// Solve R^T X = B for X, with R lower-triangular (so R^T is upper;
+/// backward substitution). B is [n × m].
+pub fn solve_upper_t(r: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(r.rows, r.cols);
+    assert_eq!(r.rows, b.rows);
+    let (n, m) = (b.rows, b.cols);
+    let mut x = b.clone();
+    for i in (0..n).rev() {
+        let rii = r.get(i, i);
+        let (head, tail) = x.data.split_at_mut((i + 1) * m);
+        let xi = &mut head[i * m..];
+        // R^T[i,p] = R[p,i] for p > i
+        for p in (i + 1)..n {
+            let rpi = r.get(p, i);
+            if rpi == 0.0 {
+                continue;
+            }
+            let xp = &tail[(p - i - 1) * m..(p - i) * m];
+            for (v, &w) in xi.iter_mut().zip(xp) {
+                *v -= rpi * w;
+            }
+        }
+        for v in xi.iter_mut() {
+            *v /= rii;
+        }
+    }
+    x
+}
+
+/// M = B R^{-T} computed as solve(R M^T = B^T): the whitening projection of
+/// Algorithm 1 step 4, using the identity S^{-1} R = R^{-T}.
+pub fn right_mul_inv_rt(b: &Matrix, r: &Matrix) -> Matrix {
+    let bt = b.transpose();
+    let mt = solve_lower(r, &bt);
+    mt.transpose()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::approx::assert_close;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(1);
+        for n in [1, 2, 5, 16, 33] {
+            let s = Matrix::random_spd(n, &mut rng);
+            let r = cholesky(&s).unwrap();
+            let rec = r.matmul_bt(&r);
+            assert_close(&rec.data, &s.data, 1e-8);
+            // lower-triangular: entries above diagonal are zero
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    assert_eq!(r.get(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let s = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eig -1, 3
+        assert!(cholesky(&s).is_err());
+    }
+
+    #[test]
+    fn jittered_handles_singular() {
+        // rank-1 PSD matrix: x x^T
+        let x = Matrix::from_vec(3, 1, vec![1.0, 2.0, 3.0]);
+        let s = x.matmul_bt(&x);
+        let (r, eps) = cholesky_jittered(&s, 1e-8);
+        assert!(eps > 0.0);
+        let rec = r.matmul_bt(&r);
+        // reconstruction matches up to the jitter magnitude
+        let diff = rec.sub(&s).max_abs();
+        let scale = (s.get(0, 0) + s.get(1, 1) + s.get(2, 2)) / 3.0;
+        assert!(diff <= eps * scale * 1.01 + 1e-12, "diff={diff}");
+    }
+
+    #[test]
+    fn jittered_no_jitter_when_pd() {
+        let mut rng = Rng::new(2);
+        let s = Matrix::random_spd(8, &mut rng);
+        let (_, eps) = cholesky_jittered(&s, 1e-8);
+        assert_eq!(eps, 0.0);
+    }
+
+    #[test]
+    fn solve_lower_inverts() {
+        let mut rng = Rng::new(3);
+        let s = Matrix::random_spd(12, &mut rng);
+        let r = cholesky(&s).unwrap();
+        let b = Matrix::random(12, 5, &mut rng, 1.0);
+        let x = solve_lower(&r, &b);
+        assert_close(&r.matmul(&x).data, &b.data, 1e-9);
+    }
+
+    #[test]
+    fn solve_upper_t_inverts() {
+        let mut rng = Rng::new(4);
+        let s = Matrix::random_spd(10, &mut rng);
+        let r = cholesky(&s).unwrap();
+        let b = Matrix::random(10, 7, &mut rng, 1.0);
+        let x = solve_upper_t(&r, &b);
+        assert_close(&r.transpose().matmul(&x).data, &b.data, 1e-9);
+    }
+
+    #[test]
+    fn right_mul_inv_rt_identity() {
+        // B R^{-T} * R^T == B
+        let mut rng = Rng::new(5);
+        let s = Matrix::random_spd(9, &mut rng);
+        let r = cholesky(&s).unwrap();
+        let b = Matrix::random(4, 9, &mut rng, 1.0);
+        let m = right_mul_inv_rt(&b, &r);
+        let back = m.matmul(&r.transpose());
+        assert_close(&back.data, &b.data, 1e-9);
+    }
+
+    #[test]
+    fn whitening_identity_sinv_r_eq_rinv_t() {
+        // S^{-1} R == R^{-T}: right_mul_inv_rt(W C, R) == W C S^{-1} R
+        let mut rng = Rng::new(6);
+        let n = 8;
+        let s = Matrix::random_spd(n, &mut rng);
+        let r = cholesky(&s).unwrap();
+        let wc = Matrix::random(5, n, &mut rng, 1.0);
+        let got = right_mul_inv_rt(&wc, &r);
+        // explicit: W C S^{-1} R via solving S Y = (WC)^T then Y^T R
+        let yt = {
+            // S Y = (WC)^T  =>  Y = S^{-1} (WC)^T; solve via chol twice
+            let z = solve_lower(&r, &wc.transpose());
+            solve_upper_t(&r, &z)
+        };
+        let want = yt.transpose().matmul(&r);
+        assert_close(&got.data, &want.data, 1e-8);
+    }
+}

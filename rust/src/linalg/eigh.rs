@@ -1,0 +1,191 @@
+//! Symmetric eigendecomposition via cyclic Jacobi rotations.
+//!
+//! Used for (a) the EVD variant of the whitening factorization L = Q Λ^{1/2}
+//! (the SVD-LLM-V2 construction in Appendix A.2) and (b) the Gram-matrix
+//! route to the truncated SVD in `svd.rs`.
+
+use super::matrix::Matrix;
+
+/// Eigendecomposition of a symmetric matrix: S = Q diag(λ) Q^T.
+/// Returns (eigenvalues descending, Q with matching column order).
+pub fn eigh(s: &Matrix) -> (Vec<f64>, Matrix) {
+    assert_eq!(s.rows, s.cols, "eigh needs a square matrix");
+    let n = s.rows;
+    let mut a = s.clone();
+    a.symmetrize();
+    let mut q = Matrix::identity(n);
+
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        // off-diagonal Frobenius mass
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += a.get(i, j) * a.get(i, j);
+            }
+        }
+        let diag_scale: f64 = (0..n)
+            .map(|i| a.get(i, i) * a.get(i, i))
+            .sum::<f64>()
+            .max(1e-300);
+        if off <= 1e-26 * diag_scale {
+            break;
+        }
+        for p in 0..n {
+            for r in (p + 1)..n {
+                let apr = a.get(p, r);
+                if apr.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a.get(p, p);
+                let arr = a.get(r, r);
+                // Jacobi rotation: tan via the stable formula
+                let tau = (arr - app) / (2.0 * apr);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s_ = t * c;
+
+                // A <- J^T A J (only rows/cols p, r change)
+                for k in 0..n {
+                    let akp = a.get(k, p);
+                    let akr = a.get(k, r);
+                    a.set(k, p, c * akp - s_ * akr);
+                    a.set(k, r, s_ * akp + c * akr);
+                }
+                for k in 0..n {
+                    let apk = a.get(p, k);
+                    let ark = a.get(r, k);
+                    a.set(p, k, c * apk - s_ * ark);
+                    a.set(r, k, s_ * apk + c * ark);
+                }
+                // accumulate Q <- Q J
+                for k in 0..n {
+                    let qkp = q.get(k, p);
+                    let qkr = q.get(k, r);
+                    q.set(k, p, c * qkp - s_ * qkr);
+                    q.set(k, r, s_ * qkp + c * qkr);
+                }
+            }
+        }
+    }
+
+    // extract, sort descending
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (a.get(i, i), i)).collect();
+    pairs.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+    let vals: Vec<f64> = pairs.iter().map(|&(v, _)| v).collect();
+    let mut qs = Matrix::zeros(n, n);
+    for (newj, &(_, oldj)) in pairs.iter().enumerate() {
+        for i in 0..n {
+            qs.set(i, newj, q.get(i, oldj));
+        }
+    }
+    (vals, qs)
+}
+
+/// Whitening factor L = Q Λ^{1/2} with eigenvalues clamped at `floor·λmax`
+/// (rank-deficient-safe EVD alternative to Cholesky; Appendix A.2).
+pub fn evd_whitening_factor(s: &Matrix, floor: f64) -> Matrix {
+    let n = s.rows;
+    let (vals, q) = eigh(s);
+    let lmax = vals.first().copied().unwrap_or(1.0).max(1e-300);
+    let mut l = Matrix::zeros(n, n);
+    for j in 0..n {
+        let lam = vals[j].max(floor * lmax);
+        let sq = lam.sqrt();
+        for i in 0..n {
+            l.set(i, j, q.get(i, j) * sq);
+        }
+    }
+    l
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::approx::assert_close;
+    use crate::util::rng::Rng;
+
+    fn reconstruct(vals: &[f64], q: &Matrix) -> Matrix {
+        let n = vals.len();
+        let mut lam_qt = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                lam_qt.set(i, j, vals[i] * q.get(j, i));
+            }
+        }
+        q.matmul(&lam_qt)
+    }
+
+    #[test]
+    fn diag_matrix_eigs() {
+        let s = Matrix::from_vec(3, 3, vec![3., 0., 0., 0., 1., 0., 0., 0., 2.]);
+        let (vals, _) = eigh(&s);
+        assert_close(&vals, &[3.0, 2.0, 1.0], 1e-12);
+    }
+
+    #[test]
+    fn hand_2x2() {
+        // [[2,1],[1,2]] -> eigs 3, 1
+        let s = Matrix::from_vec(2, 2, vec![2., 1., 1., 2.]);
+        let (vals, q) = eigh(&s);
+        assert_close(&vals, &[3.0, 1.0], 1e-12);
+        let rec = reconstruct(&vals, &q);
+        assert_close(&rec.data, &s.data, 1e-12);
+    }
+
+    #[test]
+    fn random_spd_reconstructs_and_orthogonal() {
+        let mut rng = Rng::new(7);
+        for n in [2, 5, 17, 40] {
+            let s = Matrix::random_spd(n, &mut rng);
+            let (vals, q) = eigh(&s);
+            // descending
+            for w in vals.windows(2) {
+                assert!(w[0] >= w[1] - 1e-9);
+            }
+            // orthogonal
+            let qtq = q.matmul_at(&q);
+            assert_close(&qtq.data, &Matrix::identity(n).data, 1e-9);
+            // reconstruction
+            let rec = reconstruct(&vals, &q);
+            let rel = rec.sub(&s).frob_norm() / s.frob_norm();
+            assert!(rel < 1e-10, "n={n} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let mut rng = Rng::new(8);
+        let n = 12;
+        let s = Matrix::random_spd(n, &mut rng);
+        let tr: f64 = (0..n).map(|i| s.get(i, i)).sum();
+        let (vals, _) = eigh(&s);
+        assert!((vals.iter().sum::<f64>() - tr).abs() < 1e-8 * tr.abs());
+    }
+
+    #[test]
+    fn evd_whitening_factor_reconstructs_pd() {
+        let mut rng = Rng::new(9);
+        let s = Matrix::random_spd(10, &mut rng);
+        let l = evd_whitening_factor(&s, 0.0);
+        let rec = l.matmul_bt(&l);
+        let rel = rec.sub(&s).frob_norm() / s.frob_norm();
+        assert!(rel < 1e-10, "rel={rel}");
+    }
+
+    #[test]
+    fn evd_whitening_floor_regularizes_singular() {
+        let x = Matrix::from_vec(3, 1, vec![1.0, 2.0, 3.0]);
+        let s = x.matmul_bt(&x); // rank 1
+        let l = evd_whitening_factor(&s, 1e-6);
+        // L must be invertible: all columns have nonzero norm
+        for j in 0..3 {
+            let norm: f64 = (0..3).map(|i| l.get(i, j) * l.get(i, j)).sum();
+            assert!(norm > 0.0);
+        }
+    }
+}

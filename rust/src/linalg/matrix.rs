@@ -1,0 +1,309 @@
+//! Dense row-major matrix over f64.
+//!
+//! The compression closed form (Theorem 3.2) runs entirely in f64: the
+//! whitening step inverts Cholesky factors of activation covariances whose
+//! condition numbers grow with calibration size, and f32 loses the tail
+//! singular values that decide truncation order. Weights arrive as f32 and
+//! the factors are cast back to f32 at the end.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix {
+            rows,
+            cols,
+            data: data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    pub fn identity(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn random(rows: usize, cols: usize, rng: &mut Rng, scale: f64) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: (0..rows * cols)
+                .map(|_| rng.normal() as f64 * scale)
+                .collect(),
+        }
+    }
+
+    /// Random symmetric positive-definite matrix (for tests/benches).
+    pub fn random_spd(n: usize, rng: &mut Rng) -> Matrix {
+        let a = Matrix::random(n, n, rng, 1.0);
+        let mut s = a.matmul_bt(&a); // A A^T, PSD
+        for i in 0..n {
+            s.data[i * n + i] += n as f64 * 0.1; // well-conditioned
+        }
+        s
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// C = A * B (blocked i-k-j loop; B rows stream through cache).
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows, "matmul dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut c = Matrix::zeros(m, n);
+        const KB: usize = 64;
+        for kb in (0..k).step_by(KB) {
+            let kend = (kb + KB).min(k);
+            for i in 0..m {
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for p in kb..kend {
+                    let a = self.data[i * k + p];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[p * n..(p + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += a * bv;
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    /// C = A * B^T without materializing the transpose (dot-product form).
+    pub fn matmul_bt(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.cols, "matmul_bt dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, b.rows);
+        let mut c = Matrix::zeros(m, n);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &b.data[j * k..(j + 1) * k];
+                let mut acc = 0.0;
+                for (&x, &y) in arow.iter().zip(brow) {
+                    acc += x * y;
+                }
+                c.data[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    /// C = A^T * B (i.e., Gram-style product over the row axis).
+    pub fn matmul_at(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.rows, b.rows, "matmul_at dim mismatch");
+        let (k, m, n) = (self.rows, self.cols, b.cols);
+        let mut c = Matrix::zeros(m, n);
+        for p in 0..k {
+            let arow = &self.data[p * m..(p + 1) * m];
+            let brow = &b.data[p * n..(p + 1) * n];
+            for i in 0..m {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += a * bv;
+                }
+            }
+        }
+        c
+    }
+
+    pub fn add(&self, b: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&b.data).map(|(x, y)| x + y).collect(),
+        }
+    }
+
+    pub fn sub(&self, b: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&b.data).map(|(x, y)| x - y).collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f64) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |a, &x| a.max(x.abs()))
+    }
+
+    /// Column slice [.., j0..j1) as a new matrix.
+    pub fn cols_range(&self, j0: usize, j1: usize) -> Matrix {
+        assert!(j0 <= j1 && j1 <= self.cols);
+        let mut m = Matrix::zeros(self.rows, j1 - j0);
+        for i in 0..self.rows {
+            m.row_mut(i)
+                .copy_from_slice(&self.row(i)[j0..j1]);
+        }
+        m
+    }
+
+    /// Symmetrize in place: (A + A^T)/2 — cleans accumulation asymmetry.
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let v = 0.5 * (self.get(i, j) + self.get(j, i));
+                self.set(i, j, v);
+                self.set(j, i, v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::approx::assert_close;
+
+    #[test]
+    fn matmul_hand_example() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Matrix::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_bt_matches_explicit_transpose() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::random(13, 7, &mut rng, 1.0);
+        let b = Matrix::random(9, 7, &mut rng, 1.0);
+        let got = a.matmul_bt(&b);
+        let want = a.matmul(&b.transpose());
+        assert_close(&got.data, &want.data, 1e-12);
+    }
+
+    #[test]
+    fn matmul_at_matches_explicit_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::random(11, 5, &mut rng, 1.0);
+        let b = Matrix::random(11, 8, &mut rng, 1.0);
+        let got = a.matmul_at(&b);
+        let want = a.transpose().matmul(&b);
+        assert_close(&got.data, &want.data, 1e-12);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::random(6, 6, &mut rng, 1.0);
+        let i = Matrix::identity(6);
+        assert_close(&a.matmul(&i).data, &a.data, 1e-15);
+        assert_close(&i.matmul(&a).data, &a.data, 1e-15);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::random(17, 33, &mut rng, 1.0);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let data: Vec<f32> = vec![0.5, -1.25, 3.75, 2.0];
+        let m = Matrix::from_f32(2, 2, &data);
+        assert_eq!(m.to_f32(), data);
+    }
+
+    #[test]
+    fn frob_norm_example() {
+        let a = Matrix::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((a.frob_norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cols_range_extracts() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let c = a.cols_range(1, 3);
+        assert_eq!(c.data, vec![2., 3., 5., 6.]);
+    }
+
+    #[test]
+    fn random_spd_is_symmetric() {
+        let mut rng = Rng::new(5);
+        let s = Matrix::random_spd(12, &mut rng);
+        let d = s.sub(&s.transpose()).max_abs();
+        assert!(d < 1e-9);
+    }
+}

@@ -1,0 +1,17 @@
+//! Pure-Rust dense linear algebra for the compression closed form.
+//!
+//! XLA-CPU lowers `jnp.linalg.*` to LAPACK custom-calls that the pinned
+//! xla_extension 0.5.1 cannot execute, so Cholesky / EVD / SVD live here.
+//! Sizes are bounded by the model's hidden dims (≤ ~1k), comfortably within
+//! pure-Rust range; see benches/linalg.rs for measured throughput.
+
+pub mod chol;
+pub mod eigh;
+pub mod matrix;
+pub mod qr;
+pub mod svd;
+
+pub use chol::{cholesky, cholesky_jittered, right_mul_inv_rt, solve_lower, solve_upper_t};
+pub use eigh::{eigh, evd_whitening_factor};
+pub use matrix::Matrix;
+pub use svd::{svd, svd_k, Svd};

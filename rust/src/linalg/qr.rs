@@ -1,0 +1,131 @@
+//! Householder QR — used by the randomized-range helper in benches and by
+//! tests that need orthonormal bases with a known distribution.
+
+use super::matrix::Matrix;
+
+/// Thin QR: A [m × n] (m >= n) = Q [m × n] R [n × n], R upper-triangular.
+pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "qr_thin expects m >= n");
+    let mut r = a.clone();
+    // Householder vectors stored per column
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for j in 0..n {
+        // build reflector for column j below the diagonal
+        let mut norm = 0.0;
+        for i in j..m {
+            norm += r.get(i, j) * r.get(i, j);
+        }
+        let norm = norm.sqrt();
+        let mut v = vec![0.0; m - j];
+        if norm == 0.0 {
+            vs.push(v);
+            continue;
+        }
+        let alpha = if r.get(j, j) >= 0.0 { -norm } else { norm };
+        v[0] = r.get(j, j) - alpha;
+        for i in (j + 1)..m {
+            v[i - j] = r.get(i, j);
+        }
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 > 0.0 {
+            // apply (I - 2 v v^T / |v|^2) to R[j.., j..]
+            for col in j..n {
+                let mut dot = 0.0;
+                for i in j..m {
+                    dot += v[i - j] * r.get(i, col);
+                }
+                let coef = 2.0 * dot / vnorm2;
+                for i in j..m {
+                    let val = r.get(i, col) - coef * v[i - j];
+                    r.set(i, col, val);
+                }
+            }
+        }
+        vs.push(v);
+    }
+    // form thin Q by applying reflectors to the first n columns of I
+    let mut q = Matrix::zeros(m, n);
+    for j in 0..n {
+        q.set(j, j, 1.0);
+    }
+    for j in (0..n).rev() {
+        let v = &vs[j];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for col in 0..n {
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += v[i - j] * q.get(i, col);
+            }
+            let coef = 2.0 * dot / vnorm2;
+            for i in j..m {
+                let val = q.get(i, col) - coef * v[i - j];
+                q.set(i, col, val);
+            }
+        }
+    }
+    // zero strictly-lower part of thin R
+    let mut r_thin = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r_thin.set(i, j, r.get(i, j));
+        }
+    }
+    (q, r_thin)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::approx::assert_close;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(21);
+        for (m, n) in [(5, 5), (12, 4), (30, 30), (9, 1)] {
+            let a = Matrix::random(m, n, &mut rng, 1.0);
+            let (q, r) = qr_thin(&a);
+            let rec = q.matmul(&r);
+            let rel = rec.sub(&a).frob_norm() / a.frob_norm();
+            assert!(rel < 1e-10, "({m},{n}) rel={rel}");
+        }
+    }
+
+    #[test]
+    fn q_orthonormal() {
+        let mut rng = Rng::new(22);
+        let a = Matrix::random(20, 7, &mut rng, 1.0);
+        let (q, _) = qr_thin(&a);
+        let qtq = q.matmul_at(&q);
+        assert_close(&qtq.data, &Matrix::identity(7).data, 1e-10);
+    }
+
+    #[test]
+    fn r_upper_triangular() {
+        let mut rng = Rng::new(23);
+        let a = Matrix::random(10, 6, &mut rng, 1.0);
+        let (_, r) = qr_thin(&a);
+        for i in 0..6 {
+            for j in 0..i {
+                assert_eq!(r.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_input_ok() {
+        // two identical columns
+        let mut a = Matrix::zeros(6, 2);
+        for i in 0..6 {
+            a.set(i, 0, (i + 1) as f64);
+            a.set(i, 1, (i + 1) as f64);
+        }
+        let (q, r) = qr_thin(&a);
+        let rec = q.matmul(&r);
+        assert_close(&rec.data, &a.data, 1e-10);
+    }
+}

@@ -1,0 +1,212 @@
+//! Truncated SVD via the Gram-matrix route.
+//!
+//! Step 5 of Algorithm 1 needs SVD_k(M) for M = W A B^T L_B^{-T}. In this
+//! codebase M is [m × n] with min(m, n) = d_model (attention projections are
+//! square and MLP projections are rectangular with the small side d_model),
+//! so eigendecomposing the smaller Gram matrix (m×m or n×n) is both the
+//! cheapest and a numerically adequate route for the *leading* singular
+//! triples — the only ones truncation keeps.
+
+use super::eigh::eigh;
+use super::matrix::Matrix;
+
+/// Result of a (possibly truncated) SVD: M ≈ U diag(s) V^T.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Matrix,      // [m × k]
+    pub s: Vec<f64>,    // length k, descending, >= 0
+    pub v: Matrix,      // [n × k]
+}
+
+/// Full SVD (k = min(m, n)).
+pub fn svd(m: &Matrix) -> Svd {
+    svd_k(m, m.rows.min(m.cols))
+}
+
+/// Truncated SVD keeping the top-k singular triples.
+pub fn svd_k(mat: &Matrix, k: usize) -> Svd {
+    let (m, n) = (mat.rows, mat.cols);
+    let k = k.min(m.min(n));
+    if m <= n {
+        // Gram = M M^T = U Λ U^T;  σ = sqrt(λ);  V = M^T U Σ^{-1}
+        let gram = mat.matmul_bt(mat); // [m × m]
+        let (vals, q) = eigh(&gram);
+        let mut s = Vec::with_capacity(k);
+        let mut u = Matrix::zeros(m, k);
+        for j in 0..k {
+            let sig = vals[j].max(0.0).sqrt();
+            s.push(sig);
+            for i in 0..m {
+                u.set(i, j, q.get(i, j));
+            }
+        }
+        // V = M^T U Σ^{-1}, columns with σ≈0 zeroed (they are truncated away
+        // from any reconstruction anyway)
+        let mtu = mat.matmul_at(&u); // [n × k]
+        let mut v = Matrix::zeros(n, k);
+        let smax = s.first().copied().unwrap_or(0.0).max(1e-300);
+        for j in 0..k {
+            if s[j] > 1e-12 * smax {
+                let inv = 1.0 / s[j];
+                for i in 0..n {
+                    v.set(i, j, mtu.get(i, j) * inv);
+                }
+            } else {
+                // numerically zero direction: keep σ=0, zero column
+            }
+        }
+        Svd { u, s, v }
+    } else {
+        // work on the transpose and swap factors
+        let t = mat.transpose();
+        let r = svd_k(&t, k);
+        Svd {
+            u: r.v,
+            s: r.s,
+            v: r.u,
+        }
+    }
+}
+
+/// Rank-k reconstruction U diag(s) V^T.
+pub fn reconstruct(svd: &Svd) -> Matrix {
+    let (m, k) = (svd.u.rows, svd.s.len());
+    let n = svd.v.rows;
+    let mut us = Matrix::zeros(m, k);
+    for j in 0..k {
+        for i in 0..m {
+            us.set(i, j, svd.u.get(i, j) * svd.s[j]);
+        }
+    }
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for p in 0..k {
+                acc += us.get(i, p) * svd.v.get(j, p);
+            }
+            out.set(i, j, acc);
+        }
+    }
+    out
+}
+
+/// Squared Frobenius mass of the discarded tail: Σ_{i>k} σ_i².
+/// (The Eckart–Young optimum value of ‖M − SVD_k(M)‖²_F.)
+pub fn tail_energy(mat: &Matrix, k: usize) -> f64 {
+    let full = svd(mat);
+    full.s.iter().skip(k).map(|x| x * x).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::approx::assert_close;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_svd() {
+        let r = svd(&Matrix::identity(4));
+        assert_close(&r.s, &[1.0; 4], 1e-10);
+    }
+
+    #[test]
+    fn hand_rank1() {
+        // M = [1,2;2,4] = rank 1, σ = 5
+        let m = Matrix::from_vec(2, 2, vec![1., 2., 2., 4.]);
+        let r = svd(&m);
+        assert!((r.s[0] - 5.0).abs() < 1e-9);
+        assert!(r.s[1].abs() < 1e-6);
+        let rec = reconstruct(&Svd {
+            u: r.u.cols_range(0, 1),
+            s: vec![r.s[0]],
+            v: r.v.cols_range(0, 1),
+        });
+        assert_close(&rec.data, &m.data, 1e-8);
+    }
+
+    #[test]
+    fn full_reconstruction_square_and_rect() {
+        let mut rng = Rng::new(11);
+        for (m, n) in [(6, 6), (12, 5), (5, 12), (30, 8)] {
+            let a = Matrix::random(m, n, &mut rng, 1.0);
+            let r = svd(&a);
+            let rec = reconstruct(&r);
+            let rel = rec.sub(&a).frob_norm() / a.frob_norm();
+            assert!(rel < 1e-7, "({m},{n}) rel={rel}");
+        }
+    }
+
+    #[test]
+    fn singular_values_descending_nonnegative() {
+        let mut rng = Rng::new(12);
+        let a = Matrix::random(20, 9, &mut rng, 2.0);
+        let r = svd(&a);
+        for w in r.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-9);
+        }
+        assert!(r.s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn factors_orthonormal() {
+        let mut rng = Rng::new(13);
+        let a = Matrix::random(10, 14, &mut rng, 1.0);
+        let r = svd(&a);
+        let utu = r.u.matmul_at(&r.u);
+        let vtv = r.v.matmul_at(&r.v);
+        let k = r.s.len();
+        assert_close(&utu.data, &Matrix::identity(k).data, 1e-7);
+        assert_close(&vtv.data, &Matrix::identity(k).data, 1e-7);
+    }
+
+    #[test]
+    fn eckart_young_optimality() {
+        // truncation error equals tail energy, and beats random rank-k
+        let mut rng = Rng::new(14);
+        let a = Matrix::random(12, 9, &mut rng, 1.0);
+        let k = 3;
+        let trunc = reconstruct(&svd_k(&a, k));
+        let err = a.sub(&trunc).frob_norm().powi(2);
+        let tail = tail_energy(&a, k);
+        assert!((err - tail).abs() < 1e-6 * tail.max(1.0), "err={err} tail={tail}");
+        // any random rank-k approx is worse
+        for seed in 0..5 {
+            let mut r2 = Rng::new(100 + seed);
+            let u = Matrix::random(12, k, &mut r2, 1.0);
+            let v = Matrix::random(9, k, &mut r2, 1.0);
+            let approx = u.matmul(&v.transpose());
+            let e2 = a.sub(&approx).frob_norm().powi(2);
+            assert!(e2 >= err - 1e-9);
+        }
+    }
+
+    #[test]
+    fn truncated_matches_full_prefix() {
+        let mut rng = Rng::new(15);
+        let a = Matrix::random(8, 11, &mut rng, 1.0);
+        let full = svd(&a);
+        let part = svd_k(&a, 4);
+        assert_close(&part.s, &full.s[..4], 1e-9);
+    }
+
+    #[test]
+    fn known_singular_values() {
+        // diag-like rectangular matrix
+        let mut a = Matrix::zeros(3, 5);
+        a.set(0, 0, 3.0);
+        a.set(1, 1, -2.0); // sign goes into U/V
+        a.set(2, 2, 1.0);
+        let r = svd(&a);
+        assert_close(&r.s, &[3.0, 2.0, 1.0], 1e-9);
+    }
+
+    #[test]
+    fn transpose_swaps_factors() {
+        let mut rng = Rng::new(16);
+        let a = Matrix::random(7, 13, &mut rng, 1.0);
+        let ra = svd(&a);
+        let rt = svd(&a.transpose());
+        assert_close(&ra.s, &rt.s, 1e-8);
+    }
+}

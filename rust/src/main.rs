@@ -1,0 +1,218 @@
+//! `aasvd` — the leader CLI: pretrain, compress, evaluate and serve models
+//! through the three-layer runtime.
+//!
+//! Subcommands:
+//!   pretrain  --config base [--steps N]            train + checkpoint
+//!   compress  --config base --method aa_svd --ratio 0.6 [--out path]
+//!   eval      --config base [--compressed path]    PPL + zero-shot battery
+//!   generate  --config base --prompt "..."         decode via the server
+//!   info                                           manifest + configs
+
+use aasvd::compress::{compress_model, Method};
+use aasvd::eval::{all_tasks_accuracy, compressed_ppl, dense_ppl, display_ppl, ModelRef, Table};
+use aasvd::experiments::{setup, Knobs};
+use aasvd::model::lowrank::{load_blocks, save_blocks};
+use aasvd::refine::RefineOptions;
+use aasvd::runtime::Engine;
+use aasvd::serve::{GenParams, ServedModel, Server};
+use aasvd::util::cli::Args;
+use anyhow::{bail, Result};
+
+fn main() -> Result<()> {
+    let args = Args::parse_env(
+        "AA-SVD coordinator: anchored & adaptive SVD compression of LLMs",
+    );
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    match cmd.as_str() {
+        "pretrain" => cmd_pretrain(&args),
+        "compress" => cmd_compress(&args),
+        "eval" => cmd_eval(&args),
+        "generate" => cmd_generate(&args),
+        "info" => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: aasvd <pretrain|compress|eval|generate|info> [flags]\n\
+                 run with --help after a subcommand for flags"
+            );
+            Ok(())
+        }
+    }
+}
+
+pub fn method_by_name(name: &str, refine: RefineOptions) -> Result<Method> {
+    Ok(match name {
+        "naive_svd" => Method::naive_svd(),
+        "asvd" => Method::asvd(),
+        "svd_llm" => Method::svd_llm(),
+        "dobi" => Method::dobi(),
+        "dobi_q" => Method::dobi_q(),
+        "aa_svd" => Method::aa_svd(refine),
+        "aa_svd_q" => Method::aa_svd_q(refine),
+        other => match aasvd::compress::Objective::from_name(other) {
+            Some(o) => Method::ablation(o, Some(refine)),
+            None => bail!("unknown method '{other}'"),
+        },
+    })
+}
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let knobs = Knobs::parse(args, "base");
+    let steps = args.usize("steps", knobs.pretrain_steps, "training steps");
+    args.finish_or_help();
+    let engine = Engine::new("artifacts")?;
+    let cfg = engine.entry(&knobs.config)?.config.clone();
+    let (params, result) = aasvd::train::pretrain(
+        &engine,
+        &cfg,
+        &aasvd::train::PretrainOptions {
+            steps,
+            ..Default::default()
+        },
+    )?;
+    std::fs::create_dir_all("checkpoints")?;
+    let path = aasvd::train::pretrain::checkpoint_path(&cfg);
+    params.save(&path)?;
+    aasvd::train::pretrain::save_loss_curve(
+        &result,
+        &format!("checkpoints/{}_loss.json", cfg.name),
+    )?;
+    println!(
+        "pretrained '{}' for {steps} steps: loss {:.3} -> {:.3} ({:.0}s, {} tokens) -> {path}",
+        cfg.name,
+        result.losses.first().map(|x| x.1).unwrap_or(0.0),
+        result.final_loss,
+        result.secs,
+        result.tokens_seen
+    );
+    Ok(())
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let knobs = Knobs::parse(args, "base");
+    let method_name = args.str("method", "aa_svd", "compression method");
+    let ratio = args.f64("ratio", 0.6, "parameter ratio");
+    let out = args.str(
+        "out",
+        &format!("checkpoints/{}_{}_{}.aat", knobs.config, method_name, ratio),
+        "output path",
+    );
+    args.finish_or_help();
+    let ctx = setup(&knobs)?;
+    let method = method_by_name(&method_name, knobs.refine())?;
+    let t0 = std::time::Instant::now();
+    let cm = compress_model(&ctx.engine, &ctx.cfg, &ctx.params, &ctx.calib, &method, ratio)?;
+    save_blocks(&cm.blocks, &out)?;
+    println!(
+        "compressed '{}' with {method_name} @ {ratio} in {:.1}s \
+         (collect {:.1}s, solve {:.1}s, refine {:.1}s) -> {out}",
+        knobs.config,
+        t0.elapsed().as_secs_f64(),
+        cm.report.secs_collect,
+        cm.report.secs_solve,
+        cm.report.secs_refine,
+    );
+    println!(
+        "achieved parameter ratio: {:.3} (per-linear ranks: {:?})",
+        cm.allocation.achieved_ratio(&ctx.cfg),
+        cm.allocation.ranks
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let knobs = Knobs::parse(args, "base");
+    let compressed = args.str("compressed", "", "path to compressed blocks (.aat)");
+    args.finish_or_help();
+    let ctx = setup(&knobs)?;
+    let blocks = if compressed.is_empty() {
+        None
+    } else {
+        Some(load_blocks(&ctx.cfg, &compressed)?)
+    };
+    let mut table = Table::new(
+        &format!(
+            "eval — {} {}",
+            knobs.config,
+            if blocks.is_some() { "(compressed)" } else { "(dense)" }
+        ),
+        &["metric", "value"],
+    );
+    for (domain, batches) in &ctx.eval {
+        let ppl = match &blocks {
+            None => dense_ppl(&ctx.engine, &ctx.cfg, &ctx.params, batches)?,
+            Some(b) => compressed_ppl(&ctx.engine, &ctx.cfg, &ctx.params, b, batches)?,
+        };
+        table.row(vec![format!("ppl/{}", domain.name()), display_ppl(ppl)]);
+    }
+    let model_ref = match &blocks {
+        None => ModelRef::Dense(&ctx.params),
+        Some(b) => ModelRef::Compressed(&ctx.params, b),
+    };
+    let (per_task, avg) = all_tasks_accuracy(
+        &ctx.engine,
+        &ctx.cfg,
+        &model_ref,
+        ctx.n_task_instances,
+        ctx.task_seed,
+    )?;
+    for (task, acc) in per_task {
+        table.row(vec![format!("acc/{}", task.name()), format!("{acc:.3}")]);
+    }
+    table.row(vec!["acc/avg".into(), format!("{avg:.3}")]);
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let knobs = Knobs::parse(args, "base");
+    let prompt = args.str("prompt", "the cat", "prompt text");
+    let max_new = args.usize("max-new", 48, "tokens to generate");
+    let temp = args.f64("temperature", 0.0, "sampling temperature") as f32;
+    let compressed = args.str("compressed", "", "compressed blocks (.aat)");
+    args.finish_or_help();
+    let ctx = setup(&knobs)?;
+    let model = if compressed.is_empty() {
+        ServedModel::Dense(ctx.params.clone())
+    } else {
+        ServedModel::Compressed(ctx.params.clone(), load_blocks(&ctx.cfg, &compressed)?)
+    };
+    let server = Server::start("artifacts".into(), ctx.cfg.clone(), model);
+    let resp = server
+        .submit(
+            &prompt,
+            GenParams {
+                max_new_tokens: max_new,
+                temperature: temp,
+                stop_byte: None,
+            },
+        )
+        .recv()?;
+    println!("{prompt}│{}", resp.text);
+    println!(
+        "[{} tokens, ttft {:.0} ms, total {:.0} ms]",
+        resp.tokens_generated,
+        resp.ttft * 1e3,
+        resp.latency * 1e3
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let engine = Engine::new("artifacts")?;
+    println!("artifact dir: {}", engine.manifest.dir.display());
+    for (name, entry) in &engine.manifest.configs {
+        println!(
+            "config '{name}': d={} heads={} layers={} ff={} vocab={} \
+             params={} artifacts={}",
+            entry.config.d_model,
+            entry.config.n_heads,
+            entry.config.n_layers,
+            entry.config.d_ff,
+            entry.config.vocab,
+            entry.param_layout.total,
+            entry.artifacts.len()
+        );
+    }
+    Ok(())
+}

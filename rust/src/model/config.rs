@@ -1,0 +1,148 @@
+//! Model hyper-parameters (mirrors python/compile/model.py::Config).
+//!
+//! The authoritative copy of each config is the AOT manifest written by
+//! `make artifacts`; the built-ins here must agree with model.CONFIGS and
+//! are validated against the manifest at runtime load.
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Config {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub rope_theta: f64,
+    pub batch: usize,
+    pub seq: usize,
+    pub refine_batch: usize,
+    pub train_batch: usize,
+}
+
+/// The seven linear layers inside every block, canonical order
+/// (must match model.BLOCK_LINEARS).
+pub const BLOCK_LINEARS: [&str; 7] =
+    ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"];
+
+impl Config {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// (out_dim, in_dim) of a block linear.
+    pub fn linear_dims(&self, name: &str) -> (usize, usize) {
+        let (d, f) = (self.d_model, self.d_ff);
+        match name {
+            "wq" | "wk" | "wv" | "wo" => (d, d),
+            "w_gate" | "w_up" => (f, d),
+            "w_down" => (d, f),
+            _ => panic!("unknown linear '{name}'"),
+        }
+    }
+
+    /// Padded factor rank for a linear = min(out, in).
+    pub fn kmax(&self, name: &str) -> usize {
+        let (m, n) = self.linear_dims(name);
+        m.min(n)
+    }
+
+    /// Dense parameter count of one block's linears.
+    pub fn block_linear_params(&self) -> usize {
+        BLOCK_LINEARS
+            .iter()
+            .map(|l| {
+                let (m, n) = self.linear_dims(l);
+                m * n
+            })
+            .sum()
+    }
+
+    pub fn builtin(name: &str) -> Option<Config> {
+        let base = |name: &str, d, h, l, f| Config {
+            name: name.to_string(),
+            vocab: 256,
+            d_model: d,
+            n_heads: h,
+            n_layers: l,
+            d_ff: f,
+            rope_theta: 10000.0,
+            batch: 8,
+            seq: 64,
+            refine_batch: 32,
+            train_batch: 16,
+        };
+        Some(match name {
+            "tiny" => Config {
+                batch: 4,
+                seq: 16,
+                refine_batch: 8,
+                train_batch: 8,
+                ..base("tiny", 64, 2, 2, 176)
+            },
+            "small" => base("small", 128, 4, 4, 352),
+            "base" => base("base", 256, 4, 6, 704),
+            "wide" => base("wide", 320, 5, 7, 880),
+            "compact" => base("compact", 96, 3, 5, 264),
+            "deep" => base("deep", 192, 4, 8, 528),
+            "alt" => base("alt", 256, 8, 6, 640),
+            _ => return None,
+        })
+    }
+
+    pub fn from_manifest(name: &str, dims: &Json) -> Config {
+        let u = |k: &str| dims.req(k).as_usize().unwrap();
+        Config {
+            name: name.to_string(),
+            vocab: u("vocab"),
+            d_model: u("d_model"),
+            n_heads: u("n_heads"),
+            n_layers: u("n_layers"),
+            d_ff: u("d_ff"),
+            rope_theta: dims.req("rope_theta").as_f64().unwrap(),
+            batch: u("batch"),
+            seq: u("seq"),
+            refine_batch: u("refine_batch"),
+            train_batch: u("train_batch"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_configs_consistent() {
+        for name in ["tiny", "small", "base", "wide", "compact", "deep", "alt"] {
+            let c = Config::builtin(name).unwrap();
+            assert_eq!(c.d_model % c.n_heads, 0, "{name}");
+            assert_eq!(c.head_dim() % 2, 0, "{name} (RoPE pairs)");
+            for l in BLOCK_LINEARS {
+                let (m, n) = c.linear_dims(l);
+                assert_eq!(c.kmax(l), m.min(n));
+            }
+        }
+        assert!(Config::builtin("nope").is_none());
+    }
+
+    #[test]
+    fn from_manifest_parses() {
+        let dims = Json::parse(
+            r#"{"vocab":256,"d_model":64,"n_heads":2,"n_layers":2,"d_ff":176,
+                "head_dim":32,"batch":4,"seq":16,"refine_batch":8,
+                "train_batch":8,"rope_theta":10000.0,"cov_chunk":256}"#,
+        )
+        .unwrap();
+        let c = Config::from_manifest("tiny", &dims);
+        assert_eq!(c, Config::builtin("tiny").unwrap());
+    }
+
+    #[test]
+    fn block_linear_params_formula() {
+        let c = Config::builtin("tiny").unwrap();
+        let (d, f) = (c.d_model, c.d_ff);
+        assert_eq!(c.block_linear_params(), 4 * d * d + 3 * d * f);
+    }
+}

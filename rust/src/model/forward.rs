@@ -1,0 +1,388 @@
+//! Pure-Rust reference transformer forward pass.
+//!
+//! This is the *validation* path: it must match the AOT HLO artifacts to
+//! f32 tolerance (enforced by integration tests) and serves as a PJRT-free
+//! fallback for tools. The hot paths (calibration sweeps, refinement, eval,
+//! serving) run the XLA artifacts instead.
+//!
+//! Activation tensors are flat f32 in [batch, time, dim] row-major order.
+
+use super::config::Config;
+use super::params::FlatStore;
+
+pub const NORM_EPS: f32 = 1e-5;
+const MASK_NEG: f32 = -1e30;
+
+/// y = rmsnorm(x) * g over the last axis. x: [.., d].
+pub fn rmsnorm(x: &[f32], g: &[f32], d: usize, out: &mut [f32]) {
+    assert_eq!(x.len() % d, 0);
+    assert_eq!(g.len(), d);
+    for (xr, yr) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let ms: f32 = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + NORM_EPS).sqrt();
+        for j in 0..d {
+            yr[j] = xr[j] * inv * g[j];
+        }
+    }
+}
+
+/// y = x W^T with W row-major [m, n]; x: [rows, n] -> y: [rows, m].
+pub fn linear(x: &[f32], w: &[f32], n: usize, m: usize, out: &mut [f32]) {
+    let rows = x.len() / n;
+    assert_eq!(x.len(), rows * n);
+    assert_eq!(w.len(), m * n);
+    assert_eq!(out.len(), rows * m);
+    for (xr, yr) in x.chunks_exact(n).zip(out.chunks_exact_mut(m)) {
+        for (j, yj) in yr.iter_mut().enumerate() {
+            let wrow = &w[j * n..(j + 1) * n];
+            let mut acc = 0.0f32;
+            for (xv, wv) in xr.iter().zip(wrow) {
+                acc += xv * wv;
+            }
+            *yj = acc;
+        }
+    }
+}
+
+/// Rotary embedding applied in place to one head's [T, hd] block.
+/// Pairs are interleaved (even, odd) — matches model.apply_rope.
+pub fn apply_rope(x: &mut [f32], t: usize, hd: usize, theta: f64) {
+    assert_eq!(x.len(), t * hd);
+    for pos in 0..t {
+        let row = &mut x[pos * hd..(pos + 1) * hd];
+        for i in 0..hd / 2 {
+            let freq = 1.0 / theta.powf(2.0 * i as f64 / hd as f64);
+            let ang = pos as f64 * freq;
+            let (sin, cos) = (ang.sin() as f32, ang.cos() as f32);
+            let (a, b) = (row[2 * i], row[2 * i + 1]);
+            row[2 * i] = a * cos - b * sin;
+            row[2 * i + 1] = a * sin + b * cos;
+        }
+    }
+}
+
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Softmax over the last `n` entries of each row, in place.
+fn softmax_rows(x: &mut [f32], n: usize) {
+    for row in x.chunks_exact_mut(n) {
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// Causal multi-head attention over already-projected q/k/v: [B, T, d].
+pub fn attention(cfg: &Config, q: &mut [f32], k: &mut [f32], v: &[f32], t: usize) -> Vec<f32> {
+    let (d, h) = (cfg.d_model, cfg.n_heads);
+    let hd = cfg.head_dim();
+    let b = q.len() / (t * d);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = vec![0.0f32; b * t * d];
+
+    // scratch per (batch, head)
+    let mut qh = vec![0.0f32; t * hd];
+    let mut kh = vec![0.0f32; t * hd];
+    let mut scores = vec![0.0f32; t * t];
+
+    for bi in 0..b {
+        for hi in 0..h {
+            // gather head slices (strided) into contiguous buffers
+            for pos in 0..t {
+                let src = bi * t * d + pos * d + hi * hd;
+                qh[pos * hd..(pos + 1) * hd].copy_from_slice(&q[src..src + hd]);
+                kh[pos * hd..(pos + 1) * hd].copy_from_slice(&k[src..src + hd]);
+            }
+            apply_rope(&mut qh, t, hd, cfg.rope_theta);
+            apply_rope(&mut kh, t, hd, cfg.rope_theta);
+            // scores = qh kh^T * scale with causal mask
+            for i in 0..t {
+                let qrow = &qh[i * hd..(i + 1) * hd];
+                for j in 0..t {
+                    scores[i * t + j] = if j > i {
+                        MASK_NEG
+                    } else {
+                        let krow = &kh[j * hd..(j + 1) * hd];
+                        let mut acc = 0.0;
+                        for (a, b_) in qrow.iter().zip(krow) {
+                            acc += a * b_;
+                        }
+                        acc * scale
+                    };
+                }
+            }
+            softmax_rows(&mut scores, t);
+            // out = probs @ v_head
+            for i in 0..t {
+                let dst = bi * t * d + i * d + hi * hd;
+                let prow = &scores[i * t..i * t + t];
+                let orow = &mut out[dst..dst + hd];
+                orow.fill(0.0);
+                for j in 0..=i {
+                    let p = prow[j];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vsrc = bi * t * d + j * d + hi * hd;
+                    for (o, vv) in orow.iter_mut().zip(&v[vsrc..vsrc + hd]) {
+                        *o += p * vv;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Intermediate activations collected by a dense block forward — the X_j
+/// inputs Algorithm 2 feeds to CompressLayer.
+pub struct BlockTaps {
+    pub y: Vec<f32>,     // block output        [B, T, d]
+    pub a_in: Vec<f32>,  // q/k/v input         [B, T, d]
+    pub o_in: Vec<f32>,  // wo input            [B, T, d]
+    pub m_in: Vec<f32>,  // gate/up input       [B, T, d]
+    pub d_in: Vec<f32>,  // w_down input        [B, T, ff]
+}
+
+/// Dense transformer block forward with taps. `x`: [B, T, d].
+/// `prefix` addresses the block's tensors inside `params`
+/// (e.g. "blocks.3."), or "" for a bare block store.
+pub fn block_forward(
+    cfg: &Config,
+    params: &FlatStore,
+    prefix: &str,
+    x: &[f32],
+    t: usize,
+) -> BlockTaps {
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+    let rows = x.len() / d;
+    let g = |n: &str| params.view(&format!("{prefix}{n}"));
+
+    let mut a_in = vec![0.0; x.len()];
+    rmsnorm(x, g("attn_norm"), d, &mut a_in);
+
+    let mut q = vec![0.0; rows * d];
+    let mut k = vec![0.0; rows * d];
+    let mut v = vec![0.0; rows * d];
+    linear(&a_in, g("wq"), d, d, &mut q);
+    linear(&a_in, g("wk"), d, d, &mut k);
+    linear(&a_in, g("wv"), d, d, &mut v);
+    let o_in = attention(cfg, &mut q, &mut k, &v, t);
+
+    let mut attn_out = vec![0.0; rows * d];
+    linear(&o_in, g("wo"), d, d, &mut attn_out);
+    let h: Vec<f32> = x.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
+
+    let mut m_in = vec![0.0; h.len()];
+    rmsnorm(&h, g("mlp_norm"), d, &mut m_in);
+    let mut gate = vec![0.0; rows * f];
+    let mut up = vec![0.0; rows * f];
+    linear(&m_in, g("w_gate"), d, f, &mut gate);
+    linear(&m_in, g("w_up"), d, f, &mut up);
+    let d_in: Vec<f32> = gate
+        .iter()
+        .zip(&up)
+        .map(|(&gv, &uv)| silu(gv) * uv)
+        .collect();
+    let mut down = vec![0.0; rows * d];
+    linear(&d_in, g("w_down"), f, d, &mut down);
+    let y: Vec<f32> = h.iter().zip(&down).map(|(a, b)| a + b).collect();
+
+    BlockTaps {
+        y,
+        a_in,
+        o_in,
+        m_in,
+        d_in,
+    }
+}
+
+/// Full dense model forward: tokens [B, T] -> logits [B, T, vocab].
+pub fn model_forward(cfg: &Config, params: &FlatStore, tokens: &[u32], t: usize) -> Vec<f32> {
+    let d = cfg.d_model;
+    let b = tokens.len() / t;
+    let embed = params.view("embed");
+    let mut x = vec![0.0f32; b * t * d];
+    for (i, &tok) in tokens.iter().enumerate() {
+        let tok = tok as usize;
+        assert!(tok < cfg.vocab, "token {tok} out of range");
+        x[i * d..(i + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+    }
+    for blk in 0..cfg.n_layers {
+        let taps = block_forward(cfg, params, &format!("blocks.{blk}."), &x, t);
+        x = taps.y;
+    }
+    let mut hn = vec![0.0; x.len()];
+    rmsnorm(&x, params.view("final_norm"), d, &mut hn);
+    let mut logits = vec![0.0; b * t * cfg.vocab];
+    linear(&hn, params.view("lm_head"), d, cfg.vocab, &mut logits);
+    logits
+}
+
+/// Per-token NLL of `targets` under the model: [B, T].
+pub fn model_nll(cfg: &Config, params: &FlatStore, tokens: &[u32], targets: &[u32], t: usize) -> Vec<f32> {
+    let logits = model_forward(cfg, params, tokens, t);
+    nll_from_logits(&logits, targets, cfg.vocab)
+}
+
+pub fn nll_from_logits(logits: &[f32], targets: &[u32], vocab: usize) -> Vec<f32> {
+    assert_eq!(logits.len(), targets.len() * vocab);
+    logits
+        .chunks_exact(vocab)
+        .zip(targets)
+        .map(|(row, &tgt)| {
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let logz: f32 =
+                mx + row.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln();
+            logz - row[tgt as usize]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_params;
+    use crate::model::params::param_layout;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (Config, FlatStore) {
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(3));
+        (cfg, params)
+    }
+
+    #[test]
+    fn rmsnorm_unit_gain_normalizes() {
+        let d = 4;
+        let x = vec![2.0f32, 2.0, 2.0, 2.0];
+        let g = vec![1.0f32; d];
+        let mut y = vec![0.0; d];
+        rmsnorm(&x, &g, d, &mut y);
+        // rms = 2 -> y ≈ 1
+        for v in y {
+            assert!((v - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn linear_hand_example() {
+        // W = [[1,2],[3,4],[5,6]] (m=3, n=2); x = [1, 1] -> y = [3, 7, 11]
+        let w = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let x = vec![1.0, 1.0];
+        let mut y = vec![0.0; 3];
+        linear(&x, &w, 2, 3, &mut y);
+        assert_eq!(y, vec![3.0, 7.0, 11.0]);
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_pos0() {
+        let t = 4;
+        let hd = 8;
+        let mut rng = Rng::new(1);
+        let orig: Vec<f32> = (0..t * hd).map(|_| rng.normal()).collect();
+        let mut x = orig.clone();
+        apply_rope(&mut x, t, hd, 10000.0);
+        // position 0 unchanged (angle 0)
+        assert_eq!(&x[..hd], &orig[..hd]);
+        // rotation preserves pairwise norms
+        for pos in 0..t {
+            let n0: f32 = orig[pos * hd..(pos + 1) * hd].iter().map(|v| v * v).sum();
+            let n1: f32 = x[pos * hd..(pos + 1) * hd].iter().map(|v| v * v).sum();
+            assert!((n0 - n1).abs() < 1e-3 * n0.max(1.0));
+        }
+    }
+
+    #[test]
+    fn model_forward_shapes_and_finite() {
+        let (cfg, params) = setup();
+        let t = cfg.seq;
+        let tokens: Vec<u32> = (0..2 * t).map(|i| (i % cfg.vocab) as u32).collect();
+        let logits = model_forward(&cfg, &params, &tokens, t);
+        assert_eq!(logits.len(), 2 * t * cfg.vocab);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn model_forward_is_causal() {
+        let (cfg, params) = setup();
+        let t = cfg.seq;
+        let mut rng = Rng::new(9);
+        let tokens: Vec<u32> = (0..t).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let mut tokens2 = tokens.clone();
+        for v in tokens2[t / 2..].iter_mut() {
+            *v = (*v + 13) % cfg.vocab as u32;
+        }
+        let l1 = model_forward(&cfg, &params, &tokens, t);
+        let l2 = model_forward(&cfg, &params, &tokens2, t);
+        let cut = (t / 2) * cfg.vocab;
+        crate::testkit::approx::assert_close_f32(&l1[..cut], &l2[..cut], 1e-5);
+        assert!(l1[cut..] != l2[cut..]);
+    }
+
+    #[test]
+    fn block_taps_reconstruct_output() {
+        let (cfg, params) = setup();
+        let t = cfg.seq;
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..2 * t * cfg.d_model).map(|_| rng.normal() * 0.5).collect();
+        let taps = block_forward(&cfg, &params, "blocks.0.", &x, t);
+        // y = (x + wo(o_in)) + w_down(d_in)
+        let d = cfg.d_model;
+        let rows = x.len() / d;
+        let mut wo_out = vec![0.0; rows * d];
+        linear(&taps.o_in, params.view("blocks.0.wo"), d, d, &mut wo_out);
+        let mut down = vec![0.0; rows * d];
+        linear(&taps.d_in, params.view("blocks.0.w_down"), cfg.d_ff, d, &mut down);
+        let y2: Vec<f32> = x
+            .iter()
+            .zip(&wo_out)
+            .zip(&down)
+            .map(|((a, b), c)| a + b + c)
+            .collect();
+        crate::testkit::approx::assert_close_f32(&taps.y, &y2, 1e-4);
+    }
+
+    #[test]
+    fn nll_matches_manual() {
+        let logits = vec![0.0f32, 0.0, 0.0, 1.0, 0.0, 0.0];
+        let nll = nll_from_logits(&logits, &[1, 0], 3);
+        let unif = (3.0f32).ln();
+        assert!((nll[0] - unif).abs() < 1e-5);
+        assert!(nll[1] < unif); // target 0 holds the highest logit in row 2
+        // and picking a low-logit target costs more than uniform
+        let nll_bad = nll_from_logits(&logits[3..], &[1], 3);
+        assert!(nll_bad[0] > unif);
+    }
+
+    #[test]
+    fn batch_independence() {
+        let (cfg, params) = setup();
+        let t = cfg.seq;
+        let mut rng = Rng::new(6);
+        let seq_a: Vec<u32> = (0..t).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let seq_b: Vec<u32> = (0..t).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let solo = model_forward(&cfg, &params, &seq_a, t);
+        let both: Vec<u32> = seq_a.iter().chain(&seq_b).cloned().collect();
+        let batched = model_forward(&cfg, &params, &both, t);
+        crate::testkit::approx::assert_close_f32(
+            &solo,
+            &batched[..t * cfg.vocab],
+            1e-5,
+        );
+    }
+
+    #[test]
+    fn param_layout_matches_store() {
+        let (cfg, params) = setup();
+        assert_eq!(params.data.len(), param_layout(&cfg).total);
+    }
+}

@@ -1,0 +1,67 @@
+//! Parameter initialization (GPT-2-style scaled normal).
+
+use super::config::Config;
+use super::params::{param_layout, FlatStore};
+use crate::util::rng::Rng;
+
+/// Initialize dense parameters: N(0, 0.02) for embeddings and projections,
+/// residual-output projections (wo, w_down) scaled by 1/sqrt(2L), norm
+/// gains at 1.0.
+pub fn init_params(cfg: &Config, rng: &mut Rng) -> FlatStore {
+    let mut store = FlatStore::zeros(param_layout(cfg));
+    let resid_scale = 0.02 / ((2 * cfg.n_layers) as f32).sqrt();
+    for e in store.layout.entries.clone() {
+        let scale = if e.name.ends_with("norm") {
+            // gains start at identity
+            for v in store.view_mut(&e.name) {
+                *v = 1.0;
+            }
+            continue;
+        } else if e.name.ends_with(".wo") || e.name.ends_with(".w_down") {
+            resid_scale
+        } else {
+            0.02
+        };
+        for v in store.view_mut(&e.name) {
+            *v = rng.normal() * scale;
+        }
+    }
+    store
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms_are_ones() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let p = init_params(&cfg, &mut Rng::new(0));
+        assert!(p.view("final_norm").iter().all(|&v| v == 1.0));
+        assert!(p.view("blocks.0.attn_norm").iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn weights_have_expected_scale() {
+        let cfg = Config::builtin("base").unwrap();
+        let p = init_params(&cfg, &mut Rng::new(1));
+        let wq = p.view("blocks.0.wq");
+        let std = (wq.iter().map(|&v| (v as f64).powi(2)).sum::<f64>()
+            / wq.len() as f64)
+            .sqrt();
+        assert!((std - 0.02).abs() < 0.002, "std={std}");
+        let wo = p.view("blocks.0.wo");
+        let std_o = (wo.iter().map(|&v| (v as f64).powi(2)).sum::<f64>()
+            / wo.len() as f64)
+            .sqrt();
+        assert!(std_o < std, "residual projections should be smaller");
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let a = init_params(&cfg, &mut Rng::new(7));
+        let b = init_params(&cfg, &mut Rng::new(7));
+        assert_eq!(a.data, b.data);
+    }
+}

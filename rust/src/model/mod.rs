@@ -1,0 +1,13 @@
+//! Model substrate: configs, parameter stores, reference forwards,
+//! low-rank representation, init and tokenizers.
+
+pub mod config;
+pub mod forward;
+pub mod init;
+pub mod lowrank;
+pub mod params;
+pub mod tokenizer;
+
+pub use config::{Config, BLOCK_LINEARS};
+pub use lowrank::BlockFactors;
+pub use params::{factor_layout, mask_layout, param_layout, FlatStore, Layout};

@@ -1,0 +1,332 @@
+//! Flat parameter stores with named views.
+//!
+//! Parameters live in one contiguous f32 vector in the canonical layout the
+//! AOT artifacts expect (see model.param_specs); `Layout` maps tensor names
+//! to (shape, offset). The same machinery backs dense params, per-block
+//! low-rank factors, rank masks, and optimizer state.
+
+use crate::util::io::{Tensor, TensorArchive};
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Layout {
+    pub entries: Vec<Entry>,
+    index: BTreeMap<String, usize>,
+    pub total: usize,
+}
+
+impl Layout {
+    pub fn new(entries: Vec<(String, Vec<usize>)>) -> Layout {
+        let mut out = Vec::with_capacity(entries.len());
+        let mut index = BTreeMap::new();
+        let mut off = 0usize;
+        for (name, shape) in entries {
+            let size: usize = shape.iter().product();
+            index.insert(name.clone(), out.len());
+            out.push(Entry {
+                name,
+                shape,
+                offset: off,
+            });
+            off += size;
+        }
+        Layout {
+            entries: out,
+            index,
+            total: off,
+        }
+    }
+
+    pub fn from_manifest(j: &Json) -> Layout {
+        let entries = j
+            .as_arr()
+            .expect("layout must be an array")
+            .iter()
+            .map(|e| {
+                let name = e.req("name").as_str().unwrap().to_string();
+                let shape: Vec<usize> = e
+                    .req("shape")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|d| d.as_usize().unwrap())
+                    .collect();
+                (name, shape)
+            })
+            .collect();
+        let lay = Layout::new(entries);
+        // cross-check offsets against the manifest (both sides must agree)
+        for (ent, j_ent) in lay.entries.iter().zip(j.as_arr().unwrap()) {
+            assert_eq!(
+                ent.offset,
+                j_ent.req("offset").as_usize().unwrap(),
+                "manifest/layout offset mismatch for '{}'",
+                ent.name
+            );
+        }
+        lay
+    }
+
+    pub fn entry(&self, name: &str) -> &Entry {
+        &self.entries[*self
+            .index
+            .get(name)
+            .unwrap_or_else(|| panic!("no tensor '{name}' in layout"))]
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.index.contains_key(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|e| e.name.as_str())
+    }
+}
+
+/// Flat f32 parameter vector + its layout.
+#[derive(Clone, Debug)]
+pub struct FlatStore {
+    pub layout: Layout,
+    pub data: Vec<f32>,
+}
+
+impl FlatStore {
+    pub fn zeros(layout: Layout) -> FlatStore {
+        let n = layout.total;
+        FlatStore {
+            layout,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn from_data(layout: Layout, data: Vec<f32>) -> FlatStore {
+        assert_eq!(layout.total, data.len(), "flat data length mismatch");
+        FlatStore { layout, data }
+    }
+
+    pub fn view(&self, name: &str) -> &[f32] {
+        let e = self.layout.entry(name);
+        let size: usize = e.shape.iter().product();
+        &self.data[e.offset..e.offset + size]
+    }
+
+    pub fn view_mut(&mut self, name: &str) -> &mut [f32] {
+        let e = self.layout.entry(name).clone();
+        let size: usize = e.shape.iter().product();
+        &mut self.data[e.offset..e.offset + size]
+    }
+
+    pub fn shape(&self, name: &str) -> &[usize] {
+        &self.layout.entry(name).shape
+    }
+
+    /// Save as a named-tensor archive (reshaped per layout).
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let mut arch = TensorArchive::new();
+        for e in &self.layout.entries {
+            let size: usize = e.shape.iter().product();
+            arch.insert(
+                &e.name,
+                Tensor::new(
+                    e.shape.clone(),
+                    self.data[e.offset..e.offset + size].to_vec(),
+                ),
+            );
+        }
+        arch.save(path)
+    }
+
+    /// Load from an archive; every layout entry must be present with the
+    /// right shape (extra archive tensors are ignored).
+    pub fn load(layout: Layout, path: impl AsRef<std::path::Path>) -> Result<FlatStore> {
+        let arch = TensorArchive::load(path)?;
+        let mut store = FlatStore::zeros(layout);
+        for e in store.layout.entries.clone() {
+            match arch.get(&e.name) {
+                Some(t) if t.dims == e.shape => {
+                    let size: usize = e.shape.iter().product();
+                    store.data[e.offset..e.offset + size].copy_from_slice(&t.data);
+                }
+                Some(t) => bail!(
+                    "tensor '{}' shape {:?} != layout {:?}",
+                    e.name,
+                    t.dims,
+                    e.shape
+                ),
+                None => bail!("archive missing tensor '{}'", e.name),
+            }
+        }
+        Ok(store)
+    }
+}
+
+/// Build the dense-parameter layout for a config
+/// (must match python model.param_specs exactly).
+pub fn param_layout(cfg: &super::config::Config) -> Layout {
+    let mut entries = vec![("embed".to_string(), vec![cfg.vocab, cfg.d_model])];
+    for i in 0..cfg.n_layers {
+        entries.extend(block_param_entries(cfg, i));
+    }
+    entries.push(("final_norm".to_string(), vec![cfg.d_model]));
+    entries.push(("lm_head".to_string(), vec![cfg.vocab, cfg.d_model]));
+    Layout::new(entries)
+}
+
+fn block_param_entries(
+    cfg: &super::config::Config,
+    i: usize,
+) -> Vec<(String, Vec<usize>)> {
+    let d = cfg.d_model;
+    let mut v = vec![(format!("blocks.{i}.attn_norm"), vec![d])];
+    for name in ["wq", "wk", "wv", "wo"] {
+        let (m, n) = cfg.linear_dims(name);
+        v.push((format!("blocks.{i}.{name}"), vec![m, n]));
+    }
+    v.push((format!("blocks.{i}.mlp_norm"), vec![d]));
+    for name in ["w_gate", "w_up", "w_down"] {
+        let (m, n) = cfg.linear_dims(name);
+        v.push((format!("blocks.{i}.{name}"), vec![m, n]));
+    }
+    v
+}
+
+/// Layout of one block's dense params with bare names (block_fwd artifact).
+pub fn block_param_layout(cfg: &super::config::Config) -> Layout {
+    Layout::new(
+        block_param_entries(cfg, 0)
+            .into_iter()
+            .map(|(n, s)| (n.split('.').skip(2).collect::<Vec<_>>().join("."), s))
+            .collect(),
+    )
+}
+
+/// Layout of one compressed block's trainables
+/// (must match model.factor_specs_one_block).
+pub fn factor_layout(cfg: &super::config::Config) -> Layout {
+    let d = cfg.d_model;
+    let mut entries = vec![
+        ("attn_norm".to_string(), vec![d]),
+        ("mlp_norm".to_string(), vec![d]),
+    ];
+    for name in super::config::BLOCK_LINEARS {
+        let (m, n) = cfg.linear_dims(name);
+        let k = cfg.kmax(name);
+        entries.push((format!("{name}.u"), vec![m, k]));
+        entries.push((format!("{name}.v"), vec![n, k]));
+    }
+    Layout::new(entries)
+}
+
+/// Layout of one block's rank masks (must match model.mask_specs_one_block).
+pub fn mask_layout(cfg: &super::config::Config) -> Layout {
+    Layout::new(
+        super::config::BLOCK_LINEARS
+            .iter()
+            .map(|name| (format!("{name}.mask"), vec![cfg.kmax(name)]))
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::Config;
+
+    #[test]
+    fn layout_offsets_contiguous() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let lay = param_layout(&cfg);
+        let mut off = 0;
+        for e in &lay.entries {
+            assert_eq!(e.offset, off);
+            off += e.shape.iter().product::<usize>();
+        }
+        assert_eq!(lay.total, off);
+    }
+
+    #[test]
+    fn expected_param_count() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let lay = param_layout(&cfg);
+        let expect = cfg.vocab * cfg.d_model * 2
+            + cfg.n_layers * (2 * cfg.d_model + cfg.block_linear_params())
+            + cfg.d_model;
+        assert_eq!(lay.total, expect);
+    }
+
+    #[test]
+    fn views_are_disjoint_and_named() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let mut s = FlatStore::zeros(param_layout(&cfg));
+        s.view_mut("embed")[0] = 1.0;
+        s.view_mut("blocks.0.wq")[0] = 2.0;
+        assert_eq!(s.view("embed")[0], 1.0);
+        assert_eq!(s.view("blocks.0.wq")[0], 2.0);
+        assert_eq!(s.view("blocks.1.wq")[0], 0.0);
+        assert_eq!(s.shape("blocks.0.wq"), &[cfg.d_model, cfg.d_model]);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let mut s = FlatStore::zeros(param_layout(&cfg));
+        for (i, x) in s.data.iter_mut().enumerate() {
+            *x = (i % 97) as f32 * 0.1;
+        }
+        let dir = std::env::temp_dir().join("aasvd-params-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("tiny.aat");
+        s.save(&p).unwrap();
+        let t = FlatStore::load(param_layout(&cfg), &p).unwrap();
+        assert_eq!(s.data, t.data);
+    }
+
+    #[test]
+    fn factor_and_mask_layouts() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let fl = factor_layout(&cfg);
+        let ml = mask_layout(&cfg);
+        assert!(fl.has("wq.u") && fl.has("w_down.v") && fl.has("attn_norm"));
+        assert_eq!(
+            ml.total,
+            super::super::config::BLOCK_LINEARS
+                .iter()
+                .map(|l| cfg.kmax(l))
+                .sum::<usize>()
+        );
+        // factor count: 2 norms + 2 mats per linear
+        assert_eq!(fl.entries.len(), 2 + 14);
+    }
+
+    #[test]
+    fn block_layout_has_bare_names() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let bl = block_param_layout(&cfg);
+        assert!(bl.has("attn_norm") && bl.has("wq") && bl.has("w_down"));
+        assert_eq!(
+            bl.total,
+            2 * cfg.d_model + cfg.block_linear_params()
+        );
+    }
+
+    #[test]
+    fn load_rejects_shape_mismatch() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let dir = std::env::temp_dir().join("aasvd-params-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.aat");
+        let mut arch = TensorArchive::new();
+        arch.insert("embed", Tensor::zeros(vec![1, 1]));
+        arch.save(&p).unwrap();
+        assert!(FlatStore::load(param_layout(&cfg), &p).is_err());
+    }
+}

@@ -1,0 +1,166 @@
+//! Tokenizers: byte-level (default, vocab 256) and a small trained BPE.
+//!
+//! The model family uses byte-level tokens so the Rust and JAX sides never
+//! need to share a vocabulary file; the BPE implementation exists for the
+//! tokenizer-ablation example and is fully self-contained.
+
+use std::collections::BTreeMap;
+
+pub trait Tokenizer {
+    fn encode(&self, text: &str) -> Vec<u32>;
+    fn decode(&self, tokens: &[u32]) -> String;
+    fn vocab_size(&self) -> usize;
+}
+
+/// Identity byte tokenizer: token = byte value.
+#[derive(Clone, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl Tokenizer for ByteTokenizer {
+    fn encode(&self, text: &str) -> Vec<u32> {
+        text.bytes().map(|b| b as u32).collect()
+    }
+
+    fn decode(&self, tokens: &[u32]) -> String {
+        let bytes: Vec<u8> = tokens.iter().map(|&t| t as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    fn vocab_size(&self) -> usize {
+        256
+    }
+}
+
+/// Byte-pair encoding trained greedily on a corpus sample.
+#[derive(Clone, Debug)]
+pub struct BpeTokenizer {
+    /// merge list in training order: (left, right) -> new id
+    pub merges: Vec<(u32, u32)>,
+    #[allow(dead_code)] // kept for incremental re-training extensions
+    merge_index: BTreeMap<(u32, u32), u32>,
+    /// id -> byte string
+    pieces: Vec<Vec<u8>>,
+}
+
+impl BpeTokenizer {
+    /// Train `n_merges` merges on `corpus`.
+    pub fn train(corpus: &str, n_merges: usize) -> BpeTokenizer {
+        let mut pieces: Vec<Vec<u8>> = (0..=255u8).map(|b| vec![b]).collect();
+        let mut merges = Vec::new();
+        let mut merge_index = BTreeMap::new();
+        let mut seq: Vec<u32> = corpus.bytes().map(|b| b as u32).collect();
+
+        for _ in 0..n_merges {
+            // count adjacent pairs
+            let mut counts: BTreeMap<(u32, u32), usize> = BTreeMap::new();
+            for w in seq.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            let Some((&pair, &cnt)) = counts.iter().max_by_key(|(_, &c)| c) else {
+                break;
+            };
+            if cnt < 2 {
+                break;
+            }
+            let new_id = pieces.len() as u32;
+            let mut piece = pieces[pair.0 as usize].clone();
+            piece.extend_from_slice(&pieces[pair.1 as usize]);
+            pieces.push(piece);
+            merges.push(pair);
+            merge_index.insert(pair, new_id);
+            // apply the merge to the working sequence
+            seq = Self::apply_merge(&seq, pair, new_id);
+        }
+        BpeTokenizer {
+            merges,
+            merge_index,
+            pieces,
+        }
+    }
+
+    fn apply_merge(seq: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+        let mut out = Vec::with_capacity(seq.len());
+        let mut i = 0;
+        while i < seq.len() {
+            if i + 1 < seq.len() && (seq[i], seq[i + 1]) == pair {
+                out.push(new_id);
+                i += 2;
+            } else {
+                out.push(seq[i]);
+                i += 1;
+            }
+        }
+        out
+    }
+}
+
+impl Tokenizer for BpeTokenizer {
+    fn encode(&self, text: &str) -> Vec<u32> {
+        let mut seq: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+        // apply merges in training order (classical BPE encode)
+        for (i, &pair) in self.merges.iter().enumerate() {
+            let new_id = 256 + i as u32;
+            if seq.len() < 2 {
+                break;
+            }
+            seq = Self::apply_merge(&seq, pair, new_id);
+        }
+        seq
+    }
+
+    fn decode(&self, tokens: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &t in tokens {
+            bytes.extend_from_slice(&self.pieces[t as usize]);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    fn vocab_size(&self) -> usize {
+        self.pieces.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_roundtrip() {
+        let t = ByteTokenizer;
+        let s = "the quick brown fox! 123";
+        assert_eq!(t.decode(&t.encode(s)), s);
+        assert_eq!(t.vocab_size(), 256);
+    }
+
+    #[test]
+    fn bpe_roundtrip() {
+        let corpus = "the cat sat on the mat. the cat ate the rat. ".repeat(20);
+        let t = BpeTokenizer::train(&corpus, 50);
+        let s = "the cat sat on the rat";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn bpe_compresses_training_domain() {
+        let corpus = "abcabcabcabc ".repeat(50);
+        let t = BpeTokenizer::train(&corpus, 30);
+        let encoded = t.encode("abcabcabc");
+        assert!(encoded.len() < 9, "bpe should shorten: {}", encoded.len());
+    }
+
+    #[test]
+    fn bpe_handles_unseen_bytes() {
+        let t = BpeTokenizer::train("aaaa bbbb", 5);
+        let s = "zzz 999 \u{1F600}"; // includes multibyte utf-8
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn bpe_vocab_grows_with_merges() {
+        let corpus = "hello world hello world hello world";
+        let t = BpeTokenizer::train(corpus, 10);
+        assert!(t.vocab_size() > 256);
+        assert!(t.vocab_size() <= 266);
+    }
+}

@@ -1,0 +1,209 @@
+//! Refinement driver: runs the AOT `refine_step` executable (AdamW on the
+//! block's factors + norm gains, loss = block-output MSE) over the
+//! calibration set with the paper's §B.2 recipe — batch 32, cosine LR with
+//! warmup, several epochs.
+//!
+//! The coordinator precomputes Y = L_i(X) (dense block on original inputs)
+//! and X' (shifted inputs); the driver owns optimizer state, epoch
+//! shuffling, and early stopping on loss plateau.
+
+use crate::model::lowrank::BlockFactors;
+use crate::model::Config;
+use crate::runtime::{Engine, Value};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+use super::schedule::CosineSchedule;
+
+#[derive(Clone, Copy, Debug)]
+pub struct RefineOptions {
+    pub epochs: usize,
+    pub base_lr: f64,
+    pub warmup_frac: f64,
+    /// stop early when the epoch-mean loss improves less than this
+    /// relative amount twice in a row
+    pub plateau_tol: f64,
+    pub seed: u64,
+}
+
+impl Default for RefineOptions {
+    fn default() -> Self {
+        RefineOptions {
+            // paper B.2 uses 25 epochs @ 1e-4; our blocks are ~100x smaller
+            // so fewer epochs at the same lr reach the same plateau — the
+            // paper-faithful setting is available via --refine-epochs 25.
+            epochs: 10,
+            // paper B.2 uses 1e-4 on LLaMA-scale blocks; AdamW steps are
+            // scale-free, so on our ~100x smaller blocks 1e-4 over-steps
+            // and injects noise that the anchored objective then amplifies
+            // through its shift-inversion (see EXPERIMENTS.md). 3e-5
+            // reproduces the paper's refinement-helps behaviour here.
+            base_lr: 3e-5,
+            warmup_frac: 0.1,
+            plateau_tol: 1e-3,
+            seed: 0x5EED,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RefineReport {
+    pub steps: usize,
+    pub first_loss: f64,
+    pub last_loss: f64,
+    pub epoch_losses: Vec<f64>,
+}
+
+/// Refine one block in place. `x_shift`/`y_target` are [n_seqs, T, d]
+/// flattened sequence-major; sequences are resampled into batches of
+/// `cfg.refine_batch` each epoch.
+pub fn refine_block(
+    engine: &Engine,
+    cfg: &Config,
+    bf: &mut BlockFactors,
+    x_shift: &[f32],
+    y_target: &[f32],
+    opts: &RefineOptions,
+) -> Result<RefineReport> {
+    let seq_elems = cfg.seq * cfg.d_model;
+    assert_eq!(x_shift.len(), y_target.len());
+    assert_eq!(x_shift.len() % seq_elems, 0);
+    let n_seqs = x_shift.len() / seq_elems;
+    let br = cfg.refine_batch;
+    let steps_per_epoch = n_seqs.div_ceil(br).max(1);
+    let total_steps = opts.epochs * steps_per_epoch;
+    let sched = CosineSchedule::new(
+        opts.base_lr,
+        (total_steps as f64 * opts.warmup_frac) as usize,
+        total_steps,
+    );
+
+    let fsize = bf.factors.data.len();
+    let mut m = vec![0f32; fsize];
+    let mut v = vec![0f32; fsize];
+    let mut rng = Rng::new(opts.seed);
+    let mut order: Vec<usize> = (0..n_seqs).collect();
+
+    let mut report = RefineReport::default();
+    let mut xbatch = vec![0f32; br * seq_elems];
+    let mut ybatch = vec![0f32; br * seq_elems];
+    let mut step = 0i32;
+    let mut plateau = 0usize;
+
+    for _epoch in 0..opts.epochs {
+        rng.shuffle(&mut order);
+        let mut epoch_loss = 0.0;
+        for chunk in order.chunks(br) {
+            // pack batch (pad by cycling the chunk)
+            for row in 0..br {
+                let src = chunk[row % chunk.len()];
+                xbatch[row * seq_elems..(row + 1) * seq_elems]
+                    .copy_from_slice(&x_shift[src * seq_elems..(src + 1) * seq_elems]);
+                ybatch[row * seq_elems..(row + 1) * seq_elems]
+                    .copy_from_slice(&y_target[src * seq_elems..(src + 1) * seq_elems]);
+            }
+            let lr = sched.lr(step as usize) as f32;
+            let out = engine.run(
+                &cfg.name,
+                "refine_step",
+                &[
+                    Value::F32(&bf.factors.data),
+                    Value::F32(&m),
+                    Value::F32(&v),
+                    Value::ScalarI32(step),
+                    Value::ScalarF32(lr),
+                    Value::F32(&bf.masks.data),
+                    Value::F32(&xbatch),
+                    Value::F32(&ybatch),
+                ],
+            )?;
+            bf.factors.data.copy_from_slice(&out[0].f32);
+            m.copy_from_slice(&out[1].f32);
+            v.copy_from_slice(&out[2].f32);
+            let loss = out[3].f32[0] as f64;
+            if report.steps == 0 {
+                report.first_loss = loss;
+            }
+            report.last_loss = loss;
+            report.steps += 1;
+            epoch_loss += loss;
+            step += 1;
+        }
+        let epoch_loss = epoch_loss / steps_per_epoch as f64;
+        if let Some(&prev) = report.epoch_losses.last() {
+            if prev - epoch_loss < opts.plateau_tol * prev.abs().max(1e-12) {
+                plateau += 1;
+                if plateau >= 2 {
+                    report.epoch_losses.push(epoch_loss);
+                    break;
+                }
+            } else {
+                plateau = 0;
+            }
+        }
+        report.epoch_losses.push(epoch_loss);
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_params;
+    use crate::model::lowrank::exact_factors;
+
+    #[test]
+    fn schedule_defaults_sane() {
+        let o = RefineOptions::default();
+        assert!(o.epochs >= 1 && o.base_lr > 0.0);
+    }
+
+    /// Full driver test against the real tiny artifacts (skips without them).
+    #[test]
+    fn refinement_recovers_truncation_error() {
+        let Ok(engine) = Engine::new("artifacts") else { return };
+        if engine.entry("tiny").is_err() {
+            return;
+        }
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(1));
+        // truncate block 0 crudely to half rank -> refinement must recover
+        let mut bf = exact_factors(&cfg, &params, 0);
+        for lin in crate::model::BLOCK_LINEARS {
+            bf.set_rank(lin, cfg.kmax(lin) / 2);
+        }
+        // synthetic calibration data
+        let n_seqs = 16;
+        let seq_elems = cfg.seq * cfg.d_model;
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..n_seqs * seq_elems).map(|_| rng.normal() * 0.5).collect();
+        // target: dense block output on the same x
+        let y = {
+            let taps =
+                crate::model::forward::block_forward(&cfg, &params, "blocks.0.", &x, cfg.seq);
+            taps.y
+        };
+        let before = {
+            let got = crate::model::lowrank::block_lr_forward(&cfg, &bf, &x, cfg.seq);
+            crate::util::stats::mse(&got.y, &y)
+        };
+        let opts = RefineOptions {
+            epochs: 6,
+            base_lr: 2e-3,
+            ..Default::default()
+        };
+        let report = refine_block(&engine, &cfg, &mut bf, &x, &y, &opts).unwrap();
+        let after = {
+            let got = crate::model::lowrank::block_lr_forward(&cfg, &bf, &x, cfg.seq);
+            crate::util::stats::mse(&got.y, &y)
+        };
+        assert!(
+            after < before * 0.5,
+            "refinement: mse {before:.3e} -> {after:.3e} (report {report:?})"
+        );
+        // padded components must stay exactly zero-masked
+        for lin in crate::model::BLOCK_LINEARS {
+            assert_eq!(bf.rank(lin), cfg.kmax(lin) / 2);
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Block-level local refinement (Algorithm 2, step 9).
+
+pub mod driver;
+pub mod schedule;
+
+pub use driver::{refine_block, RefineOptions, RefineReport};
+pub use schedule::CosineSchedule;

@@ -1,0 +1,66 @@
+//! Learning-rate schedule for block refinement: linear warmup + cosine
+//! decay (paper §B.2).
+
+#[derive(Clone, Copy, Debug)]
+pub struct CosineSchedule {
+    pub base_lr: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub min_lr_frac: f64,
+}
+
+impl CosineSchedule {
+    pub fn new(base_lr: f64, warmup_steps: usize, total_steps: usize) -> CosineSchedule {
+        CosineSchedule {
+            base_lr,
+            warmup_steps: warmup_steps.min(total_steps),
+            total_steps: total_steps.max(1),
+            min_lr_frac: 0.05,
+        }
+    }
+
+    pub fn lr(&self, step: usize) -> f64 {
+        if step < self.warmup_steps {
+            return self.base_lr * (step + 1) as f64 / self.warmup_steps.max(1) as f64;
+        }
+        let t = (step - self.warmup_steps) as f64
+            / (self.total_steps - self.warmup_steps).max(1) as f64;
+        let t = t.min(1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+        self.base_lr * (self.min_lr_frac + (1.0 - self.min_lr_frac) * cos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_to_base() {
+        let s = CosineSchedule::new(1e-3, 10, 100);
+        assert!(s.lr(0) < 1e-3 * 0.2);
+        assert!((s.lr(9) - 1e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decays_to_min_fraction() {
+        let s = CosineSchedule::new(1e-3, 10, 100);
+        let end = s.lr(99);
+        assert!(end < 1e-4 + 1e-3 * 0.06);
+        assert!(end >= 1e-3 * 0.05 - 1e-12);
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let s = CosineSchedule::new(1e-3, 5, 50);
+        for i in 5..49 {
+            assert!(s.lr(i) >= s.lr(i + 1) - 1e-15);
+        }
+    }
+
+    #[test]
+    fn steps_past_total_are_clamped() {
+        let s = CosineSchedule::new(1e-3, 0, 10);
+        assert!((s.lr(10_000) - s.lr(10)).abs() < 1e-12);
+    }
+}

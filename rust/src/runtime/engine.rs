@@ -1,0 +1,276 @@
+//! PJRT execution engine: compiles HLO-text artifacts once, then serves
+//! typed host-side calls from the coordinator's hot paths.
+//!
+//! Executables are cached per (config, artifact). Inputs travel as
+//! `Value` views over host slices; outputs come back as `HostTensor`s.
+//! Device-buffer reuse for loop-invariant inputs (model params) is exposed
+//! through `DeviceCache` — see EXPERIMENTS.md §Perf for the measured win.
+
+use super::manifest::{ArtifactSpec, ConfigEntry, DType, Manifest};
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+/// A borrowed, typed input tensor.
+#[derive(Clone, Copy, Debug)]
+pub enum Value<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+/// An owned, typed output tensor.
+#[derive(Clone, Debug)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub f32: Vec<f32>, // i32 outputs are converted (none exist today)
+}
+
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    // cache key: "<config>/<artifact>"
+    executables: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
+    pub stats: RefCell<EngineStats>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+    pub h2d_bytes: usize,
+}
+
+impl Engine {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            manifest,
+            client,
+            executables: RefCell::new(BTreeMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn entry(&self, config: &str) -> Result<&ConfigEntry> {
+        self.manifest.entry(config)
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    fn executable(
+        &self,
+        config: &str,
+        artifact: &str,
+    ) -> Result<std::cell::Ref<'_, xla::PjRtLoadedExecutable>> {
+        let key = format!("{config}/{artifact}");
+        if !self.executables.borrow().contains_key(&key) {
+            let spec = self.entry(config)?.artifact(artifact)?;
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file
+                    .to_str()
+                    .context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing {}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {key}"))?;
+            let mut stats = self.stats.borrow_mut();
+            stats.compiles += 1;
+            stats.compile_secs += t0.elapsed().as_secs_f64();
+            self.executables.borrow_mut().insert(key.clone(), exe);
+        }
+        Ok(std::cell::Ref::map(self.executables.borrow(), |m| {
+            m.get(&key).unwrap()
+        }))
+    }
+
+    /// Pre-compile a set of artifacts (warms the cache; used at startup so
+    /// serving latencies exclude compilation).
+    pub fn warmup(&self, config: &str, artifacts: &[&str]) -> Result<()> {
+        for a in artifacts {
+            self.executable(config, a)?;
+        }
+        Ok(())
+    }
+
+    fn literal(&self, spec: &super::manifest::TensorSpec, v: &Value) -> Result<xla::Literal> {
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match (spec.dtype, v) {
+            (DType::F32, Value::F32(data)) => {
+                if data.len() != spec.numel() {
+                    bail!(
+                        "f32 input length {} != spec {:?}",
+                        data.len(),
+                        spec.shape
+                    );
+                }
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            (DType::I32, Value::I32(data)) => {
+                if data.len() != spec.numel() {
+                    bail!(
+                        "i32 input length {} != spec {:?}",
+                        data.len(),
+                        spec.shape
+                    );
+                }
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            (DType::F32, Value::ScalarF32(x)) => {
+                if !spec.shape.is_empty() {
+                    bail!("scalar given for non-scalar spec {:?}", spec.shape);
+                }
+                xla::Literal::scalar(*x)
+            }
+            (DType::I32, Value::ScalarI32(x)) => {
+                if !spec.shape.is_empty() {
+                    bail!("scalar given for non-scalar spec {:?}", spec.shape);
+                }
+                xla::Literal::scalar(*x)
+            }
+            (dt, _) => bail!("input dtype mismatch (artifact wants {dt:?})"),
+        };
+        self.stats.borrow_mut().h2d_bytes += lit.size_bytes();
+        Ok(lit)
+    }
+
+    /// Execute `artifact` with host inputs; returns one HostTensor per
+    /// declared output.
+    pub fn run(
+        &self,
+        config: &str,
+        artifact: &str,
+        inputs: &[Value],
+    ) -> Result<Vec<HostTensor>> {
+        let spec: ArtifactSpec = self.entry(config)?.artifact(artifact)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{config}/{artifact}: got {} inputs, artifact wants {}",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        let lits: Vec<xla::Literal> = spec
+            .inputs
+            .iter()
+            .zip(inputs)
+            .enumerate()
+            .map(|(i, (s, v))| {
+                self.literal(s, v)
+                    .with_context(|| format!("{config}/{artifact} input {i}"))
+            })
+            .collect::<Result<_>>()?;
+
+        let exe = self.executable(config, artifact)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing {config}/{artifact}"))?[0][0]
+            .to_literal_sync()?;
+        {
+            let mut stats = self.stats.borrow_mut();
+            stats.executions += 1;
+            stats.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        // artifacts are lowered with return_tuple=True
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{config}/{artifact}: {} outputs, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, ospec)| {
+                let f32 = match ospec.dtype {
+                    DType::F32 => lit.to_vec::<f32>()?,
+                    DType::I32 => lit
+                        .to_vec::<i32>()?
+                        .into_iter()
+                        .map(|x| x as f32)
+                        .collect(),
+                };
+                if f32.len() != ospec.numel() {
+                    bail!(
+                        "output length {} != manifest {:?}",
+                        f32.len(),
+                        ospec.shape
+                    );
+                }
+                Ok(HostTensor {
+                    shape: ospec.shape.clone(),
+                    f32,
+                })
+            })
+            .collect()
+    }
+
+    pub fn stats_snapshot(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        Engine::new("artifacts").ok()
+    }
+
+    #[test]
+    fn cov_accum_artifact_runs() {
+        let Some(eng) = engine() else { return };
+        let e = eng.entry("tiny").unwrap();
+        let d = e.config.d_model;
+        let chunk = e.cov_chunk;
+        let c = vec![0f32; d * d];
+        let x = vec![1f32; chunk * d];
+        let out = eng
+            .run("tiny", "cov_accum_d", &[Value::F32(&c), Value::F32(&x)])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, vec![d, d]);
+        assert!((out[0].f32[0] - chunk as f32).abs() < 1e-3);
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(eng) = engine() else { return };
+        let e = eng.entry("tiny").unwrap();
+        let d = e.config.d_model;
+        let c = vec![0f32; d * d];
+        let x = vec![0.5f32; e.cov_chunk * d];
+        for _ in 0..3 {
+            eng.run("tiny", "cov_accum_d", &[Value::F32(&c), Value::F32(&x)])
+                .unwrap();
+        }
+        let stats = eng.stats_snapshot();
+        assert_eq!(stats.compiles, 1, "must compile once");
+        assert_eq!(stats.executions, 3);
+    }
+
+    #[test]
+    fn input_arity_and_shape_errors() {
+        let Some(eng) = engine() else { return };
+        let bad = eng.run("tiny", "cov_accum_d", &[Value::F32(&[0.0])]);
+        assert!(bad.is_err());
+        let short = vec![0f32; 3];
+        let e = eng.entry("tiny").unwrap();
+        let x = vec![0f32; e.cov_chunk * e.config.d_model];
+        let bad2 = eng.run("tiny", "cov_accum_d", &[Value::F32(&short), Value::F32(&x)]);
+        assert!(bad2.is_err());
+    }
+}

@@ -1,0 +1,230 @@
+//! AOT artifact manifest: what `make artifacts` produced and how to call it.
+//!
+//! Parsed from artifacts/manifest.json (written by python/compile/aot.py).
+//! The manifest is the single source of truth for artifact signatures and
+//! flat-tensor layouts; the Rust builtin configs are validated against it.
+
+use crate::model::config::Config;
+use crate::model::params::Layout;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            _ => bail!("unsupported dtype '{s}'"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ConfigEntry {
+    pub config: Config,
+    pub cov_chunk: usize,
+    pub param_layout: Layout,
+    pub block_param_layout: Layout,
+    pub factor_layout: Layout,
+    pub mask_layout: Layout,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ConfigEntry>,
+}
+
+fn parse_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()
+        .context("expected spec array")?
+        .iter()
+        .map(|s| {
+            Ok(TensorSpec {
+                shape: s
+                    .req("shape")
+                    .as_arr()
+                    .context("shape")?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap())
+                    .collect(),
+                dtype: DType::parse(s.req("dtype").as_str().context("dtype")?)?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut configs = BTreeMap::new();
+        for (name, entry) in j.req("configs").as_obj().context("configs")? {
+            let dims = entry.req("dims");
+            let config = Config::from_manifest(name, dims);
+            // consistency: builtin config (if present) must agree
+            if let Some(builtin) = Config::builtin(name) {
+                if builtin != config {
+                    bail!(
+                        "config '{name}' in manifest disagrees with builtin; \
+                         re-run `make artifacts`"
+                    );
+                }
+            }
+            let mut artifacts = BTreeMap::new();
+            for (aname, a) in entry.req("artifacts").as_obj().context("artifacts")? {
+                artifacts.insert(
+                    aname.clone(),
+                    ArtifactSpec {
+                        name: aname.clone(),
+                        file: dir.join(a.req("file").as_str().context("file")?),
+                        inputs: parse_specs(a.req("inputs"))?,
+                        outputs: parse_specs(a.req("outputs"))?,
+                    },
+                );
+            }
+            configs.insert(
+                name.clone(),
+                ConfigEntry {
+                    cov_chunk: dims.req("cov_chunk").as_usize().unwrap(),
+                    param_layout: Layout::from_manifest(entry.req("param_layout")),
+                    // python emits block tensors as "blocks.0.<name>"; the
+                    // rust block store uses bare names
+                    block_param_layout: {
+                        let lay = Layout::from_manifest(entry.req("block_param_layout"));
+                        Layout::new(
+                            lay.entries
+                                .into_iter()
+                                .map(|e| {
+                                    let bare = e
+                                        .name
+                                        .strip_prefix("blocks.0.")
+                                        .unwrap_or(&e.name)
+                                        .to_string();
+                                    (bare, e.shape)
+                                })
+                                .collect(),
+                        )
+                    },
+                    factor_layout: Layout::from_manifest(entry.req("factor_layout")),
+                    mask_layout: Layout::from_manifest(entry.req("mask_layout")),
+                    config,
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest { dir, configs })
+    }
+
+    pub fn entry(&self, config: &str) -> Result<&ConfigEntry> {
+        self.configs.get(config).with_context(|| {
+            format!(
+                "config '{config}' not in manifest (have: {:?}) — \
+                 run `make artifacts CONFIGS={config}`",
+                self.configs.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+impl ConfigEntry {
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).with_context(|| {
+            format!("artifact '{name}' missing for config '{}'", self.config.name)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests here run against the real artifacts when present (CI runs
+    /// `make artifacts` first); otherwise they validate error paths.
+    fn manifest() -> Option<Manifest> {
+        Manifest::load("artifacts").ok()
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = Manifest::load("/nonexistent-path").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(m) = manifest() else { return };
+        let e = m.entry("tiny").unwrap();
+        assert_eq!(e.config.d_model, 64);
+        let a = e.artifact("model_fwd").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(
+            a.outputs[0].shape,
+            vec![e.config.batch, e.config.seq, e.config.vocab]
+        );
+        assert!(a.file.exists());
+    }
+
+    #[test]
+    fn layouts_match_rust_side() {
+        let Some(m) = manifest() else { return };
+        let e = m.entry("tiny").unwrap();
+        assert_eq!(
+            e.param_layout,
+            crate::model::params::param_layout(&e.config)
+        );
+        assert_eq!(
+            e.factor_layout,
+            crate::model::params::factor_layout(&e.config)
+        );
+        assert_eq!(e.mask_layout, crate::model::params::mask_layout(&e.config));
+        assert_eq!(
+            e.block_param_layout,
+            crate::model::params::block_param_layout(&e.config)
+        );
+    }
+
+    #[test]
+    fn unknown_names_error() {
+        let Some(m) = manifest() else { return };
+        assert!(m.entry("no-such-config").is_err());
+        assert!(m.entry("tiny").unwrap().artifact("no-such").is_err());
+    }
+}

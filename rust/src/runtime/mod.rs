@@ -1,0 +1,7 @@
+//! Runtime: PJRT client wrapper that loads and executes the AOT artifacts.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, HostTensor, Value};
+pub use manifest::{ArtifactSpec, ConfigEntry, DType, Manifest, TensorSpec};

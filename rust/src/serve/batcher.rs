@@ -1,0 +1,54 @@
+//! Load-generation helpers for serving benches: closed-loop and open-loop
+//! arrival processes.
+
+use crate::util::rng::Rng;
+
+/// Poisson arrival schedule: returns cumulative arrival times (seconds) for
+/// `n` requests at `rate` req/s.
+pub fn poisson_arrivals(n: usize, rate: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            // exponential inter-arrival
+            let u = 1.0 - rng.f64();
+            t += -u.ln() / rate.max(1e-9);
+            t
+        })
+        .collect()
+}
+
+/// Deterministic prompt set drawn from the synthetic language.
+pub fn bench_prompts(n: usize, seed: u64) -> Vec<String> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            crate::data::corpus::sentence(&mut rng, crate::data::Domain::Wiki)
+                .split('.')
+                .next()
+                .unwrap_or("the cat")
+                .to_string()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_sorted_and_rate_scaled() {
+        let a = poisson_arrivals(2000, 10.0, 1);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        let mean_gap = a.last().unwrap() / 2000.0;
+        assert!((mean_gap - 0.1).abs() < 0.02, "gap {mean_gap}");
+    }
+
+    #[test]
+    fn prompts_nonempty_and_deterministic() {
+        let a = bench_prompts(5, 3);
+        let b = bench_prompts(5, 3);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|p| !p.is_empty()));
+    }
+}

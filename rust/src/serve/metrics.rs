@@ -1,0 +1,59 @@
+//! Serving metrics: latency percentiles + throughput.
+
+use crate::util::stats::{mean, percentile};
+
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub ttfts: Vec<f64>,
+    pub latencies: Vec<f64>,
+    pub tokens: usize,
+    pub wall_secs: f64,
+    pub batch_sizes: Vec<f64>,
+}
+
+impl ServeMetrics {
+    pub fn record(&mut self, ttft: f64, latency: f64, tokens: usize) {
+        self.ttfts.push(ttft);
+        self.latencies.push(latency);
+        self.tokens += tokens;
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.wall_secs.max(1e-9)
+    }
+
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        mean(&self.batch_sizes)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} tokens={} throughput={:.1} tok/s \
+             ttft p50={:.0}ms p95={:.0}ms latency p50={:.0}ms p95={:.0}ms \
+             batch_occ={:.2}",
+            self.latencies.len(),
+            self.tokens,
+            self.tokens_per_sec(),
+            1e3 * percentile(&self.ttfts, 50.0),
+            1e3 * percentile(&self.ttfts, 95.0),
+            1e3 * percentile(&self.latencies, 50.0),
+            1e3 * percentile(&self.latencies, 95.0),
+            self.mean_batch_occupancy(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let mut m = ServeMetrics::default();
+        m.record(0.1, 0.5, 10);
+        m.record(0.2, 0.6, 20);
+        m.wall_secs = 3.0;
+        assert!((m.tokens_per_sec() - 10.0).abs() < 1e-9);
+        assert!(m.summary().contains("requests=2"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Serving layer: continuous-batching decode over the compressed model.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+
+pub use engine::{ServedModel, Server};
+pub use metrics::ServeMetrics;
+pub use request::{GenParams, GenRequest, GenResponse};

@@ -1,0 +1,55 @@
+//! Request/response types for the serving engine.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct GenParams {
+    pub max_new_tokens: usize,
+    /// 0.0 = greedy
+    pub temperature: f32,
+    /// stop early when this byte is generated (e.g. b'.'), if set
+    pub stop_byte: Option<u8>,
+}
+
+impl Default for GenParams {
+    fn default() -> Self {
+        GenParams {
+            max_new_tokens: 32,
+            temperature: 0.0,
+            stop_byte: None,
+        }
+    }
+}
+
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: String,
+    pub params: GenParams,
+    pub submitted: Instant,
+    pub respond: Sender<GenResponse>,
+}
+
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    pub text: String,
+    pub tokens_generated: usize,
+    /// seconds from submit to first generated token
+    pub ttft: f64,
+    /// seconds from submit to completion
+    pub latency: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults() {
+        let p = GenParams::default();
+        assert_eq!(p.temperature, 0.0);
+        assert!(p.max_new_tokens > 0);
+        assert!(p.stop_byte.is_none());
+    }
+}

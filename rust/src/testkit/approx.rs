@@ -1,0 +1,62 @@
+//! Approximate-equality assertions for numeric tests.
+
+/// Assert elementwise |a-b| <= tol * (1 + max(|a|,|b|)) — mixed abs/rel.
+pub fn assert_close(a: &[f64], b: &[f64], tol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0 + x.abs().max(y.abs());
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "index {i}: {x} vs {y} (diff {:.3e}, tol {:.3e})",
+            (x - y).abs(),
+            tol * scale
+        );
+    }
+}
+
+/// f32 variant.
+pub fn assert_close_f32(a: &[f32], b: &[f32], tol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0 + x.abs().max(y.abs());
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "index {i}: {x} vs {y} (diff {:.3e}, tol {:.3e})",
+            (x - y).abs(),
+            tol * scale
+        );
+    }
+}
+
+/// Relative Frobenius distance ‖a−b‖/‖b‖ (slices viewed as flat vectors).
+pub fn rel_err(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        num += ((x - y) as f64).powi(2);
+        den += (y as f64).powi(2);
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn close_passes() {
+        assert_close(&[1.0, 2.0], &[1.0 + 1e-12, 2.0], 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn far_fails() {
+        assert_close(&[1.0], &[1.1], 1e-9);
+    }
+
+    #[test]
+    fn rel_err_zero_for_equal() {
+        assert_eq!(rel_err(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+    }
+}

@@ -1,0 +1,4 @@
+//! Test utilities: approximate assertions + randomized property checks.
+
+pub mod approx;
+pub mod prop;

@@ -1,0 +1,126 @@
+//! Randomized property testing (proptest is unavailable offline).
+//!
+//! `check` runs a property over `n` PCG-seeded cases; on failure it reports
+//! the failing case index and seed so the case can be replayed exactly with
+//! `check_one`. A lightweight shrink pass retries the property on smaller
+//! "size" hints to aid debugging of size-dependent failures.
+
+use crate::util::rng::Rng;
+
+/// Per-case context handed to properties: an RNG plus a size hint that
+/// grows over the run (small cases first, like proptest).
+pub struct Case {
+    pub rng: Rng,
+    pub size: usize,
+    pub index: usize,
+}
+
+impl Case {
+    /// Dimension helper in [1, size].
+    pub fn dim(&mut self, cap: usize) -> usize {
+        1 + self.rng.below(self.size.min(cap))
+    }
+}
+
+/// Run `prop` over `n` random cases. Panics with replay info on failure.
+pub fn check<F: FnMut(&mut Case)>(name: &str, n: usize, mut prop: F) {
+    let base_seed = 0xAA5Du64;
+    for index in 0..n {
+        let size = 2 + (index * 62) / n.max(1); // ramp 2..64
+        let seed = base_seed
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(index as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut case = Case {
+                rng: Rng::new(seed),
+                size,
+                index,
+            };
+            prop(&mut case);
+        }));
+        if let Err(payload) = result {
+            // shrink-lite: try the same seed with smaller sizes to find the
+            // smallest size that still fails (purely informational)
+            let mut min_fail = size;
+            for s in (1..size).rev() {
+                let again = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let mut case = Case {
+                        rng: Rng::new(seed),
+                        size: s,
+                        index,
+                    };
+                    prop(&mut case);
+                }));
+                if again.is_err() {
+                    min_fail = s;
+                } else {
+                    break;
+                }
+            }
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {index} (seed {seed:#x}, \
+                 size {size}, min failing size {min_fail}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single case (use the seed printed by a `check` failure).
+pub fn check_one<F: FnOnce(&mut Case)>(seed: u64, size: usize, prop: F) {
+    let mut case = Case {
+        rng: Rng::new(seed),
+        size,
+        index: 0,
+    };
+    prop(&mut case);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 25, |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must-fail'")]
+    fn failing_property_reports() {
+        check("must-fail", 10, |c| {
+            assert!(c.size < 5, "size grew");
+        });
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let mut sizes = Vec::new();
+        check("sizes", 20, |c| sizes.push(c.size));
+        assert!(sizes[0] <= sizes[sizes.len() - 1]);
+        assert!(*sizes.last().unwrap() >= 32);
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        check_one(42, 8, |c| {
+            for _ in 0..4 {
+                a.push(c.rng.next_u64());
+            }
+        });
+        check_one(42, 8, |c| {
+            for _ in 0..4 {
+                b.push(c.rng.next_u64());
+            }
+        });
+        assert_eq!(a, b);
+    }
+}

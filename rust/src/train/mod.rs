@@ -1,0 +1,5 @@
+//! Pretraining driver (produces the base models the paper compresses).
+
+pub mod pretrain;
+
+pub use pretrain::{load_or_pretrain, pretrain, PretrainOptions, PretrainResult};

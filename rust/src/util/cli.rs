@@ -1,0 +1,168 @@
+//! Tiny command-line parser (the offline build has no clap).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and free
+//! positional arguments. Every binary in this repo parses through here so
+//! `--help` output stays consistent.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    /// (name, default, help) — recorded by the typed getters for --help.
+    described: std::cell::RefCell<Vec<(String, String, String)>>,
+    program: String,
+    about: String,
+}
+
+impl Args {
+    pub fn parse_env(about: &str) -> Args {
+        let argv: Vec<String> = std::env::args().collect();
+        Self::parse(&argv, about)
+    }
+
+    pub fn parse(argv: &[String], about: &str) -> Args {
+        let mut a = Args {
+            program: argv.first().cloned().unwrap_or_default(),
+            about: about.to_string(),
+            ..Default::default()
+        };
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.flags.insert(rest.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.bools.push(rest.to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    fn describe(&self, name: &str, default: &str, help: &str) {
+        self.described.borrow_mut().push((
+            name.to_string(),
+            default.to_string(),
+            help.to_string(),
+        ));
+    }
+
+    pub fn str(&self, name: &str, default: &str, help: &str) -> String {
+        self.describe(name, default, help);
+        self.flags
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize(&self, name: &str, default: usize, help: &str) -> usize {
+        self.describe(name, &default.to_string(), help);
+        self.flags
+            .get(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64, help: &str) -> f64 {
+        self.describe(name, &default.to_string(), help);
+        self.flags
+            .get(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str, help: &str) -> bool {
+        self.describe(name, "false", help);
+        self.bools.iter().any(|b| b == name)
+            || self
+                .flags
+                .get(name)
+                .map(|v| v == "true" || v == "1")
+                .unwrap_or(false)
+    }
+
+    /// Comma-separated list flag.
+    pub fn list(&self, name: &str, default: &str, help: &str) -> Vec<String> {
+        let raw = self.str(name, default, help);
+        if raw.is_empty() {
+            Vec::new()
+        } else {
+            raw.split(',').map(|s| s.trim().to_string()).collect()
+        }
+    }
+
+    /// Print --help and exit if requested. Call after all getters ran once.
+    pub fn finish_or_help(&self) {
+        if self.bools.iter().any(|b| b == "help") {
+            eprintln!("{}\n\n{}\n\nflags:", self.program, self.about);
+            for (name, default, help) in self.described.borrow().iter() {
+                eprintln!("  --{name:<20} {help} (default: {default})");
+            }
+            std::process::exit(0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        std::iter::once("prog".to_string())
+            .chain(s.split_whitespace().map(String::from))
+            .collect()
+    }
+
+    #[test]
+    fn parses_kv_pairs() {
+        let a = Args::parse(&argv("--model base --ratio=0.6 run"), "");
+        assert_eq!(a.str("model", "tiny", ""), "base");
+        assert_eq!(a.f64("ratio", 1.0, ""), 0.6);
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = Args::parse(&argv("--verbose --steps 10"), "");
+        assert!(a.flag("verbose", ""));
+        assert!(!a.flag("quiet", ""));
+        assert_eq!(a.usize("steps", 1, ""), 10);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv(""), "");
+        assert_eq!(a.str("model", "tiny", ""), "tiny");
+        assert_eq!(a.usize("n", 7, ""), 7);
+        assert_eq!(a.f64("lr", 0.1, ""), 0.1);
+    }
+
+    #[test]
+    fn list_flag_splits() {
+        let a = Args::parse(&argv("--ratios 0.8,0.6,0.4"), "");
+        assert_eq!(a.list("ratios", "", ""), vec!["0.8", "0.6", "0.4"]);
+    }
+
+    #[test]
+    fn trailing_bool_flag() {
+        let a = Args::parse(&argv("--steps 5 --fast"), "");
+        assert_eq!(a.usize("steps", 0, ""), 5);
+        assert!(a.flag("fast", ""));
+    }
+}

@@ -1,0 +1,184 @@
+//! Binary tensor archive: the on-disk format for model weights, optimizer
+//! state and cached activations ("`.aat`" — AA-SVD tensors).
+//!
+//! Layout (little-endian):
+//!   magic  b"AAT1"
+//!   u32    n_tensors
+//!   per tensor:
+//!     u32        name_len, name bytes (utf-8)
+//!     u32        n_dims,  u64 dims[n_dims]
+//!     u64        data_len (f32 count), f32 data[data_len]
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { dims, data }
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Tensor {
+        let n = dims.iter().product();
+        Tensor {
+            dims,
+            data: vec![0.0; n],
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TensorArchive {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl TensorArchive {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.get(name)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(b"AAT1");
+        buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, t) in &self.tensors {
+            buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(name.as_bytes());
+            buf.extend_from_slice(&(t.dims.len() as u32).to_le_bytes());
+            for &d in &t.dims {
+                buf.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            buf.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
+            for &x in &t.data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        let tmp = path.as_ref().with_extension("tmp");
+        std::fs::File::create(&tmp)
+            .and_then(|mut f| f.write_all(&buf))
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path.as_ref())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<TensorArchive> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?
+            .read_to_end(&mut buf)?;
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > buf.len() {
+                bail!("truncated tensor archive");
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 4)? != b"AAT1" {
+            bail!("bad magic: not a tensor archive");
+        }
+        let n_tensors = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+        let mut arch = TensorArchive::new();
+        for _ in 0..n_tensors {
+            let name_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+            let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())?;
+            let n_dims = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+            let mut dims = Vec::with_capacity(n_dims);
+            for _ in 0..n_dims {
+                dims.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into()?) as usize);
+            }
+            let len = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?) as usize;
+            let bytes = take(&mut pos, len * 4)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            if dims.iter().product::<usize>() != data.len() {
+                bail!("tensor '{name}' dims/data mismatch");
+            }
+            arch.tensors.insert(name, Tensor { dims, data });
+        }
+        Ok(arch)
+    }
+}
+
+/// Write a string to a file, creating parent directories.
+pub fn write_text(path: impl AsRef<Path>, text: &str) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path.as_ref(), text)
+        .with_context(|| format!("writing {}", path.as_ref().display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("aasvd-io-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn archive_roundtrip() {
+        let mut a = TensorArchive::new();
+        a.insert("w", Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        a.insert("b", Tensor::new(vec![4], vec![0.5; 4]));
+        let p = tmpfile("roundtrip.aat");
+        a.save(&p).unwrap();
+        let b = TensorArchive::load(&p).unwrap();
+        assert_eq!(a.tensors, b.tensors);
+    }
+
+    #[test]
+    fn empty_archive_roundtrip() {
+        let a = TensorArchive::new();
+        let p = tmpfile("empty.aat");
+        a.save(&p).unwrap();
+        assert_eq!(TensorArchive::load(&p).unwrap().tensors.len(), 0);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmpfile("garbage.aat");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(TensorArchive::load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut a = TensorArchive::new();
+        a.insert("w", Tensor::new(vec![8], vec![1.0; 8]));
+        let p = tmpfile("trunc.aat");
+        a.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 5]).unwrap();
+        assert!(TensorArchive::load(&p).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_dims_must_match_data() {
+        Tensor::new(vec![2, 2], vec![1.0; 3]);
+    }
+}

@@ -1,0 +1,83 @@
+//! Leveled, timestamped logger. `AASVD_LOG=debug|info|warn|quiet`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+#[derive(Clone, Copy, PartialEq, PartialOrd)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Quiet = 3,
+}
+
+fn level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l != 255 {
+        return l;
+    }
+    let from_env = match std::env::var("AASVD_LOG").as_deref() {
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        Ok("quiet") => Level::Quiet,
+        _ => Level::Info,
+    } as u8;
+    LEVEL.store(from_env, Ordering::Relaxed);
+    from_env
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn elapsed() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+pub fn log(l: Level, msg: &str) {
+    if (l as u8) >= level() && l != Level::Quiet {
+        let tag = match l {
+            Level::Debug => "DBG",
+            Level::Info => "INF",
+            Level::Warn => "WRN",
+            Level::Quiet => return,
+        };
+        eprintln!("[{:9.2}s {tag}] {msg}", elapsed());
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, &format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Info < Level::Warn);
+    }
+
+    #[test]
+    fn elapsed_monotone() {
+        let a = elapsed();
+        let b = elapsed();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,12 @@
+//! Shared substrates: CLI parsing, JSON, RNG, logging, stats, threads, IO.
+//!
+//! The offline environment vendors only the `xla` crate's dependency tree,
+//! so the conveniences normally pulled from clap/serde/rand/rayon live here.
+
+pub mod cli;
+pub mod io;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,296 @@
+//! Integration: the pure-Rust reference transformer must match the AOT HLO
+//! artifacts executed through PJRT — this pins down every numeric
+//! convention (RoPE interleave, norm eps, mask value, layout order) across
+//! the Rust/JAX boundary.
+//!
+//! Requires `make artifacts` (tiny config). Tests no-op if artifacts are
+//! missing so `cargo test` stays green on a fresh checkout.
+
+use aasvd::model::forward::{block_forward, model_forward, model_nll};
+use aasvd::model::init::init_params;
+use aasvd::model::lowrank::{block_lr_forward, concat_factors, exact_factors};
+use aasvd::model::Config;
+use aasvd::runtime::{Engine, Value};
+use aasvd::testkit::approx::rel_err;
+use aasvd::util::rng::Rng;
+
+fn engine() -> Option<Engine> {
+    Engine::new("artifacts").ok().filter(|e| e.entry("tiny").is_ok())
+}
+
+fn tiny() -> Config {
+    Config::builtin("tiny").unwrap()
+}
+
+#[test]
+fn model_fwd_artifact_matches_reference() {
+    let Some(eng) = engine() else { return };
+    let cfg = tiny();
+    let params = init_params(&cfg, &mut Rng::new(42));
+    let (b, t) = (cfg.batch, cfg.seq);
+    let mut rng = Rng::new(7);
+    let tokens: Vec<u32> = (0..b * t).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let tokens_i32: Vec<i32> = tokens.iter().map(|&x| x as i32).collect();
+
+    let out = eng
+        .run(
+            "tiny",
+            "model_fwd",
+            &[Value::F32(&params.data), Value::I32(&tokens_i32)],
+        )
+        .unwrap();
+    let reference = model_forward(&cfg, &params, &tokens, t);
+    let err = rel_err(&out[0].f32, &reference);
+    assert!(err < 2e-2, "model_fwd rel err {err}");
+}
+
+#[test]
+fn model_nll_artifact_matches_reference() {
+    let Some(eng) = engine() else { return };
+    let cfg = tiny();
+    let params = init_params(&cfg, &mut Rng::new(43));
+    let (b, t) = (cfg.batch, cfg.seq);
+    let mut rng = Rng::new(8);
+    let tokens: Vec<u32> = (0..b * t).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let targets: Vec<u32> = (0..b * t).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let ti: Vec<i32> = tokens.iter().map(|&x| x as i32).collect();
+    let yi: Vec<i32> = targets.iter().map(|&x| x as i32).collect();
+
+    let out = eng
+        .run(
+            "tiny",
+            "model_nll",
+            &[Value::F32(&params.data), Value::I32(&ti), Value::I32(&yi)],
+        )
+        .unwrap();
+    let reference = model_nll(&cfg, &params, &tokens, &targets, t);
+    let err = rel_err(&out[0].f32, &reference);
+    assert!(err < 2e-4, "model_nll rel err {err}");
+}
+
+#[test]
+fn block_collect_artifact_matches_reference_taps() {
+    let Some(eng) = engine() else { return };
+    let cfg = tiny();
+    let params = init_params(&cfg, &mut Rng::new(44));
+    let entry = eng.entry("tiny").unwrap();
+    // pack block 1's params into the bare-name block layout
+    let bl = entry.block_param_layout.clone();
+    let mut bp = vec![0f32; bl.total];
+    for e in &bl.entries {
+        let src = params.view(&format!("blocks.1.{}", e.name));
+        let size: usize = e.shape.iter().product();
+        bp[e.offset..e.offset + size].copy_from_slice(src);
+    }
+    let (b, t) = (cfg.batch, cfg.seq);
+    let mut rng = Rng::new(9);
+    let x: Vec<f32> = (0..b * t * cfg.d_model).map(|_| rng.normal() * 0.5).collect();
+
+    let out = eng
+        .run("tiny", "block_collect", &[Value::F32(&bp), Value::F32(&x)])
+        .unwrap();
+    assert_eq!(out.len(), 5);
+    let taps = block_forward(&cfg, &params, "blocks.1.", &x, t);
+    for (got, want, name) in [
+        (&out[0].f32, &taps.y, "y"),
+        (&out[1].f32, &taps.a_in, "a_in"),
+        (&out[2].f32, &taps.o_in, "o_in"),
+        (&out[3].f32, &taps.m_in, "m_in"),
+        (&out[4].f32, &taps.d_in, "d_in"),
+    ] {
+        // tolerance note: with random init the attention output (o_in) is
+        // near zero-mean (softmax ≈ uniform), so f32 accumulation noise is
+        // large *relative* to its norm. A convention mismatch (RoPE order,
+        // mask, eps) produces rel err ≈ O(1), far above this bound.
+        let err = rel_err(got, want);
+        assert!(err < 5e-2, "{name} rel err {err}");
+    }
+}
+
+#[test]
+fn block_lr_artifact_matches_reference() {
+    let Some(eng) = engine() else { return };
+    let cfg = tiny();
+    let params = init_params(&cfg, &mut Rng::new(45));
+    let bf = exact_factors(&cfg, &params, 0);
+    let (b, t) = (cfg.batch, cfg.seq);
+    let mut rng = Rng::new(10);
+    let x: Vec<f32> = (0..b * t * cfg.d_model).map(|_| rng.normal() * 0.5).collect();
+
+    let out = eng
+        .run(
+            "tiny",
+            "block_lr_fwd",
+            &[
+                Value::F32(&bf.factors.data),
+                Value::F32(&bf.masks.data),
+                Value::F32(&x),
+            ],
+        )
+        .unwrap();
+    let reference = block_lr_forward(&cfg, &bf, &x, t);
+    let err = rel_err(&out[0].f32, &reference.y);
+    assert!(err < 2e-3, "block_lr_fwd rel err {err}");
+}
+
+#[test]
+fn model_lr_nll_artifact_matches_reference() {
+    let Some(eng) = engine() else { return };
+    let cfg = tiny();
+    let params = init_params(&cfg, &mut Rng::new(46));
+    let blocks: Vec<_> = (0..cfg.n_layers)
+        .map(|i| exact_factors(&cfg, &params, i))
+        .collect();
+    let (fs, ms) = concat_factors(&blocks);
+    let (b, t) = (cfg.batch, cfg.seq);
+    let mut rng = Rng::new(11);
+    let tokens: Vec<u32> = (0..b * t).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let targets: Vec<u32> = (0..b * t).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let ti: Vec<i32> = tokens.iter().map(|&x| x as i32).collect();
+    let yi: Vec<i32> = targets.iter().map(|&x| x as i32).collect();
+
+    let out = eng
+        .run(
+            "tiny",
+            "model_lr_nll",
+            &[
+                Value::F32(&params.data),
+                Value::F32(&fs),
+                Value::F32(&ms),
+                Value::I32(&ti),
+                Value::I32(&yi),
+            ],
+        )
+        .unwrap();
+    // with exact full-rank factors, the compressed model IS the dense model
+    let reference = model_nll(&cfg, &params, &tokens, &targets, t);
+    let err = rel_err(&out[0].f32, &reference);
+    assert!(err < 5e-4, "model_lr_nll rel err {err}");
+}
+
+#[test]
+fn refine_step_artifact_decreases_loss() {
+    let Some(eng) = engine() else { return };
+    let cfg = tiny();
+    let entry = eng.entry("tiny").unwrap();
+    let fsize = entry.factor_layout.total;
+    let msize = entry.mask_layout.total;
+    let mut rng = Rng::new(47);
+    let mut train: Vec<f32> = (0..fsize).map(|_| rng.normal() * 0.05).collect();
+    let mut m = vec![0f32; fsize];
+    let mut v = vec![0f32; fsize];
+    let masks = vec![1f32; msize];
+    let (br, t, d) = (cfg.refine_batch, cfg.seq, cfg.d_model);
+    let x: Vec<f32> = (0..br * t * d).map(|_| rng.normal() * 0.5).collect();
+    let y: Vec<f32> = (0..br * t * d).map(|_| rng.normal() * 0.1).collect();
+
+    let mut losses = Vec::new();
+    for step in 0..20 {
+        let out = eng
+            .run(
+                "tiny",
+                "refine_step",
+                &[
+                    Value::F32(&train),
+                    Value::F32(&m),
+                    Value::F32(&v),
+                    Value::ScalarI32(step),
+                    Value::ScalarF32(1e-2),
+                    Value::F32(&masks),
+                    Value::F32(&x),
+                    Value::F32(&y),
+                ],
+            )
+            .unwrap();
+        train = out[0].f32.clone();
+        m = out[1].f32.clone();
+        v = out[2].f32.clone();
+        losses.push(out[3].f32[0]);
+    }
+    assert!(
+        losses[19] < losses[0] * 0.8,
+        "refine losses: {:?} -> {:?}",
+        losses[0],
+        losses[19]
+    );
+}
+
+#[test]
+fn train_step_artifact_decreases_loss() {
+    let Some(eng) = engine() else { return };
+    let cfg = tiny();
+    let params = init_params(&cfg, &mut Rng::new(48));
+    let mut p = params.data.clone();
+    let n = p.len();
+    let mut m = vec![0f32; n];
+    let mut v = vec![0f32; n];
+    let mut rng = Rng::new(12);
+    let (tb, t) = (cfg.train_batch, cfg.seq);
+    let tokens: Vec<i32> = (0..tb * t).map(|_| rng.below(cfg.vocab) as i32).collect();
+    let targets: Vec<i32> = tokens
+        .iter()
+        .map(|&x| ((x as usize + 1) % cfg.vocab) as i32)
+        .collect();
+    let mut losses = Vec::new();
+    for step in 0..15 {
+        let out = eng
+            .run(
+                "tiny",
+                "train_step",
+                &[
+                    Value::F32(&p),
+                    Value::F32(&m),
+                    Value::F32(&v),
+                    Value::ScalarI32(step),
+                    Value::ScalarF32(3e-3),
+                    Value::I32(&tokens),
+                    Value::I32(&targets),
+                ],
+            )
+            .unwrap();
+        p = out[0].f32.clone();
+        m = out[1].f32.clone();
+        v = out[2].f32.clone();
+        losses.push(out[3].f32[0]);
+    }
+    assert!(losses[14] < losses[0], "losses {losses:?}");
+}
+
+#[test]
+fn pallas_lowrank_apply_matches_rust() {
+    let Some(eng) = engine() else { return };
+    let cfg = tiny();
+    let entry = eng.entry("tiny").unwrap();
+    let spec = entry.artifact("lowrank_apply").unwrap().clone();
+    let (d, kq) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let l = spec.inputs[2].shape[0];
+    assert_eq!(d, cfg.d_model);
+    let mut rng = Rng::new(13);
+    let u: Vec<f32> = (0..d * kq).map(|_| rng.normal()).collect();
+    let v: Vec<f32> = (0..d * kq).map(|_| rng.normal()).collect();
+    let x: Vec<f32> = (0..l * d).map(|_| rng.normal()).collect();
+    let out = eng
+        .run(
+            "tiny",
+            "lowrank_apply",
+            &[Value::F32(&u), Value::F32(&v), Value::F32(&x)],
+        )
+        .unwrap();
+    // reference: y = (x V) U^T
+    let mut want = vec![0f32; l * d];
+    for r in 0..l {
+        let xr = &x[r * d..(r + 1) * d];
+        let mut z = vec![0f32; kq];
+        for i in 0..d {
+            for p in 0..kq {
+                z[p] += xr[i] * v[i * kq + p];
+            }
+        }
+        for mrow in 0..d {
+            let urow = &u[mrow * kq..(mrow + 1) * kq];
+            want[r * d + mrow] = z.iter().zip(urow).map(|(a, b)| a * b).sum();
+        }
+    }
+    let err = rel_err(&out[0].f32, &want);
+    assert!(err < 5e-4, "pallas lowrank rel err {err}");
+}
