@@ -17,7 +17,7 @@ use aasvd::compress::Method;
 use aasvd::data::Domain;
 use aasvd::eval::{display_ppl, Table};
 use aasvd::experiments::{eval_compressed_method, eval_dense, setup, Knobs};
-use aasvd::serve::{GenParams, ServedModel, Server};
+use aasvd::serve::{GenParams, ServedModel, Server, ServerOptions};
 use aasvd::util::cli::Args;
 use aasvd::util::json::Json;
 use anyhow::Result;
@@ -83,27 +83,37 @@ fn main() -> Result<()> {
 
     // ---- 4. serve the compressed model ------------------------------------
     let blocks = best_blocks.expect("aa_svd@0.6 blocks");
-    let server = Server::start(
+    // closed loop submits every request up front: size the admission
+    // queue to the request count so none are shed
+    let server = Server::start_with(
         "artifacts".into(),
         ctx.cfg.clone(),
         ServedModel::Compressed(ctx.params.clone(), blocks),
+        ServerOptions {
+            max_queue: n_requests.max(1),
+            ..Default::default()
+        },
     );
     let prompts = aasvd::serve::batcher::bench_prompts(n_requests, 7);
-    let receivers: Vec<_> = prompts
+    let completions: Vec<_> = prompts
         .iter()
         .map(|p| {
-            server.submit(
-                p,
-                GenParams {
-                    max_new_tokens: 24,
-                    temperature: 0.0,
-                    stop_byte: None,
-                },
-            )
+            server
+                .submit(
+                    p,
+                    GenParams {
+                        max_new_tokens: 24,
+                        temperature: 0.0,
+                        ..Default::default()
+                    },
+                )
+                .map_err(|e| anyhow::anyhow!("submit failed: {e}"))
         })
-        .collect();
-    for (i, rx) in receivers.into_iter().enumerate() {
-        let resp = rx.recv()?;
+        .collect::<Result<_>>()?;
+    for (i, completion) in completions.into_iter().enumerate() {
+        let resp = completion
+            .wait()
+            .map_err(|e| anyhow::anyhow!("request lost: {e}"))?;
         if i < 3 {
             println!("[serve] '{}' -> '{}'", prompts[i], resp.text.trim_end());
         }

@@ -1,38 +1,57 @@
 //! Serving example: load (or build) a compressed model and serve a Poisson
 //! arrival stream of generation requests through the continuous-batching
-//! engine, reporting tail latency and throughput vs the dense model.
+//! engine, reporting tail latency, throughput, queue pressure and shed
+//! load vs the dense model.
+//!
+//! Demonstrates the full client surface: bounded admission (`Overloaded`
+//! submissions are dropped, mirroring a load-shedding frontend), streaming
+//! `Completion` handles, per-request deadlines and stop sequences.
 
 use aasvd::compress::{compress_model, Method};
-use aasvd::serve::batcher::{bench_prompts, poisson_arrivals};
-use aasvd::serve::{GenParams, ServedModel, Server};
 use aasvd::experiments::{setup, Knobs};
+use aasvd::serve::batcher::{bench_prompts, poisson_arrivals};
+use aasvd::serve::{
+    GenParams, ServedModel, Server, ServerOptions, SubmitError, WaitError,
+};
 use aasvd::util::cli::Args;
 use anyhow::Result;
 use std::time::{Duration, Instant};
 
-fn drive(server: &Server, n: usize, rate: f64) -> Result<aasvd::serve::ServeMetrics> {
+fn drive(server: &Server, n: usize, rate: f64) -> Result<()> {
     let prompts = bench_prompts(n, 11);
     let arrivals = poisson_arrivals(n, rate, 13);
     let start = Instant::now();
-    let mut receivers = Vec::new();
+    let mut completions = Vec::new();
+    let mut shed = 0usize;
     for (p, &at) in prompts.iter().zip(&arrivals) {
         let now = start.elapsed().as_secs_f64();
         if at > now {
             std::thread::sleep(Duration::from_secs_f64(at - now));
         }
-        receivers.push(server.submit(
-            p,
-            GenParams {
-                max_new_tokens: 16,
-                temperature: 0.8,
-                stop_byte: Some(b'.'),
-            },
-        ));
+        let params = GenParams {
+            max_new_tokens: 16,
+            temperature: 0.8,
+            top_k: Some(32),
+            stop_sequences: vec![".".into()],
+            deadline: Some(Duration::from_secs(30)),
+            ..Default::default()
+        };
+        match server.submit(p, params) {
+            Ok(c) => completions.push(c),
+            Err(SubmitError::Overloaded) => shed += 1, // counted in metrics too
+            Err(e) => anyhow::bail!("submit failed: {e}"),
+        }
     }
-    for rx in receivers {
-        rx.recv()?;
+    for c in completions {
+        match c.wait() {
+            Ok(_) | Err(WaitError::Cancelled(_)) => {}
+            Err(e) => anyhow::bail!("request lost: {e}"),
+        }
     }
-    Ok(aasvd::serve::ServeMetrics::default()) // final metrics via shutdown
+    if shed > 0 {
+        println!("  shed {shed}/{n} requests at admission");
+    }
+    Ok(())
 }
 
 fn main() -> Result<()> {
@@ -41,6 +60,7 @@ fn main() -> Result<()> {
     let n = args.usize("requests", 40, "number of requests");
     let rate = args.f64("rate", 8.0, "arrival rate (req/s)");
     let ratio = args.f64("ratio", 0.6, "compression ratio");
+    let max_queue = args.usize("max-queue", 32, "admission queue bound");
     args.finish_or_help();
 
     let ctx = setup(&knobs)?;
@@ -61,7 +81,15 @@ fn main() -> Result<()> {
             ServedModel::Compressed(ctx.params.clone(), cm.blocks.clone()),
         ),
     ] {
-        let server = Server::start("artifacts".into(), ctx.cfg.clone(), model);
+        let server = Server::start_with(
+            "artifacts".into(),
+            ctx.cfg.clone(),
+            model,
+            ServerOptions {
+                max_queue,
+                ..Default::default()
+            },
+        );
         drive(&server, n, rate)?;
         let metrics = server.shutdown();
         println!("[{label}] {}", metrics.summary());

@@ -53,21 +53,23 @@ fn main() {
             || {
                 let server =
                     Server::start("artifacts".into(), cfg.clone(), make_model());
-                let rxs: Vec<_> = prompts
+                let completions: Vec<_> = prompts
                     .iter()
                     .map(|p| {
-                        server.submit(
-                            p,
-                            GenParams {
-                                max_new_tokens: 8,
-                                temperature: 0.0,
-                                stop_byte: None,
-                            },
-                        )
+                        server
+                            .submit(
+                                p,
+                                GenParams {
+                                    max_new_tokens: 8,
+                                    temperature: 0.0,
+                                    ..Default::default()
+                                },
+                            )
+                            .expect("closed loop stays under max_queue")
                     })
                     .collect();
-                for rx in rxs {
-                    rx.recv().unwrap();
+                for c in completions {
+                    c.wait().unwrap();
                 }
                 let m = server.shutdown();
                 std::hint::black_box(m);

@@ -26,112 +26,146 @@ use crate::runtime::{Engine, Value};
 use anyhow::Result;
 use std::time::Instant;
 
-/// A named compression method (one table row).
+/// A named compression method (one table row). Knobs are private: build
+/// one with a named constructor or [`Method::builder`].
 #[derive(Clone, Debug)]
 pub struct Method {
     pub name: String,
-    pub objective: Objective,
+    objective: Objective,
     /// use ASVD-style diagonal scaling instead of the full whitening solve
-    pub asvd_diag: bool,
-    pub scheme: RankScheme,
-    pub quant: bool,
-    pub refine: Option<RefineOptions>,
+    asvd_diag: bool,
+    scheme: RankScheme,
+    quant: bool,
+    refine: Option<RefineOptions>,
+}
+
+/// Fluent constructor for [`Method`]; new knobs get a defaulted builder
+/// setter instead of breaking every call site.
+#[derive(Clone, Debug)]
+pub struct MethodBuilder {
+    method: Method,
+}
+
+impl MethodBuilder {
+    pub fn objective(mut self, objective: Objective) -> Self {
+        self.method.objective = objective;
+        self
+    }
+
+    /// ASVD-style diagonal scaling instead of the full whitening solve.
+    pub fn asvd_diag(mut self) -> Self {
+        self.method.asvd_diag = true;
+        self
+    }
+
+    pub fn scheme(mut self, scheme: RankScheme) -> Self {
+        self.method.scheme = scheme;
+        self
+    }
+
+    /// int8-quantize the factors after the solve.
+    pub fn quant(mut self) -> Self {
+        self.method.quant = true;
+        self
+    }
+
+    /// block-level local refinement after the layer-wise solves.
+    pub fn refine(mut self, options: RefineOptions) -> Self {
+        self.method.refine = Some(options);
+        self
+    }
+
+    pub fn build(self) -> Method {
+        self.method
+    }
 }
 
 impl Method {
-    pub fn naive_svd() -> Method {
-        Method {
-            name: "naive_svd".into(),
-            objective: Objective::InputAgnostic,
-            asvd_diag: false,
-            scheme: RankScheme::Standard,
-            quant: false,
-            refine: None,
+    /// Start from the input-agnostic / standard-scheme baseline.
+    pub fn builder(name: impl Into<String>) -> MethodBuilder {
+        MethodBuilder {
+            method: Method {
+                name: name.into(),
+                objective: Objective::InputAgnostic,
+                asvd_diag: false,
+                scheme: RankScheme::Standard,
+                quant: false,
+                refine: None,
+            },
         }
+    }
+
+    pub fn objective(&self) -> Objective {
+        self.objective
+    }
+
+    pub fn asvd_diag(&self) -> bool {
+        self.asvd_diag
+    }
+
+    pub fn scheme(&self) -> RankScheme {
+        self.scheme
+    }
+
+    pub fn quantized(&self) -> bool {
+        self.quant
+    }
+
+    pub fn refine_options(&self) -> Option<&RefineOptions> {
+        self.refine.as_ref()
+    }
+
+    pub fn naive_svd() -> Method {
+        Method::builder("naive_svd").build()
     }
 
     pub fn asvd() -> Method {
-        Method {
-            name: "asvd".into(),
-            objective: Objective::InputAware,
-            asvd_diag: true,
-            scheme: RankScheme::Standard,
-            quant: false,
-            refine: None,
-        }
+        Method::builder("asvd").objective(Objective::InputAware).asvd_diag().build()
     }
 
     pub fn svd_llm() -> Method {
-        Method {
-            name: "svd_llm".into(),
-            objective: Objective::InputAware,
-            asvd_diag: false,
-            scheme: RankScheme::Standard,
-            quant: false,
-            refine: None,
-        }
+        Method::builder("svd_llm").objective(Objective::InputAware).build()
     }
 
     /// Dobi-SVD-like: shift-aware objective (+remap/quant in `dobi_q`).
     pub fn dobi() -> Method {
-        Method {
-            name: "dobi".into(),
-            objective: Objective::ShiftAware,
-            asvd_diag: false,
-            scheme: RankScheme::Standard,
-            quant: false,
-            refine: None,
-        }
+        Method::builder("dobi").objective(Objective::ShiftAware).build()
     }
 
     pub fn dobi_q() -> Method {
-        Method {
-            name: "dobi_q".into(),
-            objective: Objective::ShiftAware,
-            scheme: RankScheme::Remap,
-            quant: true,
-            asvd_diag: false,
-            refine: None,
-        }
+        Method::builder("dobi_q")
+            .objective(Objective::ShiftAware)
+            .scheme(RankScheme::Remap)
+            .quant()
+            .build()
     }
 
     /// AA-SVD: input-aware init + block-level refinement (paper §4.3 pairing).
     pub fn aa_svd(refine: RefineOptions) -> Method {
-        Method {
-            name: "aa_svd".into(),
-            objective: Objective::InputAware,
-            asvd_diag: false,
-            scheme: RankScheme::Standard,
-            quant: false,
-            refine: Some(refine),
-        }
+        Method::builder("aa_svd").objective(Objective::InputAware).refine(refine).build()
     }
 
     /// AA-SVDᵠ: remapped ranks + int8 factors + refinement.
     pub fn aa_svd_q(refine: RefineOptions) -> Method {
-        Method {
-            name: "aa_svd_q".into(),
-            objective: Objective::InputAware,
-            asvd_diag: false,
-            scheme: RankScheme::Remap,
-            quant: true,
-            refine: Some(refine),
-        }
+        Method::builder("aa_svd_q")
+            .objective(Objective::InputAware)
+            .scheme(RankScheme::Remap)
+            .quant()
+            .refine(refine)
+            .build()
     }
 
     /// Ablation constructor: any objective × refinement (Table 5 rows).
     pub fn ablation(objective: Objective, refine: Option<RefineOptions>) -> Method {
-        Method {
-            name: format!(
-                "{}{}",
-                objective.name(),
-                if refine.is_some() { "+refine" } else { "" }
-            ),
-            objective,
-            asvd_diag: false,
-            scheme: RankScheme::Standard,
-            quant: false,
-            refine,
+        let name = format!(
+            "{}{}",
+            objective.name(),
+            if refine.is_some() { "+refine" } else { "" }
+        );
+        let builder = Method::builder(name).objective(objective);
+        match refine {
+            Some(options) => builder.refine(options).build(),
+            None => builder.build(),
         }
     }
 
@@ -469,9 +503,30 @@ mod tests {
         assert!(!Method::svd_llm().needs_shift());
         assert!(Method::dobi().needs_shift());
         assert!(Method::aa_svd(RefineOptions::default()).needs_shift());
-        assert_eq!(Method::naive_svd().objective, Objective::InputAgnostic);
-        assert_eq!(Method::aa_svd_q(RefineOptions::default()).scheme, RankScheme::Remap);
-        assert!(Method::aa_svd_q(RefineOptions::default()).quant);
+        assert_eq!(Method::naive_svd().objective(), Objective::InputAgnostic);
+        assert_eq!(Method::aa_svd_q(RefineOptions::default()).scheme(), RankScheme::Remap);
+        assert!(Method::aa_svd_q(RefineOptions::default()).quantized());
+    }
+
+    #[test]
+    fn builder_composes_knobs() {
+        let m = Method::builder("custom")
+            .objective(Objective::Anchored)
+            .scheme(RankScheme::Remap)
+            .quant()
+            .refine(RefineOptions::default())
+            .build();
+        assert_eq!(m.name, "custom");
+        assert_eq!(m.objective(), Objective::Anchored);
+        assert_eq!(m.scheme(), RankScheme::Remap);
+        assert!(m.quantized());
+        assert!(m.refine_options().is_some());
+        assert!(!m.asvd_diag());
+        assert!(m.needs_shift());
+        // baseline builder matches the plainest named constructor
+        let n = Method::builder("naive_svd").build();
+        assert_eq!(n.objective(), Method::naive_svd().objective());
+        assert!(!n.needs_shift());
     }
 
     #[test]

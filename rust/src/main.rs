@@ -14,9 +14,10 @@ use aasvd::experiments::{setup, Knobs};
 use aasvd::model::lowrank::{load_blocks, save_blocks};
 use aasvd::refine::RefineOptions;
 use aasvd::runtime::Engine;
-use aasvd::serve::{GenParams, ServedModel, Server};
+use aasvd::serve::{Event, GenParams, ServedModel, Server};
 use aasvd::util::cli::Args;
 use anyhow::{bail, Result};
+use std::io::Write;
 
 fn main() -> Result<()> {
     let args = Args::parse_env(
@@ -177,23 +178,40 @@ fn cmd_generate(args: &Args) -> Result<()> {
         ServedModel::Compressed(ctx.params.clone(), load_blocks(&ctx.cfg, &compressed)?)
     };
     let server = Server::start("artifacts".into(), ctx.cfg.clone(), model);
-    let resp = server
+    let completion = server
         .submit(
             &prompt,
             GenParams {
                 max_new_tokens: max_new,
                 temperature: temp,
-                stop_byte: None,
+                ..Default::default()
             },
         )
-        .recv()?;
-    println!("{prompt}│{}", resp.text);
+        .map_err(|e| anyhow::anyhow!("submit failed: {e}"))?;
+    print!("{prompt}│");
+    std::io::stdout().flush()?;
+    let resp = loop {
+        match completion.next_event() {
+            Some(Event::Token(t)) => {
+                print!("{}", t.ch);
+                std::io::stdout().flush()?;
+            }
+            Some(Event::Done(resp)) => break resp,
+            Some(Event::Cancelled { reason, .. }) => {
+                println!();
+                bail!("request retired: {reason}");
+            }
+            None => bail!("serve worker went away mid-request"),
+        }
+    };
+    println!();
     println!(
         "[{} tokens, ttft {:.0} ms, total {:.0} ms]",
         resp.tokens_generated,
         resp.ttft * 1e3,
         resp.latency * 1e3
     );
+    drop(completion);
     server.shutdown();
     Ok(())
 }

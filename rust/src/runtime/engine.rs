@@ -217,6 +217,22 @@ impl Engine {
             .collect()
     }
 
+    /// `run`, taking the artifact's first output by value — forward
+    /// plumbing for hot paths (serving backends) that stream one tensor
+    /// out per step and should not clone it.
+    pub fn run_first(
+        &self,
+        config: &str,
+        artifact: &str,
+        inputs: &[Value],
+    ) -> Result<HostTensor> {
+        let mut out = self.run(config, artifact, inputs)?;
+        if out.is_empty() {
+            bail!("{config}/{artifact}: artifact declares no outputs");
+        }
+        Ok(out.swap_remove(0))
+    }
+
     pub fn stats_snapshot(&self) -> EngineStats {
         self.stats.borrow().clone()
     }

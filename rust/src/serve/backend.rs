@@ -1,0 +1,222 @@
+//! Model backends: the decode loop's view of "a thing that turns a packed
+//! token batch into logits".
+//!
+//! The serving engine is generic over [`ModelBackend`], so dense, low-rank
+//! compressed, and future quantized/sharded models all slot in without the
+//! decode loop knowing the difference. PJRT-backed backends are constructed
+//! *on the serve worker thread* (the PJRT client is not Sync) via the
+//! factory passed to `Server::with_backend`; [`ServedModel::into_backend`]
+//! is that factory for the two built-in model kinds.
+//!
+//! [`SyntheticBackend`] is an artifact-free stand-in for tests and load
+//! experiments: deterministic logits, optional simulated per-step latency.
+
+use crate::model::lowrank::{concat_factors, BlockFactors};
+use crate::model::{Config, FlatStore};
+use crate::runtime::{Engine, Value};
+use anyhow::Result;
+use std::time::Duration;
+
+/// A forward-pass provider for the continuous-batching decode loop.
+pub trait ModelBackend {
+    /// Name of the compiled artifact (or pseudo-artifact) this backend
+    /// decodes through; used for logs and metrics labels.
+    fn artifact(&self) -> &'static str;
+
+    /// Forward a packed `[batch, seq]` i32 token batch; returns flat
+    /// logits of length `batch * seq * vocab`.
+    fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
+}
+
+/// What the server is serving (the two built-in backend kinds).
+pub enum ServedModel {
+    Dense(FlatStore),
+    Compressed(FlatStore, Vec<BlockFactors>),
+}
+
+impl ServedModel {
+    /// Artifact the model decodes through.
+    pub fn artifact(&self) -> &'static str {
+        match self {
+            ServedModel::Dense(_) => "model_fwd",
+            ServedModel::Compressed(..) => "model_lr_fwd",
+        }
+    }
+
+    /// Build the PJRT-backed backend for this model. Must run on the serve
+    /// worker thread: compiling artifacts creates the PJRT client, which is
+    /// not Sync.
+    pub fn into_backend(
+        self,
+        artifact_dir: &str,
+        cfg: &Config,
+    ) -> Result<Box<dyn ModelBackend>> {
+        Ok(match self {
+            ServedModel::Dense(params) => {
+                Box::new(DenseBackend::new(artifact_dir, cfg.clone(), params)?)
+            }
+            ServedModel::Compressed(params, blocks) => Box::new(CompressedBackend::new(
+                artifact_dir,
+                cfg.clone(),
+                params,
+                &blocks,
+            )?),
+        })
+    }
+}
+
+/// Dense model through the `model_fwd` artifact.
+pub struct DenseBackend {
+    engine: Engine,
+    cfg: Config,
+    params: FlatStore,
+}
+
+impl DenseBackend {
+    pub fn new(artifact_dir: &str, cfg: Config, params: FlatStore) -> Result<DenseBackend> {
+        let engine = Engine::new(artifact_dir)?;
+        engine.warmup(&cfg.name, &["model_fwd"])?;
+        Ok(DenseBackend { engine, cfg, params })
+    }
+}
+
+impl ModelBackend for DenseBackend {
+    fn artifact(&self) -> &'static str {
+        "model_fwd"
+    }
+
+    fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let out = self.engine.run_first(
+            &self.cfg.name,
+            "model_fwd",
+            &[Value::F32(&self.params.data), Value::I32(tokens)],
+        )?;
+        Ok(out.f32)
+    }
+}
+
+/// Low-rank compressed model through the `model_lr_fwd` artifact; the
+/// per-block factors are concatenated once at construction.
+pub struct CompressedBackend {
+    engine: Engine,
+    cfg: Config,
+    params: FlatStore,
+    factors: Vec<f32>,
+    masks: Vec<f32>,
+}
+
+impl CompressedBackend {
+    pub fn new(
+        artifact_dir: &str,
+        cfg: Config,
+        params: FlatStore,
+        blocks: &[BlockFactors],
+    ) -> Result<CompressedBackend> {
+        let engine = Engine::new(artifact_dir)?;
+        engine.warmup(&cfg.name, &["model_lr_fwd"])?;
+        let (factors, masks) = concat_factors(blocks);
+        Ok(CompressedBackend {
+            engine,
+            cfg,
+            params,
+            factors,
+            masks,
+        })
+    }
+}
+
+impl ModelBackend for CompressedBackend {
+    fn artifact(&self) -> &'static str {
+        "model_lr_fwd"
+    }
+
+    fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let out = self.engine.run_first(
+            &self.cfg.name,
+            "model_lr_fwd",
+            &[
+                Value::F32(&self.params.data),
+                Value::F32(&self.factors),
+                Value::F32(&self.masks),
+                Value::I32(tokens),
+            ],
+        )?;
+        Ok(out.f32)
+    }
+}
+
+/// Artifact-free backend for tests and load experiments: at every position
+/// the logits deterministically favor `(prev_token + 1) % vocab`, so greedy
+/// decoding of prompt "a" yields "bcde…". `step_delay` emulates model
+/// latency per forward call.
+pub struct SyntheticBackend {
+    cfg: Config,
+    step_delay: Duration,
+}
+
+impl SyntheticBackend {
+    pub fn new(cfg: Config) -> SyntheticBackend {
+        SyntheticBackend {
+            cfg,
+            step_delay: Duration::ZERO,
+        }
+    }
+
+    pub fn with_delay(cfg: Config, step_delay: Duration) -> SyntheticBackend {
+        SyntheticBackend { cfg, step_delay }
+    }
+}
+
+impl ModelBackend for SyntheticBackend {
+    fn artifact(&self) -> &'static str {
+        "synthetic"
+    }
+
+    fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        if !self.step_delay.is_zero() {
+            std::thread::sleep(self.step_delay);
+        }
+        let (b, t, v) = (self.cfg.batch, self.cfg.seq, self.cfg.vocab);
+        anyhow::ensure!(tokens.len() == b * t, "synthetic backend: bad batch shape");
+        let mut logits = vec![0f32; b * t * v];
+        for pos in 0..b * t {
+            let prev = tokens[pos].rem_euclid(v as i32) as usize;
+            logits[pos * v + (prev + 1) % v] = 8.0;
+        }
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_favors_successor_byte() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let (b, t, v) = (cfg.batch, cfg.seq, cfg.vocab);
+        let mut be = SyntheticBackend::new(cfg);
+        let mut tokens = vec![b' ' as i32; b * t];
+        tokens[0] = b'a' as i32;
+        let logits = be.forward(&tokens).unwrap();
+        let row = &logits[..v];
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(argmax, b'b' as usize);
+    }
+
+    #[test]
+    fn served_model_artifact_names() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = crate::model::init::init_params(&cfg, &mut crate::util::rng::Rng::new(1));
+        assert_eq!(ServedModel::Dense(params.clone()).artifact(), "model_fwd");
+        assert_eq!(
+            ServedModel::Compressed(params, Vec::new()).artifact(),
+            "model_lr_fwd"
+        );
+    }
+}

@@ -51,4 +51,45 @@ mod tests {
         assert_eq!(a, b);
         assert!(a.iter().all(|p| !p.is_empty()));
     }
+
+    #[test]
+    fn arrivals_monotone_at_every_rate() {
+        for rate in [0.5, 4.0, 100.0] {
+            let a = poisson_arrivals(500, rate, 17);
+            assert!(a.iter().all(|&t| t > 0.0), "rate {rate}");
+            assert!(
+                a.windows(2).all(|w| w[0] <= w[1]),
+                "non-monotone schedule at rate {rate}"
+            );
+        }
+    }
+
+    #[test]
+    fn empirical_rate_tracks_requested_rate() {
+        for rate in [2.0, 25.0, 80.0] {
+            let n = 5000;
+            let a = poisson_arrivals(n, rate, 23);
+            let empirical = n as f64 / a.last().unwrap();
+            let rel = (empirical - rate).abs() / rate;
+            // exponential inter-arrivals: mean gap estimate has stderr
+            // 1/sqrt(n) ≈ 1.4%; 6% is a > 4-sigma bound
+            assert!(rel < 0.06, "rate {rate}: empirical {empirical} (rel {rel})");
+        }
+    }
+
+    #[test]
+    fn arrivals_differ_across_seeds() {
+        let a = poisson_arrivals(50, 10.0, 1);
+        let b = poisson_arrivals(50, 10.0, 2);
+        assert_ne!(a, b);
+        // same seed reproduces exactly
+        assert_eq!(a, poisson_arrivals(50, 10.0, 1));
+    }
+
+    #[test]
+    fn prompts_differ_across_seeds() {
+        let a = bench_prompts(20, 3);
+        let b = bench_prompts(20, 4);
+        assert_ne!(a, b);
+    }
 }

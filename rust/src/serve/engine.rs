@@ -1,81 +1,323 @@
-//! Serving engine: a worker thread owning the PJRT engine runs a
-//! continuous-batching decode loop; callers submit prompts over a channel
-//! and receive completions asynchronously.
+//! Serving engine: a worker thread owning a [`ModelBackend`] runs a
+//! continuous-batching decode loop; clients submit prompts through a
+//! bounded admission queue and observe each request through a streaming,
+//! cancellable [`Completion`] handle.
 //!
 //! Decode strategy: windowed re-forward. Each iteration packs every active
 //! request's most recent ≤T tokens into one [B, T] batch, runs the
-//! model(-lr)_fwd artifact, samples one token per request from the logits
-//! at its own length position, and admits/retires requests between
+//! backend's forward artifact, samples one token per request from the
+//! logits at its own length position, and admits/retires requests between
 //! iterations (vLLM-style continuous batching at sequence granularity —
 //! the batch never drains to refill). KV caching through the PJRT boundary
 //! would round-trip the full cache per step through host literals, which
 //! measures slower than re-forward at these model sizes; see DESIGN.md.
+//!
+//! Request lifecycle:
+//!   submit → (queued) → admitted → Token* → Done
+//!                     ↘ Overloaded (queue full, never blocks)
+//!            any point ↘ Cancelled (client cancel / dropped handle /
+//!                                   deadline) — the slot is retired at the
+//!                                   next decode iteration
 
+use super::backend::{ModelBackend, ServedModel};
 use super::metrics::ServeMetrics;
-use super::request::{GenParams, GenRequest, GenResponse};
-use crate::model::lowrank::{concat_factors, BlockFactors};
-use crate::model::{Config, FlatStore};
-use crate::runtime::{Engine, Value};
+use super::request::{
+    CancelReason, Event, GenParams, GenRequest, GenResponse, SubmitError, TokenEvent,
+};
+use crate::model::Config;
 use crate::util::rng::Rng;
 use anyhow::Result;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// What the server is serving.
-pub enum ServedModel {
-    Dense(FlatStore),
-    Compressed(FlatStore, Vec<BlockFactors>),
+/// Server tuning knobs (admission control + batching).
+#[derive(Clone, Debug)]
+pub struct ServerOptions {
+    /// Admission-queue capacity (clamped to ≥ 1). `submit` returns
+    /// `Err(SubmitError::Overloaded)` instead of blocking when full.
+    pub max_queue: usize,
+    /// Max concurrent decode slots; 0 = the artifact batch dimension
+    /// (`cfg.batch`), which is also the hard upper bound.
+    pub max_batch: usize,
+    /// How long the worker blocks waiting for a request when idle.
+    pub poll_interval: Duration,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions {
+            max_queue: 64,
+            max_batch: 0,
+            poll_interval: Duration::from_millis(20),
+        }
+    }
+}
+
+/// Admission state shared between client handles and the worker. The
+/// queue bound is enforced on `queue_depth` (submitted but not yet
+/// seated in a decode slot), not on the channel, so the worker can pull
+/// queued requests into its own deque and deadline-sweep them while all
+/// slots are busy.
+struct Shared {
+    queue_depth: AtomicUsize,
+    rejected: AtomicUsize,
+    max_queue: usize,
+}
+
+/// A streaming, cancellable handle to one submitted request.
+///
+/// Events arrive in order: zero or more `Event::Token`, then exactly one
+/// terminal `Event::Done` or `Event::Cancelled`. Dropping the handle
+/// cancels the request; its decode slot is retired at the next iteration.
+pub struct Completion {
+    id: u64,
+    events: Receiver<Event>,
+    cancelled: Arc<AtomicBool>,
+    /// a terminal event has been consumed through this handle
+    finished: Cell<bool>,
+}
+
+/// Why `Completion::wait` did not return a response.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WaitError {
+    /// the request was retired before completing
+    Cancelled(CancelReason),
+    /// the server went away without sending a terminal event
+    Disconnected,
+    /// `wait_timeout` gave up before a terminal event arrived
+    TimedOut,
+}
+
+impl std::fmt::Display for WaitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WaitError::Cancelled(r) => write!(f, "request {r}"),
+            WaitError::Disconnected => write!(f, "server disconnected mid-request"),
+            WaitError::TimedOut => write!(f, "timed out waiting for the request"),
+        }
+    }
+}
+
+impl std::error::Error for WaitError {}
+
+impl Completion {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Ask the server to retire this request; the slot frees at the next
+    /// decode iteration and a terminal `Event::Cancelled` is delivered.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    fn note(&self, event: &Event) {
+        if matches!(event, Event::Done(_) | Event::Cancelled { .. }) {
+            self.finished.set(true);
+        }
+    }
+
+    /// Blocking: the next lifecycle event, or None once the terminal event
+    /// has been consumed (or the server is gone).
+    pub fn next_event(&self) -> Option<Event> {
+        let event = self.events.recv().ok()?;
+        self.note(&event);
+        Some(event)
+    }
+
+    /// Non-blocking variant of `next_event`: `Ok(None)` means no event is
+    /// ready *yet* (or the stream already ended normally);
+    /// `Err(Disconnected)` means the server died without a terminal event,
+    /// so polling again is pointless.
+    pub fn try_next_event(&self) -> Result<Option<Event>, WaitError> {
+        match self.events.try_recv() {
+            Ok(event) => {
+                self.note(&event);
+                Ok(Some(event))
+            }
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) if self.finished.get() => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(WaitError::Disconnected),
+        }
+    }
+
+    /// Drain events until the terminal one; discards intermediate tokens
+    /// (they are all present in `GenResponse::text`).
+    pub fn wait(self) -> Result<GenResponse, WaitError> {
+        loop {
+            match self.events.recv() {
+                Ok(Event::Token(_)) => continue,
+                Ok(Event::Done(resp)) => return Ok(resp),
+                Ok(Event::Cancelled { reason, .. }) => return Err(WaitError::Cancelled(reason)),
+                Err(_) => return Err(WaitError::Disconnected),
+            }
+        }
+    }
+
+    /// `wait` bounded by an overall timeout (the request is *not* cancelled
+    /// on timeout — drop or `.cancel()` the handle for that).
+    pub fn wait_timeout(self, timeout: Duration) -> Result<GenResponse, WaitError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            match self.events.recv_timeout(remaining) {
+                Ok(Event::Token(_)) => continue,
+                Ok(Event::Done(resp)) => return Ok(resp),
+                Ok(Event::Cancelled { reason, .. }) => return Err(WaitError::Cancelled(reason)),
+                Err(RecvTimeoutError::Timeout) => return Err(WaitError::TimedOut),
+                Err(RecvTimeoutError::Disconnected) => return Err(WaitError::Disconnected),
+            }
+        }
+    }
+}
+
+impl Drop for Completion {
+    fn drop(&mut self) {
+        // dropping the handle cancels the request (no-op if already done)
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
 }
 
 pub struct Server {
     tx: Option<Sender<GenRequest>>,
     next_id: AtomicU64,
+    shared: Arc<Shared>,
     worker: Option<std::thread::JoinHandle<ServeMetrics>>,
 }
 
-struct Slot {
-    req: GenRequest,
-    tokens: Vec<i32>,
-    prompt_len: usize,
-    ttft: Option<f64>,
-}
-
 impl Server {
-    /// Start the worker. `artifact_dir` is compiled inside the worker
-    /// thread (the PJRT client is not Sync).
+    /// Start a server over a built-in model kind with default options.
+    /// `artifact_dir` is compiled inside the worker thread (the PJRT
+    /// client is not Sync).
     pub fn start(artifact_dir: String, cfg: Config, model: ServedModel) -> Server {
+        Server::start_with(artifact_dir, cfg, model, ServerOptions::default())
+    }
+
+    /// `start` with explicit admission/batching options.
+    pub fn start_with(
+        artifact_dir: String,
+        cfg: Config,
+        model: ServedModel,
+        options: ServerOptions,
+    ) -> Server {
+        let backend_cfg = cfg.clone();
+        Server::with_backend(cfg, options, move || {
+            model.into_backend(&artifact_dir, &backend_cfg)
+        })
+    }
+
+    /// Start a server over any [`ModelBackend`]. The factory runs on the
+    /// worker thread, so the backend itself does not need to be `Send`.
+    pub fn with_backend<F>(cfg: Config, options: ServerOptions, make_backend: F) -> Server
+    where
+        F: FnOnce() -> Result<Box<dyn ModelBackend>> + Send + 'static,
+    {
         let (tx, rx) = channel::<GenRequest>();
+        let shared = Arc::new(Shared {
+            queue_depth: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+            max_queue: options.max_queue.max(1),
+        });
+        let worker_shared = shared.clone();
         let worker = std::thread::Builder::new()
             .name("aasvd-serve".into())
-            .spawn(move || decode_loop(&artifact_dir, &cfg, &model, rx).unwrap())
+            .spawn(move || {
+                // on failure: keep the metrics recorded so far and exit,
+                // dropping rx so later submits see ShutDown and pending
+                // completions see Disconnected — no panic cascading into
+                // shutdown()'s join
+                let mut metrics = ServeMetrics::default();
+                match make_backend() {
+                    Ok(mut backend) => {
+                        if let Err(e) = decode_loop(
+                            &cfg,
+                            &options,
+                            backend.as_mut(),
+                            &rx,
+                            &worker_shared,
+                            &mut metrics,
+                        ) {
+                            crate::log_warn!("serve decode loop failed: {e:#}");
+                        }
+                    }
+                    Err(e) => crate::log_warn!("serve backend init failed: {e:#}"),
+                }
+                // release reservations of requests this worker will never
+                // seat, so a dead server reports ShutDown, not Overloaded
+                worker_shared.queue_depth.store(0, Ordering::Relaxed);
+                metrics.rejected = worker_shared.rejected.load(Ordering::Relaxed);
+                metrics
+            })
             .expect("spawn serve worker");
         Server {
             tx: Some(tx),
             next_id: AtomicU64::new(1),
+            shared,
             worker: Some(worker),
         }
     }
 
-    /// Submit a prompt; returns a receiver for the completion.
-    pub fn submit(&self, prompt: &str, params: GenParams) -> Receiver<GenResponse> {
-        let (resp_tx, resp_rx) = channel();
+    /// Submit a prompt. Returns a streaming `Completion` handle, or
+    /// `Err(Overloaded)` immediately when the admission queue is full —
+    /// submission never blocks on the decode loop.
+    pub fn submit(&self, prompt: &str, params: GenParams) -> Result<Completion, SubmitError> {
+        let tx = self.tx.as_ref().ok_or(SubmitError::ShutDown)?;
+        // reserve a queue slot atomically (the bound lives on the counter,
+        // not the channel); the worker releases it when the request seats
+        // in a decode slot or is retired while queued
+        let reserved = self
+            .shared
+            .queue_depth
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |depth| {
+                (depth < self.shared.max_queue).then_some(depth + 1)
+            })
+            .is_ok();
+        if !reserved {
+            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Overloaded);
+        }
+        let (event_tx, event_rx) = channel();
+        let cancelled = Arc::new(AtomicBool::new(false));
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = GenRequest {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            id,
             prompt: prompt.to_string(),
             params,
             submitted: Instant::now(),
-            respond: resp_tx,
+            events: event_tx,
+            cancelled: cancelled.clone(),
         };
-        self.tx
-            .as_ref()
-            .expect("server shut down")
-            .send(req)
-            .expect("serve worker gone");
-        resp_rx
+        match tx.send(req) {
+            Ok(()) => Ok(Completion {
+                id,
+                events: event_rx,
+                cancelled,
+                finished: Cell::new(false),
+            }),
+            Err(_) => {
+                // saturating release: a dying worker zeroes the counter, and
+                // losing the race to it must not wrap the depth to usize::MAX
+                let _ = self.shared.queue_depth.fetch_update(
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                    |depth| depth.checked_sub(1),
+                );
+                Err(SubmitError::ShutDown)
+            }
+        }
     }
 
-    /// Close the queue, drain in-flight requests, collect final metrics.
+    /// Requests submitted but not yet seated in a decode slot.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// Close the queue, drain queued + in-flight requests, collect final
+    /// metrics.
     pub fn shutdown(mut self) -> ServeMetrics {
         self.tx.take(); // disconnect: worker drains and exits
         let worker = self.worker.take().unwrap();
@@ -92,55 +334,171 @@ impl Drop for Server {
     }
 }
 
+struct Slot {
+    req: GenRequest,
+    rng: Rng,
+    tokens: Vec<i32>,
+    prompt_len: usize,
+    /// generated text so far (byte tokens widened to chars)
+    gen_text: String,
+    ttft: Option<f64>,
+}
+
+fn new_slot(req: GenRequest) -> Slot {
+    let tokens: Vec<i32> = req.prompt.bytes().map(|x| x as i32).collect();
+    let tokens = if tokens.is_empty() {
+        vec![b' ' as i32]
+    } else {
+        tokens
+    };
+    let seed = req.params.seed.unwrap_or(0xd00d_5eed ^ req.id);
+    Slot {
+        prompt_len: tokens.len(),
+        tokens,
+        rng: Rng::new(seed),
+        gen_text: String::new(),
+        req,
+        ttft: None,
+    }
+}
+
+/// The reason a live request should be retired early, if any.
+fn cancel_reason(req: &GenRequest) -> Option<CancelReason> {
+    if req.cancelled.load(Ordering::Relaxed) {
+        return Some(CancelReason::Client);
+    }
+    if let Some(deadline) = req.params.deadline {
+        if req.submitted.elapsed() > deadline {
+            return Some(CancelReason::Deadline);
+        }
+    }
+    None
+}
+
+fn retire_cancelled(req: GenRequest, reason: CancelReason, metrics: &mut ServeMetrics) {
+    metrics.cancelled += 1;
+    if reason == CancelReason::Deadline {
+        metrics.deadline_expired += 1;
+    }
+    // the client may have dropped its handle already; delivery best-effort
+    let _ = req.events.send(Event::Cancelled {
+        id: req.id,
+        reason,
+    });
+}
+
 fn decode_loop(
-    artifact_dir: &str,
     cfg: &Config,
-    model: &ServedModel,
-    rx: Receiver<GenRequest>,
-) -> Result<ServeMetrics> {
-    let engine = Engine::new(artifact_dir)?;
+    options: &ServerOptions,
+    backend: &mut dyn ModelBackend,
+    rx: &Receiver<GenRequest>,
+    shared: &Shared,
+    metrics: &mut ServeMetrics,
+) -> Result<()> {
     let (b, t, vocab) = (cfg.batch, cfg.seq, cfg.vocab);
-    let artifact = match model {
-        ServedModel::Dense(_) => "model_fwd",
-        ServedModel::Compressed(..) => "model_lr_fwd",
+    let max_batch = if options.max_batch == 0 {
+        b
+    } else {
+        options.max_batch.min(b)
     };
-    engine.warmup(&cfg.name, &[artifact])?;
-    let precomputed = match model {
-        ServedModel::Dense(_) => None,
-        ServedModel::Compressed(_, blocks) => Some(concat_factors(blocks)),
-    };
+    crate::log_debug!(
+        "serve: decoding '{}' via '{}' (max_batch {max_batch}, max_queue {})",
+        cfg.name,
+        backend.artifact(),
+        shared.max_queue,
+    );
 
     let mut slots: Vec<Slot> = Vec::new();
-    let mut metrics = ServeMetrics::default();
-    let mut rng = Rng::new(0xd00d);
+    // the worker-owned view of the admission queue: pulled eagerly from the
+    // channel so queued requests can be cancel/deadline-swept every
+    // iteration even while all decode slots are busy
+    let mut pending: VecDeque<GenRequest> = VecDeque::new();
     let mut queue_open = true;
+    // wall-clock window for throughput: decode only, excluding backend
+    // construction/warmup (which happened before this call)
     let start = Instant::now();
 
-    while queue_open || !slots.is_empty() {
-        // admit
-        while slots.len() < b {
+    while queue_open || !slots.is_empty() || !pending.is_empty() {
+        // pull everything submitted so far
+        loop {
             match rx.try_recv() {
-                Ok(req) => slots.push(new_slot(req)),
-                Err(std::sync::mpsc::TryRecvError::Empty) => break,
-                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                Ok(req) => pending.push_back(req),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
                     queue_open = false;
                     break;
                 }
             }
         }
+
+        // sweep the queue: client cancels and expired deadlines must not
+        // wait for a free decode slot
+        let mut i = 0;
+        while i < pending.len() {
+            match cancel_reason(&pending[i]) {
+                Some(reason) => {
+                    let req = pending.remove(i).expect("index in bounds");
+                    shared.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                    retire_cancelled(req, reason, metrics);
+                }
+                None => i += 1,
+            }
+        }
+
+        // admit into free decode slots (FIFO); nothing-to-generate
+        // requests complete immediately without spending a slot
+        while slots.len() < max_batch {
+            let Some(req) = pending.pop_front() else { break };
+            shared.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            if req.params.max_new_tokens == 0 {
+                let latency = req.submitted.elapsed().as_secs_f64();
+                // no token is emitted, so contribute no TTFT sample
+                metrics.latencies.push(latency);
+                let _ = req.events.send(Event::Done(GenResponse {
+                    id: req.id,
+                    text: String::new(),
+                    tokens_generated: 0,
+                    ttft: latency,
+                    latency,
+                }));
+                continue;
+            }
+            slots.push(new_slot(req));
+        }
+
         if slots.is_empty() {
-            if !queue_open {
+            if !queue_open && pending.is_empty() {
                 break;
             }
             // idle: block briefly for the next request
-            match rx.recv_timeout(Duration::from_millis(20)) {
-                Ok(req) => slots.push(new_slot(req)),
-                Err(RecvTimeoutError::Timeout) => continue,
+            match rx.recv_timeout(options.poll_interval) {
+                Ok(req) => pending.push_back(req),
+                Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => queue_open = false,
             }
             continue;
         }
+
+        // retire cancelled / past-deadline slots before spending a forward
+        // pass on them — this is where a dropped Completion frees its slot
+        let mut row = 0;
+        while row < slots.len() {
+            match cancel_reason(&slots[row].req) {
+                Some(reason) => {
+                    let slot = slots.swap_remove(row);
+                    retire_cancelled(slot.req, reason, metrics);
+                }
+                None => row += 1,
+            }
+        }
+        if slots.is_empty() {
+            continue;
+        }
+
         metrics.batch_sizes.push(slots.len() as f64);
+        metrics
+            .queue_depths
+            .push(shared.queue_depth.load(Ordering::Relaxed) as f64);
 
         // pack the batch: window = last min(len, t) tokens, end-padded
         let mut tokens = vec![b' ' as i32; b * t];
@@ -155,43 +513,47 @@ fn decode_loop(
             read_pos[row] = window.len() - 1;
         }
 
-        let logits = match (model, &precomputed) {
-            (ServedModel::Dense(params), _) => engine.run(
-                &cfg.name,
-                "model_fwd",
-                &[Value::F32(&params.data), Value::I32(&tokens)],
-            )?,
-            (ServedModel::Compressed(params, _), Some((fs, ms))) => engine.run(
-                &cfg.name,
-                "model_lr_fwd",
-                &[
-                    Value::F32(&params.data),
-                    Value::F32(fs),
-                    Value::F32(ms),
-                    Value::I32(&tokens),
-                ],
-            )?,
-            _ => unreachable!(),
+        let logits = match backend.forward(&tokens) {
+            Ok(logits) => logits,
+            Err(e) => {
+                metrics.wall_secs = start.elapsed().as_secs_f64();
+                return Err(e);
+            }
         };
 
-        // sample + retire
+        // sample, stream, retire
         let mut done: Vec<usize> = Vec::new();
         for (row, slot) in slots.iter_mut().enumerate() {
             let base = (row * t + read_pos[row]) * vocab;
-            let row_logits = &logits[0].f32[base..base + vocab];
-            let next = rng.sample_logits(row_logits, slot.req.params.temperature) as i32;
+            let row_logits = &logits[base..base + vocab];
+            let params = &slot.req.params;
+            let next = slot
+                .rng
+                .sample_logits_topk(row_logits, params.temperature, params.top_k)
+                as i32;
             slot.tokens.push(next);
+            let ch = next as u8 as char;
+            slot.gen_text.push(ch);
+            let index = slot.tokens.len() - slot.prompt_len - 1;
+
+            // first-token emission defines TTFT
+            let at = slot.req.submitted.elapsed().as_secs_f64();
             if slot.ttft.is_none() {
-                slot.ttft = Some(slot.req.submitted.elapsed().as_secs_f64());
+                slot.ttft = Some(at);
             }
-            let generated = slot.tokens.len() - slot.prompt_len;
-            let stopped = slot
-                .req
-                .params
-                .stop_byte
-                .map(|s| next == s as i32)
-                .unwrap_or(false);
-            if generated >= slot.req.params.max_new_tokens || stopped {
+            let _ = slot.req.events.send(Event::Token(TokenEvent {
+                id: slot.req.id,
+                index,
+                ch,
+                at,
+            }));
+
+            let generated = index + 1;
+            let stopped = params
+                .stop_sequences
+                .iter()
+                .any(|s| !s.is_empty() && slot.gen_text.ends_with(s.as_str()));
+            if generated >= params.max_new_tokens || stopped {
                 done.push(row);
             }
         }
@@ -199,43 +561,26 @@ fn decode_loop(
             let slot = slots.swap_remove(row);
             let latency = slot.req.submitted.elapsed().as_secs_f64();
             let gen_tokens = slot.tokens.len() - slot.prompt_len;
-            let text: String = slot.tokens[slot.prompt_len..]
-                .iter()
-                .map(|&x| x as u8 as char)
-                .collect();
-            metrics.record(slot.ttft.unwrap_or(latency), latency, gen_tokens);
-            let _ = slot.req.respond.send(GenResponse {
+            let ttft = slot.ttft.unwrap_or(latency);
+            metrics.record(ttft, latency, gen_tokens);
+            let _ = slot.req.events.send(Event::Done(GenResponse {
                 id: slot.req.id,
-                text,
+                text: slot.gen_text,
                 tokens_generated: gen_tokens,
-                ttft: slot.ttft.unwrap_or(latency),
+                ttft,
                 latency,
-            });
+            }));
         }
     }
     metrics.wall_secs = start.elapsed().as_secs_f64();
-    Ok(metrics)
-}
-
-fn new_slot(req: GenRequest) -> Slot {
-    let tokens: Vec<i32> = req.prompt.bytes().map(|x| x as i32).collect();
-    let tokens = if tokens.is_empty() {
-        vec![b' ' as i32]
-    } else {
-        tokens
-    };
-    Slot {
-        prompt_len: tokens.len(),
-        tokens,
-        req,
-        ttft: None,
-    }
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::model::init::init_params;
+    use crate::runtime::Engine;
 
     #[test]
     fn serves_batched_requests_end_to_end() {
@@ -252,20 +597,22 @@ mod tests {
             cfg.clone(),
             ServedModel::Dense(params),
         );
-        let receivers: Vec<_> = (0..6)
+        let completions: Vec<_> = (0..6)
             .map(|i| {
-                server.submit(
-                    &format!("the cat {i}"),
-                    GenParams {
-                        max_new_tokens: 5,
-                        ..Default::default()
-                    },
-                )
+                server
+                    .submit(
+                        &format!("the cat {i}"),
+                        GenParams {
+                            max_new_tokens: 5,
+                            ..Default::default()
+                        },
+                    )
+                    .expect("queue has room")
             })
             .collect();
         let mut total = 0;
-        for rx in receivers {
-            let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        for c in completions {
+            let resp = c.wait_timeout(Duration::from_secs(60)).unwrap();
             assert_eq!(resp.tokens_generated, 5);
             // text is chars-from-bytes; high bytes widen to 2 utf-8 bytes
             assert_eq!(resp.text.chars().count(), 5);
@@ -296,11 +643,19 @@ mod tests {
         let p = GenParams {
             max_new_tokens: 8,
             temperature: 0.0,
-            stop_byte: None,
+            ..Default::default()
         };
-        let a = server.submit("hello", p.clone()).recv().unwrap();
-        let b = server.submit("hello", p).recv().unwrap();
+        let a = server.submit("hello", p.clone()).unwrap().wait().unwrap();
+        let b = server.submit("hello", p).unwrap().wait().unwrap();
         assert_eq!(a.text, b.text);
         server.shutdown();
+    }
+
+    #[test]
+    fn options_default_bounds() {
+        let o = ServerOptions::default();
+        assert!(o.max_queue >= 1);
+        assert_eq!(o.max_batch, 0); // = artifact batch dim
+        assert!(o.poll_interval > Duration::ZERO);
     }
 }

@@ -1,4 +1,8 @@
-//! Serving metrics: latency percentiles + throughput.
+//! Serving metrics: latency percentiles, throughput, queue pressure and
+//! request-lifecycle counters.
+//!
+//! TTFT is recorded at true first-token *emission* (the moment the
+//! `Event::Token` is sent), not at request completion.
 
 use crate::util::stats::{mean, percentile};
 
@@ -9,6 +13,15 @@ pub struct ServeMetrics {
     pub tokens: usize,
     pub wall_secs: f64,
     pub batch_sizes: Vec<f64>,
+    /// admission-queue depth sampled once per decode iteration
+    pub queue_depths: Vec<f64>,
+    /// submissions refused with `SubmitError::Overloaded`
+    pub rejected: usize,
+    /// requests retired before completion (client cancel, dropped handle,
+    /// or deadline)
+    pub cancelled: usize,
+    /// subset of `cancelled` retired because their deadline expired
+    pub deadline_expired: usize,
 }
 
 impl ServeMetrics {
@@ -26,19 +39,45 @@ impl ServeMetrics {
         mean(&self.batch_sizes)
     }
 
+    pub fn mean_queue_depth(&self) -> f64 {
+        mean(&self.queue_depths)
+    }
+
     pub fn summary(&self) -> String {
+        // with zero completed requests every latency statistic is
+        // meaningless — print n/a rather than 0ms (or NaN)
+        let ms = |xs: &[f64], q: f64| -> String {
+            if xs.is_empty() {
+                "n/a".into()
+            } else {
+                format!("{:.0}ms", 1e3 * percentile(xs, q))
+            }
+        };
+        let occ = if self.batch_sizes.is_empty() {
+            "n/a".into()
+        } else {
+            format!("{:.2}", self.mean_batch_occupancy())
+        };
+        let tput = if self.latencies.is_empty() {
+            String::from("n/a")
+        } else {
+            format!("{:.1} tok/s", self.tokens_per_sec())
+        };
+        let requests = self.latencies.len();
+        let tp50 = ms(&self.ttfts, 50.0);
+        let tp95 = ms(&self.ttfts, 95.0);
+        let lp50 = ms(&self.latencies, 50.0);
+        let lp95 = ms(&self.latencies, 95.0);
+        let qm = if self.queue_depths.is_empty() {
+            String::from("n/a")
+        } else {
+            format!("{:.2}", self.mean_queue_depth())
+        };
         format!(
-            "requests={} tokens={} throughput={:.1} tok/s \
-             ttft p50={:.0}ms p95={:.0}ms latency p50={:.0}ms p95={:.0}ms \
-             batch_occ={:.2}",
-            self.latencies.len(),
-            self.tokens,
-            self.tokens_per_sec(),
-            1e3 * percentile(&self.ttfts, 50.0),
-            1e3 * percentile(&self.ttfts, 95.0),
-            1e3 * percentile(&self.latencies, 50.0),
-            1e3 * percentile(&self.latencies, 95.0),
-            self.mean_batch_occupancy(),
+            "requests={requests} rejected={} cancelled={} (deadline={}) tokens={} \
+             throughput={tput} ttft p50={tp50} p95={tp95} \
+             latency p50={lp50} p95={lp95} batch_occ={occ} queue_mean={qm}",
+            self.rejected, self.cancelled, self.deadline_expired, self.tokens,
         )
     }
 }
@@ -55,5 +94,26 @@ mod tests {
         m.wall_secs = 3.0;
         assert!((m.tokens_per_sec() - 10.0).abs() < 1e-9);
         assert!(m.summary().contains("requests=2"));
+    }
+
+    #[test]
+    fn empty_summary_prints_na_not_nan() {
+        let m = ServeMetrics::default();
+        let s = m.summary();
+        assert!(s.contains("requests=0"), "{s}");
+        assert!(s.contains("n/a"), "{s}");
+        assert!(!s.contains("NaN"), "{s}");
+    }
+
+    #[test]
+    fn lifecycle_counters_surface_in_summary() {
+        let mut m = ServeMetrics::default();
+        m.rejected = 3;
+        m.cancelled = 2;
+        m.deadline_expired = 1;
+        let s = m.summary();
+        assert!(s.contains("rejected=3"), "{s}");
+        assert!(s.contains("cancelled=2"), "{s}");
+        assert!(s.contains("deadline=1"), "{s}");
     }
 }

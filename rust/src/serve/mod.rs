@@ -1,10 +1,73 @@
-//! Serving layer: continuous-batching decode over the compressed model.
+//! Serving layer: continuous-batching decode behind a streaming,
+//! cancellable client API with admission control.
+//!
+//! # Serving API
+//!
+//! [`Server::submit`] returns a [`Completion`] handle instead of a bare
+//! channel. The handle streams [`Event`]s — `Token` per generated token,
+//! then a terminal `Done` (with the full [`GenResponse`]) or `Cancelled`.
+//!
+//! - **Streaming**: `completion.next_event()` yields tokens as they are
+//!   sampled; TTFT is measured at true first-token emission.
+//! - **Cancellation**: `completion.cancel()` — or simply dropping the
+//!   handle — retires the request's decode slot at the next iteration and
+//!   delivers `Event::Cancelled { reason: CancelReason::Client }`.
+//! - **Deadlines**: `GenParams::deadline` retires a request (queued or
+//!   decoding) once the wall-clock budget is exhausted
+//!   (`CancelReason::Deadline`).
+//! - **Backpressure**: the admission queue is bounded by
+//!   [`ServerOptions::max_queue`]; `submit` returns
+//!   `Err(SubmitError::Overloaded)` immediately instead of blocking.
+//! - **Backends**: the decode loop is generic over [`ModelBackend`] —
+//!   dense ([`DenseBackend`]), low-rank compressed
+//!   ([`CompressedBackend`]), or the artifact-free [`SyntheticBackend`]
+//!   for tests and load experiments.
+//!
+//! ```no_run
+//! use aasvd::serve::{Event, GenParams, ServedModel, Server, ServerOptions, SubmitError};
+//! # fn demo(cfg: aasvd::model::Config, params: aasvd::model::FlatStore) {
+//! let server = Server::start_with(
+//!     "artifacts".into(),
+//!     cfg,
+//!     ServedModel::Dense(params),
+//!     ServerOptions { max_queue: 32, ..Default::default() },
+//! );
+//! match server.submit("the cat", GenParams {
+//!     max_new_tokens: 16,
+//!     temperature: 0.8,
+//!     top_k: Some(40),
+//!     stop_sequences: vec![".".into()],
+//!     deadline: Some(std::time::Duration::from_secs(5)),
+//!     ..Default::default()
+//! }) {
+//!     Err(SubmitError::Overloaded) => { /* shed load */ }
+//!     Err(e) => panic!("{e}"),
+//!     Ok(completion) => {
+//!         while let Some(event) = completion.next_event() {
+//!             match event {
+//!                 Event::Token(t) => print!("{}", t.ch),
+//!                 Event::Done(resp) => println!("  [{} tok]", resp.tokens_generated),
+//!                 Event::Cancelled { reason, .. } => println!("  [{reason}]"),
+//!             }
+//!         }
+//!     }
+//! }
+//! let metrics = server.shutdown();
+//! println!("{}", metrics.summary());
+//! # }
+//! ```
 
+pub mod backend;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod request;
 
-pub use engine::{ServedModel, Server};
+pub use backend::{
+    CompressedBackend, DenseBackend, ModelBackend, ServedModel, SyntheticBackend,
+};
+pub use engine::{Completion, Server, ServerOptions, WaitError};
 pub use metrics::ServeMetrics;
-pub use request::{GenParams, GenRequest, GenResponse};
+pub use request::{
+    CancelReason, Event, GenParams, GenRequest, GenResponse, SubmitError, TokenEvent,
+};

@@ -127,6 +127,27 @@ impl Rng {
             .collect();
         self.categorical(&ws)
     }
+
+    /// `sample_logits` restricted to the `k` largest logits
+    /// (None or k >= len = unrestricted; greedy when temp <= 0).
+    /// O(len) partition, not a full sort — this runs per token on the
+    /// serving decode path.
+    pub fn sample_logits_topk(&mut self, logits: &[f32], temp: f32, k: Option<usize>) -> usize {
+        match k {
+            Some(k) if k > 0 && k < logits.len() && temp > 0.0 => {
+                let mut idx: Vec<usize> = (0..logits.len()).collect();
+                idx.select_nth_unstable_by(k - 1, |&a, &b| {
+                    logits[b]
+                        .partial_cmp(&logits[a])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                });
+                idx.truncate(k);
+                let top: Vec<f32> = idx.iter().map(|&i| logits[i]).collect();
+                idx[self.sample_logits(&top, temp)]
+            }
+            _ => self.sample_logits(logits, temp),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -209,5 +230,19 @@ mod tests {
     fn greedy_sampling_picks_argmax() {
         let mut r = Rng::new(8);
         assert_eq!(r.sample_logits(&[0.1, 2.0, -1.0], 0.0), 1);
+    }
+
+    #[test]
+    fn topk_sampling_stays_in_top_set() {
+        let mut r = Rng::new(9);
+        // indices 1 and 3 carry all the mass once k=2 keeps only them
+        let logits = [0.0f32, 5.0, 1.0, 6.0, -2.0];
+        for _ in 0..500 {
+            let i = r.sample_logits_topk(&logits, 1.0, Some(2));
+            assert!(i == 1 || i == 3, "sampled outside top-2: {i}");
+        }
+        // k = None and oversized k fall back to the full distribution
+        assert_eq!(r.sample_logits_topk(&logits, 0.0, None), 3);
+        assert_eq!(r.sample_logits_topk(&logits, 0.0, Some(100)), 3);
     }
 }

@@ -11,6 +11,7 @@ use aasvd::model::init::init_params;
 use aasvd::model::lowrank::{block_lr_forward, concat_factors, exact_factors};
 use aasvd::model::Config;
 use aasvd::runtime::{Engine, Value};
+use aasvd::serve::{Event, GenParams, ServedModel, Server};
 use aasvd::testkit::approx::rel_err;
 use aasvd::util::rng::Rng;
 
@@ -254,6 +255,52 @@ fn train_step_artifact_decreases_loss() {
         losses.push(out[3].f32[0]);
     }
     assert!(losses[14] < losses[0], "losses {losses:?}");
+}
+
+/// The serving client surface over the real PJRT backends: tokens stream
+/// before Done on both the dense and the low-rank artifact path.
+#[test]
+fn serving_streams_tokens_via_pjrt_backends() {
+    if engine().is_none() {
+        return;
+    }
+    let cfg = tiny();
+    let params = init_params(&cfg, &mut Rng::new(50));
+    let blocks: Vec<_> = (0..cfg.n_layers)
+        .map(|i| exact_factors(&cfg, &params, i))
+        .collect();
+    for model in [
+        ServedModel::Dense(params.clone()),
+        ServedModel::Compressed(params.clone(), blocks),
+    ] {
+        let server = Server::start("artifacts".into(), cfg.clone(), model);
+        let completion = server
+            .submit(
+                "the cat",
+                GenParams {
+                    max_new_tokens: 4,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        let mut tokens_seen = 0;
+        let resp = loop {
+            match completion.next_event() {
+                Some(Event::Token(t)) => {
+                    assert_eq!(t.index, tokens_seen, "stream order");
+                    tokens_seen += 1;
+                }
+                Some(Event::Done(resp)) => break resp,
+                other => panic!("unexpected event {other:?}"),
+            }
+        };
+        assert_eq!(tokens_seen, 4, "all tokens streamed before Done");
+        assert_eq!(resp.tokens_generated, 4);
+        assert!(resp.ttft <= resp.latency);
+        drop(completion);
+        let metrics = server.shutdown();
+        assert_eq!(metrics.tokens, 4);
+    }
 }
 
 #[test]

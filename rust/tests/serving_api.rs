@@ -1,0 +1,292 @@
+//! Serving client-surface lifecycle tests on the artifact-free synthetic
+//! backend: streaming order, cancellation (explicit and drop), deadlines,
+//! admission control, stop sequences and seeded sampling determinism.
+//! These run everywhere — no PJRT artifacts required.
+
+use aasvd::model::Config;
+use aasvd::serve::{
+    CancelReason, Event, GenParams, ModelBackend, Server, ServerOptions, SubmitError,
+    SyntheticBackend, WaitError,
+};
+use std::time::Duration;
+
+fn synthetic_server(options: ServerOptions, step_delay: Duration) -> Server {
+    let cfg = Config::builtin("tiny").unwrap();
+    let backend_cfg = cfg.clone();
+    Server::with_backend(cfg, options, move || {
+        Ok(Box::new(SyntheticBackend::with_delay(backend_cfg, step_delay)) as Box<dyn ModelBackend>)
+    })
+}
+
+/// Streaming: tokens arrive as individual events, in order, before Done,
+/// and the terminal response equals their concatenation.
+#[test]
+fn streams_tokens_before_done() {
+    let server = synthetic_server(ServerOptions::default(), Duration::ZERO);
+    let completion = server
+        .submit(
+            "a",
+            GenParams {
+                max_new_tokens: 4,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+
+    let mut streamed = String::new();
+    let mut next_index = 0usize;
+    let mut last_at = 0.0f64;
+    let resp = loop {
+        match completion.next_event() {
+            Some(Event::Token(t)) => {
+                assert_eq!(t.index, next_index, "tokens must stream in order");
+                assert!(t.at >= last_at, "event timestamps must be monotone");
+                next_index += 1;
+                last_at = t.at;
+                streamed.push(t.ch);
+            }
+            Some(Event::Done(resp)) => break resp,
+            other => panic!("unexpected event {other:?}"),
+        }
+    };
+    // the first Event::Token was observed before Event::Done
+    assert_eq!(next_index, 4);
+    assert_eq!(resp.tokens_generated, 4);
+    assert_eq!(resp.text, streamed);
+    // synthetic backend decodes the successor chain greedily
+    assert_eq!(resp.text, "bcde");
+    assert!(resp.ttft <= resp.latency);
+
+    let metrics = server.shutdown();
+    assert_eq!(metrics.tokens, 4);
+    assert_eq!(metrics.cancelled, 0);
+}
+
+/// Cancellation: a cancelled request gets a terminal Cancelled event, its
+/// slot frees, and later requests still complete.
+#[test]
+fn cancel_frees_slot_for_later_requests() {
+    let server = synthetic_server(
+        ServerOptions {
+            max_batch: 1,
+            ..Default::default()
+        },
+        Duration::from_millis(5),
+    );
+    let a = server
+        .submit(
+            "x",
+            GenParams {
+                max_new_tokens: 100_000,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    // wait until decoding has demonstrably started
+    match a.next_event() {
+        Some(Event::Token(_)) => {}
+        other => panic!("expected a first token, got {other:?}"),
+    }
+    a.cancel();
+    loop {
+        match a.next_event() {
+            Some(Event::Token(_)) => continue, // tokens already in flight
+            Some(Event::Cancelled { reason, .. }) => {
+                assert_eq!(reason, CancelReason::Client);
+                break;
+            }
+            other => panic!("expected cancellation, got {other:?}"),
+        }
+    }
+
+    // the slot is free again: a fresh request completes
+    let b = server
+        .submit(
+            "a",
+            GenParams {
+                max_new_tokens: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let resp = b.wait().expect("post-cancel request must complete");
+    assert_eq!(resp.tokens_generated, 3);
+
+    let metrics = server.shutdown();
+    assert_eq!(metrics.cancelled, 1);
+    assert_eq!(metrics.deadline_expired, 0);
+}
+
+/// Dropping the Completion handle cancels the request.
+#[test]
+fn dropping_handle_cancels_request() {
+    let server = synthetic_server(
+        ServerOptions {
+            max_batch: 1,
+            ..Default::default()
+        },
+        Duration::from_millis(5),
+    );
+    let a = server
+        .submit(
+            "x",
+            GenParams {
+                max_new_tokens: 100_000,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    drop(a);
+    let b = server
+        .submit(
+            "a",
+            GenParams {
+                max_new_tokens: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(b.wait().unwrap().tokens_generated, 2);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.cancelled, 1);
+}
+
+/// Backpressure: with a bounded queue and a busy decode slot, submit
+/// returns Overloaded instead of blocking, and queued work still drains.
+#[test]
+fn bounded_queue_rejects_with_overloaded() {
+    let server = synthetic_server(
+        ServerOptions {
+            max_queue: 1,
+            max_batch: 1,
+            poll_interval: Duration::from_millis(1),
+        },
+        Duration::from_millis(40),
+    );
+    // occupy the single decode slot with a long request
+    let a = server
+        .submit(
+            "x",
+            GenParams {
+                max_new_tokens: 1000,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    match a.next_event() {
+        Some(Event::Token(_)) => {} // worker is now decoding `a`
+        other => panic!("expected a first token, got {other:?}"),
+    }
+    // fill the admission queue (the worker cannot drain it: slot is busy)
+    let b = server
+        .submit(
+            "a",
+            GenParams {
+                max_new_tokens: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(server.queue_depth(), 1);
+    // queue full -> immediate, non-blocking rejection
+    let overloaded = server.submit("c", GenParams::default());
+    assert!(matches!(overloaded, Err(SubmitError::Overloaded)));
+
+    // cancel the hog; the queued request is admitted and completes
+    drop(a);
+    let resp = b.wait().expect("queued request must survive the rejection");
+    assert_eq!(resp.tokens_generated, 1);
+
+    let metrics = server.shutdown();
+    assert!(metrics.rejected >= 1, "rejections must be counted");
+    assert_eq!(metrics.cancelled, 1);
+}
+
+/// Deadlines: a request whose budget expires is retired with
+/// CancelReason::Deadline and counted separately.
+#[test]
+fn deadline_expiry_cancels_request() {
+    let server = synthetic_server(ServerOptions::default(), Duration::from_millis(15));
+    let c = server
+        .submit(
+            "x",
+            GenParams {
+                max_new_tokens: 100_000,
+                deadline: Some(Duration::from_millis(1)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    match c.wait() {
+        Err(WaitError::Cancelled(CancelReason::Deadline)) => {}
+        other => panic!("expected deadline cancellation, got {other:?}"),
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.cancelled, 1);
+    assert_eq!(metrics.deadline_expired, 1);
+}
+
+/// Stop sequences end generation as soon as the generated text ends with
+/// any of them.
+#[test]
+fn stop_sequences_end_generation() {
+    let server = synthetic_server(ServerOptions::default(), Duration::ZERO);
+    let resp = server
+        .submit(
+            "a",
+            GenParams {
+                max_new_tokens: 100,
+                stop_sequences: vec!["zz".into(), "de".into()],
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(resp.text, "bcde");
+    assert_eq!(resp.tokens_generated, 4);
+    server.shutdown();
+}
+
+/// A fixed per-request seed makes sampled decoding reproducible even when
+/// requests share a continuous batch.
+#[test]
+fn seeded_sampling_is_deterministic() {
+    let server = synthetic_server(ServerOptions::default(), Duration::ZERO);
+    let params = GenParams {
+        max_new_tokens: 12,
+        temperature: 1.0,
+        top_k: Some(8),
+        seed: Some(42),
+        ..Default::default()
+    };
+    let a = server.submit("hello", params.clone()).unwrap();
+    let b = server.submit("hello", params).unwrap();
+    let (ra, rb) = (a.wait().unwrap(), b.wait().unwrap());
+    assert_eq!(ra.text, rb.text);
+    server.shutdown();
+}
+
+/// Shutdown drains queued requests rather than dropping them.
+#[test]
+fn shutdown_drains_queued_requests() {
+    let server = synthetic_server(ServerOptions::default(), Duration::ZERO);
+    let completions: Vec<_> = (0..8)
+        .map(|_| {
+            server
+                .submit(
+                    "a",
+                    GenParams {
+                        max_new_tokens: 2,
+                        ..Default::default()
+                    },
+                )
+                .unwrap()
+        })
+        .collect();
+    let metrics = server.shutdown();
+    assert_eq!(metrics.latencies.len(), 8);
+    for c in completions {
+        assert_eq!(c.wait().unwrap().tokens_generated, 2);
+    }
+}
