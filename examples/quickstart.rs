@@ -2,10 +2,13 @@
 //! costs you — in ~40 lines of library use.
 //!
 //!   make artifacts            # once: AOT-lower the JAX/Pallas layer
-//!   cargo run --release --example quickstart
+//!   cargo run --release --example quickstart -- --threads 4
 //!
 //! Uses the `small` config so the whole thing (pretrain if no checkpoint,
-//! compress @ ratio 0.6, evaluate) runs in a few minutes on one CPU core.
+//! compress @ ratio 0.6, evaluate) runs in a few minutes. The compression
+//! math (collection, covariances, closed-form solves) scales with
+//! `--threads` (or the `AA_SVD_THREADS` env var); artifacts are identical
+//! at any worker count.
 
 use aasvd::compress::Method;
 use aasvd::data::Domain;
@@ -50,8 +53,11 @@ fn main() -> Result<()> {
         cm.allocation.ranks
     );
     println!(
-        "pipeline time: collect {:.1}s, closed-form solve {:.1}s, refine {:.1}s",
-        cm.report.secs_collect, cm.report.secs_solve, cm.report.secs_refine
+        "pipeline time on {} threads: collect {:.1}s, closed-form solve {:.1}s, refine {:.1}s",
+        aasvd::util::pool::auto_threads(),
+        cm.report.secs_collect,
+        cm.report.secs_solve,
+        cm.report.secs_refine
     );
     Ok(())
 }

@@ -1,11 +1,47 @@
 //! Compression-path perf: covariance accumulation (Rust f64 vs the Pallas
-//! cov_accum artifact through PJRT) and the CompressLayer closed form at
-//! `base` shapes. These are the hot loops of Algorithm 1/2.
+//! cov_accum artifact through PJRT), the CompressLayer closed form at
+//! `base` shapes, and the parallel hot path — chunked covariance
+//! accumulation, a block's worth of fanned-out layer solves, and full
+//! `compress_model` on a synthetic model via the artifact-free reference
+//! collector — each at pinned 1-vs-4 worker counts. The threads=1 vs
+//! threads=4 `compress_model` rows are the headline scaling record.
 
 use aasvd::bench::Bench;
-use aasvd::compress::{compress_layer, CovTriple};
+use aasvd::compress::{
+    compress_layer, compress_model, CovTriple, Method, Objective, ReferenceCollector,
+};
+use aasvd::data::{Batcher, Corpus, Domain, TokenBatch};
+use aasvd::model::Config;
 use aasvd::runtime::{Engine, Value};
+use aasvd::util::pool::Pool;
 use aasvd::util::rng::Rng;
+
+/// Synthetic model for engine-free compression benches: big enough that
+/// banded matmuls multi-thread, small enough for a CI smoke run.
+fn synth_config() -> Config {
+    Config {
+        name: "synth".into(),
+        vocab: 256,
+        d_model: 64,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 176,
+        rope_theta: 10000.0,
+        batch: 4,
+        seq: 32,
+        refine_batch: 8,
+        train_batch: 8,
+    }
+}
+
+fn full_batches(cfg: &Config, n: usize) -> Vec<TokenBatch> {
+    let corpus = Corpus::generate(Domain::Wiki, 40_000, 17);
+    Batcher::new(cfg.batch, cfg.seq)
+        .sequential(&corpus.train, n)
+        .into_iter()
+        .filter(|b| b.real_rows == cfg.batch)
+        .collect()
+}
 
 fn main() {
     let mut b = Bench::new();
@@ -36,6 +72,26 @@ fn main() {
         },
     );
 
+    // chunked parallel accumulation (the compress_model path): 8 chunks,
+    // per-chunk partials merged in order — same result at every width
+    {
+        let chunks: Vec<Vec<f32>> = (0..8)
+            .map(|_| (0..chunk * d).map(|_| rng.normal()).collect())
+            .collect();
+        let views: Vec<&[f32]> = chunks.iter().map(|c| c.as_slice()).collect();
+        let total_flops = 2.0 * (8 * chunk * d * d) as f64;
+        for threads in [1usize, 4] {
+            let pool = Pool::exact(threads);
+            b.run(
+                &format!("cov accumulate 8 chunks d={d} threads={threads}"),
+                Some(total_flops),
+                || {
+                    std::hint::black_box(CovTriple::accumulate_same(&pool, d, &views));
+                },
+            );
+        }
+    }
+
     // Pallas kernel through PJRT (includes literal transfer per call)
     if let Ok(engine) = Engine::new("artifacts") {
         if engine.entry("base").is_ok() {
@@ -64,10 +120,101 @@ fn main() {
         let mut cov = CovTriple::new(n);
         cov.add_chunk_same(&a);
         cov.mirror_same();
-        let (c, s) = aasvd::compress::Objective::Anchored.assemble(&cov).unwrap();
+        let (c, s) = Objective::Anchored.assemble(&cov).unwrap();
         b.run(&format!("compress_layer {m}x{n} k={k}"), None, || {
             std::hint::black_box(compress_layer(&w, m, n, &c, &s, k));
         });
     }
+
+    // a block's worth of independent layer solves (the q/k/v/o/up/down
+    // fan-out inside compress_model) at pinned widths; each solve pins
+    // its inner linalg to one thread so the job-level scaling is clean
+    {
+        let shapes: [(usize, usize, usize); 7] = [
+            (256, 256, 85),
+            (256, 256, 85),
+            (256, 256, 85),
+            (256, 256, 85),
+            (704, 256, 128),
+            (704, 256, 128),
+            (256, 704, 85),
+        ];
+        let weights: Vec<Vec<f32>> = shapes
+            .iter()
+            .map(|&(m, n, _)| (0..m * n).map(|_| rng.normal() * 0.02).collect())
+            .collect();
+        let mut covs = Vec::new();
+        for dim in [256usize, 704] {
+            let a: Vec<f32> = (0..2 * dim * dim).map(|_| rng.normal()).collect();
+            let mut cov = CovTriple::new(dim);
+            cov.add_chunk_same(&a);
+            cov.mirror_same();
+            covs.push((dim, Objective::Anchored.assemble(&cov).unwrap()));
+        }
+        let jobs_input: Vec<_> = shapes
+            .iter()
+            .zip(&weights)
+            .map(|(&(m, n, k), w)| {
+                let cs = covs
+                    .iter()
+                    .find(|(dim, _)| *dim == n)
+                    .map(|(_, cs)| cs)
+                    .expect("cov for dim");
+                (m, n, k, w.as_slice(), cs)
+            })
+            .collect();
+        for threads in [1usize, 4] {
+            let pool = Pool::exact(threads);
+            b.run(&format!("block solve fan-out 7 linears threads={threads}"), None, || {
+                let solved = pool.run(
+                    jobs_input
+                        .iter()
+                        .map(|&(m, n, k, w, cs)| {
+                            move || {
+                                Pool::exact(1)
+                                    .install(|| compress_layer(w, m, n, &cs.0, &cs.1, k))
+                            }
+                        })
+                        .collect(),
+                );
+                std::hint::black_box(solved);
+            });
+        }
+    }
+
+    // the headline: full Algorithm 2 on the synthetic model through the
+    // artifact-free reference collector, 1 vs 4 workers. Artifacts are
+    // identical across widths (enforced by tests/parallel_determinism.rs);
+    // only the wall clock moves.
+    {
+        let cfg = synth_config();
+        let params = aasvd::model::init::init_params(&cfg, &mut Rng::new(5));
+        let calib = full_batches(&cfg, 4);
+        assert!(calib.len() >= 2, "synthetic calib too small");
+        for threads in [1usize, 4] {
+            let method = Method::builder(format!("anchored_t{threads}"))
+                .objective(Objective::Anchored)
+                .threads(threads)
+                .build();
+            b.run(
+                &format!("compress_model ref synth anchored threads={threads}"),
+                None,
+                || {
+                    std::hint::black_box(
+                        compress_model(
+                            &ReferenceCollector,
+                            &cfg,
+                            &params,
+                            &calib,
+                            &method,
+                            0.6,
+                        )
+                        .unwrap(),
+                    );
+                },
+            );
+        }
+    }
+
     b.save("compress");
 }

@@ -1,8 +1,11 @@
 //! L3 perf: the pure-Rust linalg kernels on compression-realistic shapes
-//! (d_model=256, d_ff=704 from `base`; plus the 1k-class sizes).
+//! (d_model=256, d_ff=704 from `base`; plus the 1k-class sizes), including
+//! the banded-parallel kernels at pinned worker counts — the 1-vs-4-thread
+//! rows are the scaling record CI's bench-smoke job archives per PR.
 
 use aasvd::bench::Bench;
 use aasvd::linalg::{cholesky, eigh, svd_k, Matrix};
+use aasvd::util::pool::Pool;
 use aasvd::util::rng::Rng;
 
 fn main() {
@@ -16,6 +19,42 @@ fn main() {
         b.run(&format!("matmul {n}x{n}"), Some(flops), || {
             std::hint::black_box(a.matmul(&c));
         });
+    }
+
+    // banded-parallel kernels at pinned widths (ignores AA_SVD_THREADS):
+    // same results bitwise, different wall clock
+    {
+        let n = 512usize;
+        let a = Matrix::random(n, n, &mut rng, 1.0);
+        let c = Matrix::random(n, n, &mut rng, 1.0);
+        let flops = 2.0 * (n as f64).powi(3);
+        for threads in [1usize, 2, 4] {
+            let pool = Pool::exact(threads);
+            b.run(
+                &format!("matmul {n}x{n} threads={threads}"),
+                Some(flops),
+                || {
+                    std::hint::black_box(a.matmul_with(&c, &pool));
+                },
+            );
+        }
+        for threads in [1usize, 4] {
+            let pool = Pool::exact(threads);
+            b.run(
+                &format!("gram A^T*A {n}x{n} threads={threads}"),
+                Some(flops),
+                || {
+                    std::hint::black_box(a.matmul_at_with(&a, &pool));
+                },
+            );
+            b.run(
+                &format!("transpose {n}x{n} threads={threads}"),
+                None,
+                || {
+                    std::hint::black_box(a.transpose_with(&pool));
+                },
+            );
+        }
     }
 
     for n in [256usize, 704] {

@@ -119,7 +119,19 @@ impl Bench {
             .collect();
         let _ = crate::util::io::write_text(
             format!("results/bench_{id}.json"),
-            &Json::obj().set("bench", id).set("results", Json::Arr(rows)).to_string_pretty(),
+            &Json::obj()
+                .set("bench", id)
+                // run context, so archived artifacts (CI bench-smoke's
+                // BENCH_pr.json) are comparable across machines/modes
+                .set("target_secs", self.target_secs)
+                .set(
+                    "host_threads",
+                    std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(1),
+                )
+                .set("results", Json::Arr(rows))
+                .to_string_pretty(),
         );
     }
 }

@@ -10,6 +10,24 @@
 //! MXU-shaped alternative used by benches and integration tests.
 
 use crate::linalg::Matrix;
+use crate::util::pool::Pool;
+
+/// Upper bound on in-flight partial accumulators in the parallel
+/// accumulation paths — each partial is three dim×dim f64 matrices, so
+/// memory must scale with this constant, not with calibration size.
+const MAX_PARTIALS: usize = 16;
+
+/// Cut `0..n` into at most [`MAX_PARTIALS`] contiguous groups. Boundaries
+/// depend only on `n`: the accumulation order (within groups and across
+/// the ordered merge) is identical for every worker count.
+fn group_ranges(n: usize) -> Vec<std::ops::Range<usize>> {
+    let groups = n.min(MAX_PARTIALS).max(1);
+    let per = n.div_ceil(groups);
+    (0..groups)
+        .map(|g| (g * per).min(n)..((g + 1) * per).min(n))
+        .filter(|r| !r.is_empty())
+        .collect()
+}
 
 /// Accumulates the three covariance matrices of one tap position.
 #[derive(Clone, Debug)]
@@ -93,6 +111,81 @@ impl CovTriple {
         self.c_cross = self.s_orig.clone();
     }
 
+    /// Fold another accumulator into this one (elementwise sums). Merging
+    /// partials in a fixed order is the parallel path's determinism
+    /// contract: the result depends on the partition, never on timing.
+    pub fn merge(&mut self, other: &CovTriple) {
+        assert!(
+            self.dim == other.dim,
+            "CovTriple::merge dim mismatch: {} vs {}",
+            self.dim,
+            other.dim
+        );
+        for (a, b) in self.s_orig.data.iter_mut().zip(&other.s_orig.data) {
+            *a += b;
+        }
+        for (a, b) in self.s_shift.data.iter_mut().zip(&other.s_shift.data) {
+            *a += b;
+        }
+        for (a, b) in self.c_cross.data.iter_mut().zip(&other.c_cross.data) {
+            *a += b;
+        }
+        self.tokens += other.tokens;
+    }
+
+    /// Accumulate many (x, x') chunk pairs in parallel: chunks are cut
+    /// into at most [`MAX_PARTIALS`] fixed groups (boundaries depend only
+    /// on the chunk count, never the worker count), each group streams
+    /// sequentially into one partial accumulator, and partials merge in
+    /// group order. The result is bitwise identical for 1 or N threads,
+    /// and transient memory stays bounded no matter how many calibration
+    /// chunks stream in.
+    pub fn accumulate(pool: &Pool, dim: usize, pairs: &[(&[f32], &[f32])]) -> CovTriple {
+        let partials = pool.run(
+            group_ranges(pairs.len())
+                .into_iter()
+                .map(|r| {
+                    move || {
+                        let mut c = CovTriple::new(dim);
+                        for &(x, s) in &pairs[r] {
+                            c.add_chunk(x, s);
+                        }
+                        c
+                    }
+                })
+                .collect(),
+        );
+        let mut out = CovTriple::new(dim);
+        for p in &partials {
+            out.merge(p);
+        }
+        out
+    }
+
+    /// Identical-input variant of [`CovTriple::accumulate`]; the caller
+    /// still finishes with [`CovTriple::mirror_same`].
+    pub fn accumulate_same(pool: &Pool, dim: usize, chunks: &[&[f32]]) -> CovTriple {
+        let partials = pool.run(
+            group_ranges(chunks.len())
+                .into_iter()
+                .map(|r| {
+                    move || {
+                        let mut c = CovTriple::new(dim);
+                        for &x in &chunks[r] {
+                            c.add_chunk_same(x);
+                        }
+                        c
+                    }
+                })
+                .collect(),
+        );
+        let mut out = CovTriple::new(dim);
+        for p in &partials {
+            out.merge(p);
+        }
+        out
+    }
+
     /// Mean absolute activation per channel from S_orig diagonal
     /// (the ASVD-style sensitivity scale: sqrt(E[x²])).
     pub fn channel_scales(&self) -> Vec<f64> {
@@ -172,6 +265,78 @@ mod tests {
         for i in 0..d {
             assert!(cov.s_orig.get(i, i) >= 0.0);
         }
+    }
+
+    #[test]
+    fn parallel_accumulate_is_thread_count_invariant() {
+        let mut rng = Rng::new(5);
+        let d = 11;
+        let chunks: Vec<(Vec<f32>, Vec<f32>)> = (0..6)
+            .map(|_| {
+                let x: Vec<f32> = (0..17 * d).map(|_| rng.normal()).collect();
+                let y: Vec<f32> = (0..17 * d).map(|_| rng.normal()).collect();
+                (x, y)
+            })
+            .collect();
+        let pairs: Vec<(&[f32], &[f32])> = chunks
+            .iter()
+            .map(|(x, y)| (x.as_slice(), y.as_slice()))
+            .collect();
+        let c1 = CovTriple::accumulate(&Pool::exact(1), d, &pairs);
+        let c4 = CovTriple::accumulate(&Pool::exact(4), d, &pairs);
+        assert_eq!(c1.s_orig.data, c4.s_orig.data);
+        assert_eq!(c1.s_shift.data, c4.s_shift.data);
+        assert_eq!(c1.c_cross.data, c4.c_cross.data);
+        assert_eq!(c1.tokens, c4.tokens);
+        // and the merged total matches the one-shot accumulation closely
+        let (xs, ys): (Vec<f32>, Vec<f32>) = chunks.iter().fold(
+            (Vec::new(), Vec::new()),
+            |(mut xs, mut ys), (x, y)| {
+                xs.extend_from_slice(x);
+                ys.extend_from_slice(y);
+                (xs, ys)
+            },
+        );
+        let mut whole = CovTriple::new(d);
+        whole.add_chunk(&xs, &ys);
+        assert_close(&c1.c_cross.data, &whole.c_cross.data, 1e-9);
+        assert_eq!(c1.tokens, whole.tokens);
+    }
+
+    #[test]
+    fn parallel_accumulate_same_matches_sequential() {
+        let mut rng = Rng::new(6);
+        let d = 9;
+        let chunks: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..23 * d).map(|_| rng.normal()).collect())
+            .collect();
+        let views: Vec<&[f32]> = chunks.iter().map(|c| c.as_slice()).collect();
+        let mut c1 = CovTriple::accumulate_same(&Pool::exact(1), d, &views);
+        let mut c4 = CovTriple::accumulate_same(&Pool::exact(4), d, &views);
+        assert_eq!(c1.s_orig.data, c4.s_orig.data);
+        c1.mirror_same();
+        c4.mirror_same();
+        assert_eq!(c1.c_cross.data, c4.c_cross.data);
+    }
+
+    #[test]
+    fn merge_adds_tokens_and_sums() {
+        let mut rng = Rng::new(7);
+        let d = 4;
+        let x: Vec<f32> = (0..10 * d).map(|_| rng.normal()).collect();
+        let y: Vec<f32> = (0..15 * d).map(|_| rng.normal()).collect();
+        let mut a = CovTriple::new(d);
+        a.add_chunk_same(&x);
+        let mut b = CovTriple::new(d);
+        b.add_chunk_same(&y);
+        let mut merged = CovTriple::new(d);
+        merged.merge(&a);
+        merged.merge(&b);
+        assert_eq!(merged.tokens, 25);
+        let mut whole = CovTriple::new(d);
+        whole.add_chunk_same(&x);
+        whole.add_chunk_same(&y);
+        assert_close(&merged.s_orig.data, &whole.s_orig.data, 1e-12);
     }
 
     #[test]

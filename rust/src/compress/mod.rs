@@ -20,7 +20,9 @@ pub mod rank;
 pub use cov::CovTriple;
 pub use layer::{compress_layer, compress_layer_asvd, compress_layer_plain, Factors};
 pub use objective::{Objective, ALL_OBJECTIVES};
-pub use pipeline::{compress_model, CompressedModel, Method, MethodBuilder};
+pub use pipeline::{
+    compress_model, Collector, CompressedModel, Method, MethodBuilder, ReferenceCollector,
+};
 pub use pruning::{prune_model, PruneMethod, PrunedModel, ALL_PRUNERS};
 pub use quant::QuantMatrix;
 pub use rank::{dense_params, ratio_for_budget, Allocation, RankScheme};

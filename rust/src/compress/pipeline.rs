@@ -10,9 +10,19 @@
 //! always reflects a valid partial compression state. After all linears,
 //! block-level refinement (refine::driver) jointly tunes the factors
 //! against the dense block's outputs on original inputs.
+//!
+//! Activations come from a [`Collector`]: the PJRT engine artifacts on the
+//! hot path, or the pure-Rust reference forward ([`ReferenceCollector`])
+//! for artifact-free tools, tests and benches. The CPU-heavy stages —
+//! batch collection (reference path), covariance accumulation, and the
+//! per-linear closed-form solves inside each group — fan out over a
+//! [`Pool`] sized by [`Method`]'s `threads` knob. Every parallel reduction
+//! merges partials in a fixed order, so compressed artifacts are
+//! identical for any worker count (the block-sequential error-propagation
+//! order of the paper is never reordered).
 
 use super::cov::CovTriple;
-use super::layer::{compress_layer, compress_layer_asvd, compress_layer_plain};
+use super::layer::{compress_layer, compress_layer_asvd, compress_layer_plain, Factors};
 use super::objective::Objective;
 use super::quant::quantize_factors_inplace;
 use super::rank::{Allocation, RankScheme};
@@ -23,7 +33,8 @@ use crate::model::{Config, FlatStore};
 use crate::model::BLOCK_LINEARS;
 use crate::refine::{refine_block, RefineOptions, RefineReport};
 use crate::runtime::{Engine, Value};
-use anyhow::Result;
+use crate::util::pool::Pool;
+use anyhow::{bail, Result};
 use std::time::Instant;
 
 /// A named compression method (one table row). Knobs are private: build
@@ -37,6 +48,8 @@ pub struct Method {
     scheme: RankScheme,
     quant: bool,
     refine: Option<RefineOptions>,
+    /// worker threads for the compression math (0 = auto; see Pool::new)
+    threads: usize,
 }
 
 /// Fluent constructor for [`Method`]; new knobs get a defaulted builder
@@ -75,6 +88,14 @@ impl MethodBuilder {
         self
     }
 
+    /// Worker threads for the compression math. 0 (the default) resolves
+    /// at run time: `AA_SVD_THREADS` env, then the `--threads` global
+    /// knob, then hardware parallelism. Nonzero pins the count exactly.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.method.threads = n;
+        self
+    }
+
     pub fn build(self) -> Method {
         self.method
     }
@@ -91,6 +112,7 @@ impl Method {
                 scheme: RankScheme::Standard,
                 quant: false,
                 refine: None,
+                threads: 0,
             },
         }
     }
@@ -113,6 +135,11 @@ impl Method {
 
     pub fn refine_options(&self) -> Option<&RefineOptions> {
         self.refine.as_ref()
+    }
+
+    /// Requested worker count (0 = auto-resolved at compression time).
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     pub fn naive_svd() -> Method {
@@ -231,62 +258,216 @@ pub fn embed_batches(cfg: &Config, params: &FlatStore, batches: &[TokenBatch]) -
 }
 
 /// Dense-block taps over all calibration batches.
-struct Taps {
-    y: Vec<Vec<f32>>,
-    per_tap: [Vec<Vec<f32>>; 4], // a_in, o_in, m_in, d_in
+#[derive(Default)]
+pub struct Taps {
+    pub y: Vec<Vec<f32>>,
+    /// a_in, o_in, m_in, d_in — indexed by tap position
+    pub per_tap: [Vec<Vec<f32>>; 4],
 }
 
-fn collect_dense(
-    engine: &Engine,
-    cfg: &Config,
-    bp: &[f32],
-    xs: &[Vec<f32>],
-) -> Result<Taps> {
-    let mut taps = Taps {
-        y: Vec::new(),
-        per_tap: [Vec::new(), Vec::new(), Vec::new(), Vec::new()],
-    };
-    for x in xs {
-        let out = engine.run(
-            &cfg.name,
-            "block_collect",
-            &[Value::F32(bp), Value::F32(x)],
-        )?;
-        taps.y.push(out[0].f32.clone());
-        for t in 0..4 {
-            taps.per_tap[t].push(out[t + 1].f32.clone());
+/// Source of block activations for Algorithm 2 — either the PJRT engine
+/// artifacts (the serving/bench hot path) or the pure-Rust reference
+/// forward. Implementations are driven from one thread; batch-level
+/// parallelism, where available, happens *inside* a method via `pool`.
+pub trait Collector {
+    /// Dense-block taps of `block` on original inputs, over all batches.
+    fn dense_taps(
+        &self,
+        cfg: &Config,
+        params: &FlatStore,
+        block: usize,
+        xs: &[Vec<f32>],
+        pool: &Pool,
+    ) -> Result<Taps>;
+
+    /// Shifted tap (0 = a_in, 1 = o_in, 2 = m_in, 3 = d_in) of the current
+    /// partial compression state, over all batches.
+    fn lr_tap(
+        &self,
+        cfg: &Config,
+        bf: &BlockFactors,
+        xs: &[Vec<f32>],
+        tap: usize,
+        pool: &Pool,
+    ) -> Result<Vec<Vec<f32>>>;
+
+    /// Compressed-block output for one batch (advances the shifted stream).
+    fn lr_forward(&self, cfg: &Config, bf: &BlockFactors, x: &[f32]) -> Result<Vec<f32>>;
+
+    /// Advance the whole shifted stream (default: sequential per batch).
+    fn lr_forward_all(
+        &self,
+        cfg: &Config,
+        bf: &BlockFactors,
+        xs: &[Vec<f32>],
+        _pool: &Pool,
+    ) -> Result<Vec<Vec<f32>>> {
+        xs.iter().map(|x| self.lr_forward(cfg, bf, x)).collect()
+    }
+
+    /// The PJRT engine behind this collector, if any (block refinement
+    /// drives the AOT refine_step artifact and needs it).
+    fn engine(&self) -> Option<&Engine> {
+        None
+    }
+}
+
+impl Collector for Engine {
+    fn dense_taps(
+        &self,
+        cfg: &Config,
+        params: &FlatStore,
+        block: usize,
+        xs: &[Vec<f32>],
+        _pool: &Pool,
+    ) -> Result<Taps> {
+        let bp = pack_block_params(cfg, params, block);
+        let mut taps = Taps::default();
+        for x in xs {
+            let out = self.run(
+                &cfg.name,
+                "block_collect",
+                &[Value::F32(&bp), Value::F32(x)],
+            )?;
+            taps.y.push(out[0].f32.clone());
+            for t in 0..4 {
+                taps.per_tap[t].push(out[t + 1].f32.clone());
+            }
         }
+        Ok(taps)
     }
-    Ok(taps)
+
+    fn lr_tap(
+        &self,
+        cfg: &Config,
+        bf: &BlockFactors,
+        xs: &[Vec<f32>],
+        tap: usize,
+        _pool: &Pool,
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut out_taps = Vec::new();
+        for x in xs {
+            let out = self.run(
+                &cfg.name,
+                "block_lr_collect",
+                &[
+                    Value::F32(&bf.factors.data),
+                    Value::F32(&bf.masks.data),
+                    Value::F32(x),
+                ],
+            )?;
+            out_taps.push(out[tap + 1].f32.clone());
+        }
+        Ok(out_taps)
+    }
+
+    fn lr_forward(&self, cfg: &Config, bf: &BlockFactors, x: &[f32]) -> Result<Vec<f32>> {
+        Ok(self
+            .run_first(
+                &cfg.name,
+                "block_lr_fwd",
+                &[
+                    Value::F32(&bf.factors.data),
+                    Value::F32(&bf.masks.data),
+                    Value::F32(x),
+                ],
+            )?
+            .f32)
+    }
+
+    fn engine(&self) -> Option<&Engine> {
+        Some(self)
+    }
 }
 
-fn collect_lr_tap(
-    engine: &Engine,
-    cfg: &Config,
-    bf: &BlockFactors,
-    xs: &[Vec<f32>],
-    tap: usize,
-) -> Result<Vec<Vec<f32>>> {
-    let mut out_taps = Vec::new();
-    for x in xs {
-        let out = engine.run(
-            &cfg.name,
-            "block_lr_collect",
-            &[
-                Value::F32(&bf.factors.data),
-                Value::F32(&bf.masks.data),
-                Value::F32(x),
-            ],
-        )?;
-        out_taps.push(out[tap + 1].f32.clone());
+/// Artifact-free [`Collector`] over the pure-Rust reference forward
+/// (model::forward / model::lowrank). Batches fan out across the pool;
+/// each batch is a pure function of its inputs, so results are bitwise
+/// identical for any worker count.
+pub struct ReferenceCollector;
+
+impl Collector for ReferenceCollector {
+    fn dense_taps(
+        &self,
+        cfg: &Config,
+        params: &FlatStore,
+        block: usize,
+        xs: &[Vec<f32>],
+        pool: &Pool,
+    ) -> Result<Taps> {
+        let prefix = format!("blocks.{block}.");
+        let per_batch = pool.run(
+            xs.iter()
+                .map(|x| {
+                    let prefix = prefix.as_str();
+                    move || {
+                        crate::model::forward::block_forward(cfg, params, prefix, x, cfg.seq)
+                    }
+                })
+                .collect(),
+        );
+        let mut taps = Taps::default();
+        for t in per_batch {
+            taps.y.push(t.y);
+            taps.per_tap[0].push(t.a_in);
+            taps.per_tap[1].push(t.o_in);
+            taps.per_tap[2].push(t.m_in);
+            taps.per_tap[3].push(t.d_in);
+        }
+        Ok(taps)
     }
-    Ok(out_taps)
+
+    fn lr_tap(
+        &self,
+        cfg: &Config,
+        bf: &BlockFactors,
+        xs: &[Vec<f32>],
+        tap: usize,
+        pool: &Pool,
+    ) -> Result<Vec<Vec<f32>>> {
+        Ok(pool.run(
+            xs.iter()
+                .map(|x| {
+                    move || {
+                        let t = crate::model::lowrank::block_lr_forward(cfg, bf, x, cfg.seq);
+                        match tap {
+                            0 => t.a_in,
+                            1 => t.o_in,
+                            2 => t.m_in,
+                            3 => t.d_in,
+                            _ => panic!("tap index {tap} out of range"),
+                        }
+                    }
+                })
+                .collect(),
+        ))
+    }
+
+    fn lr_forward(&self, cfg: &Config, bf: &BlockFactors, x: &[f32]) -> Result<Vec<f32>> {
+        Ok(crate::model::lowrank::block_lr_forward(cfg, bf, x, cfg.seq).y)
+    }
+
+    fn lr_forward_all(
+        &self,
+        cfg: &Config,
+        bf: &BlockFactors,
+        xs: &[Vec<f32>],
+        pool: &Pool,
+    ) -> Result<Vec<Vec<f32>>> {
+        Ok(pool.run(
+            xs.iter()
+                .map(|x| {
+                    move || crate::model::lowrank::block_lr_forward(cfg, bf, x, cfg.seq).y
+                })
+                .collect(),
+        ))
+    }
 }
 
-/// Compress one linear according to the method; returns padded (U, V)
-/// written into `bf` with the mask set to rank k.
-#[allow(clippy::too_many_arguments)]
-fn compress_one(
+/// Solve one linear's closed form. Pure math over shared-read state — a
+/// group's solves run concurrently. Returns the unpadded factors and the
+/// quantization error (0.0 unless the method quantizes).
+fn solve_one(
     method: &Method,
     cfg: &Config,
     params: &FlatStore,
@@ -294,11 +475,10 @@ fn compress_one(
     lin: &str,
     cov: &CovTriple,
     k: usize,
-    bf: &mut BlockFactors,
-) -> f64 {
+) -> (Factors, f64) {
     let (m, n) = cfg.linear_dims(lin);
     let w = params.view(&format!("blocks.{block}.{lin}"));
-    let f = if method.asvd_diag {
+    let mut f = if method.asvd_diag {
         compress_layer_asvd(w, m, n, &cov.channel_scales(), 0.5, k)
     } else {
         match method.objective.assemble(cov) {
@@ -306,36 +486,37 @@ fn compress_one(
             Some((c, s)) => compress_layer(w, m, n, &c, &s, k),
         }
     };
-    let mut u = f.u;
-    let mut v = f.v;
     let mut qerr = 0.0;
     if method.quant {
-        let (eu, ev) = quantize_factors_inplace(&mut u, m, &mut v, n, f.k);
+        let (eu, ev) = quantize_factors_inplace(&mut f.u, m, &mut f.v, n, f.k);
         qerr = 0.5 * (eu + ev);
     }
-    // write into the padded buffers
+    (f, qerr)
+}
+
+/// Write unpadded factors into the block's padded buffers + rank mask.
+fn write_factors(cfg: &Config, lin: &str, f: &Factors, bf: &mut BlockFactors) {
     let kmax = cfg.kmax(lin);
     {
         let ub = bf.factors.view_mut(&format!("{lin}.u"));
         ub.fill(0.0);
-        for i in 0..m {
-            ub[i * kmax..i * kmax + f.k].copy_from_slice(&u[i * f.k..(i + 1) * f.k]);
+        for i in 0..f.m {
+            ub[i * kmax..i * kmax + f.k].copy_from_slice(&f.u[i * f.k..(i + 1) * f.k]);
         }
     }
     {
         let vb = bf.factors.view_mut(&format!("{lin}.v"));
         vb.fill(0.0);
-        for i in 0..n {
-            vb[i * kmax..i * kmax + f.k].copy_from_slice(&v[i * f.k..(i + 1) * f.k]);
+        for i in 0..f.n {
+            vb[i * kmax..i * kmax + f.k].copy_from_slice(&f.v[i * f.k..(i + 1) * f.k]);
         }
     }
     bf.set_rank(lin, f.k);
-    qerr
 }
 
 /// Algorithm 2. `calib` batches must all be full (`real_rows == batch`).
-pub fn compress_model(
-    engine: &Engine,
+pub fn compress_model<C: Collector>(
+    collector: &C,
     cfg: &Config,
     params: &FlatStore,
     calib: &[TokenBatch],
@@ -348,6 +529,7 @@ pub fn compress_model(
     );
     let allocation = Allocation::uniform(cfg, ratio, method.scheme);
     let mut report = CompressReport::default();
+    let pool = Pool::new(method.threads);
 
     // step 1: X <- X' <- embedding of calibration data
     let mut xs = embed_batches(cfg, params, calib);
@@ -361,10 +543,9 @@ pub fn compress_model(
     let mut quant_errs: Vec<f64> = Vec::new();
 
     for i in 0..cfg.n_layers {
-        let bp = pack_block_params(cfg, params, i);
         // dense taps on original inputs (X_j for every group, plus Y target)
         let t0 = Instant::now();
-        let dense_taps = collect_dense(engine, cfg, &bp, &xs)?;
+        let dense_taps = collector.dense_taps(cfg, params, i, &xs, &pool)?;
         report.secs_collect += t0.elapsed().as_secs_f64();
 
         // initialize L'_i <- L_i (exact full-rank factorization)
@@ -374,34 +555,65 @@ pub fn compress_model(
             // collect shifted tap from the *current* partial state of L'_i
             let t0 = Instant::now();
             let shift_tap: Option<Vec<Vec<f32>>> = if method.objective.needs_shift() {
-                Some(collect_lr_tap(engine, cfg, &bf, &xs_shift, tap_idx - 1)?)
+                Some(collector.lr_tap(cfg, &bf, &xs_shift, tap_idx - 1, &pool)?)
             } else {
                 None
             };
             report.secs_collect += t0.elapsed().as_secs_f64();
 
-            // accumulate covariances (shared by all linears in the group)
+            // accumulate covariances (shared by all linears in the group);
+            // per-batch partials merge in batch order — thread-count
+            // invariant by construction
             let t0 = Instant::now();
             let dim = if tap_idx == 4 { cfg.d_ff } else { cfg.d_model };
-            let mut cov = CovTriple::new(dim);
-            match &shift_tap {
+            let cov = match &shift_tap {
                 Some(shift) => {
-                    for (o, s) in dense_taps.per_tap[tap_idx - 1].iter().zip(shift) {
-                        cov.add_chunk(o, s);
-                    }
+                    let pairs: Vec<(&[f32], &[f32])> = dense_taps.per_tap[tap_idx - 1]
+                        .iter()
+                        .zip(shift)
+                        .map(|(o, s)| (o.as_slice(), s.as_slice()))
+                        .collect();
+                    CovTriple::accumulate(&pool, dim, &pairs)
                 }
                 None => {
-                    for o in &dense_taps.per_tap[tap_idx - 1] {
-                        cov.add_chunk_same(o);
-                    }
+                    let chunks: Vec<&[f32]> = dense_taps.per_tap[tap_idx - 1]
+                        .iter()
+                        .map(|o| o.as_slice())
+                        .collect();
+                    let mut cov = CovTriple::accumulate_same(&pool, dim, &chunks);
                     cov.mirror_same();
+                    cov
                 }
-            }
+            };
 
-            for lin in linears {
-                let k = allocation.rank_of(lin);
-                let qerr =
-                    compress_one(method, cfg, params, i, lin, &cov, k, &mut bf);
+            // the group's linears share `cov` and are independent given it
+            // (paper §B.1): solve them concurrently. The paper's
+            // block-sequential error propagation is intact because the
+            // shifted tap above was collected before any factor changed.
+            // Each solve installs an even share of the budget for its
+            // inner linalg kernels.
+            let inner = Pool::exact(
+                (pool.threads() / linears.len().min(pool.threads())).max(1),
+            );
+            let cov_ref = &cov;
+            let alloc_ref = &allocation;
+            let solved = pool.run(
+                linears
+                    .iter()
+                    .map(|&lin| {
+                        move || {
+                            inner.install(|| {
+                                let k = alloc_ref.rank_of(lin);
+                                let (f, qerr) =
+                                    solve_one(method, cfg, params, i, lin, cov_ref, k);
+                                (lin, f, qerr)
+                            })
+                        }
+                    })
+                    .collect(),
+            );
+            for (lin, f, qerr) in solved {
+                write_factors(cfg, lin, &f, &mut bf);
                 if method.quant {
                     quant_errs.push(qerr);
                 }
@@ -411,10 +623,25 @@ pub fn compress_model(
 
         // step 9: block-level local refinement
         if let Some(ropts) = &method.refine {
+            let Some(engine) = collector.engine() else {
+                bail!(
+                    "method '{}' needs block refinement, which drives the AOT \
+                     refine_step artifact — use an Engine-backed collector",
+                    method.name
+                );
+            };
             let t0 = Instant::now();
             let x_shift_flat = concat_batches(&xs_shift);
             let y_flat = concat_batches(&dense_taps.y);
-            let rep = refine_block(engine, cfg, &mut bf, &x_shift_flat, &y_flat, ropts)?;
+            let rep = refine_block(
+                engine,
+                cfg,
+                &mut bf,
+                &x_shift_flat,
+                &y_flat,
+                ropts,
+                &pool,
+            )?;
             report.refine.push(rep);
             report.secs_refine += t0.elapsed().as_secs_f64();
         }
@@ -422,18 +649,7 @@ pub fn compress_model(
         // step 10: advance both streams
         if method.needs_shift() {
             let t0 = Instant::now();
-            for x in xs_shift.iter_mut() {
-                let out = engine.run(
-                    &cfg.name,
-                    "block_lr_fwd",
-                    &[
-                        Value::F32(&bf.factors.data),
-                        Value::F32(&bf.masks.data),
-                        Value::F32(x),
-                    ],
-                )?;
-                *x = out[0].f32.clone();
-            }
+            xs_shift = collector.lr_forward_all(cfg, &bf, &xs_shift, &pool)?;
             report.secs_collect += t0.elapsed().as_secs_f64();
         }
         xs = dense_taps.y;
@@ -455,31 +671,29 @@ pub fn compress_model(
 /// Chain dense block_collect across the whole model, accumulating
 /// (a_in, m_in, d_in) covariance triples per block (same-input mode).
 /// Used by the activation-aware pruning baselines.
-pub fn collect_dense_taps_for_pruning(
-    engine: &Engine,
+pub fn collect_dense_taps_for_pruning<C: Collector>(
+    collector: &C,
     cfg: &Config,
     params: &FlatStore,
     mut xs: Vec<Vec<f32>>,
+    pool: &Pool,
 ) -> Result<Vec<(CovTriple, CovTriple, CovTriple)>> {
     let mut out = Vec::with_capacity(cfg.n_layers);
     for i in 0..cfg.n_layers {
-        let bp = pack_block_params(cfg, params, i);
-        let taps = collect_dense(engine, cfg, &bp, &xs)?;
-        let mut a = CovTriple::new(cfg.d_model);
-        let mut m = CovTriple::new(cfg.d_model);
-        let mut d = CovTriple::new(cfg.d_ff);
-        for batch in &taps.per_tap[0] {
-            a.add_chunk_same(batch);
-        }
-        for batch in &taps.per_tap[2] {
-            m.add_chunk_same(batch);
-        }
-        for batch in &taps.per_tap[3] {
-            d.add_chunk_same(batch);
-        }
-        a.mirror_same();
-        m.mirror_same();
-        d.mirror_same();
+        let taps = collector.dense_taps(cfg, params, i, &xs, pool)?;
+        let mut covs: Vec<CovTriple> = [(0usize, cfg.d_model), (2, cfg.d_model), (3, cfg.d_ff)]
+            .into_iter()
+            .map(|(tap, dim)| {
+                let chunks: Vec<&[f32]> =
+                    taps.per_tap[tap].iter().map(|c| c.as_slice()).collect();
+                let mut cov = CovTriple::accumulate_same(pool, dim, &chunks);
+                cov.mirror_same();
+                cov
+            })
+            .collect();
+        let d = covs.pop().unwrap();
+        let m = covs.pop().unwrap();
+        let a = covs.pop().unwrap();
         out.push((a, m, d));
         xs = taps.y;
     }
@@ -506,6 +720,8 @@ mod tests {
         assert_eq!(Method::naive_svd().objective(), Objective::InputAgnostic);
         assert_eq!(Method::aa_svd_q(RefineOptions::default()).scheme(), RankScheme::Remap);
         assert!(Method::aa_svd_q(RefineOptions::default()).quantized());
+        // presets default to auto thread resolution
+        assert_eq!(Method::naive_svd().threads(), 0);
     }
 
     #[test]
@@ -515,6 +731,7 @@ mod tests {
             .scheme(RankScheme::Remap)
             .quant()
             .refine(RefineOptions::default())
+            .threads(3)
             .build();
         assert_eq!(m.name, "custom");
         assert_eq!(m.objective(), Objective::Anchored);
@@ -523,6 +740,7 @@ mod tests {
         assert!(m.refine_options().is_some());
         assert!(!m.asvd_diag());
         assert!(m.needs_shift());
+        assert_eq!(m.threads(), 3);
         // baseline builder matches the plainest named constructor
         let n = Method::builder("naive_svd").build();
         assert_eq!(n.objective(), Method::naive_svd().objective());
@@ -544,6 +762,30 @@ mod tests {
         let mut want = BLOCK_LINEARS.to_vec();
         want.sort_unstable();
         assert_eq!(seen, want);
+    }
+
+    #[test]
+    fn refinement_requires_an_engine_backed_collector() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = crate::model::init::init_params(
+            &cfg,
+            &mut crate::util::rng::Rng::new(4),
+        );
+        let corpus = crate::data::Corpus::generate(crate::data::Domain::Wiki, 10_000, 7);
+        let batcher = crate::data::Batcher::new(cfg.batch, cfg.seq);
+        let calib: Vec<_> = batcher
+            .sequential(&corpus.train, 2)
+            .into_iter()
+            .filter(|b| b.real_rows == cfg.batch)
+            .collect();
+        assert!(!calib.is_empty());
+        let method = Method::aa_svd(RefineOptions::default());
+        let err = match compress_model(&ReferenceCollector, &cfg, &params, &calib, &method, 0.8)
+        {
+            Err(e) => e,
+            Ok(_) => panic!("refinement without an engine must fail"),
+        };
+        assert!(err.to_string().contains("refine"), "unexpected error: {err}");
     }
 
     /// End-to-end pipeline on the tiny config (skips without artifacts).

@@ -16,11 +16,11 @@
 //! model_fwd artifact evaluates them.
 
 use super::cov::CovTriple;
-use super::pipeline::{collect_dense_taps_for_pruning, embed_batches};
+use super::pipeline::{collect_dense_taps_for_pruning, embed_batches, Collector};
 use crate::data::TokenBatch;
 use crate::linalg::{eigh, Matrix};
 use crate::model::{Config, FlatStore};
-use crate::runtime::Engine;
+use crate::util::pool::Pool;
 use anyhow::Result;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -127,8 +127,8 @@ fn magnitude_importance(cfg: &Config, params: &FlatStore, block: usize) -> (Vec<
 }
 
 /// Prune to parameter ratio `rho` with the chosen method.
-pub fn prune_model(
-    engine: &Engine,
+pub fn prune_model<C: Collector>(
+    collector: &C,
     cfg: &Config,
     params: &FlatStore,
     calib: &[TokenBatch],
@@ -170,7 +170,7 @@ pub fn prune_model(
 
     // activations (for Wanda / SliceGPT)
     let acts = if method.needs_activations() {
-        Some(collect_calibration_covs(engine, cfg, params, calib)?)
+        Some(collect_calibration_covs(collector, cfg, params, calib)?)
     } else {
         None
     };
@@ -264,14 +264,16 @@ fn block_drop_order(n: usize) -> Vec<usize> {
 }
 
 /// Per-block (a_in, m_in, d_in) covariance triples on calibration data.
-fn collect_calibration_covs(
-    engine: &Engine,
+/// Accumulation fans out over the auto-resolved pool; partials merge in
+/// batch order so the result is thread-count invariant.
+fn collect_calibration_covs<C: Collector>(
+    collector: &C,
     cfg: &Config,
     params: &FlatStore,
     calib: &[TokenBatch],
 ) -> Result<Vec<(CovTriple, CovTriple, CovTriple)>> {
     let xs = embed_batches(cfg, params, calib);
-    collect_dense_taps_for_pruning(engine, cfg, params, xs)
+    collect_dense_taps_for_pruning(collector, cfg, params, xs, &Pool::auto())
 }
 
 #[cfg(test)]

@@ -35,6 +35,9 @@ pub struct Knobs {
     pub refine_epochs: usize,
     pub refine_lr: f64,
     pub ratios: Vec<f64>,
+    /// worker threads for the compression math (0 = auto-detect;
+    /// the AA_SVD_THREADS env var overrides this flag)
+    pub threads: usize,
 }
 
 impl Knobs {
@@ -52,6 +55,11 @@ impl Knobs {
                 .iter()
                 .map(|s| s.parse().expect("ratio"))
                 .collect(),
+            threads: args.usize(
+                "threads",
+                0,
+                "worker threads for compression math (0 = auto; AA_SVD_THREADS overrides)",
+            ),
         }
     }
 
@@ -65,6 +73,9 @@ impl Knobs {
 }
 
 pub fn setup(knobs: &Knobs) -> Result<Ctx> {
+    // every compression Pool::auto() downstream picks this up (unless the
+    // AA_SVD_THREADS env var overrides it)
+    crate::util::pool::set_global_threads(knobs.threads);
     let engine = Engine::new("artifacts")?;
     let cfg = engine.entry(&knobs.config)?.config.clone();
     let params = load_or_pretrain(

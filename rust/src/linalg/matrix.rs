@@ -5,8 +5,53 @@
 //! condition numbers grow with calibration size, and f32 loses the tail
 //! singular values that decide truncation order. Weights arrive as f32 and
 //! the factors are cast back to f32 at the end.
+//!
+//! The products (`matmul`, `matmul_bt`, `matmul_at`, `transpose`) split
+//! their *output* into row bands solved in parallel on a
+//! [`crate::util::pool::Pool`]. Every output element accumulates over the
+//! contraction axis in ascending order no matter how the bands are cut,
+//! so results are **bitwise identical for any worker count** — the
+//! `_with` variants take an explicit pool, the plain names resolve
+//! [`Pool::auto`].
 
+use crate::util::pool::Pool;
 use crate::util::rng::Rng;
+
+/// Below this many flops (or moved elements, for transpose) a product
+/// stays single-threaded: band handout costs more than it saves.
+const PAR_MIN_WORK: usize = 1 << 18;
+
+/// Row bands to cut `rows` of output into; 1 when threading won't pay.
+fn bands_for(pool: &Pool, rows: usize, work: usize) -> usize {
+    if pool.threads() <= 1 || work < PAR_MIN_WORK || rows == 0 {
+        1
+    } else {
+        pool.threads().min(rows)
+    }
+}
+
+/// Split `out` (`rows` × `row_elems`, row-major) into contiguous row bands
+/// and run `body(first_row, band)` for each on the pool. Shared scaffolding
+/// for every banded kernel below; `body` must write each output element
+/// with the same accumulation order regardless of how the bands are cut —
+/// that is what keeps results bitwise identical at any worker count.
+fn run_banded<F>(pool: &Pool, rows: usize, row_elems: usize, work: usize, out: &mut [f64], body: F)
+where
+    F: Fn(usize, &mut [f64]) + Sync,
+{
+    if rows == 0 || row_elems == 0 {
+        return;
+    }
+    let bands = bands_for(pool, rows, work);
+    let rows_per = rows.div_ceil(bands);
+    let body = &body;
+    let jobs: Vec<_> = out
+        .chunks_mut(rows_per * row_elems)
+        .enumerate()
+        .map(|(bi, band)| move || body(bi * rows_per, band))
+        .collect();
+    pool.run(jobs);
+}
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
@@ -25,12 +70,22 @@ impl Matrix {
     }
 
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
-        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        assert!(
+            data.len() == rows * cols,
+            "Matrix::from_vec: got {} elements for a {rows}x{cols} matrix (want {})",
+            data.len(),
+            rows * cols
+        );
         Matrix { rows, cols, data }
     }
 
     pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Matrix {
-        assert_eq!(data.len(), rows * cols);
+        assert!(
+            data.len() == rows * cols,
+            "Matrix::from_f32: got {} elements for a {rows}x{cols} matrix (want {})",
+            data.len(),
+            rows * cols
+        );
         Matrix {
             rows,
             cols,
@@ -91,84 +146,138 @@ impl Matrix {
     }
 
     pub fn transpose(&self) -> Matrix {
+        self.transpose_with(&Pool::auto())
+    }
+
+    /// Blocked transpose; output row bands (source columns) in parallel.
+    /// A pure permutation — trivially identical for any worker count.
+    pub fn transpose_with(&self, pool: &Pool) -> Matrix {
         let mut t = Matrix::zeros(self.cols, self.rows);
-        // blocked transpose for cache friendliness
         const B: usize = 32;
-        for ib in (0..self.rows).step_by(B) {
-            for jb in (0..self.cols).step_by(B) {
-                for i in ib..(ib + B).min(self.rows) {
-                    for j in jb..(jb + B).min(self.cols) {
-                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+        let work = self.rows * self.cols;
+        run_banded(pool, self.cols, self.rows, work, &mut t.data, |j0, tband| {
+            for ib in (0..self.rows).step_by(B) {
+                let iend = (ib + B).min(self.rows);
+                for (cj, trow) in tband.chunks_exact_mut(self.rows).enumerate() {
+                    let j = j0 + cj;
+                    for i in ib..iend {
+                        trow[i] = self.data[i * self.cols + j];
                     }
                 }
             }
-        }
+        });
         t
     }
 
-    /// C = A * B (blocked i-k-j loop; B rows stream through cache).
+    /// C = A * B (blocked over k; B rows stream through cache).
     pub fn matmul(&self, b: &Matrix) -> Matrix {
-        assert_eq!(self.cols, b.rows, "matmul dim mismatch");
+        self.matmul_with(b, &Pool::auto())
+    }
+
+    /// C = A * B with row bands of C solved in parallel. Each output
+    /// element accumulates over k in ascending order regardless of the
+    /// band split, so results are bitwise identical for any worker count.
+    pub fn matmul_with(&self, b: &Matrix, pool: &Pool) -> Matrix {
+        assert!(
+            self.cols == b.rows,
+            "matmul dim mismatch: [{}x{}] * [{}x{}]",
+            self.rows,
+            self.cols,
+            b.rows,
+            b.cols
+        );
         let (m, k, n) = (self.rows, self.cols, b.cols);
         let mut c = Matrix::zeros(m, n);
         const KB: usize = 64;
-        for kb in (0..k).step_by(KB) {
-            let kend = (kb + KB).min(k);
-            for i in 0..m {
-                let crow = &mut c.data[i * n..(i + 1) * n];
-                for p in kb..kend {
-                    let a = self.data[i * k + p];
-                    if a == 0.0 {
-                        continue;
-                    }
-                    let brow = &b.data[p * n..(p + 1) * n];
-                    for (cv, &bv) in crow.iter_mut().zip(brow) {
-                        *cv += a * bv;
+        run_banded(pool, m, n, 2 * m * k * n, &mut c.data, |i0, cband| {
+            for kb in (0..k).step_by(KB) {
+                let kend = (kb + KB).min(k);
+                for (ci, crow) in cband.chunks_exact_mut(n).enumerate() {
+                    let arow = &self.data[(i0 + ci) * k..(i0 + ci + 1) * k];
+                    for p in kb..kend {
+                        let a = arow[p];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let brow = &b.data[p * n..(p + 1) * n];
+                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                            *cv += a * bv;
+                        }
                     }
                 }
             }
-        }
+        });
         c
     }
 
     /// C = A * B^T without materializing the transpose (dot-product form).
     pub fn matmul_bt(&self, b: &Matrix) -> Matrix {
-        assert_eq!(self.cols, b.cols, "matmul_bt dim mismatch");
+        self.matmul_bt_with(b, &Pool::auto())
+    }
+
+    /// Row-banded parallel A * B^T; per-element dot products accumulate
+    /// in the same order as the sequential kernel (bitwise stable).
+    pub fn matmul_bt_with(&self, b: &Matrix, pool: &Pool) -> Matrix {
+        assert!(
+            self.cols == b.cols,
+            "matmul_bt dim mismatch: [{}x{}] * [{}x{}]^T",
+            self.rows,
+            self.cols,
+            b.rows,
+            b.cols
+        );
         let (m, k, n) = (self.rows, self.cols, b.rows);
         let mut c = Matrix::zeros(m, n);
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            for j in 0..n {
-                let brow = &b.data[j * k..(j + 1) * k];
-                let mut acc = 0.0;
-                for (&x, &y) in arow.iter().zip(brow) {
-                    acc += x * y;
+        run_banded(pool, m, n, 2 * m * k * n, &mut c.data, |i0, cband| {
+            for (ci, crow) in cband.chunks_exact_mut(n).enumerate() {
+                let arow = &self.data[(i0 + ci) * k..(i0 + ci + 1) * k];
+                for (j, cv) in crow.iter_mut().enumerate() {
+                    let brow = &b.data[j * k..(j + 1) * k];
+                    let mut acc = 0.0;
+                    for (&x, &y) in arow.iter().zip(brow) {
+                        acc += x * y;
+                    }
+                    *cv = acc;
                 }
-                c.data[i * n + j] = acc;
             }
-        }
+        });
         c
     }
 
     /// C = A^T * B (i.e., Gram-style product over the row axis).
     pub fn matmul_at(&self, b: &Matrix) -> Matrix {
-        assert_eq!(self.rows, b.rows, "matmul_at dim mismatch");
+        self.matmul_at_with(b, &Pool::auto())
+    }
+
+    /// Row-banded parallel A^T * B: every band scans p = 0..k in order
+    /// and updates only its own C rows, so per-element accumulation order
+    /// matches the sequential kernel (bitwise stable).
+    pub fn matmul_at_with(&self, b: &Matrix, pool: &Pool) -> Matrix {
+        assert!(
+            self.rows == b.rows,
+            "matmul_at dim mismatch: [{}x{}]^T * [{}x{}]",
+            self.rows,
+            self.cols,
+            b.rows,
+            b.cols
+        );
         let (k, m, n) = (self.rows, self.cols, b.cols);
         let mut c = Matrix::zeros(m, n);
-        for p in 0..k {
-            let arow = &self.data[p * m..(p + 1) * m];
-            let brow = &b.data[p * n..(p + 1) * n];
-            for i in 0..m {
-                let a = arow[i];
-                if a == 0.0 {
-                    continue;
-                }
-                let crow = &mut c.data[i * n..(i + 1) * n];
-                for (cv, &bv) in crow.iter_mut().zip(brow) {
-                    *cv += a * bv;
+        run_banded(pool, m, n, 2 * m * k * n, &mut c.data, |i0, cband| {
+            for p in 0..k {
+                let arow = &self.data[p * m..(p + 1) * m];
+                let brow = &b.data[p * n..(p + 1) * n];
+                for (ci, crow) in cband.chunks_exact_mut(n).enumerate() {
+                    let a = arow[i0 + ci];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += a * bv;
+                    }
                 }
             }
-        }
+        });
         c
     }
 
@@ -305,5 +414,80 @@ mod tests {
         let s = Matrix::random_spd(12, &mut rng);
         let d = s.sub(&s.transpose()).max_abs();
         assert!(d < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "2x3")]
+    fn from_vec_reports_shape_on_mismatch() {
+        let _ = Matrix::from_vec(2, 3, vec![1.0; 5]);
+    }
+
+    /// Sizes above PAR_MIN_WORK so Pool::exact(4) genuinely multi-bands.
+    #[test]
+    fn parallel_products_bitwise_match_single_thread() {
+        let mut rng = Rng::new(21);
+        let a = Matrix::random(97, 211, &mut rng, 1.0);
+        let b = Matrix::random(211, 53, &mut rng, 1.0);
+        let p1 = Pool::exact(1);
+        for threads in [2usize, 4, 7] {
+            let pn = Pool::exact(threads);
+            assert_eq!(
+                a.matmul_with(&b, &p1).data,
+                a.matmul_with(&b, &pn).data,
+                "matmul diverged at {threads} threads"
+            );
+            let bt = b.transpose();
+            assert_eq!(
+                a.matmul_bt_with(&bt, &p1).data,
+                a.matmul_bt_with(&bt, &pn).data,
+                "matmul_bt diverged at {threads} threads"
+            );
+            let g = Matrix::random(211, 97, &mut rng, 1.0);
+            assert_eq!(
+                g.matmul_at_with(&b, &p1).data,
+                g.matmul_at_with(&b, &pn).data,
+                "matmul_at diverged at {threads} threads"
+            );
+            assert_eq!(
+                a.transpose_with(&p1).data,
+                a.transpose_with(&pn).data,
+                "transpose diverged at {threads} threads"
+            );
+        }
+    }
+
+    /// The banded kernels must agree bitwise with a naive triple loop:
+    /// both accumulate each output element over k in ascending order.
+    #[test]
+    fn parallel_matmul_bitwise_matches_naive_reference() {
+        let mut rng = Rng::new(22);
+        let (m, k, n) = (71, 130, 41);
+        let a = Matrix::random(m, k, &mut rng, 1.0);
+        let b = Matrix::random(k, n, &mut rng, 1.0);
+        let mut want = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for p in 0..k {
+                    acc += a.get(i, p) * b.get(p, j);
+                }
+                want.set(i, j, acc);
+            }
+        }
+        let got = a.matmul_with(&b, &Pool::exact(4));
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn parallel_band_split_handles_tiny_and_odd_rows() {
+        let mut rng = Rng::new(23);
+        let pool = Pool::exact(8); // more workers than rows
+        for (m, k, n) in [(1usize, 9usize, 7usize), (3, 4, 2), (5, 1, 5)] {
+            let a = Matrix::random(m, k, &mut rng, 1.0);
+            let b = Matrix::random(k, n, &mut rng, 1.0);
+            let got = a.matmul_with(&b, &pool);
+            let want = a.matmul_with(&b, &Pool::exact(1));
+            assert_eq!(got.data, want.data);
+        }
     }
 }

@@ -104,10 +104,11 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let cm = compress_model(&ctx.engine, &ctx.cfg, &ctx.params, &ctx.calib, &method, ratio)?;
     save_blocks(&cm.blocks, &out)?;
     println!(
-        "compressed '{}' with {method_name} @ {ratio} in {:.1}s \
+        "compressed '{}' with {method_name} @ {ratio} in {:.1}s on {} threads \
          (collect {:.1}s, solve {:.1}s, refine {:.1}s) -> {out}",
         knobs.config,
         t0.elapsed().as_secs_f64(),
+        aasvd::util::pool::auto_threads(),
         cm.report.secs_collect,
         cm.report.secs_solve,
         cm.report.secs_refine,

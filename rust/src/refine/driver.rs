@@ -10,6 +10,7 @@
 use crate::model::lowrank::BlockFactors;
 use crate::model::Config;
 use crate::runtime::{Engine, Value};
+use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 use anyhow::Result;
 
@@ -56,7 +57,9 @@ pub struct RefineReport {
 
 /// Refine one block in place. `x_shift`/`y_target` are [n_seqs, T, d]
 /// flattened sequence-major; sequences are resampled into batches of
-/// `cfg.refine_batch` each epoch.
+/// `cfg.refine_batch` each epoch. The optimizer step itself is one AOT
+/// artifact call; `pool` parallelizes the host-side batch packing that
+/// feeds it.
 pub fn refine_block(
     engine: &Engine,
     cfg: &Config,
@@ -64,6 +67,7 @@ pub fn refine_block(
     x_shift: &[f32],
     y_target: &[f32],
     opts: &RefineOptions,
+    pool: &Pool,
 ) -> Result<RefineReport> {
     let seq_elems = cfg.seq * cfg.d_model;
     assert_eq!(x_shift.len(), y_target.len());
@@ -93,14 +97,39 @@ pub fn refine_block(
     for _epoch in 0..opts.epochs {
         rng.shuffle(&mut order);
         let mut epoch_loss = 0.0;
+        // fan the per-row copies out only when a batch is big enough that
+        // spawning scoped workers beats a sequential memcpy (the packing
+        // is bandwidth-bound; small blocks lose to thread startup)
+        const PAR_MIN_BATCH_ELEMS: usize = 1 << 20;
+        let par_pack = pool.threads() > 1 && br * seq_elems >= PAR_MIN_BATCH_ELEMS;
         for chunk in order.chunks(br) {
-            // pack batch (pad by cycling the chunk)
-            for row in 0..br {
-                let src = chunk[row % chunk.len()];
-                xbatch[row * seq_elems..(row + 1) * seq_elems]
-                    .copy_from_slice(&x_shift[src * seq_elems..(src + 1) * seq_elems]);
-                ybatch[row * seq_elems..(row + 1) * seq_elems]
-                    .copy_from_slice(&y_target[src * seq_elems..(src + 1) * seq_elems]);
+            // pack batch (pad by cycling the chunk); rows are disjoint
+            if par_pack {
+                let jobs: Vec<_> = xbatch
+                    .chunks_exact_mut(seq_elems)
+                    .zip(ybatch.chunks_exact_mut(seq_elems))
+                    .enumerate()
+                    .map(|(row, (xb, yb))| {
+                        let src = chunk[row % chunk.len()];
+                        move || {
+                            xb.copy_from_slice(
+                                &x_shift[src * seq_elems..(src + 1) * seq_elems],
+                            );
+                            yb.copy_from_slice(
+                                &y_target[src * seq_elems..(src + 1) * seq_elems],
+                            );
+                        }
+                    })
+                    .collect();
+                pool.run(jobs);
+            } else {
+                for row in 0..br {
+                    let src = chunk[row % chunk.len()];
+                    xbatch[row * seq_elems..(row + 1) * seq_elems]
+                        .copy_from_slice(&x_shift[src * seq_elems..(src + 1) * seq_elems]);
+                    ybatch[row * seq_elems..(row + 1) * seq_elems]
+                        .copy_from_slice(&y_target[src * seq_elems..(src + 1) * seq_elems]);
+                }
             }
             let lr = sched.lr(step as usize) as f32;
             let out = engine.run(
@@ -192,7 +221,8 @@ mod tests {
             base_lr: 2e-3,
             ..Default::default()
         };
-        let report = refine_block(&engine, &cfg, &mut bf, &x, &y, &opts).unwrap();
+        let report =
+            refine_block(&engine, &cfg, &mut bf, &x, &y, &opts, &Pool::exact(2)).unwrap();
         let after = {
             let got = crate::model::lowrank::block_lr_forward(&cfg, &bf, &x, cfg.seq);
             crate::util::stats::mse(&got.y, &y)

@@ -7,6 +7,7 @@ pub mod cli;
 pub mod io;
 pub mod json;
 pub mod logging;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod threadpool;

@@ -1,0 +1,244 @@
+//! Scoped worker pool for the CPU-parallel compression math.
+//!
+//! Unlike [`crate::util::threadpool::ThreadPool`] (long-lived workers and
+//! `'static` jobs, used by the serving layer), this pool runs *borrowing*
+//! jobs through `std::thread::scope`: callers hand over a `Vec` of closures
+//! that may capture references to stack data (matrix bands, activation
+//! batches), and [`Pool::run`] returns their results **in submission
+//! order** no matter which worker finished first. That ordering rule is
+//! what makes every parallel reduction in the compression path
+//! deterministic: partial results are always merged in a fixed order,
+//! never completion order.
+//!
+//! Thread-count resolution for [`Pool::auto`] (first match wins):
+//!   1. an installed pool context ([`Pool::install`], so nested linalg
+//!      calls inherit the caller's budget instead of oversubscribing),
+//!   2. the `AA_SVD_THREADS` env var (operator override),
+//!   3. the process-global knob ([`set_global_threads`], fed by the
+//!      `--threads` CLI flag),
+//!   4. `std::thread::available_parallelism()`.
+//! [`Pool::exact`] pins the count and ignores all four — the determinism
+//! tests use it to compare 1-thread vs N-thread runs bit for bit.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static INSTALLED: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Set the process-global default worker count (0 = hardware parallelism).
+pub fn set_global_threads(n: usize) {
+    GLOBAL_THREADS.store(n, Ordering::SeqCst);
+}
+
+/// Resolve the effective worker count for [`Pool::auto`].
+pub fn auto_threads() -> usize {
+    let installed = INSTALLED.with(|c| c.get());
+    if installed > 0 {
+        return installed;
+    }
+    if let Ok(v) = std::env::var("AA_SVD_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    let global = GLOBAL_THREADS.load(Ordering::SeqCst);
+    if global > 0 {
+        return global;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// A fixed-width scoped worker pool. Holding one is free: threads are
+/// spawned per [`Pool::run`] call and joined before it returns.
+#[derive(Clone, Copy, Debug)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// Context/env/global/hardware-resolved width (the normal entry point).
+    pub fn auto() -> Pool {
+        Pool {
+            threads: auto_threads(),
+        }
+    }
+
+    /// `requested` workers if nonzero, else [`Pool::auto`] resolution.
+    pub fn new(requested: usize) -> Pool {
+        if requested > 0 {
+            Pool::exact(requested)
+        } else {
+            Pool::auto()
+        }
+    }
+
+    /// Exactly `n` workers, ignoring every knob (determinism tests).
+    pub fn exact(n: usize) -> Pool {
+        Pool { threads: n.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f` with this pool's width as the thread-local default, so
+    /// `Pool::auto()` calls deeper in the stack (e.g. inside linalg
+    /// kernels) inherit the caller's budget. The previous context is
+    /// restored on exit — including when `f` unwinds (a caught panic,
+    /// e.g. under the property-test harness, must not leak the width).
+    pub fn install<R>(&self, f: impl FnOnce() -> R) -> R {
+        struct Restore(usize);
+        impl Drop for Restore {
+            fn drop(&mut self) {
+                INSTALLED.with(|c| c.set(self.0));
+            }
+        }
+        let _restore = Restore(INSTALLED.with(|c| c.replace(self.threads)));
+        f()
+    }
+
+    /// Run all jobs, at most `threads` at a time; results come back in
+    /// submission order regardless of completion order. Jobs may borrow
+    /// from the caller's stack (scoped threads). With one worker — or one
+    /// job — everything runs inline on the calling thread.
+    pub fn run<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            return jobs.into_iter().map(|f| f()).collect();
+        }
+        // LIFO handout is fine: results are re-sorted by submission index.
+        let queue = Mutex::new(jobs.into_iter().enumerate().collect::<Vec<_>>());
+        let done = Mutex::new(Vec::<(usize, T)>::with_capacity(n));
+        // the guard drops inside this closure — no lock is held while a
+        // job runs
+        let next_job = || queue.lock().unwrap().pop();
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| {
+                    while let Some((i, f)) = next_job() {
+                        let r = f();
+                        done.lock().unwrap().push((i, r));
+                    }
+                });
+            }
+        });
+        let mut done = done.into_inner().unwrap();
+        done.sort_unstable_by_key(|p| p.0);
+        done.into_iter().map(|(_, r)| r).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_submission_order() {
+        let pool = Pool::exact(4);
+        let jobs: Vec<_> = (0..32usize)
+            .map(|i| {
+                move || {
+                    // later jobs finish first; order must still hold
+                    std::thread::sleep(std::time::Duration::from_micros(
+                        (32 - i as u64) * 50,
+                    ));
+                    i * i
+                }
+            })
+            .collect();
+        let out = pool.run(jobs);
+        assert_eq!(out, (0..32usize).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_runs_inline() {
+        let pool = Pool::exact(1);
+        let out = pool.run((0..5usize).map(|i| move || i + 1).collect());
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+        assert!(pool.run::<usize, fn() -> usize>(Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn jobs_may_borrow_stack_data() {
+        let data: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let pool = Pool::exact(3);
+        let sums = pool.run(
+            data.chunks(25)
+                .map(|c| move || c.iter().sum::<f64>())
+                .collect(),
+        );
+        assert_eq!(sums.len(), 4);
+        assert_eq!(sums.iter().sum::<f64>(), data.iter().sum::<f64>());
+    }
+
+    #[test]
+    fn nested_runs_do_not_deadlock() {
+        let outer = Pool::exact(2);
+        let out = outer.run(
+            (0..4usize)
+                .map(|i| {
+                    move || {
+                        let inner = Pool::exact(2);
+                        inner
+                            .run((0..4usize).map(|j| move || i * 10 + j).collect())
+                            .iter()
+                            .sum::<usize>()
+                    }
+                })
+                .collect(),
+        );
+        assert_eq!(out, vec![6, 46, 86, 126]);
+    }
+
+    #[test]
+    fn install_scopes_the_auto_width() {
+        // exact() ignores context; auto() must see the installed width
+        let pool = Pool::exact(3);
+        let seen = pool.install(|| Pool::auto().threads());
+        assert_eq!(seen, 3);
+        // nested installs restore the outer context
+        let outer = Pool::exact(2);
+        let (inner_seen, outer_seen) = outer.install(|| {
+            let inner = Pool::exact(5);
+            let i = inner.install(|| Pool::auto().threads());
+            (i, Pool::auto().threads())
+        });
+        assert_eq!(inner_seen, 5);
+        assert_eq!(outer_seen, 2);
+    }
+
+    #[test]
+    fn more_jobs_than_workers_all_complete() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let count = AtomicUsize::new(0);
+        let pool = Pool::exact(2);
+        pool.run(
+            (0..100)
+                .map(|_| {
+                    let count = &count;
+                    move || {
+                        count.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+                .collect(),
+        );
+        assert_eq!(count.load(Ordering::SeqCst), 100);
+    }
+}

@@ -1,0 +1,150 @@
+//! Thread-count invariance of the parallel compression path.
+//!
+//! The contract (see util::pool): every parallel reduction merges partials
+//! in a fixed order and every banded matrix kernel accumulates each output
+//! element in the same order as the sequential kernel, so worker count
+//! never changes results. These tests pin that end to end — from raw
+//! matmuls up to full `compress_model` artifacts — without needing the
+//! PJRT artifacts (the pure-Rust [`ReferenceCollector`] drives collection).
+
+use aasvd::compress::{compress_model, CovTriple, Method, Objective, ReferenceCollector};
+use aasvd::data::{Batcher, Corpus, Domain, TokenBatch};
+use aasvd::linalg::Matrix;
+use aasvd::model::Config;
+use aasvd::testkit::approx::rel_err;
+use aasvd::util::pool::Pool;
+use aasvd::util::rng::Rng;
+
+fn full_calib(cfg: &Config, n_batches: usize, seed: u64) -> Vec<TokenBatch> {
+    let corpus = Corpus::generate(Domain::Wiki, 20_000, seed);
+    let batcher = Batcher::new(cfg.batch, cfg.seq);
+    let calib: Vec<_> = batcher
+        .sequential(&corpus.train, n_batches)
+        .into_iter()
+        .filter(|b| b.real_rows == cfg.batch)
+        .collect();
+    assert!(calib.len() >= 2, "need at least two full calibration batches");
+    calib
+}
+
+/// Banded-parallel matmul/gram against a naive triple loop: both
+/// accumulate each element over k ascending, so they match bitwise.
+#[test]
+fn tiled_parallel_matmul_and_gram_match_naive_reference() {
+    let mut rng = Rng::new(31);
+    let (m, k, n) = (93, 140, 57);
+    let a = Matrix::random(m, k, &mut rng, 1.0);
+    let b = Matrix::random(k, n, &mut rng, 1.0);
+
+    let mut naive = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for p in 0..k {
+                acc += a.get(i, p) * b.get(p, j);
+            }
+            naive.set(i, j, acc);
+        }
+    }
+    for threads in [1usize, 2, 4] {
+        let pool = Pool::exact(threads);
+        assert_eq!(
+            a.matmul_with(&b, &pool).data,
+            naive.data,
+            "matmul diverged from naive at {threads} threads"
+        );
+    }
+
+    // gram: Aᵀ A, parallel vs sequential, bitwise
+    let g1 = a.matmul_at_with(&a, &Pool::exact(1));
+    let g4 = a.matmul_at_with(&a, &Pool::exact(4));
+    assert_eq!(g1.data, g4.data, "gram accumulation diverged across threads");
+}
+
+/// Covariance accumulation partials merge in batch order — bitwise equal
+/// for any worker count.
+#[test]
+fn covariance_accumulation_thread_count_invariant() {
+    let mut rng = Rng::new(32);
+    let d = 24;
+    let batches: Vec<Vec<f32>> = (0..5)
+        .map(|_| (0..64 * d).map(|_| rng.normal()).collect())
+        .collect();
+    let views: Vec<&[f32]> = batches.iter().map(|b| b.as_slice()).collect();
+    let c1 = CovTriple::accumulate_same(&Pool::exact(1), d, &views);
+    for threads in [2usize, 4, 8] {
+        let cn = CovTriple::accumulate_same(&Pool::exact(threads), d, &views);
+        assert_eq!(
+            c1.s_orig.data, cn.s_orig.data,
+            "covariance diverged at {threads} threads"
+        );
+        assert_eq!(c1.tokens, cn.tokens);
+    }
+}
+
+/// Full Algorithm 2 on the synthetic tiny model: 1-thread and 4-thread
+/// runs must produce equal artifacts (factors and rank masks), for both a
+/// shift-collecting objective (anchored) and a same-input one.
+#[test]
+fn compress_model_artifacts_equal_across_thread_counts() {
+    let cfg = Config::builtin("tiny").unwrap();
+    let params = aasvd::model::init::init_params(&cfg, &mut Rng::new(9));
+    let calib = full_calib(&cfg, 3, 11);
+
+    for objective in [Objective::Anchored, Objective::InputAware] {
+        let solo = Method::builder(format!("{}_t1", objective.name()))
+            .objective(objective)
+            .threads(1)
+            .build();
+        let quad = Method::builder(format!("{}_t4", objective.name()))
+            .objective(objective)
+            .threads(4)
+            .build();
+        let c1 =
+            compress_model(&ReferenceCollector, &cfg, &params, &calib, &solo, 0.6).unwrap();
+        let c4 =
+            compress_model(&ReferenceCollector, &cfg, &params, &calib, &quad, 0.6).unwrap();
+        assert_eq!(c1.blocks.len(), c4.blocks.len());
+        for (i, (b1, b4)) in c1.blocks.iter().zip(&c4.blocks).enumerate() {
+            let re = rel_err(&b1.factors.data, &b4.factors.data);
+            assert!(
+                re <= 1e-12,
+                "{} block {i}: factors diverge across thread counts (rel err {re:.3e})",
+                objective.name()
+            );
+            assert_eq!(
+                b1.masks.data, b4.masks.data,
+                "{} block {i}: rank masks diverge",
+                objective.name()
+            );
+        }
+        // and the artifacts are sane, not just equal
+        for b in &c1.blocks {
+            assert!(b.factors.data.iter().all(|v| v.is_finite()));
+        }
+    }
+}
+
+/// The quantized path (extra per-linear state) must also be invariant.
+#[test]
+fn quantized_compress_thread_count_invariant() {
+    let cfg = Config::builtin("tiny").unwrap();
+    let params = aasvd::model::init::init_params(&cfg, &mut Rng::new(10));
+    let calib = full_calib(&cfg, 2, 13);
+
+    let build = |threads: usize| {
+        Method::builder(format!("dobi_q_t{threads}"))
+            .objective(Objective::ShiftAware)
+            .quant()
+            .threads(threads)
+            .build()
+    };
+    let c1 = compress_model(&ReferenceCollector, &cfg, &params, &calib, &build(1), 0.7)
+        .unwrap();
+    let c4 = compress_model(&ReferenceCollector, &cfg, &params, &calib, &build(4), 0.7)
+        .unwrap();
+    for (b1, b4) in c1.blocks.iter().zip(&c4.blocks) {
+        assert!(rel_err(&b1.factors.data, &b4.factors.data) <= 1e-12);
+    }
+    assert!((c1.report.quant_err - c4.report.quant_err).abs() <= 1e-12);
+}
