@@ -2,9 +2,15 @@
 //! (d_model=256, d_ff=704 from `base`; plus the 1k-class sizes), including
 //! the banded-parallel kernels at pinned worker counts — the 1-vs-4-thread
 //! rows are the scaling record CI's bench-smoke job archives per PR.
+//!
+//! The `eigh` rows double as the eigensolver regression gate: the
+//! tridiagonal pipeline must beat the retained Jacobi oracle at
+//! d_model-scale while matching its spectrum (asserted here, so a
+//! accuracy regression fails bench-smoke, not just a dashboard).
 
 use aasvd::bench::Bench;
-use aasvd::linalg::{cholesky, eigh, svd_k, Matrix};
+use aasvd::linalg::{cholesky, eigh_jacobi, eigh_values_with, eigh_with, svd_k_with, Matrix};
+use aasvd::testkit::approx::spectrum_gap;
 use aasvd::util::pool::Pool;
 use aasvd::util::rng::Rng;
 
@@ -64,19 +70,63 @@ fn main() {
         });
     }
 
-    for n in [128usize, 256] {
+    // eigensolvers: tridiagonal pipeline (the hot path) vs the Jacobi
+    // oracle, at d_model scale. The `eigh(jacobi) 512` / `eigh 512
+    // threads=1` pair is the speedup trajectory CI's bench-smoke archives
+    // and gates on (>= 5x required).
+    for n in [128usize, 256, 512] {
         let s = Matrix::random_spd(n, &mut rng);
+
+        // the oracle is O(sweeps * n^3) slow: at d_model scale pin it to
+        // one warmup pass (cold-cache cost must not inflate the measured
+        // speedup) plus exactly one timed iteration — max_iters is what
+        // actually caps the loop; min_iters alone would keep iterating to
+        // target_secs. The last run's result feeds the accuracy gate.
+        let mut oracle = None;
+        let (saved_min, saved_max, saved_warm) = (b.min_iters, b.max_iters, b.warmup);
+        if n >= 256 {
+            b.min_iters = 1;
+            b.max_iters = 1;
+            b.warmup = 1;
+        }
         b.run(&format!("eigh(jacobi) {n}"), None, || {
-            std::hint::black_box(eigh(&s));
+            oracle = Some(eigh_jacobi(&s));
         });
+        b.min_iters = saved_min;
+        b.max_iters = saved_max;
+        b.warmup = saved_warm;
+
+        for threads in [1usize, 4] {
+            let pool = Pool::exact(threads);
+            b.run(&format!("eigh {n} threads={threads}"), None, || {
+                std::hint::black_box(eigh_with(&s, &pool));
+            });
+        }
+        b.run(&format!("eigh_values {n}"), None, || {
+            std::hint::black_box(eigh_values_with(&s, &Pool::exact(1)));
+        });
+
+        // accuracy gate: the fast path must match the oracle's spectrum
+        let (oracle, _) = oracle.expect("oracle bench ran at least once");
+        let (vals, _) = eigh_with(&s, &Pool::exact(1));
+        let gap = spectrum_gap(&vals, &oracle);
+        println!("eigh vs jacobi spectrum gap n={n}: {gap:.3e}");
+        assert!(gap <= 1e-9, "eigh accuracy regression at n={n}: gap {gap:.3e}");
     }
 
     // the actual CompressLayer SVD shapes: M is [m, n] with min side = d
     for (m, n, k) in [(256usize, 256usize, 85usize), (704, 256, 128), (256, 704, 85)] {
         let a = Matrix::random(m, n, &mut rng, 1.0);
-        b.run(&format!("svd_k {m}x{n} k={k}"), None, || {
-            std::hint::black_box(svd_k(&a, k));
-        });
+        for threads in [1usize, 4] {
+            let pool = Pool::exact(threads);
+            b.run(
+                &format!("svd_k {m}x{n} k={k} threads={threads}"),
+                None,
+                || {
+                    std::hint::black_box(svd_k_with(&a, k, &pool));
+                },
+            );
+        }
     }
     b.save("linalg");
 }

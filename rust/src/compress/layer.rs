@@ -8,7 +8,8 @@
 //!   5. [U_k, Σ_k, V_k] = SVD_k(M)
 //!   6. U = U_k Σ_k,  V = R⁻ᵀ V_k      so  W' = U Vᵀ
 
-use crate::linalg::{cholesky_jittered, right_mul_inv_rt, solve_upper_t, svd_k, Matrix};
+use crate::linalg::{cholesky_jittered, right_mul_inv_rt, solve_upper_t, svd_k_with, Matrix};
+use crate::util::pool::Pool;
 
 /// Low-rank factors U [m×k], V [n×k] (active rank k, unpadded).
 #[derive(Clone, Debug)]
@@ -43,9 +44,25 @@ impl Factors {
 /// Default Tikhonov start for rank-deficient covariances.
 pub const DEFAULT_EPS0: f64 = 1e-6;
 
-/// Theorem 3.2 closed form. `w` is the dense weight [m, n] row-major;
-/// `c` = A Bᵀ and `s` = B Bᵀ are [n, n].
+/// Theorem 3.2 closed form ([`Pool::auto`] resolution). `w` is the dense
+/// weight [m, n] row-major; `c` = A Bᵀ and `s` = B Bᵀ are [n, n].
 pub fn compress_layer(w: &[f32], m: usize, n: usize, c: &Matrix, s: &Matrix, k: usize) -> Factors {
+    compress_layer_with(w, m, n, c, s, k, &Pool::auto())
+}
+
+/// [`compress_layer`] on an explicit worker pool: the W·C product and the
+/// truncated SVD (Gram product + tridiagonal eigensolve) run row-banded
+/// on `pool`, so the per-group concurrent solves in `compress::pipeline`
+/// never serialize on the eigensolver.
+pub fn compress_layer_with(
+    w: &[f32],
+    m: usize,
+    n: usize,
+    c: &Matrix,
+    s: &Matrix,
+    k: usize,
+    pool: &Pool,
+) -> Factors {
     assert_eq!(w.len(), m * n);
     assert_eq!((c.rows, c.cols), (n, n));
     assert_eq!((s.rows, s.cols), (n, n));
@@ -54,10 +71,10 @@ pub fn compress_layer(w: &[f32], m: usize, n: usize, c: &Matrix, s: &Matrix, k: 
     let (r, _eps) = cholesky_jittered(s, DEFAULT_EPS0);
     let wm = Matrix::from_f32(m, n, w);
     // step 4: M = (W C) R^{-T}
-    let wc = wm.matmul(c);
+    let wc = wm.matmul_with(c, pool);
     let mmat = right_mul_inv_rt(&wc, &r);
     // step 5
-    let svd = svd_k(&mmat, k);
+    let svd = svd_k_with(&mmat, k, pool);
     // step 6: U = U_k Σ_k ; V = R^{-T} V_k
     let mut u = vec![0f32; m * k];
     for i in 0..m {
@@ -72,9 +89,14 @@ pub fn compress_layer(w: &[f32], m: usize, n: usize, c: &Matrix, s: &Matrix, k: 
 
 /// Objective ① baseline: plain truncated SVD of W (Eckart–Young).
 pub fn compress_layer_plain(w: &[f32], m: usize, n: usize, k: usize) -> Factors {
+    compress_layer_plain_with(w, m, n, k, &Pool::auto())
+}
+
+/// [`compress_layer_plain`] on an explicit worker pool.
+pub fn compress_layer_plain_with(w: &[f32], m: usize, n: usize, k: usize, pool: &Pool) -> Factors {
     let k = k.min(m).min(n).max(1);
     let wm = Matrix::from_f32(m, n, w);
-    let svd = svd_k(&wm, k);
+    let svd = svd_k_with(&wm, k, pool);
     let mut u = vec![0f32; m * k];
     for i in 0..m {
         for p in 0..k {
@@ -100,6 +122,19 @@ pub fn compress_layer_asvd(
     alpha: f64,
     k: usize,
 ) -> Factors {
+    compress_layer_asvd_with(w, m, n, channel_scales, alpha, k, &Pool::auto())
+}
+
+/// [`compress_layer_asvd`] on an explicit worker pool.
+pub fn compress_layer_asvd_with(
+    w: &[f32],
+    m: usize,
+    n: usize,
+    channel_scales: &[f64],
+    alpha: f64,
+    k: usize,
+    pool: &Pool,
+) -> Factors {
     assert_eq!(channel_scales.len(), n);
     let k = k.min(m).min(n).max(1);
     let s: Vec<f64> = channel_scales
@@ -113,7 +148,7 @@ pub fn compress_layer_asvd(
             ws.set(i, j, w[i * n + j] as f64 * s[j]);
         }
     }
-    let svd = svd_k(&ws, k);
+    let svd = svd_k_with(&ws, k, pool);
     let mut u = vec![0f32; m * k];
     for i in 0..m {
         for p in 0..k {
@@ -169,6 +204,7 @@ fn trace_quad(a: &Matrix, s: &Matrix, b: &Matrix) -> f64 {
 mod tests {
     use super::*;
     use crate::compress::cov::CovTriple;
+    use crate::linalg::svd_k;
     use crate::testkit::approx::rel_err;
     use crate::testkit::prop;
     use crate::util::rng::Rng;

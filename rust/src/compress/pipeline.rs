@@ -22,7 +22,9 @@
 //! order of the paper is never reordered).
 
 use super::cov::CovTriple;
-use super::layer::{compress_layer, compress_layer_asvd, compress_layer_plain, Factors};
+use super::layer::{
+    compress_layer_asvd_with, compress_layer_plain_with, compress_layer_with, Factors,
+};
 use super::objective::Objective;
 use super::quant::quantize_factors_inplace;
 use super::rank::{Allocation, RankScheme};
@@ -465,8 +467,11 @@ impl Collector for ReferenceCollector {
 }
 
 /// Solve one linear's closed form. Pure math over shared-read state — a
-/// group's solves run concurrently. Returns the unpadded factors and the
-/// quantization error (0.0 unless the method quantizes).
+/// group's solves run concurrently, each with its own share of the worker
+/// budget (`pool`) threaded down through the whitening solve, the Gram
+/// products and the tridiagonal eigensolver. Returns the unpadded factors
+/// and the quantization error (0.0 unless the method quantizes).
+#[allow(clippy::too_many_arguments)]
 fn solve_one(
     method: &Method,
     cfg: &Config,
@@ -475,15 +480,16 @@ fn solve_one(
     lin: &str,
     cov: &CovTriple,
     k: usize,
+    pool: &Pool,
 ) -> (Factors, f64) {
     let (m, n) = cfg.linear_dims(lin);
     let w = params.view(&format!("blocks.{block}.{lin}"));
     let mut f = if method.asvd_diag {
-        compress_layer_asvd(w, m, n, &cov.channel_scales(), 0.5, k)
+        compress_layer_asvd_with(w, m, n, &cov.channel_scales(), 0.5, k, pool)
     } else {
         match method.objective.assemble(cov) {
-            None => compress_layer_plain(w, m, n, k),
-            Some((c, s)) => compress_layer(w, m, n, &c, &s, k),
+            None => compress_layer_plain_with(w, m, n, k, pool),
+            Some((c, s)) => compress_layer_with(w, m, n, &c, &s, k, pool),
         }
     };
     let mut qerr = 0.0;
@@ -590,8 +596,9 @@ pub fn compress_model<C: Collector>(
             // (paper §B.1): solve them concurrently. The paper's
             // block-sequential error propagation is intact because the
             // shifted tap above was collected before any factor changed.
-            // Each solve installs an even share of the budget for its
-            // inner linalg kernels.
+            // Each solve gets an even share of the budget, passed down
+            // explicitly to its linalg kernels (and installed, so any
+            // auto-resolved stragglers inherit it too).
             let inner = Pool::exact(
                 (pool.threads() / linears.len().min(pool.threads())).max(1),
             );
@@ -605,7 +612,7 @@ pub fn compress_model<C: Collector>(
                             inner.install(|| {
                                 let k = alloc_ref.rank_of(lin);
                                 let (f, qerr) =
-                                    solve_one(method, cfg, params, i, lin, cov_ref, k);
+                                    solve_one(method, cfg, params, i, lin, cov_ref, k, &inner);
                                 (lin, f, qerr)
                             })
                         }

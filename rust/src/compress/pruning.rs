@@ -18,7 +18,7 @@
 use super::cov::CovTriple;
 use super::pipeline::{collect_dense_taps_for_pruning, embed_batches, Collector};
 use crate::data::TokenBatch;
-use crate::linalg::{eigh, Matrix};
+use crate::linalg::{eigh_with, Matrix};
 use crate::model::{Config, FlatStore};
 use crate::util::pool::Pool;
 use anyhow::Result;
@@ -174,6 +174,8 @@ pub fn prune_model<C: Collector>(
     } else {
         None
     };
+    // worker pool for the per-block eigensolves / projections below
+    let pool = Pool::auto();
 
     for b in 0..cfg.n_layers {
         match method {
@@ -211,14 +213,14 @@ pub fn prune_model<C: Collector>(
                 let covs = acts.as_ref().unwrap();
                 let q_keep = ((rho * cfg.d_model as f64).round() as usize)
                     .clamp(1, cfg.d_model);
-                let (_, qmat) = eigh(&covs[b].0.s_orig);
+                let (_, qmat) = eigh_with(&covs[b].0.s_orig, &pool);
                 let p = qmat.cols_range(0, q_keep); // [d, q]
-                let proj = p.matmul_bt(&p); // P Pᵀ [d, d]
+                let proj = p.matmul_bt_with(&p, &pool); // P Pᵀ [d, d]
                 for lin in ["wq", "wk", "wv", "w_gate", "w_up"] {
                     let (m, n) = cfg.linear_dims(lin);
                     let name = format!("blocks.{b}.{lin}");
                     let w = Matrix::from_f32(m, n, params.view(&name));
-                    let wp = w.matmul(&proj).to_f32();
+                    let wp = w.matmul_with(&proj, &pool).to_f32();
                     out.view_mut(&name).copy_from_slice(&wp);
                 }
             }

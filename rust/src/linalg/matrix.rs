@@ -32,10 +32,18 @@ fn bands_for(pool: &Pool, rows: usize, work: usize) -> usize {
 
 /// Split `out` (`rows` × `row_elems`, row-major) into contiguous row bands
 /// and run `body(first_row, band)` for each on the pool. Shared scaffolding
-/// for every banded kernel below; `body` must write each output element
-/// with the same accumulation order regardless of how the bands are cut —
-/// that is what keeps results bitwise identical at any worker count.
-fn run_banded<F>(pool: &Pool, rows: usize, row_elems: usize, work: usize, out: &mut [f64], body: F)
+/// for every banded kernel below and for the Householder/QL eigensolver in
+/// `linalg::tridiag`; `body` must write each output element with the same
+/// accumulation order regardless of how the bands are cut — that is what
+/// keeps results bitwise identical at any worker count.
+pub(crate) fn run_banded<F>(
+    pool: &Pool,
+    rows: usize,
+    row_elems: usize,
+    work: usize,
+    out: &mut [f64],
+    body: F,
+)
 where
     F: Fn(usize, &mut [f64]) + Sync,
 {

@@ -4,14 +4,25 @@
 //! xla_extension 0.5.1 cannot execute, so Cholesky / EVD / SVD live here.
 //! Sizes are bounded by the model's hidden dims (≤ ~1k), comfortably within
 //! pure-Rust range; see benches/linalg.rs for measured throughput.
+//!
+//! The symmetric eigensolver (`eigh`, feeding both the EVD whitening
+//! factor and the Gram-route `svd_k`) is the Householder + implicit-shift
+//! QL pipeline in `tridiag`, row-banded on the worker pool with the same
+//! bitwise thread-count-invariance contract as the matmul kernels; the
+//! old cyclic Jacobi solver is kept as `eigh_jacobi`, the property-test
+//! oracle.
 
 pub mod chol;
 pub mod eigh;
 pub mod matrix;
 pub mod qr;
 pub mod svd;
+pub mod tridiag;
 
 pub use chol::{cholesky, cholesky_jittered, right_mul_inv_rt, solve_lower, solve_upper_t};
-pub use eigh::{eigh, evd_whitening_factor};
+pub use eigh::{
+    eigh, eigh_jacobi, eigh_values, eigh_values_with, eigh_with, evd_whitening_factor,
+    evd_whitening_factor_with,
+};
 pub use matrix::Matrix;
-pub use svd::{svd, svd_k, Svd};
+pub use svd::{svd, svd_k, svd_k_with, tail_energy, Svd};

@@ -6,9 +6,15 @@
 //! so eigendecomposing the smaller Gram matrix (m×m or n×n) is both the
 //! cheapest and a numerically adequate route for the *leading* singular
 //! triples — the only ones truncation keeps.
+//!
+//! The `_with` variants take an explicit [`Pool`]: the Gram products, the
+//! tridiagonal eigensolve (`linalg::eigh` / `linalg::tridiag`) and the
+//! back-projection all run row-banded, bitwise identically for any worker
+//! count. The plain names resolve [`Pool::auto`].
 
-use super::eigh::eigh;
+use super::eigh::{eigh_values_with, eigh_with};
 use super::matrix::Matrix;
+use crate::util::pool::Pool;
 
 /// Result of a (possibly truncated) SVD: M ≈ U diag(s) V^T.
 #[derive(Clone, Debug)]
@@ -23,14 +29,21 @@ pub fn svd(m: &Matrix) -> Svd {
     svd_k(m, m.rows.min(m.cols))
 }
 
-/// Truncated SVD keeping the top-k singular triples.
+/// Truncated SVD keeping the top-k singular triples ([`Pool::auto`]).
 pub fn svd_k(mat: &Matrix, k: usize) -> Svd {
+    svd_k_with(mat, k, &Pool::auto())
+}
+
+/// Truncated SVD on an explicit worker pool: the Gram product, the
+/// tridiagonal eigensolve and the back-projection all run row-banded on
+/// `pool`, bitwise identically for any worker count.
+pub fn svd_k_with(mat: &Matrix, k: usize, pool: &Pool) -> Svd {
     let (m, n) = (mat.rows, mat.cols);
     let k = k.min(m.min(n));
     if m <= n {
         // Gram = M M^T = U Λ U^T;  σ = sqrt(λ);  V = M^T U Σ^{-1}
-        let gram = mat.matmul_bt(mat); // [m × m]
-        let (vals, q) = eigh(&gram);
+        let gram = mat.matmul_bt_with(mat, pool); // [m × m]
+        let (vals, q) = eigh_with(&gram, pool);
         let mut s = Vec::with_capacity(k);
         let mut u = Matrix::zeros(m, k);
         for j in 0..k {
@@ -42,7 +55,7 @@ pub fn svd_k(mat: &Matrix, k: usize) -> Svd {
         }
         // V = M^T U Σ^{-1}, columns with σ≈0 zeroed (they are truncated away
         // from any reconstruction anyway)
-        let mtu = mat.matmul_at(&u); // [n × k]
+        let mtu = mat.matmul_at_with(&u, pool); // [n × k]
         let mut v = Matrix::zeros(n, k);
         let smax = s.first().copied().unwrap_or(0.0).max(1e-300);
         for j in 0..k {
@@ -58,8 +71,8 @@ pub fn svd_k(mat: &Matrix, k: usize) -> Svd {
         Svd { u, s, v }
     } else {
         // work on the transpose and swap factors
-        let t = mat.transpose();
-        let r = svd_k(&t, k);
+        let t = mat.transpose_with(pool);
+        let r = svd_k_with(&t, k, pool);
         Svd {
             u: r.v,
             s: r.s,
@@ -68,34 +81,53 @@ pub fn svd_k(mat: &Matrix, k: usize) -> Svd {
     }
 }
 
-/// Rank-k reconstruction U diag(s) V^T.
+/// Rank-k reconstruction U diag(s) V^T ([`Pool::auto`]).
 pub fn reconstruct(svd: &Svd) -> Matrix {
+    reconstruct_with(svd, &Pool::auto())
+}
+
+/// Rank-k reconstruction through the banded parallel kernels:
+/// (U diag(s)) Vᵀ as a single `matmul_bt` over the factor columns instead
+/// of a naive triple loop, so truncation-error probes at d_model-class
+/// sizes pay the tiled, pool-scalable cost.
+pub fn reconstruct_with(svd: &Svd, pool: &Pool) -> Matrix {
     let (m, k) = (svd.u.rows, svd.s.len());
-    let n = svd.v.rows;
     let mut us = Matrix::zeros(m, k);
-    for j in 0..k {
-        for i in 0..m {
-            us.set(i, j, svd.u.get(i, j) * svd.s[j]);
-        }
-    }
-    let mut out = Matrix::zeros(m, n);
     for i in 0..m {
-        for j in 0..n {
-            let mut acc = 0.0;
-            for p in 0..k {
-                acc += us.get(i, p) * svd.v.get(j, p);
-            }
-            out.set(i, j, acc);
+        let row = us.row_mut(i);
+        let urow = svd.u.row(i);
+        for j in 0..k {
+            row[j] = urow[j] * svd.s[j];
         }
     }
-    out
+    us.matmul_bt_with(&svd.v, pool)
 }
 
 /// Squared Frobenius mass of the discarded tail: Σ_{i>k} σ_i².
 /// (The Eckart–Young optimum value of ‖M − SVD_k(M)‖²_F.)
+///
+/// Computed as ‖M‖²_F − Σ_{i≤k} λ_i(Gram) through the eigenvalues-only
+/// path — no U/V factors are ever formed, so the truncation-order probes
+/// pay the cheap O(n²) QL core instead of a full SVD.
 pub fn tail_energy(mat: &Matrix, k: usize) -> f64 {
-    let full = svd(mat);
-    full.s.iter().skip(k).map(|x| x * x).sum()
+    tail_energy_with(mat, k, &Pool::auto())
+}
+
+/// [`tail_energy`] on an explicit worker pool.
+pub fn tail_energy_with(mat: &Matrix, k: usize, pool: &Pool) -> f64 {
+    let (m, n) = (mat.rows, mat.cols);
+    let k = k.min(m.min(n));
+    // Gram of the smaller side; λ_i(Gram) = σ_i²
+    let gram = if m <= n {
+        mat.matmul_bt_with(mat, pool) // [m × m]
+    } else {
+        mat.matmul_at_with(mat, pool) // [n × n]
+    };
+    let vals = eigh_values_with(&gram, pool);
+    let total: f64 = mat.data.iter().map(|x| x * x).sum();
+    let kept: f64 = vals.iter().take(k).map(|&l| l.max(0.0)).sum();
+    // clamp: cancellation can leave a tiny negative residual at full rank
+    (total - kept).max(0.0)
 }
 
 #[cfg(test)]
@@ -199,6 +231,55 @@ mod tests {
         a.set(2, 2, 1.0);
         let r = svd(&a);
         assert_close(&r.s, &[3.0, 2.0, 1.0], 1e-9);
+    }
+
+    #[test]
+    fn tail_energy_matches_full_svd_tail() {
+        // the eigenvalues-only formula ‖M‖²_F − Σ_{i≤k} λ_i must agree
+        // with the discarded-σ² sum from a full factorization
+        let mut rng = Rng::new(17);
+        for (m, n) in [(10usize, 7usize), (7, 10), (9, 9)] {
+            let a = Matrix::random(m, n, &mut rng, 1.0);
+            let full = svd(&a);
+            for k in 0..=m.min(n) {
+                let want: f64 = full.s.iter().skip(k).map(|x| x * x).sum();
+                let got = tail_energy(&a, k);
+                assert!(
+                    (got - want).abs() < 1e-8 * want.max(1.0),
+                    "({m},{n}) k={k}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tail_energy_of_rank_deficient_tail_is_zero() {
+        // rank-2 matrix: everything past k=2 is numerically zero
+        let mut rng = Rng::new(18);
+        let u = Matrix::random(9, 2, &mut rng, 1.0);
+        let v = Matrix::random(6, 2, &mut rng, 1.0);
+        let a = u.matmul_bt(&v);
+        let t = tail_energy(&a, 2);
+        assert!(t >= 0.0 && t < 1e-9 * a.frob_norm().powi(2), "t={t}");
+    }
+
+    #[test]
+    fn reconstruct_matches_naive_triple_loop() {
+        let mut rng = Rng::new(19);
+        let r = svd_k(&Matrix::random(12, 8, &mut rng, 1.0), 5);
+        let got = reconstruct(&r);
+        let (m, n, k) = (r.u.rows, r.v.rows, r.s.len());
+        let mut want = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for p in 0..k {
+                    acc += r.u.get(i, p) * r.s[p] * r.v.get(j, p);
+                }
+                want.set(i, j, acc);
+            }
+        }
+        assert_close(&got.data, &want.data, 1e-12);
     }
 
     #[test]

@@ -1,0 +1,415 @@
+//! Householder tridiagonalization + implicit-shift QL for symmetric
+//! matrices — the classic dense symmetric eigensolver pipeline.
+//!
+//! The cyclic Jacobi solver this replaces on the hot path runs up to 60
+//! full O(n³) sweeps of column-strided rotations. This pipeline does the
+//! O(n³) work once, in three cache-friendly stages:
+//!
+//!   1. [`householder_tridiag_with`] — n−2 Householder reflections reduce
+//!      S to a symmetric tridiagonal T (diagonal `d`, subdiagonal `e`).
+//!      The per-step matvec and symmetric rank-2 update run row-banded on
+//!      the PR-2 [`Pool`]; the optional back-transformation accumulates
+//!      Q = H₀·H₁·…·H_{n−3} the same way.
+//!   2. [`ql_implicit_shift`] — implicit-shift QL iteration deflates T one
+//!      eigenvalue at a time. This is the cheap O(n²) serial core; with
+//!      `rots` provided it records every Givens rotation instead of
+//!      applying it, so the O(n³) eigenvector update is deferred.
+//!   3. [`apply_rotations_with`] — replays the recorded rotation sequence
+//!      against the columns of Q, row-banded on the pool. Rows are
+//!      independent and each row applies the identical sequence in order,
+//!      so the result is bitwise identical for any worker count.
+//!
+//! **Determinism contract** (see `tests/parallel_determinism.rs`): every
+//! parallel region here is either elementwise (rank-2 update, rotation
+//! replay) or accumulates per output element in ascending index order
+//! regardless of how the row bands are cut (matvec, vᵀQ row products), so
+//! eigenpairs are bitwise identical at 1 and N threads. The QL core is
+//! serial and shared by the values-only and full paths, which is why
+//! `eigh_values` returns bitwise the same spectrum as `eigh`.
+
+use super::matrix::{run_banded, Matrix};
+use crate::util::pool::Pool;
+
+/// Symmetric tridiagonal form of S: `S = Q T Qᵀ` with `T = tridiag(e, d, e)`.
+/// `q` is `None` when the caller asked for eigenvalues only (the
+/// back-transformation is roughly half the tridiagonalization cost).
+pub struct Tridiagonal {
+    /// diagonal of T, length n
+    pub d: Vec<f64>,
+    /// subdiagonal of T (`e[i] = T[i+1][i]`), length n−1 (empty for n ≤ 1)
+    pub e: Vec<f64>,
+    /// orthogonal back-transformation, if requested
+    pub q: Option<Matrix>,
+}
+
+/// One recorded Givens rotation of the QL iteration: acts on columns
+/// `(col, col+1)` of the eigenvector matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct Rotation {
+    pub col: usize,
+    pub c: f64,
+    pub s: f64,
+}
+
+/// The QL iteration failed to deflate an eigenvalue within the sweep
+/// budget (pathological input, e.g. non-finite entries). Callers fall
+/// back to the Jacobi oracle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NoConverge;
+
+/// Householder reduction S → T (Golub & Van Loan §8.3). `s` must be
+/// square and is treated as symmetric (only its lower triangle drives the
+/// reflections after the initial symmetrize by the caller).
+pub fn householder_tridiag_with(s: &Matrix, want_q: bool, pool: &Pool) -> Tridiagonal {
+    assert_eq!(s.rows, s.cols, "tridiagonalization needs a square matrix");
+    let n = s.rows;
+    if n == 0 {
+        return Tridiagonal {
+            d: Vec::new(),
+            e: Vec::new(),
+            q: want_q.then(|| Matrix::zeros(0, 0)),
+        };
+    }
+    let mut a = s.clone();
+    let mut e = vec![0.0; n.saturating_sub(1)];
+    // Householder vectors (length n−1−k at step k) and their β = 2/‖v‖²,
+    // kept for the reverse-order Q accumulation below.
+    let mut vs: Vec<Vec<f64>> = Vec::new();
+    let mut betas: Vec<f64> = Vec::new();
+
+    for k in 0..n.saturating_sub(2) {
+        let m = n - k - 1; // active trailing dimension
+        // x = A[k+1.., k]
+        let mut v: Vec<f64> = (0..m).map(|i| a.get(k + 1 + i, k)).collect();
+        let off: f64 = v[1..].iter().map(|x| x * x).sum();
+        if off == 0.0 {
+            // column already tridiagonal — identity reflection
+            e[k] = v[0];
+            vs.push(Vec::new());
+            betas.push(0.0);
+            continue;
+        }
+        let norm = (v[0] * v[0] + off).sqrt();
+        let alpha = if v[0] >= 0.0 { -norm } else { norm };
+        v[0] -= alpha;
+        let vtv: f64 = v.iter().map(|x| x * x).sum();
+        let beta = 2.0 / vtv;
+        e[k] = alpha;
+
+        // p = β · A[k+1.., k+1..] · v — row-banded, each element a single
+        // ascending-order dot product (bitwise band-split invariant)
+        let mut p = vec![0.0; m];
+        {
+            let a_ref = &a;
+            let v_ref = &v;
+            run_banded(pool, m, 1, 2 * m * m, &mut p, |first, band| {
+                for (bi, pr) in band.iter_mut().enumerate() {
+                    let row = &a_ref.row(k + 1 + first + bi)[k + 1..];
+                    let mut acc = 0.0;
+                    for (x, y) in row.iter().zip(v_ref) {
+                        acc += x * y;
+                    }
+                    *pr = beta * acc;
+                }
+            });
+        }
+        // w = p − (β vᵀp / 2) v;  A ← A − v wᵀ − w vᵀ
+        let vtp: f64 = v.iter().zip(&p).map(|(x, y)| x * y).sum();
+        let kk = 0.5 * beta * vtp;
+        let w: Vec<f64> = p.iter().zip(&v).map(|(pi, vi)| pi - kk * vi).collect();
+        {
+            let ncols = a.cols;
+            let v_ref = &v;
+            let w_ref = &w;
+            let trail = &mut a.data[(k + 1) * ncols..];
+            run_banded(pool, m, ncols, 4 * m * m, trail, |first, band| {
+                for (bi, row) in band.chunks_exact_mut(ncols).enumerate() {
+                    let (vi, wi) = (v_ref[first + bi], w_ref[first + bi]);
+                    for j in 0..m {
+                        row[k + 1 + j] -= vi * w_ref[j] + wi * v_ref[j];
+                    }
+                }
+            });
+        }
+        // zero the reduced column (bookkeeping only; d/e carry the result)
+        a.set(k + 1, k, alpha);
+        a.set(k, k + 1, alpha);
+        for i in k + 2..n {
+            a.set(i, k, 0.0);
+            a.set(k, i, 0.0);
+        }
+        vs.push(v);
+        betas.push(beta);
+    }
+    if n >= 2 {
+        e[n - 2] = a.get(n - 1, n - 2);
+    }
+    let d: Vec<f64> = (0..n).map(|i| a.get(i, i)).collect();
+
+    let q = want_q.then(|| {
+        // Q = H₀·…·H_{n−3}, built in reverse so step k only touches the
+        // trailing (n−1−k)² block: Q ← Q − β v (vᵀ Q).
+        let mut q = Matrix::identity(n);
+        for k in (0..vs.len()).rev() {
+            let v = &vs[k];
+            let beta = betas[k];
+            if v.is_empty() {
+                continue;
+            }
+            let m = n - k - 1;
+            // t = vᵀ Q[k+1.., k+1..] — banded over output columns; each
+            // t_j accumulates ascending over rows (band-split invariant)
+            let mut t = vec![0.0; m];
+            {
+                let q_ref = &q;
+                run_banded(pool, m, 1, 2 * m * m, &mut t, |first, band| {
+                    for (bi, tj) in band.iter_mut().enumerate() {
+                        let j = k + 1 + first + bi;
+                        let mut acc = 0.0;
+                        for (r, vr) in v.iter().enumerate() {
+                            acc += vr * q_ref.get(k + 1 + r, j);
+                        }
+                        *tj = acc;
+                    }
+                });
+            }
+            let ncols = q.cols;
+            let t_ref = &t;
+            let trail = &mut q.data[(k + 1) * ncols..];
+            run_banded(pool, m, ncols, 2 * m * m, trail, |first, band| {
+                for (bi, row) in band.chunks_exact_mut(ncols).enumerate() {
+                    let bv = beta * v[first + bi];
+                    for j in 0..m {
+                        row[k + 1 + j] -= bv * t_ref[j];
+                    }
+                }
+            });
+        }
+        q
+    });
+
+    Tridiagonal { d, e, q }
+}
+
+/// Implicit-shift QL iteration on the tridiagonal (d, e) — the standard
+/// `tqli` recurrence. `e` has length n−1 on entry (`e[i] = T[i+1][i]`).
+/// On success `d` holds the eigenvalues (unsorted). When `rots` is
+/// provided every Givens rotation is recorded in application order
+/// instead of being applied to an eigenvector matrix inline; replay them
+/// with [`apply_rotations_with`]. Values-only callers pass `None` and
+/// skip the O(n³) eigenvector work entirely.
+pub fn ql_implicit_shift(
+    d: &mut [f64],
+    e: &mut [f64],
+    mut rots: Option<&mut Vec<Rotation>>,
+) -> Result<(), NoConverge> {
+    let n = d.len();
+    if n <= 1 {
+        return Ok(());
+    }
+    assert_eq!(e.len(), n - 1, "subdiagonal length must be n-1");
+    // working subdiagonal with a trailing sentinel zero (NR convention)
+    let mut ew = vec![0.0; n];
+    ew[..n - 1].copy_from_slice(e);
+
+    const MAX_ITERS: usize = 50;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find the first negligible subdiagonal at or after l
+            let mut m = l;
+            while m < n - 1 {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if ew[m].abs() + dd == dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > MAX_ITERS || !d[l].is_finite() || !ew[l].is_finite() {
+                return Err(NoConverge);
+            }
+            // Wilkinson-style shift from the leading 2×2
+            let mut g = (d[l + 1] - d[l]) / (2.0 * ew[l]);
+            let mut r = g.hypot(1.0);
+            let sign_r = if g >= 0.0 { r.abs() } else { -r.abs() };
+            g = d[m] - d[l] + ew[l] / (g + sign_r);
+            let mut s = 1.0;
+            let mut c = 1.0;
+            let mut p = 0.0;
+            let mut underflow = false;
+            for i in (l..m).rev() {
+                let f = s * ew[i];
+                let b = c * ew[i];
+                r = f.hypot(g);
+                ew[i + 1] = r;
+                if r == 0.0 {
+                    // recover: annihilated off-diagonal mid-sweep
+                    d[i + 1] -= p;
+                    ew[m] = 0.0;
+                    underflow = true;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // eigenvector rotation on columns (i, i+1), deferred
+                if let Some(out) = rots.as_deref_mut() {
+                    out.push(Rotation { col: i, c, s });
+                }
+            }
+            if underflow {
+                continue;
+            }
+            d[l] -= p;
+            ew[l] = g;
+            ew[m] = 0.0;
+        }
+    }
+    e.copy_from_slice(&ew[..n - 1]);
+    Ok(())
+}
+
+/// Replay a recorded QL rotation sequence against the columns of `q`,
+/// row-banded on the pool. Each row applies the identical sequence in
+/// order and rows never interact, so the result is bitwise identical for
+/// any worker count.
+pub fn apply_rotations_with(q: &mut Matrix, rots: &[Rotation], pool: &Pool) {
+    if rots.is_empty() || q.rows == 0 {
+        return;
+    }
+    let n = q.cols;
+    // 6 flops per rotation per row
+    let work = 6usize.saturating_mul(rots.len()).saturating_mul(q.rows);
+    let rows = q.rows;
+    run_banded(pool, rows, n, work, &mut q.data, |_, band| {
+        for row in band.chunks_exact_mut(n) {
+            for rot in rots {
+                let f = row[rot.col + 1];
+                row[rot.col + 1] = rot.s * row[rot.col] + rot.c * f;
+                row[rot.col] = rot.c * row[rot.col] - rot.s * f;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::approx::assert_close;
+    use crate::util::rng::Rng;
+
+    fn tridiag_dense(d: &[f64], e: &[f64]) -> Matrix {
+        let n = d.len();
+        let mut t = Matrix::zeros(n, n);
+        for i in 0..n {
+            t.set(i, i, d[i]);
+        }
+        for (i, &x) in e.iter().enumerate() {
+            t.set(i + 1, i, x);
+            t.set(i, i + 1, x);
+        }
+        t
+    }
+
+    #[test]
+    fn householder_preserves_similarity() {
+        let mut rng = Rng::new(41);
+        for n in [1usize, 2, 3, 8, 23] {
+            let s = Matrix::random_spd(n, &mut rng);
+            let tri = householder_tridiag_with(&s, true, &Pool::exact(1));
+            let q = tri.q.unwrap();
+            // Q orthogonal
+            let qtq = q.matmul_at(&q);
+            assert_close(&qtq.data, &Matrix::identity(n).data, 1e-10);
+            // Q T Qᵀ == S
+            let t = tridiag_dense(&tri.d, &tri.e);
+            let rec = q.matmul(&t).matmul_bt(&q);
+            let rel = rec.sub(&s).frob_norm() / s.frob_norm().max(1e-300);
+            assert!(rel < 1e-12, "n={n} rel={rel}");
+        }
+    }
+
+    /// n = 384 keeps the early steps' matvec / vᵀQ work (2·(n−1)²) above
+    /// the banding threshold (2^18) so the 4-thread run genuinely splits
+    /// every parallel region — smaller sizes would compare two
+    /// single-band executions and prove nothing.
+    #[test]
+    fn householder_band_split_bitwise_invariant() {
+        let mut rng = Rng::new(42);
+        let s = Matrix::random_spd(384, &mut rng);
+        let t1 = householder_tridiag_with(&s, true, &Pool::exact(1));
+        let t4 = householder_tridiag_with(&s, true, &Pool::exact(4));
+        assert_eq!(t1.d, t4.d);
+        assert_eq!(t1.e, t4.e);
+        assert_eq!(t1.q.unwrap().data, t4.q.unwrap().data);
+    }
+
+    #[test]
+    fn ql_solves_known_tridiagonal() {
+        // T = tridiag(1, 2, 1) of size n has λ_k = 2 + 2 cos(kπ/(n+1))
+        let n = 12;
+        let mut d = vec![2.0; n];
+        let mut e = vec![1.0; n - 1];
+        ql_implicit_shift(&mut d, &mut e, None).unwrap();
+        d.sort_by(|a, b| b.total_cmp(a));
+        let want: Vec<f64> = (1..=n)
+            .map(|k| 2.0 + 2.0 * (k as f64 * std::f64::consts::PI / (n as f64 + 1.0)).cos())
+            .collect();
+        assert_close(&d, &want, 1e-12);
+    }
+
+    #[test]
+    fn ql_rejects_non_finite_input() {
+        let mut d = vec![f64::NAN, 1.0, 2.0];
+        let mut e = vec![1.0, 0.5];
+        assert_eq!(ql_implicit_shift(&mut d, &mut e, None), Err(NoConverge));
+    }
+
+    #[test]
+    fn recorded_rotations_reproduce_eigenvectors() {
+        let mut rng = Rng::new(43);
+        let n = 15;
+        let s = Matrix::random_spd(n, &mut rng);
+        let tri = householder_tridiag_with(&s, true, &Pool::exact(1));
+        let mut d = tri.d.clone();
+        let mut e = tri.e.clone();
+        let mut rots = Vec::new();
+        ql_implicit_shift(&mut d, &mut e, Some(&mut rots)).unwrap();
+        let mut z = tri.q.unwrap();
+        apply_rotations_with(&mut z, &rots, &Pool::exact(1));
+        // S z_j == λ_j z_j for every column
+        let sz = s.matmul(&z);
+        for j in 0..n {
+            for i in 0..n {
+                let diff = (sz.get(i, j) - d[j] * z.get(i, j)).abs();
+                assert!(diff < 1e-8, "col {j} row {i}: residual {diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_replay_band_split_bitwise_invariant() {
+        let mut rng = Rng::new(44);
+        let n = 64;
+        let s = Matrix::random_spd(n, &mut rng);
+        let tri = householder_tridiag_with(&s, true, &Pool::exact(1));
+        let mut d = tri.d.clone();
+        let mut e = tri.e.clone();
+        let mut rots = Vec::new();
+        ql_implicit_shift(&mut d, &mut e, Some(&mut rots)).unwrap();
+        let base = tri.q.unwrap();
+        let mut z1 = base.clone();
+        let mut z4 = base.clone();
+        apply_rotations_with(&mut z1, &rots, &Pool::exact(1));
+        apply_rotations_with(&mut z4, &rots, &Pool::exact(4));
+        assert_eq!(z1.data, z4.data);
+    }
+}

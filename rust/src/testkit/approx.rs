@@ -28,6 +28,22 @@ pub fn assert_close_f32(a: &[f32], b: &[f32], tol: f32) {
     }
 }
 
+/// Max per-eigenvalue gap |a_i − b_i| between two equally-sorted spectra,
+/// relative to the reference spectrum's scale (max |b_i|). Scale-relative
+/// absolute agreement is the numerically meaningful criterion for the
+/// near-zero eigenvalues of rank-deficient matrices; shared by the
+/// eigh-vs-Jacobi property tests and the bench-smoke accuracy gate so
+/// both enforce the same contract.
+pub fn spectrum_gap(vals: &[f64], oracle: &[f64]) -> f64 {
+    assert_eq!(vals.len(), oracle.len(), "spectra must have equal length");
+    let scale = oracle.iter().fold(1e-300f64, |a, &x| a.max(x.abs()));
+    let mut gap = 0.0f64;
+    for (a, b) in vals.iter().zip(oracle) {
+        gap = gap.max((a - b).abs() / scale);
+    }
+    gap
+}
+
 /// Relative Frobenius distance ‖a−b‖/‖b‖ (slices viewed as flat vectors).
 pub fn rel_err(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len());
@@ -58,5 +74,12 @@ mod tests {
     #[test]
     fn rel_err_zero_for_equal() {
         assert_eq!(rel_err(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn spectrum_gap_is_relative_to_largest_eigenvalue() {
+        assert_eq!(spectrum_gap(&[10.0, 1.0], &[10.0, 1.0]), 0.0);
+        let gap = spectrum_gap(&[10.0, 2.0], &[10.0, 1.0]);
+        assert!((gap - 0.1).abs() < 1e-12, "gap={gap}");
     }
 }

@@ -9,7 +9,7 @@
 
 use aasvd::compress::{compress_model, CovTriple, Method, Objective, ReferenceCollector};
 use aasvd::data::{Batcher, Corpus, Domain, TokenBatch};
-use aasvd::linalg::Matrix;
+use aasvd::linalg::{eigh_values_with, eigh_with, svd_k_with, Matrix};
 use aasvd::model::Config;
 use aasvd::testkit::approx::rel_err;
 use aasvd::util::pool::Pool;
@@ -59,6 +59,51 @@ fn tiled_parallel_matmul_and_gram_match_naive_reference() {
     let g1 = a.matmul_at_with(&a, &Pool::exact(1));
     let g4 = a.matmul_at_with(&a, &Pool::exact(4));
     assert_eq!(g1.data, g4.data, "gram accumulation diverged across threads");
+}
+
+/// The tridiagonal eigensolver's parallel stages (Householder matvec and
+/// rank-2 updates, Q back-transformation, QL rotation replay) are
+/// row-banded with fixed accumulation order — eigenpairs must be bitwise
+/// equal for any worker count. n = 384 puts *every* stage — including the
+/// accumulation-order-sensitive dot-product stages, whose early-step work
+/// is 2·(n−1)² — above the banding work threshold (2^18), so multi-thread
+/// runs genuinely multi-band everywhere.
+#[test]
+fn eigh_thread_count_invariant() {
+    let mut rng = Rng::new(33);
+    let s = Matrix::random_spd(384, &mut rng);
+    let (v1, q1) = eigh_with(&s, &Pool::exact(1));
+    for threads in [2usize, 4] {
+        let (vn, qn) = eigh_with(&s, &Pool::exact(threads));
+        assert_eq!(v1, vn, "eigenvalues diverged at {threads} threads");
+        assert_eq!(q1.data, qn.data, "eigenvectors diverged at {threads} threads");
+    }
+    // the eigenvalues-only fast path shares the reduction + QL recurrence:
+    // same spectrum, bitwise, at any width
+    for threads in [1usize, 4] {
+        assert_eq!(
+            v1,
+            eigh_values_with(&s, &Pool::exact(threads)),
+            "values-only path diverged at {threads} threads"
+        );
+    }
+}
+
+/// Pool-threaded truncated SVD (Gram product -> eigh -> back-projection):
+/// bitwise equal factors for any worker count, both orientations.
+#[test]
+fn svd_k_thread_count_invariant() {
+    let mut rng = Rng::new(34);
+    for (m, n, k) in [(300usize, 180usize, 64usize), (180, 300, 64)] {
+        let a = Matrix::random(m, n, &mut rng, 1.0);
+        let r1 = svd_k_with(&a, k, &Pool::exact(1));
+        for threads in [2usize, 4] {
+            let rn = svd_k_with(&a, k, &Pool::exact(threads));
+            assert_eq!(r1.s, rn.s, "{m}x{n}: sigma diverged at {threads} threads");
+            assert_eq!(r1.u.data, rn.u.data, "{m}x{n}: U diverged at {threads} threads");
+            assert_eq!(r1.v.data, rn.v.data, "{m}x{n}: V diverged at {threads} threads");
+        }
+    }
 }
 
 /// Covariance accumulation partials merge in batch order — bitwise equal
