@@ -86,7 +86,6 @@ fn main() -> Result<()> {
     // closed loop submits every request up front: size the admission
     // queue to the request count so none are shed
     let server = Server::start_with(
-        "artifacts".into(),
         ctx.cfg.clone(),
         ServedModel::Compressed(ctx.params.clone(), blocks),
         ServerOptions {

@@ -82,7 +82,6 @@ fn main() -> Result<()> {
         ),
     ] {
         let server = Server::start_with(
-            "artifacts".into(),
             ctx.cfg.clone(),
             model,
             ServerOptions {

@@ -1,24 +1,52 @@
-//! Serving perf: closed-loop throughput + batch-occupancy of the
-//! continuous-batching engine on the tiny model (bench-speed), dense vs
-//! compressed-with-exact-factors (isolates low-rank kernel cost).
+//! Serving perf, artifact-free (the serving layer decodes through the
+//! KV-cached pure-Rust forward):
+//!
+//! - closed-loop throughput + batch occupancy of the continuous-batching
+//!   engine, dense vs compressed-with-exact-factors (isolates the
+//!   low-rank kernel cost);
+//! - the decode rows CI gates: KV-cached incremental decode vs the
+//!   full-prefix recompute oracle for a 256-token completion on the
+//!   synthetic (builtin tiny) config. Before timing, the two modes'
+//!   greedy outputs are asserted identical — speed means nothing if the
+//!   cache diverges from the oracle.
 
 use aasvd::bench::Bench;
 use aasvd::model::init::init_params;
 use aasvd::model::lowrank::exact_factors;
 use aasvd::model::Config;
-use aasvd::runtime::Engine;
 use aasvd::serve::batcher::bench_prompts;
-use aasvd::serve::{GenParams, ServedModel, Server};
+use aasvd::serve::{DecodeMode, GenParams, ServedModel, Server, ServerOptions};
 use aasvd::util::rng::Rng;
 
+const DECODE_TOKENS: usize = 256;
+
+/// One single-request completion through a fresh server; returns its text.
+fn decode_one(cfg: &Config, model: ServedModel, mode: DecodeMode, max_new: usize) -> String {
+    let server = Server::start_with(
+        cfg.clone(),
+        model,
+        ServerOptions {
+            decode: mode,
+            ..Default::default()
+        },
+    );
+    let resp = server
+        .submit(
+            "the cat",
+            GenParams {
+                max_new_tokens: max_new,
+                temperature: 0.0,
+                ..Default::default()
+            },
+        )
+        .expect("queue has room")
+        .wait()
+        .expect("request completes");
+    server.shutdown();
+    resp.text
+}
+
 fn main() {
-    if Engine::new("artifacts")
-        .map(|e| e.entry("tiny").is_err())
-        .unwrap_or(true)
-    {
-        eprintln!("no artifacts — run `make artifacts` first");
-        return;
-    }
     let cfg = Config::builtin("tiny").unwrap();
     let params = init_params(&cfg, &mut Rng::new(1));
     let blocks: Vec<_> = (0..cfg.n_layers)
@@ -26,10 +54,25 @@ fn main() {
         .collect();
     let prompts = bench_prompts(16, 5);
 
+    // cache-exactness smoke: cached and recompute greedy decodes must
+    // agree exactly before their speeds are compared
+    let cached = decode_one(&cfg, ServedModel::Dense(params.clone()), DecodeMode::Cached, 64);
+    let recomputed = decode_one(
+        &cfg,
+        ServedModel::Dense(params.clone()),
+        DecodeMode::Recompute,
+        64,
+    );
+    assert_eq!(
+        cached, recomputed,
+        "cached decode diverged from the full-prefix recompute oracle"
+    );
+
     let mut b = Bench::new();
     b.min_iters = 3;
     b.max_iters = 6;
-    let variants: Vec<(&str, Box<dyn Fn() -> ServedModel>)> = vec![
+    type ModelFactory = Box<dyn Fn() -> ServedModel>;
+    let variants: Vec<(&str, ModelFactory)> = vec![
         (
             "dense",
             Box::new({
@@ -51,8 +94,7 @@ fn main() {
             &format!("serve[{label}] 16 reqs x 8 toks (closed loop)"),
             Some(16.0 * 8.0),
             || {
-                let server =
-                    Server::start("artifacts".into(), cfg.clone(), make_model());
+                let server = Server::start(cfg.clone(), make_model());
                 let completions: Vec<_> = prompts
                     .iter()
                     .map(|p| {
@@ -73,6 +115,28 @@ fn main() {
                 }
                 let m = server.shutdown();
                 std::hint::black_box(m);
+            },
+        );
+    }
+
+    // decode-throughput rows (the CI gate): one request, 256 new tokens.
+    // Recompute re-runs the whole prefix per token — the pre-KV-cache
+    // path — so it pays O(len²) attention per step where cached pays
+    // O(len); CI gates cached at >= 3x recompute throughput.
+    b.min_iters = 2;
+    b.max_iters = 3;
+    b.warmup = 1;
+    for (label, mode) in [
+        ("cached", DecodeMode::Cached),
+        ("recompute", DecodeMode::Recompute),
+    ] {
+        let p = params.clone();
+        b.run(
+            &format!("decode[dense {label}] 1 req x {DECODE_TOKENS} toks"),
+            Some(DECODE_TOKENS as f64),
+            || {
+                let text = decode_one(&cfg, ServedModel::Dense(p.clone()), mode, DECODE_TOKENS);
+                std::hint::black_box(text);
             },
         );
     }

@@ -401,7 +401,8 @@ mod tests {
         // rank-2 data, rank-2 approx: data error should be tiny relative
         // to signal
         let err = direct_obj(&w, &f.dense(), m, n, &a, &a);
-        let sig = direct_obj(&w, &vec![0f32; m * n], m, n, &a, &a);
+        let zero = vec![0f32; m * n];
+        let sig = direct_obj(&w, &zero, m, n, &a, &a);
         assert!(err < 1e-3 * sig, "err {err} vs signal {sig}");
     }
 }

@@ -150,7 +150,7 @@ mod tests {
 
     #[test]
     fn bytes_accounting() {
-        let q = QuantMatrix::quantize(&vec![1.0; 50], 10, 5);
+        let q = QuantMatrix::quantize(&[1.0; 50], 10, 5);
         assert_eq!(q.bytes(), 50 + 20);
     }
 

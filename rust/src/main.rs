@@ -178,7 +178,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     } else {
         ServedModel::Compressed(ctx.params.clone(), load_blocks(&ctx.cfg, &compressed)?)
     };
-    let server = Server::start("artifacts".into(), ctx.cfg.clone(), model);
+    let server = Server::start(ctx.cfg.clone(), model);
     let completion = server
         .submit(
             &prompt,

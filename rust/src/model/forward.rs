@@ -44,20 +44,27 @@ pub fn linear(x: &[f32], w: &[f32], n: usize, m: usize, out: &mut [f32]) {
     }
 }
 
+/// Rotary embedding for one position's head row (`row`: [hd]) at absolute
+/// position `pos`. Pairs are interleaved (even, odd) — matches
+/// model.apply_rope. The packed [`apply_rope`] and the KV-cached
+/// [`attention_step`] both go through here, so a cached position is roped
+/// with exactly the ops the full forward would use.
+pub fn apply_rope_row(row: &mut [f32], pos: usize, hd: usize, theta: f64) {
+    for i in 0..hd / 2 {
+        let freq = 1.0 / theta.powf(2.0 * i as f64 / hd as f64);
+        let ang = pos as f64 * freq;
+        let (sin, cos) = (ang.sin() as f32, ang.cos() as f32);
+        let (a, b) = (row[2 * i], row[2 * i + 1]);
+        row[2 * i] = a * cos - b * sin;
+        row[2 * i + 1] = a * sin + b * cos;
+    }
+}
+
 /// Rotary embedding applied in place to one head's [T, hd] block.
-/// Pairs are interleaved (even, odd) — matches model.apply_rope.
 pub fn apply_rope(x: &mut [f32], t: usize, hd: usize, theta: f64) {
     assert_eq!(x.len(), t * hd);
-    for pos in 0..t {
-        let row = &mut x[pos * hd..(pos + 1) * hd];
-        for i in 0..hd / 2 {
-            let freq = 1.0 / theta.powf(2.0 * i as f64 / hd as f64);
-            let ang = pos as f64 * freq;
-            let (sin, cos) = (ang.sin() as f32, ang.cos() as f32);
-            let (a, b) = (row[2 * i], row[2 * i + 1]);
-            row[2 * i] = a * cos - b * sin;
-            row[2 * i + 1] = a * sin + b * cos;
-        }
+    for (pos, row) in x.chunks_exact_mut(hd).enumerate() {
+        apply_rope_row(row, pos, hd, theta);
     }
 }
 
@@ -142,6 +149,110 @@ pub fn attention(cfg: &Config, q: &mut [f32], k: &mut [f32], v: &[f32], t: usize
     out
 }
 
+/// Per-layer KV rows for one sequence: RoPE'd keys and raw values,
+/// appended one position at a time by [`attention_step`]. Layout is
+/// [len, d_model] row-major with heads contiguous inside a row — the same
+/// d-axis layout the packed [`attention`] gathers its head slices from.
+#[derive(Clone, Debug, Default)]
+pub struct LayerKv {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// Per-request KV cache: one growing K/V row pair per layer. `len` counts
+/// the positions absorbed through [`model_forward_step`] /
+/// [`crate::model::lowrank::model_lr_forward_step`] (prompt + generated).
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub layers: Vec<LayerKv>,
+    pub len: usize,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize) -> KvCache {
+        KvCache {
+            layers: vec![LayerKv::default(); n_layers],
+            len: 0,
+        }
+    }
+
+    /// Cache-resident bytes (K + V rows across all layers).
+    pub fn bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| (l.k.len() + l.v.len()) * std::mem::size_of::<f32>())
+            .sum()
+    }
+}
+
+/// One causal attention step against a layer's KV cache: ropes the new
+/// q/k rows (all heads, [d]) at the next position, appends the roped key
+/// and raw value to the cache, and returns the attention output row [d].
+///
+/// Cache-exactness contract: for the same prefix this returns exactly —
+/// bitwise — the last row of [`attention`] over that prefix. The masked
+/// full-row softmax agrees with the causal-prefix softmax here because a
+/// masked position contributes `exp(MASK_NEG - mx)`, which underflows to
+/// `+0.0` and leaves the running sum bit-identical; every other
+/// accumulation (q·k dot, probs·v) runs in the same index order as the
+/// packed kernel. Enforced by tests/kv_cache.rs.
+pub fn attention_step(
+    cfg: &Config,
+    layer: &mut LayerKv,
+    q: &mut [f32],
+    k: &mut [f32],
+    v: &[f32],
+) -> Vec<f32> {
+    let (d, h) = (cfg.d_model, cfg.n_heads);
+    let hd = cfg.head_dim();
+    assert_eq!(q.len(), d);
+    assert_eq!(k.len(), d);
+    assert_eq!(v.len(), d);
+    let pos = layer.k.len() / d;
+    let scale = 1.0 / (hd as f32).sqrt();
+    for hi in 0..h {
+        apply_rope_row(&mut q[hi * hd..(hi + 1) * hd], pos, hd, cfg.rope_theta);
+        apply_rope_row(&mut k[hi * hd..(hi + 1) * hd], pos, hd, cfg.rope_theta);
+    }
+    layer.k.extend_from_slice(k);
+    layer.v.extend_from_slice(v);
+
+    let t = pos + 1;
+    let mut out = vec![0.0f32; d];
+    let mut scores = vec![0.0f32; t];
+    for hi in 0..h {
+        let qrow = &q[hi * hd..(hi + 1) * hd];
+        for (j, s) in scores.iter_mut().enumerate() {
+            let krow = &layer.k[j * d + hi * hd..j * d + hi * hd + hd];
+            let mut acc = 0.0;
+            for (a, b_) in qrow.iter().zip(krow) {
+                acc += a * b_;
+            }
+            *s = acc * scale;
+        }
+        let mx = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for s in scores.iter_mut() {
+            *s = (*s - mx).exp();
+            sum += *s;
+        }
+        for s in scores.iter_mut() {
+            *s /= sum;
+        }
+        let orow = &mut out[hi * hd..(hi + 1) * hd];
+        for (j, &p) in scores.iter().enumerate() {
+            if p == 0.0 {
+                continue;
+            }
+            let vrow = &layer.v[j * d + hi * hd..j * d + hi * hd + hd];
+            for (o, vv) in orow.iter_mut().zip(vrow) {
+                *o += p * vv;
+            }
+        }
+    }
+    out
+}
+
 /// Intermediate activations collected by a dense block forward — the X_j
 /// inputs Algorithm 2 feeds to CompressLayer.
 pub struct BlockTaps {
@@ -205,6 +316,95 @@ pub fn block_forward(
     }
 }
 
+/// One-position dense block step against the layer's KV cache. `x` is the
+/// hidden row [d] at the new position; returns the block output row [d].
+/// Row-for-row the same ops as [`block_forward`], so it inherits the
+/// cache-exactness contract of [`attention_step`].
+pub fn block_forward_step(
+    cfg: &Config,
+    params: &FlatStore,
+    prefix: &str,
+    layer: &mut LayerKv,
+    x: &[f32],
+) -> Vec<f32> {
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+    let g = |n: &str| params.view(&format!("{prefix}{n}"));
+
+    let mut a_in = vec![0.0; d];
+    rmsnorm(x, g("attn_norm"), d, &mut a_in);
+
+    let mut q = vec![0.0; d];
+    let mut k = vec![0.0; d];
+    let mut v = vec![0.0; d];
+    linear(&a_in, g("wq"), d, d, &mut q);
+    linear(&a_in, g("wk"), d, d, &mut k);
+    linear(&a_in, g("wv"), d, d, &mut v);
+    let o_in = attention_step(cfg, layer, &mut q, &mut k, &v);
+
+    let mut attn_out = vec![0.0; d];
+    linear(&o_in, g("wo"), d, d, &mut attn_out);
+    let h: Vec<f32> = x.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
+
+    let mut m_in = vec![0.0; d];
+    rmsnorm(&h, g("mlp_norm"), d, &mut m_in);
+    let mut gate = vec![0.0; f];
+    let mut up = vec![0.0; f];
+    linear(&m_in, g("w_gate"), d, f, &mut gate);
+    linear(&m_in, g("w_up"), d, f, &mut up);
+    let d_in: Vec<f32> = gate
+        .iter()
+        .zip(&up)
+        .map(|(&gv, &uv)| silu(gv) * uv)
+        .collect();
+    let mut down = vec![0.0; d];
+    linear(&d_in, g("w_down"), f, d, &mut down);
+    h.iter().zip(&down).map(|(a, b)| a + b).collect()
+}
+
+/// One KV-cached decode step: absorb `token` at position `cache.len` and
+/// return its logits row [vocab]. Bitwise identical to the last row of
+/// [`model_forward`] over the same token prefix — O(len) attention work
+/// instead of O(len²) per step.
+pub fn model_forward_step(
+    cfg: &Config,
+    params: &FlatStore,
+    cache: &mut KvCache,
+    token: u32,
+) -> Vec<f32> {
+    assert_eq!(cache.layers.len(), cfg.n_layers);
+    let d = cfg.d_model;
+    let tok = token as usize;
+    assert!(tok < cfg.vocab, "token {tok} out of range");
+    let embed = params.view("embed");
+    let mut x = embed[tok * d..(tok + 1) * d].to_vec();
+    for (blk, layer) in cache.layers.iter_mut().enumerate() {
+        x = block_forward_step(cfg, params, &format!("blocks.{blk}."), layer, &x);
+    }
+    cache.len += 1;
+    let mut hn = vec![0.0; d];
+    rmsnorm(&x, params.view("final_norm"), d, &mut hn);
+    let mut logits = vec![0.0; cfg.vocab];
+    linear(&hn, params.view("lm_head"), d, cfg.vocab, &mut logits);
+    logits
+}
+
+/// Prefill: absorb a whole prompt into `cache` and return the logits row
+/// at its last position (one O(T²) pass over the prompt — the same total
+/// attention work as a single full forward, not one pass per token).
+pub fn model_forward_prefill(
+    cfg: &Config,
+    params: &FlatStore,
+    cache: &mut KvCache,
+    tokens: &[u32],
+) -> Vec<f32> {
+    assert!(!tokens.is_empty(), "prefill needs at least one token");
+    let mut logits = Vec::new();
+    for &tok in tokens {
+        logits = model_forward_step(cfg, params, cache, tok);
+    }
+    logits
+}
+
 /// Full dense model forward: tokens [B, T] -> logits [B, T, vocab].
 pub fn model_forward(cfg: &Config, params: &FlatStore, tokens: &[u32], t: usize) -> Vec<f32> {
     let d = cfg.d_model;
@@ -228,7 +428,13 @@ pub fn model_forward(cfg: &Config, params: &FlatStore, tokens: &[u32], t: usize)
 }
 
 /// Per-token NLL of `targets` under the model: [B, T].
-pub fn model_nll(cfg: &Config, params: &FlatStore, tokens: &[u32], targets: &[u32], t: usize) -> Vec<f32> {
+pub fn model_nll(
+    cfg: &Config,
+    params: &FlatStore,
+    tokens: &[u32],
+    targets: &[u32],
+    t: usize,
+) -> Vec<f32> {
     let logits = model_forward(cfg, params, tokens, t);
     nll_from_logits(&logits, targets, cfg.vocab)
 }
@@ -384,5 +590,57 @@ mod tests {
     fn param_layout_matches_store() {
         let (cfg, params) = setup();
         assert_eq!(params.data.len(), param_layout(&cfg).total);
+    }
+
+    #[test]
+    fn cached_step_matches_full_forward_bitwise() {
+        let (cfg, params) = setup();
+        let mut rng = Rng::new(77);
+        // run past cfg.seq: the cached path has no window
+        let n = cfg.seq + 5;
+        let tokens: Vec<u32> = (0..n).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let mut cache = KvCache::new(cfg.n_layers);
+        for (p, &tok) in tokens.iter().enumerate() {
+            let step = model_forward_step(&cfg, &params, &mut cache, tok);
+            let full = model_forward(&cfg, &params, &tokens[..=p], p + 1);
+            let want = &full[p * cfg.vocab..];
+            for (i, (a, b)) in step.iter().zip(want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "pos {p} logit {i}: {a} vs {b}");
+            }
+        }
+        assert_eq!(cache.len, n);
+        // K + V rows: n positions x n_layers x 2 x d floats
+        assert_eq!(cache.bytes(), n * cfg.n_layers * 2 * cfg.d_model * 4);
+    }
+
+    #[test]
+    fn prefill_equals_step_loop() {
+        let (cfg, params) = setup();
+        let tokens: Vec<u32> = (0..10).map(|i| (i * 13 % cfg.vocab) as u32).collect();
+        let mut c1 = KvCache::new(cfg.n_layers);
+        let pre = model_forward_prefill(&cfg, &params, &mut c1, &tokens);
+        let mut c2 = KvCache::new(cfg.n_layers);
+        let mut step = Vec::new();
+        for &tok in &tokens {
+            step = model_forward_step(&cfg, &params, &mut c2, tok);
+        }
+        assert_eq!(pre, step);
+        assert_eq!(c1.len, c2.len);
+        assert_eq!(c1.bytes(), c2.bytes());
+    }
+
+    #[test]
+    fn apply_rope_row_consistent_with_packed() {
+        let t = 6;
+        let hd = 8;
+        let mut rng = Rng::new(2);
+        let orig: Vec<f32> = (0..t * hd).map(|_| rng.normal()).collect();
+        let mut packed = orig.clone();
+        apply_rope(&mut packed, t, hd, 10000.0);
+        for pos in 0..t {
+            let mut row = orig[pos * hd..(pos + 1) * hd].to_vec();
+            apply_rope_row(&mut row, pos, hd, 10000.0);
+            assert_eq!(&row[..], &packed[pos * hd..(pos + 1) * hd]);
+        }
     }
 }

@@ -6,7 +6,9 @@
 //! AOT artifact serve every rank allocation (see python/compile/model.py).
 
 use super::config::{Config, BLOCK_LINEARS};
-use super::forward::{attention, linear, rmsnorm, silu, BlockTaps};
+use super::forward::{
+    attention, attention_step, linear, rmsnorm, silu, BlockTaps, KvCache, LayerKv,
+};
 use super::params::{factor_layout, mask_layout, FlatStore};
 
 /// One compressed block: trainables + rank masks.
@@ -152,6 +154,94 @@ pub fn block_lr_forward(
         m_in,
         d_in,
     }
+}
+
+/// One-position compressed block step against the layer's KV cache —
+/// the low-rank twin of [`crate::model::forward::block_forward_step`],
+/// sharing the same cached attention kernel so dense and compressed
+/// models decode through one cached path.
+pub fn block_lr_forward_step(
+    cfg: &Config,
+    bf: &BlockFactors,
+    layer: &mut LayerKv,
+    x: &[f32],
+) -> Vec<f32> {
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+
+    let mut a_in = vec![0.0; d];
+    rmsnorm(x, bf.factors.view("attn_norm"), d, &mut a_in);
+
+    let mut q = vec![0.0; d];
+    let mut k = vec![0.0; d];
+    let mut v = vec![0.0; d];
+    bf.apply_linear(cfg, "wq", &a_in, &mut q);
+    bf.apply_linear(cfg, "wk", &a_in, &mut k);
+    bf.apply_linear(cfg, "wv", &a_in, &mut v);
+    let o_in = attention_step(cfg, layer, &mut q, &mut k, &v);
+
+    let mut attn_out = vec![0.0; d];
+    bf.apply_linear(cfg, "wo", &o_in, &mut attn_out);
+    let h: Vec<f32> = x.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
+
+    let mut m_in = vec![0.0; d];
+    rmsnorm(&h, bf.factors.view("mlp_norm"), d, &mut m_in);
+    let mut gate = vec![0.0; f];
+    let mut up = vec![0.0; f];
+    bf.apply_linear(cfg, "w_gate", &m_in, &mut gate);
+    bf.apply_linear(cfg, "w_up", &m_in, &mut up);
+    let d_in: Vec<f32> = gate
+        .iter()
+        .zip(&up)
+        .map(|(&gv, &uv)| silu(gv) * uv)
+        .collect();
+    let mut down = vec![0.0; d];
+    bf.apply_linear(cfg, "w_down", &d_in, &mut down);
+    h.iter().zip(&down).map(|(a, b)| a + b).collect()
+}
+
+/// One KV-cached decode step through the compressed model. Bitwise
+/// identical to the last row of [`model_lr_forward`] over the same prefix
+/// (the cache-exactness contract; enforced by tests/kv_cache.rs).
+pub fn model_lr_forward_step(
+    cfg: &Config,
+    params: &FlatStore,
+    blocks: &[BlockFactors],
+    cache: &mut KvCache,
+    token: u32,
+) -> Vec<f32> {
+    assert_eq!(blocks.len(), cfg.n_layers);
+    assert_eq!(cache.layers.len(), cfg.n_layers);
+    let d = cfg.d_model;
+    let tok = token as usize;
+    assert!(tok < cfg.vocab, "token {tok} out of range");
+    let embed = params.view("embed");
+    let mut x = embed[tok * d..(tok + 1) * d].to_vec();
+    for (bf, layer) in blocks.iter().zip(cache.layers.iter_mut()) {
+        x = block_lr_forward_step(cfg, bf, layer, &x);
+    }
+    cache.len += 1;
+    let mut hn = vec![0.0; d];
+    rmsnorm(&x, params.view("final_norm"), d, &mut hn);
+    let mut logits = vec![0.0; cfg.vocab];
+    linear(&hn, params.view("lm_head"), d, cfg.vocab, &mut logits);
+    logits
+}
+
+/// Prefill the compressed model: absorb a whole prompt into `cache`,
+/// returning the logits row at its last position.
+pub fn model_lr_forward_prefill(
+    cfg: &Config,
+    params: &FlatStore,
+    blocks: &[BlockFactors],
+    cache: &mut KvCache,
+    tokens: &[u32],
+) -> Vec<f32> {
+    assert!(!tokens.is_empty(), "prefill needs at least one token");
+    let mut logits = Vec::new();
+    for &tok in tokens {
+        logits = model_lr_forward_step(cfg, params, blocks, cache, tok);
+    }
+    logits
 }
 
 /// Compressed full-model forward (dense embed/head + low-rank blocks).
@@ -367,6 +457,49 @@ mod tests {
         let dense = crate::model::forward::model_forward(&cfg, &p, &tokens, t);
         let lowr = model_lr_forward(&cfg, &p, &blocks, &tokens, t);
         assert_close_f32(&dense, &lowr, 5e-4);
+    }
+
+    #[test]
+    fn lr_cached_step_matches_full_forward_bitwise() {
+        let (cfg, p) = setup();
+        let mut blocks: Vec<BlockFactors> =
+            (0..cfg.n_layers).map(|i| exact_factors(&cfg, &p, i)).collect();
+        // truncate some ranks so the masked low-rank path is exercised,
+        // not just the exact full-rank factorization
+        for bf in blocks.iter_mut() {
+            bf.set_rank("wq", 5);
+            bf.set_rank("w_up", 7);
+        }
+        let mut rng = Rng::new(18);
+        let n = cfg.seq + 4;
+        let tokens: Vec<u32> = (0..n).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let mut cache = KvCache::new(cfg.n_layers);
+        for (pos, &tok) in tokens.iter().enumerate() {
+            let step = model_lr_forward_step(&cfg, &p, &blocks, &mut cache, tok);
+            let full = model_lr_forward(&cfg, &p, &blocks, &tokens[..=pos], pos + 1);
+            let want = &full[pos * cfg.vocab..];
+            for (i, (a, b)) in step.iter().zip(want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "pos {pos} logit {i}: {a} vs {b}");
+            }
+        }
+        assert_eq!(cache.len, n);
+    }
+
+    #[test]
+    fn lr_prefill_equals_step_loop() {
+        let (cfg, p) = setup();
+        let blocks: Vec<BlockFactors> =
+            (0..cfg.n_layers).map(|i| exact_factors(&cfg, &p, i)).collect();
+        let tokens: Vec<u32> = (0..9).map(|i| (i * 11 % cfg.vocab) as u32).collect();
+        let mut c1 = KvCache::new(cfg.n_layers);
+        let pre = model_lr_forward_prefill(&cfg, &p, &blocks, &mut c1, &tokens);
+        let mut c2 = KvCache::new(cfg.n_layers);
+        let mut step = Vec::new();
+        for &tok in &tokens {
+            step = model_lr_forward_step(&cfg, &p, &blocks, &mut c2, tok);
+        }
+        assert_eq!(pre, step);
+        assert_eq!(c1.len, c2.len);
     }
 
     #[test]

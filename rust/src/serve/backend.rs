@@ -1,31 +1,131 @@
-//! Model backends: the decode loop's view of "a thing that turns a packed
-//! token batch into logits".
+//! Model backends: the decode loop's view of "a thing that turns tokens
+//! into logits", redesigned around per-request sessions with KV caches.
 //!
-//! The serving engine is generic over [`ModelBackend`], so dense, low-rank
-//! compressed, and future quantized/sharded models all slot in without the
-//! decode loop knowing the difference. PJRT-backed backends are constructed
-//! *on the serve worker thread* (the PJRT client is not Sync) via the
-//! factory passed to `Server::with_backend`; [`ServedModel::into_backend`]
-//! is that factory for the two built-in model kinds.
+//! [`ModelBackend::prefill`] absorbs a whole prompt into a fresh
+//! [`Session`] (one O(T²)-attention pass) and returns the logits at its
+//! last position; [`ModelBackend::decode_step`] then appends one token per
+//! call at O(T) attention cost, reading and extending the session's KV
+//! cache. [`ModelBackend::oracle_logits`] keeps the pre-cache decode path
+//! — a full-prefix recompute per token — as the bitwise test oracle and
+//! bench baseline (driven by `DecodeMode::Recompute`).
 //!
-//! [`SyntheticBackend`] is an artifact-free stand-in for tests and load
-//! experiments: deterministic logits, optional simulated per-step latency.
+//! All three built-in backends are artifact-free: the dense and low-rank
+//! paths decode through the pure-Rust reference forward
+//! (`model::forward`, `model::lowrank`), which the AOT artifacts are
+//! validated against, so cached and recomputed logits can be compared
+//! bit for bit. The PJRT artifacts stay on the batch-shaped paths
+//! (calibration, refinement, eval), where round-tripping a KV cache
+//! through host literals per step would dominate the win (see DESIGN.md).
+//!
+//! [`SyntheticBackend`] is a deterministic stand-in for tests and load
+//! experiments: logits favor `(prev_token + 1) % vocab`, with optional
+//! simulated per-step latency.
 
-use crate::model::lowrank::{concat_factors, BlockFactors};
+use crate::model::forward::{
+    model_forward, model_forward_prefill, model_forward_step, KvCache,
+};
+use crate::model::lowrank::{
+    model_lr_forward, model_lr_forward_prefill, model_lr_forward_step, BlockFactors,
+};
 use crate::model::{Config, FlatStore};
-use crate::runtime::{Engine, Value};
 use anyhow::Result;
 use std::time::Duration;
 
+/// Per-request decode state: created by [`ModelBackend::prefill`],
+/// advanced one token at a time by [`ModelBackend::decode_step`], freed by
+/// dropping it (the engine drops the slot when a request retires).
+pub struct Session {
+    state: SessionState,
+    /// artifact label of the backend that created this session; checked
+    /// by `decode_step` so a session is never advanced by a different
+    /// backend kind (which would silently corrupt its cache)
+    backend: &'static str,
+}
+
+enum SessionState {
+    Kv(KvCache),
+    Synthetic { last: i32, len: usize },
+}
+
+impl Session {
+    /// Tokens absorbed so far (prompt + generated) — derived from the
+    /// backend state, so it can never drift out of sync with the cache.
+    pub fn len(&self) -> usize {
+        match &self.state {
+            SessionState::Kv(c) => c.len,
+            SessionState::Synthetic { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Label of the backend that created this session.
+    pub fn backend(&self) -> &'static str {
+        self.backend
+    }
+
+    /// Cache-resident bytes held by this session's KV cache.
+    pub fn kv_bytes(&self) -> usize {
+        match &self.state {
+            SessionState::Kv(c) => c.bytes(),
+            SessionState::Synthetic { .. } => 0,
+        }
+    }
+}
+
+/// Result of absorbing a prompt: the session plus the logits row
+/// ([vocab]) at the prompt's last position — the distribution the first
+/// generated token is sampled from.
+pub struct Prefill {
+    pub session: Session,
+    pub logits: Vec<f32>,
+}
+
 /// A forward-pass provider for the continuous-batching decode loop.
+///
+/// Contract: `prefill(p).logits`, and every subsequent `decode_step`
+/// logits row, must be **bitwise identical** to `oracle_logits` over the
+/// same token prefix (enforced by tests/kv_cache.rs and the serving
+/// bench's pre-timing assert).
 pub trait ModelBackend {
-    /// Name of the compiled artifact (or pseudo-artifact) this backend
-    /// decodes through; used for logs and metrics labels.
+    /// Name of the decode path; used for logs and metrics labels.
     fn artifact(&self) -> &'static str;
 
-    /// Forward a packed `[batch, seq]` i32 token batch; returns flat
-    /// logits of length `batch * seq * vocab`.
-    fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
+    /// Absorb `tokens` (a full prompt, never empty) into a fresh session
+    /// and return the logits row at its last position.
+    fn prefill(&mut self, tokens: &[i32]) -> Result<Prefill>;
+
+    /// Append one token to the session; returns the logits row [vocab]
+    /// at the new last position, at O(len) attention cost.
+    fn decode_step(&mut self, session: &mut Session, token: i32) -> Result<Vec<f32>>;
+
+    /// Full-prefix recompute oracle (the pre-KV-cache decode path):
+    /// logits row [vocab] at the last position of `tokens`.
+    fn oracle_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
+}
+
+/// A session may only be advanced by the backend kind that created it —
+/// advancing e.g. a dense session with the low-rank step would silently
+/// corrupt the cache and break the bitwise-oracle contract.
+fn ensure_owner(session: &Session, artifact: &'static str) -> Result<()> {
+    anyhow::ensure!(
+        session.backend == artifact,
+        "session belongs to backend '{}', not '{artifact}'",
+        session.backend
+    );
+    Ok(())
+}
+
+/// Byte tokens arrive as i32 from the client surface; wrap defensively
+/// into the model's vocab (mirrors the synthetic backend's behavior, and
+/// keeps cached and oracle paths consistent by construction).
+fn as_vocab_tokens(vocab: usize, tokens: &[i32]) -> Vec<u32> {
+    tokens
+        .iter()
+        .map(|&t| t.rem_euclid(vocab as i32) as u32)
+        .collect()
 }
 
 /// What the server is serving (the two built-in backend kinds).
@@ -35,120 +135,153 @@ pub enum ServedModel {
 }
 
 impl ServedModel {
-    /// Artifact the model decodes through.
+    /// Decode-path label of the backend this model builds.
     pub fn artifact(&self) -> &'static str {
         match self {
-            ServedModel::Dense(_) => "model_fwd",
-            ServedModel::Compressed(..) => "model_lr_fwd",
+            ServedModel::Dense(_) => "dense_kv",
+            ServedModel::Compressed(..) => "lowrank_kv",
         }
     }
 
-    /// Build the PJRT-backed backend for this model. Must run on the serve
-    /// worker thread: compiling artifacts creates the PJRT client, which is
-    /// not Sync.
-    pub fn into_backend(
-        self,
-        artifact_dir: &str,
-        cfg: &Config,
-    ) -> Result<Box<dyn ModelBackend>> {
+    /// Build the KV-cached backend for this model.
+    pub fn into_backend(self, cfg: &Config) -> Result<Box<dyn ModelBackend>> {
         Ok(match self {
             ServedModel::Dense(params) => {
-                Box::new(DenseBackend::new(artifact_dir, cfg.clone(), params)?)
+                Box::new(DenseBackend::new(cfg.clone(), params))
             }
-            ServedModel::Compressed(params, blocks) => Box::new(CompressedBackend::new(
-                artifact_dir,
-                cfg.clone(),
-                params,
-                &blocks,
-            )?),
+            ServedModel::Compressed(params, blocks) => {
+                Box::new(CompressedBackend::new(cfg.clone(), params, blocks)?)
+            }
         })
     }
 }
 
-/// Dense model through the `model_fwd` artifact.
+/// Dense model through the KV-cached pure-Rust forward.
 pub struct DenseBackend {
-    engine: Engine,
     cfg: Config,
     params: FlatStore,
 }
 
 impl DenseBackend {
-    pub fn new(artifact_dir: &str, cfg: Config, params: FlatStore) -> Result<DenseBackend> {
-        let engine = Engine::new(artifact_dir)?;
-        engine.warmup(&cfg.name, &["model_fwd"])?;
-        Ok(DenseBackend { engine, cfg, params })
+    pub fn new(cfg: Config, params: FlatStore) -> DenseBackend {
+        DenseBackend { cfg, params }
     }
 }
 
 impl ModelBackend for DenseBackend {
     fn artifact(&self) -> &'static str {
-        "model_fwd"
+        "dense_kv"
     }
 
-    fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
-        let out = self.engine.run_first(
-            &self.cfg.name,
-            "model_fwd",
-            &[Value::F32(&self.params.data), Value::I32(tokens)],
-        )?;
-        Ok(out.f32)
+    fn prefill(&mut self, tokens: &[i32]) -> Result<Prefill> {
+        anyhow::ensure!(!tokens.is_empty(), "prefill needs at least one token");
+        let toks = as_vocab_tokens(self.cfg.vocab, tokens);
+        let mut cache = KvCache::new(self.cfg.n_layers);
+        let logits = model_forward_prefill(&self.cfg, &self.params, &mut cache, &toks);
+        Ok(Prefill {
+            session: Session {
+                state: SessionState::Kv(cache),
+                backend: self.artifact(),
+            },
+            logits,
+        })
+    }
+
+    fn decode_step(&mut self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
+        ensure_owner(session, self.artifact())?;
+        let SessionState::Kv(cache) = &mut session.state else {
+            anyhow::bail!("session does not belong to a KV-cached backend");
+        };
+        let tok = token.rem_euclid(self.cfg.vocab as i32) as u32;
+        let logits = model_forward_step(&self.cfg, &self.params, cache, tok);
+        Ok(logits)
+    }
+
+    fn oracle_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(!tokens.is_empty(), "oracle needs at least one token");
+        let toks = as_vocab_tokens(self.cfg.vocab, tokens);
+        let all = model_forward(&self.cfg, &self.params, &toks, toks.len());
+        Ok(all[(toks.len() - 1) * self.cfg.vocab..].to_vec())
     }
 }
 
-/// Low-rank compressed model through the `model_lr_fwd` artifact; the
-/// per-block factors are concatenated once at construction.
+/// Low-rank compressed model through the KV-cached pure-Rust forward;
+/// shares the cached attention kernel with the dense path.
 pub struct CompressedBackend {
-    engine: Engine,
     cfg: Config,
     params: FlatStore,
-    factors: Vec<f32>,
-    masks: Vec<f32>,
+    blocks: Vec<BlockFactors>,
 }
 
 impl CompressedBackend {
     pub fn new(
-        artifact_dir: &str,
         cfg: Config,
         params: FlatStore,
-        blocks: &[BlockFactors],
+        blocks: Vec<BlockFactors>,
     ) -> Result<CompressedBackend> {
-        let engine = Engine::new(artifact_dir)?;
-        engine.warmup(&cfg.name, &["model_lr_fwd"])?;
-        let (factors, masks) = concat_factors(blocks);
+        anyhow::ensure!(
+            blocks.len() == cfg.n_layers,
+            "expected {} compressed blocks, got {}",
+            cfg.n_layers,
+            blocks.len()
+        );
         Ok(CompressedBackend {
-            engine,
             cfg,
             params,
-            factors,
-            masks,
+            blocks,
         })
     }
 }
 
 impl ModelBackend for CompressedBackend {
     fn artifact(&self) -> &'static str {
-        "model_lr_fwd"
+        "lowrank_kv"
     }
 
-    fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
-        let out = self.engine.run_first(
-            &self.cfg.name,
-            "model_lr_fwd",
-            &[
-                Value::F32(&self.params.data),
-                Value::F32(&self.factors),
-                Value::F32(&self.masks),
-                Value::I32(tokens),
-            ],
-        )?;
-        Ok(out.f32)
+    fn prefill(&mut self, tokens: &[i32]) -> Result<Prefill> {
+        anyhow::ensure!(!tokens.is_empty(), "prefill needs at least one token");
+        let toks = as_vocab_tokens(self.cfg.vocab, tokens);
+        let mut cache = KvCache::new(self.cfg.n_layers);
+        let logits = model_lr_forward_prefill(
+            &self.cfg,
+            &self.params,
+            &self.blocks,
+            &mut cache,
+            &toks,
+        );
+        Ok(Prefill {
+            session: Session {
+                state: SessionState::Kv(cache),
+                backend: self.artifact(),
+            },
+            logits,
+        })
+    }
+
+    fn decode_step(&mut self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
+        ensure_owner(session, self.artifact())?;
+        let SessionState::Kv(cache) = &mut session.state else {
+            anyhow::bail!("session does not belong to a KV-cached backend");
+        };
+        let tok = token.rem_euclid(self.cfg.vocab as i32) as u32;
+        let logits =
+            model_lr_forward_step(&self.cfg, &self.params, &self.blocks, cache, tok);
+        Ok(logits)
+    }
+
+    fn oracle_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(!tokens.is_empty(), "oracle needs at least one token");
+        let toks = as_vocab_tokens(self.cfg.vocab, tokens);
+        let all =
+            model_lr_forward(&self.cfg, &self.params, &self.blocks, &toks, toks.len());
+        Ok(all[(toks.len() - 1) * self.cfg.vocab..].to_vec())
     }
 }
 
-/// Artifact-free backend for tests and load experiments: at every position
-/// the logits deterministically favor `(prev_token + 1) % vocab`, so greedy
-/// decoding of prompt "a" yields "bcde…". `step_delay` emulates model
-/// latency per forward call.
+/// Artifact-free backend for tests and load experiments: the logits after
+/// any prefix deterministically favor `(last_token + 1) % vocab`, so
+/// greedy decoding of prompt "a" yields "bcde…". `step_delay` emulates
+/// model latency per prefill/decode/oracle call.
 pub struct SyntheticBackend {
     cfg: Config,
     step_delay: Duration,
@@ -165,6 +298,20 @@ impl SyntheticBackend {
     pub fn with_delay(cfg: Config, step_delay: Duration) -> SyntheticBackend {
         SyntheticBackend { cfg, step_delay }
     }
+
+    fn logits_after(&self, last: i32) -> Vec<f32> {
+        let v = self.cfg.vocab;
+        let mut logits = vec![0f32; v];
+        let prev = last.rem_euclid(v as i32) as usize;
+        logits[(prev + 1) % v] = 8.0;
+        logits
+    }
+
+    fn simulate_latency(&self) {
+        if !self.step_delay.is_zero() {
+            std::thread::sleep(self.step_delay);
+        }
+    }
 }
 
 impl ModelBackend for SyntheticBackend {
@@ -172,51 +319,133 @@ impl ModelBackend for SyntheticBackend {
         "synthetic"
     }
 
-    fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
-        if !self.step_delay.is_zero() {
-            std::thread::sleep(self.step_delay);
-        }
-        let (b, t, v) = (self.cfg.batch, self.cfg.seq, self.cfg.vocab);
-        anyhow::ensure!(tokens.len() == b * t, "synthetic backend: bad batch shape");
-        let mut logits = vec![0f32; b * t * v];
-        for pos in 0..b * t {
-            let prev = tokens[pos].rem_euclid(v as i32) as usize;
-            logits[pos * v + (prev + 1) % v] = 8.0;
-        }
-        Ok(logits)
+    fn prefill(&mut self, tokens: &[i32]) -> Result<Prefill> {
+        anyhow::ensure!(!tokens.is_empty(), "prefill needs at least one token");
+        self.simulate_latency();
+        let last = *tokens.last().unwrap();
+        Ok(Prefill {
+            session: Session {
+                state: SessionState::Synthetic {
+                    last,
+                    len: tokens.len(),
+                },
+                backend: self.artifact(),
+            },
+            logits: self.logits_after(last),
+        })
+    }
+
+    fn decode_step(&mut self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
+        ensure_owner(session, self.artifact())?;
+        let SessionState::Synthetic { last, len } = &mut session.state else {
+            anyhow::bail!("session does not belong to the synthetic backend");
+        };
+        self.simulate_latency();
+        *last = token;
+        *len += 1;
+        Ok(self.logits_after(token))
+    }
+
+    fn oracle_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(!tokens.is_empty(), "oracle needs at least one token");
+        self.simulate_latency();
+        Ok(self.logits_after(*tokens.last().unwrap()))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::init::init_params;
+    use crate::util::rng::Rng;
+
+    fn argmax(xs: &[f32]) -> usize {
+        xs.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0
+    }
 
     #[test]
     fn synthetic_favors_successor_byte() {
         let cfg = Config::builtin("tiny").unwrap();
-        let (b, t, v) = (cfg.batch, cfg.seq, cfg.vocab);
         let mut be = SyntheticBackend::new(cfg);
-        let mut tokens = vec![b' ' as i32; b * t];
-        tokens[0] = b'a' as i32;
-        let logits = be.forward(&tokens).unwrap();
-        let row = &logits[..v];
-        let argmax = row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0;
-        assert_eq!(argmax, b'b' as usize);
+        let prompt = [b' ' as i32, b'a' as i32];
+        let pf = be.prefill(&prompt).unwrap();
+        assert_eq!(pf.session.len(), 2);
+        assert!(!pf.session.is_empty());
+        assert_eq!(pf.session.kv_bytes(), 0);
+        assert_eq!(argmax(&pf.logits), b'b' as usize);
+    }
+
+    #[test]
+    fn synthetic_decode_step_tracks_last_token() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let mut be = SyntheticBackend::new(cfg);
+        let Prefill { mut session, .. } = be.prefill(&[b'a' as i32]).unwrap();
+        let logits = be.decode_step(&mut session, b'b' as i32).unwrap();
+        assert_eq!(argmax(&logits), b'c' as usize);
+        assert_eq!(session.len(), 2);
+        // the oracle over the same prefix agrees bitwise
+        let want = be.oracle_logits(&[b'a' as i32, b'b' as i32]).unwrap();
+        assert_eq!(logits, want);
+    }
+
+    #[test]
+    fn dense_session_holds_cache_bytes() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(1));
+        let mut be = DenseBackend::new(cfg.clone(), params);
+        let prompt: Vec<i32> = "abc".bytes().map(|b| b as i32).collect();
+        let Prefill { mut session, .. } = be.prefill(&prompt).unwrap();
+        let bytes_after_prefill = session.kv_bytes();
+        assert_eq!(
+            bytes_after_prefill,
+            3 * cfg.n_layers * 2 * cfg.d_model * 4
+        );
+        be.decode_step(&mut session, b'd' as i32).unwrap();
+        assert_eq!(session.len(), 4);
+        assert!(session.kv_bytes() > bytes_after_prefill);
+    }
+
+    #[test]
+    fn foreign_session_is_rejected() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(2));
+        let blocks = vec![crate::model::lowrank::BlockFactors::zeros(&cfg); cfg.n_layers];
+        let mut synth = SyntheticBackend::new(cfg.clone());
+        let mut dense = DenseBackend::new(cfg.clone(), params.clone());
+        let mut compressed = CompressedBackend::new(cfg, params, blocks).unwrap();
+
+        // synthetic session into a KV backend
+        let Prefill { mut session, .. } = synth.prefill(&[b'a' as i32]).unwrap();
+        assert!(dense.decode_step(&mut session, b'b' as i32).is_err());
+
+        // dense session into the low-rank backend (both are Kv-state, so
+        // only the owner tag catches the mix)
+        let Prefill { mut session, .. } = dense.prefill(&[b'a' as i32]).unwrap();
+        assert_eq!(session.backend(), "dense_kv");
+        assert!(compressed.decode_step(&mut session, b'b' as i32).is_err());
+        // and the rightful owner still advances it fine afterwards
+        assert!(dense.decode_step(&mut session, b'b' as i32).is_ok());
     }
 
     #[test]
     fn served_model_artifact_names() {
         let cfg = Config::builtin("tiny").unwrap();
-        let params = crate::model::init::init_params(&cfg, &mut crate::util::rng::Rng::new(1));
-        assert_eq!(ServedModel::Dense(params.clone()).artifact(), "model_fwd");
+        let params = init_params(&cfg, &mut Rng::new(1));
+        assert_eq!(ServedModel::Dense(params.clone()).artifact(), "dense_kv");
         assert_eq!(
             ServedModel::Compressed(params, Vec::new()).artifact(),
-            "model_lr_fwd"
+            "lowrank_kv"
         );
+    }
+
+    #[test]
+    fn compressed_backend_rejects_wrong_block_count() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(3));
+        assert!(CompressedBackend::new(cfg, params, Vec::new()).is_err());
     }
 }

@@ -3,14 +3,17 @@
 //! bounded admission queue and observe each request through a streaming,
 //! cancellable [`Completion`] handle.
 //!
-//! Decode strategy: windowed re-forward. Each iteration packs every active
-//! request's most recent ≤T tokens into one [B, T] batch, runs the
-//! backend's forward artifact, samples one token per request from the
-//! logits at its own length position, and admits/retires requests between
-//! iterations (vLLM-style continuous batching at sequence granularity —
-//! the batch never drains to refill). KV caching through the PJRT boundary
-//! would round-trip the full cache per step through host literals, which
-//! measures slower than re-forward at these model sizes; see DESIGN.md.
+//! Decode strategy: KV-cached incremental decode. Admission runs one
+//! prefill pass over the request's prompt (building its [`Session`] KV
+//! cache and the first logits row); every decode iteration then samples
+//! one token per active request and advances each still-running session
+//! by one `decode_step` — O(len) attention per token instead of the old
+//! windowed re-forward's O(len²) — admitting/retiring requests between
+//! iterations (vLLM-style continuous batching at sequence granularity;
+//! the batch never drains to refill, and retiring a slot drops its
+//! cache). The pre-cache full-prefix recompute path survives as
+//! [`DecodeMode::Recompute`]: the engine's test oracle and bench
+//! baseline, guaranteed bitwise token-identical to the cached path.
 //!
 //! Request lifecycle:
 //!   submit → (queued) → admitted → Token* → Done
@@ -19,7 +22,7 @@
 //!                                   deadline) — the slot is retired at the
 //!                                   next decode iteration
 
-use super::backend::{ModelBackend, ServedModel};
+use super::backend::{ModelBackend, ServedModel, Session};
 use super::metrics::ServeMetrics;
 use super::request::{
     CancelReason, Event, GenParams, GenRequest, GenResponse, SubmitError, TokenEvent,
@@ -34,17 +37,42 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError}
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Server tuning knobs (admission control + batching).
+/// How the decode loop turns a request's prefix into logits.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DecodeMode {
+    /// Prefill once, then one KV-cached `decode_step` per token (O(len)
+    /// attention per step). The production path.
+    #[default]
+    Cached,
+    /// Re-run the full prefix through `oracle_logits` for every token
+    /// (the pre-KV-cache path, O(len²) attention per step). Kept as the
+    /// bitwise test oracle and the bench baseline.
+    Recompute,
+}
+
+/// Server tuning knobs (admission control + batching + decode path).
 #[derive(Clone, Debug)]
 pub struct ServerOptions {
     /// Admission-queue capacity (clamped to ≥ 1). `submit` returns
     /// `Err(SubmitError::Overloaded)` instead of blocking when full.
     pub max_queue: usize,
-    /// Max concurrent decode slots; 0 = the artifact batch dimension
-    /// (`cfg.batch`), which is also the hard upper bound.
+    /// Max concurrent decode slots; 0 = `cfg.batch`. Explicit values are
+    /// honored as-is (the pure-Rust decode path has no fixed batch shape).
     pub max_batch: usize,
     /// How long the worker blocks waiting for a request when idle.
     pub poll_interval: Duration,
+    /// Cached (default) vs full-prefix-recompute decoding; both produce
+    /// bitwise-identical tokens (the cache-exactness contract).
+    pub decode: DecodeMode,
+    /// Hard cap on a request's total context (prompt + generated tokens):
+    /// longer prompts are clamped to their most recent `max_context`
+    /// tokens at admission (the old decode window's semantics, bounding
+    /// the prefill cost and the KV allocation itself), and a request
+    /// whose context reaches the cap completes with what it has. Bounds
+    /// per-request KV residency at n_layers × 2 × d_model × 4 bytes per
+    /// token and per-step attention cost. 0 = unlimited. Depends only on
+    /// token count, so cached and recompute modes cap identically.
+    pub max_context: usize,
 }
 
 impl Default for ServerOptions {
@@ -53,6 +81,8 @@ impl Default for ServerOptions {
             max_queue: 64,
             max_batch: 0,
             poll_interval: Duration::from_millis(20),
+            decode: DecodeMode::Cached,
+            max_context: 0,
         }
     }
 }
@@ -191,23 +221,16 @@ pub struct Server {
 
 impl Server {
     /// Start a server over a built-in model kind with default options.
-    /// `artifact_dir` is compiled inside the worker thread (the PJRT
-    /// client is not Sync).
-    pub fn start(artifact_dir: String, cfg: Config, model: ServedModel) -> Server {
-        Server::start_with(artifact_dir, cfg, model, ServerOptions::default())
+    /// The backend decodes through the KV-cached pure-Rust forward — no
+    /// artifact directory required.
+    pub fn start(cfg: Config, model: ServedModel) -> Server {
+        Server::start_with(cfg, model, ServerOptions::default())
     }
 
-    /// `start` with explicit admission/batching options.
-    pub fn start_with(
-        artifact_dir: String,
-        cfg: Config,
-        model: ServedModel,
-        options: ServerOptions,
-    ) -> Server {
+    /// `start` with explicit admission/batching/decode options.
+    pub fn start_with(cfg: Config, model: ServedModel, options: ServerOptions) -> Server {
         let backend_cfg = cfg.clone();
-        Server::with_backend(cfg, options, move || {
-            model.into_backend(&artifact_dir, &backend_cfg)
-        })
+        Server::with_backend(cfg, options, move || model.into_backend(&backend_cfg))
     }
 
     /// Start a server over any [`ModelBackend`]. The factory runs on the
@@ -342,6 +365,12 @@ struct Slot {
     /// generated text so far (byte tokens widened to chars)
     gen_text: String,
     ttft: Option<f64>,
+    /// KV-cache session (None in `DecodeMode::Recompute`); dropped with
+    /// the slot when the request retires, freeing the cache
+    session: Option<Session>,
+    /// logits row ([vocab]) the next token is sampled from — seeded by
+    /// prefill at admission, refreshed by each decode step
+    next_logits: Vec<f32>,
 }
 
 fn new_slot(req: GenRequest) -> Slot {
@@ -359,6 +388,8 @@ fn new_slot(req: GenRequest) -> Slot {
         gen_text: String::new(),
         req,
         ttft: None,
+        session: None,
+        next_logits: Vec::new(),
     }
 }
 
@@ -395,16 +426,16 @@ fn decode_loop(
     shared: &Shared,
     metrics: &mut ServeMetrics,
 ) -> Result<()> {
-    let (b, t, vocab) = (cfg.batch, cfg.seq, cfg.vocab);
     let max_batch = if options.max_batch == 0 {
-        b
+        cfg.batch
     } else {
-        options.max_batch.min(b)
+        options.max_batch
     };
     crate::log_debug!(
-        "serve: decoding '{}' via '{}' (max_batch {max_batch}, max_queue {})",
+        "serve: decoding '{}' via '{}' ({:?}, max_batch {max_batch}, max_queue {})",
         cfg.name,
         backend.artifact(),
+        options.decode,
         shared.max_queue,
     );
 
@@ -463,19 +494,63 @@ fn decode_loop(
                 }));
                 continue;
             }
-            slots.push(new_slot(req));
+            // seat the request: absorb its whole prompt now — one cached
+            // prefill pass (or one oracle recompute) — and hold the
+            // resulting logits row for this iteration's sampling
+            let mut slot = new_slot(req);
+            // the context cap clamps the *prompt* too (keeping the most
+            // recent tokens, the old decode window's semantics): it must
+            // bound the prefill cost and the KV allocation themselves,
+            // not just generation
+            if options.max_context > 0 && slot.tokens.len() > options.max_context {
+                let cut = slot.tokens.len() - options.max_context;
+                slot.tokens.drain(..cut);
+                slot.prompt_len = slot.tokens.len();
+            }
+            let seeded = match options.decode {
+                DecodeMode::Cached => backend.prefill(&slot.tokens).map(|pf| {
+                    slot.session = Some(pf.session);
+                    pf.logits
+                }),
+                DecodeMode::Recompute => backend.oracle_logits(&slot.tokens),
+            };
+            match seeded {
+                Ok(logits) => {
+                    metrics.prefill_tokens += slot.prompt_len;
+                    slot.next_logits = logits;
+                    slots.push(slot);
+                }
+                Err(e) => {
+                    // per-request failure: retire this request and keep
+                    // serving the others — one bad prompt must not take
+                    // down the worker
+                    crate::log_warn!(
+                        "serve: prefill failed for request {}: {e:#}",
+                        slot.req.id
+                    );
+                    retire_cancelled(slot.req, CancelReason::Backend, metrics);
+                }
+            }
+            // one prefill attempt per iteration: a burst of queued long
+            // prompts must interleave with decode steps, not stall token
+            // emission for every already-active session
+            break;
         }
 
         if slots.is_empty() {
-            if !queue_open && pending.is_empty() {
-                break;
+            if pending.is_empty() {
+                if !queue_open {
+                    break;
+                }
+                // idle: block briefly for the next request
+                match rx.recv_timeout(options.poll_interval) {
+                    Ok(req) => pending.push_back(req),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => queue_open = false,
+                }
             }
-            // idle: block briefly for the next request
-            match rx.recv_timeout(options.poll_interval) {
-                Ok(req) => pending.push_back(req),
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => queue_open = false,
-            }
+            // pending work left (e.g. after a failed prefill): loop
+            // straight back into admission without sleeping
             continue;
         }
 
@@ -500,36 +575,17 @@ fn decode_loop(
             .queue_depths
             .push(shared.queue_depth.load(Ordering::Relaxed) as f64);
 
-        // pack the batch: window = last min(len, t) tokens, end-padded
-        let mut tokens = vec![b' ' as i32; b * t];
-        let mut read_pos = vec![0usize; slots.len()];
-        for (row, slot) in slots.iter().enumerate() {
-            let window: &[i32] = if slot.tokens.len() <= t {
-                &slot.tokens
-            } else {
-                &slot.tokens[slot.tokens.len() - t..]
-            };
-            tokens[row * t..row * t + window.len()].copy_from_slice(window);
-            read_pos[row] = window.len() - 1;
-        }
-
-        let logits = match backend.forward(&tokens) {
-            Ok(logits) => logits,
-            Err(e) => {
-                metrics.wall_secs = start.elapsed().as_secs_f64();
-                return Err(e);
-            }
-        };
-
-        // sample, stream, retire
-        let mut done: Vec<usize> = Vec::new();
+        // sample each slot's held logits, stream, then advance the
+        // still-running slots by one cached decode step (or one oracle
+        // recompute) — the cache-exactness contract keeps the two modes
+        // token-identical. Rows to retire are collected as
+        // (row, backend_failed) and removed afterwards.
+        let mut retire: Vec<(usize, bool)> = Vec::new();
         for (row, slot) in slots.iter_mut().enumerate() {
-            let base = (row * t + read_pos[row]) * vocab;
-            let row_logits = &logits[base..base + vocab];
             let params = &slot.req.params;
             let next = slot
                 .rng
-                .sample_logits_topk(row_logits, params.temperature, params.top_k)
+                .sample_logits_topk(&slot.next_logits, params.temperature, params.top_k)
                 as i32;
             slot.tokens.push(next);
             let ch = next as u8 as char;
@@ -553,12 +609,51 @@ fn decode_loop(
                 .stop_sequences
                 .iter()
                 .any(|s| !s.is_empty() && slot.gen_text.ends_with(s.as_str()));
-            if generated >= params.max_new_tokens || stopped {
-                done.push(row);
+            let capped =
+                options.max_context > 0 && slot.tokens.len() >= options.max_context;
+            if generated >= params.max_new_tokens || stopped || capped {
+                retire.push((row, false));
+                continue;
+            }
+            let advanced = match options.decode {
+                DecodeMode::Cached => {
+                    let session =
+                        slot.session.as_mut().expect("cached slot has a session");
+                    backend.decode_step(session, next)
+                }
+                DecodeMode::Recompute => backend.oracle_logits(&slot.tokens),
+            };
+            match advanced {
+                Ok(logits) => {
+                    metrics.decode_tokens += 1;
+                    slot.next_logits = logits;
+                }
+                Err(e) => {
+                    // per-request failure: retire only this slot
+                    crate::log_warn!(
+                        "serve: decode step failed for request {}: {e:#}",
+                        slot.req.id
+                    );
+                    retire.push((row, true));
+                }
             }
         }
-        for &row in done.iter().rev() {
+        // KV residency after this iteration's appends (all zeros in
+        // recompute mode — no sessions exist)
+        metrics.cache_bytes.push(
+            slots
+                .iter()
+                .map(|s| s.session.as_ref().map_or(0, Session::kv_bytes))
+                .sum::<usize>() as f64,
+        );
+        // rows were pushed in ascending order; swap_remove in reverse so
+        // earlier indices stay valid
+        for &(row, backend_failed) in retire.iter().rev() {
             let slot = slots.swap_remove(row);
+            if backend_failed {
+                retire_cancelled(slot.req, CancelReason::Backend, metrics);
+                continue;
+            }
             let latency = slot.req.submitted.elapsed().as_secs_f64();
             let gen_tokens = slot.tokens.len() - slot.prompt_len;
             let ttft = slot.ttft.unwrap_or(latency);
@@ -580,23 +675,12 @@ fn decode_loop(
 mod tests {
     use super::*;
     use crate::model::init::init_params;
-    use crate::runtime::Engine;
 
     #[test]
     fn serves_batched_requests_end_to_end() {
-        if Engine::new("artifacts")
-            .map(|e| e.entry("tiny").is_err())
-            .unwrap_or(true)
-        {
-            return;
-        }
         let cfg = Config::builtin("tiny").unwrap();
         let params = init_params(&cfg, &mut Rng::new(1));
-        let server = Server::start(
-            "artifacts".into(),
-            cfg.clone(),
-            ServedModel::Dense(params),
-        );
+        let server = Server::start(cfg.clone(), ServedModel::Dense(params));
         let completions: Vec<_> = (0..6)
             .map(|i| {
                 server
@@ -621,25 +705,18 @@ mod tests {
         }
         let metrics = server.shutdown();
         assert_eq!(metrics.tokens, total);
-        // continuous batching actually batched something
-        assert!(metrics.mean_batch_occupancy() > 1.0);
+        // prefill/decode accounting: six "the cat N" prompts (9 bytes
+        // each) and 4 cached steps per 5-token completion
+        assert_eq!(metrics.prefill_tokens, 6 * 9);
+        assert_eq!(metrics.decode_tokens, 6 * 4);
+        assert!(metrics.peak_cache_bytes() > 0.0);
     }
 
     #[test]
     fn greedy_decode_is_deterministic_per_run() {
-        if Engine::new("artifacts")
-            .map(|e| e.entry("tiny").is_err())
-            .unwrap_or(true)
-        {
-            return;
-        }
         let cfg = Config::builtin("tiny").unwrap();
         let params = init_params(&cfg, &mut Rng::new(2));
-        let server = Server::start(
-            "artifacts".into(),
-            cfg.clone(),
-            ServedModel::Dense(params),
-        );
+        let server = Server::start(cfg.clone(), ServedModel::Dense(params));
         let p = GenParams {
             max_new_tokens: 8,
             temperature: 0.0,
@@ -655,7 +732,9 @@ mod tests {
     fn options_default_bounds() {
         let o = ServerOptions::default();
         assert!(o.max_queue >= 1);
-        assert_eq!(o.max_batch, 0); // = artifact batch dim
+        assert_eq!(o.max_batch, 0); // = cfg.batch
         assert!(o.poll_interval > Duration::ZERO);
+        assert_eq!(o.decode, DecodeMode::Cached);
+        assert_eq!(o.max_context, 0); // unlimited unless the operator caps it
     }
 }

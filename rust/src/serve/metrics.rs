@@ -22,6 +22,14 @@ pub struct ServeMetrics {
     pub cancelled: usize,
     /// subset of `cancelled` retired because their deadline expired
     pub deadline_expired: usize,
+    /// prompt tokens absorbed at admission (prefill passes)
+    pub prefill_tokens: usize,
+    /// tokens absorbed one-at-a-time after prefill (cached decode steps,
+    /// or oracle recomputes in `DecodeMode::Recompute`)
+    pub decode_tokens: usize,
+    /// KV-cache bytes resident across all live sessions, sampled once per
+    /// decode iteration (all zeros in `DecodeMode::Recompute`)
+    pub cache_bytes: Vec<f64>,
 }
 
 impl ServeMetrics {
@@ -41,6 +49,11 @@ impl ServeMetrics {
 
     pub fn mean_queue_depth(&self) -> f64 {
         mean(&self.queue_depths)
+    }
+
+    /// Peak KV-cache residency over the run (0.0 when nothing was cached).
+    pub fn peak_cache_bytes(&self) -> f64 {
+        self.cache_bytes.iter().cloned().fold(0.0, f64::max)
     }
 
     pub fn summary(&self) -> String {
@@ -73,11 +86,23 @@ impl ServeMetrics {
         } else {
             format!("{:.2}", self.mean_queue_depth())
         };
+        let kv = if self.cache_bytes.is_empty() {
+            String::from("n/a")
+        } else {
+            format!("{:.1}KiB", self.peak_cache_bytes() / 1024.0)
+        };
         format!(
             "requests={requests} rejected={} cancelled={} (deadline={}) tokens={} \
+             prefill_toks={} decode_toks={} \
              throughput={tput} ttft p50={tp50} p95={tp95} \
-             latency p50={lp50} p95={lp95} batch_occ={occ} queue_mean={qm}",
-            self.rejected, self.cancelled, self.deadline_expired, self.tokens,
+             latency p50={lp50} p95={lp95} batch_occ={occ} queue_mean={qm} \
+             kv_peak={kv}",
+            self.rejected,
+            self.cancelled,
+            self.deadline_expired,
+            self.tokens,
+            self.prefill_tokens,
+            self.decode_tokens,
         )
     }
 }
@@ -107,13 +132,30 @@ mod tests {
 
     #[test]
     fn lifecycle_counters_surface_in_summary() {
-        let mut m = ServeMetrics::default();
-        m.rejected = 3;
-        m.cancelled = 2;
-        m.deadline_expired = 1;
+        let m = ServeMetrics {
+            rejected: 3,
+            cancelled: 2,
+            deadline_expired: 1,
+            ..Default::default()
+        };
         let s = m.summary();
         assert!(s.contains("rejected=3"), "{s}");
         assert!(s.contains("cancelled=2"), "{s}");
         assert!(s.contains("deadline=1"), "{s}");
+    }
+
+    #[test]
+    fn prefill_decode_and_cache_counters_surface_in_summary() {
+        let m = ServeMetrics {
+            prefill_tokens: 12,
+            decode_tokens: 34,
+            cache_bytes: vec![1024.0, 4096.0, 2048.0],
+            ..Default::default()
+        };
+        assert!((m.peak_cache_bytes() - 4096.0).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("prefill_toks=12"), "{s}");
+        assert!(s.contains("decode_toks=34"), "{s}");
+        assert!(s.contains("kv_peak=4.0KiB"), "{s}");
     }
 }

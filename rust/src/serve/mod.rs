@@ -1,5 +1,5 @@
-//! Serving layer: continuous-batching decode behind a streaming,
-//! cancellable client API with admission control.
+//! Serving layer: KV-cached continuous-batching decode behind a
+//! streaming, cancellable client API with admission control.
 //!
 //! # Serving API
 //!
@@ -10,24 +10,33 @@
 //! - **Streaming**: `completion.next_event()` yields tokens as they are
 //!   sampled; TTFT is measured at true first-token emission.
 //! - **Cancellation**: `completion.cancel()` — or simply dropping the
-//!   handle — retires the request's decode slot at the next iteration and
-//!   delivers `Event::Cancelled { reason: CancelReason::Client }`.
+//!   handle — retires the request's decode slot (and drops its KV cache)
+//!   at the next iteration and delivers
+//!   `Event::Cancelled { reason: CancelReason::Client }`.
 //! - **Deadlines**: `GenParams::deadline` retires a request (queued or
 //!   decoding) once the wall-clock budget is exhausted
 //!   (`CancelReason::Deadline`).
 //! - **Backpressure**: the admission queue is bounded by
 //!   [`ServerOptions::max_queue`]; `submit` returns
 //!   `Err(SubmitError::Overloaded)` immediately instead of blocking.
+//! - **KV-cached decode**: admission runs one [`ModelBackend::prefill`]
+//!   pass over the prompt, building a per-request [`Session`]; each decode
+//!   iteration advances every active session by one
+//!   [`ModelBackend::decode_step`] at O(len) attention cost. The old
+//!   full-prefix recompute path survives as [`DecodeMode::Recompute`]
+//!   (test oracle / bench baseline) and is guaranteed **bitwise
+//!   token-identical** to the cached path.
 //! - **Backends**: the decode loop is generic over [`ModelBackend`] —
 //!   dense ([`DenseBackend`]), low-rank compressed
 //!   ([`CompressedBackend`]), or the artifact-free [`SyntheticBackend`]
-//!   for tests and load experiments.
+//!   for tests and load experiments. All three are artifact-free: dense
+//!   and compressed decode through the KV-cached pure-Rust reference
+//!   forward.
 //!
 //! ```no_run
 //! use aasvd::serve::{Event, GenParams, ServedModel, Server, ServerOptions, SubmitError};
 //! # fn demo(cfg: aasvd::model::Config, params: aasvd::model::FlatStore) {
 //! let server = Server::start_with(
-//!     "artifacts".into(),
 //!     cfg,
 //!     ServedModel::Dense(params),
 //!     ServerOptions { max_queue: 32, ..Default::default() },
@@ -64,9 +73,10 @@ pub mod metrics;
 pub mod request;
 
 pub use backend::{
-    CompressedBackend, DenseBackend, ModelBackend, ServedModel, SyntheticBackend,
+    CompressedBackend, DenseBackend, ModelBackend, Prefill, ServedModel, Session,
+    SyntheticBackend,
 };
-pub use engine::{Completion, Server, ServerOptions, WaitError};
+pub use engine::{Completion, DecodeMode, Server, ServerOptions, WaitError};
 pub use metrics::ServeMetrics;
 pub use request::{
     CancelReason, Event, GenParams, GenRequest, GenResponse, SubmitError, TokenEvent,

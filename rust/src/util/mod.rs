@@ -10,4 +10,3 @@ pub mod logging;
 pub mod pool;
 pub mod rng;
 pub mod stats;
-pub mod threadpool;

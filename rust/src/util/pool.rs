@@ -1,11 +1,9 @@
 //! Scoped worker pool for the CPU-parallel compression math.
 //!
-//! Unlike [`crate::util::threadpool::ThreadPool`] (long-lived workers and
-//! `'static` jobs, used by the serving layer), this pool runs *borrowing*
-//! jobs through `std::thread::scope`: callers hand over a `Vec` of closures
-//! that may capture references to stack data (matrix bands, activation
-//! batches), and [`Pool::run`] returns their results **in submission
-//! order** no matter which worker finished first. That ordering rule is
+//! The pool runs *borrowing* jobs through `std::thread::scope`: callers
+//! hand over a `Vec` of closures that may capture references to stack data
+//! (matrix bands, activation batches), and [`Pool::run`] returns their
+//! results **in submission order** no matter which worker finished first. That ordering rule is
 //! what makes every parallel reduction in the compression path
 //! deterministic: partial results are always merged in a fixed order,
 //! never completion order.

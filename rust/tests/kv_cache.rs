@@ -1,0 +1,308 @@
+//! KV-cache exactness: cached incremental decode must be **bitwise
+//! identical** to full-prefix recompute — at the forward level (dense and
+//! low-rank pure-Rust paths), at the backend level (prefill/decode_step vs
+//! the oracle for all three backends), and through the engine across
+//! multi-request batches with staggered admission and cancellation.
+//! Artifact-free: runs everywhere.
+
+use aasvd::model::forward::{model_forward, model_forward_step, KvCache};
+use aasvd::model::init::init_params;
+use aasvd::model::lowrank::{
+    exact_factors, model_lr_forward, model_lr_forward_step, BlockFactors,
+};
+use aasvd::model::{Config, FlatStore};
+use aasvd::serve::{
+    CancelReason, CompressedBackend, DecodeMode, DenseBackend, GenParams, ModelBackend,
+    Prefill, ServedModel, Server, ServerOptions, SyntheticBackend, WaitError,
+};
+use aasvd::util::rng::Rng;
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: logit {i} differs: {x} vs {y}"
+        );
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .unwrap()
+        .0
+}
+
+fn tiny() -> Config {
+    Config::builtin("tiny").unwrap()
+}
+
+fn truncated_blocks(cfg: &Config, params: &FlatStore) -> Vec<BlockFactors> {
+    let mut blocks: Vec<BlockFactors> = (0..cfg.n_layers)
+        .map(|i| exact_factors(cfg, params, i))
+        .collect();
+    // truncate some ranks so the masked low-rank path is exercised
+    for bf in blocks.iter_mut() {
+        bf.set_rank("wk", 6);
+        bf.set_rank("w_gate", 9);
+    }
+    blocks
+}
+
+/// Dense forward: every cached step reproduces the last logits row of the
+/// full-prefix forward, bit for bit, past the old decode window length.
+#[test]
+fn dense_cached_steps_match_full_recompute_bitwise() {
+    let cfg = tiny();
+    let params = init_params(&cfg, &mut Rng::new(21));
+    let mut rng = Rng::new(22);
+    let n = 2 * cfg.seq + 3;
+    let tokens: Vec<u32> = (0..n).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let mut cache = KvCache::new(cfg.n_layers);
+    for (p, &tok) in tokens.iter().enumerate() {
+        let step = model_forward_step(&cfg, &params, &mut cache, tok);
+        let full = model_forward(&cfg, &params, &tokens[..=p], p + 1);
+        assert_bits_eq(&step, &full[p * cfg.vocab..], &format!("dense pos {p}"));
+    }
+    assert_eq!(cache.len, n);
+    assert!(cache.bytes() > 0);
+}
+
+/// Low-rank forward with truncated rank masks: same bitwise contract.
+#[test]
+fn lowrank_cached_steps_match_full_recompute_bitwise() {
+    let cfg = tiny();
+    let params = init_params(&cfg, &mut Rng::new(23));
+    let blocks = truncated_blocks(&cfg, &params);
+    let mut rng = Rng::new(24);
+    let n = cfg.seq + 5;
+    let tokens: Vec<u32> = (0..n).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let mut cache = KvCache::new(cfg.n_layers);
+    for (p, &tok) in tokens.iter().enumerate() {
+        let step = model_lr_forward_step(&cfg, &params, &blocks, &mut cache, tok);
+        let full = model_lr_forward(&cfg, &params, &blocks, &tokens[..=p], p + 1);
+        assert_bits_eq(&step, &full[p * cfg.vocab..], &format!("lowrank pos {p}"));
+    }
+}
+
+/// Backend level: a prefill + greedy decode_step chain must agree bitwise
+/// with the full-prefix oracle at every position.
+fn backend_matches_oracle(mut backend: Box<dyn ModelBackend>) {
+    let prompt: Vec<i32> = "the cat sat".bytes().map(|b| b as i32).collect();
+    let Prefill {
+        mut session,
+        mut logits,
+    } = backend.prefill(&prompt).unwrap();
+    let mut tokens = prompt.clone();
+    for step in 0..12 {
+        let want = backend.oracle_logits(&tokens).unwrap();
+        assert_bits_eq(
+            &logits,
+            &want,
+            &format!("{} step {step}", backend.artifact()),
+        );
+        let next = argmax(&logits) as i32;
+        tokens.push(next);
+        logits = backend.decode_step(&mut session, next).unwrap();
+    }
+    assert_eq!(session.len(), tokens.len());
+}
+
+#[test]
+fn all_backends_cached_decode_matches_oracle() {
+    let cfg = tiny();
+    let params = init_params(&cfg, &mut Rng::new(31));
+    let blocks = truncated_blocks(&cfg, &params);
+    backend_matches_oracle(Box::new(DenseBackend::new(cfg.clone(), params.clone())));
+    backend_matches_oracle(Box::new(
+        CompressedBackend::new(cfg.clone(), params, blocks).unwrap(),
+    ));
+    backend_matches_oracle(Box::new(SyntheticBackend::new(cfg)));
+}
+
+/// Run a staggered multi-request batch (2 decode slots, 5 requests with
+/// mixed greedy/seeded sampling, plus one cancelled request) and return
+/// the completed texts in submission order.
+fn decode_texts(cfg: &Config, model: ServedModel, mode: DecodeMode) -> Vec<String> {
+    let server = Server::start_with(
+        cfg.clone(),
+        model,
+        ServerOptions {
+            max_batch: 2,
+            decode: mode,
+            ..Default::default()
+        },
+    );
+    let completions: Vec<_> = (0..5)
+        .map(|i| {
+            server
+                .submit(
+                    &format!("request {i} says"),
+                    GenParams {
+                        max_new_tokens: 6 + i,
+                        temperature: if i % 2 == 0 { 0.0 } else { 0.9 },
+                        top_k: if i % 2 == 0 { None } else { Some(16) },
+                        seed: Some(1000 + i as u64),
+                        ..Default::default()
+                    },
+                )
+                .unwrap()
+        })
+        .collect();
+    // a cancelled request must not disturb its neighbors' token streams
+    let doomed = server
+        .submit(
+            "doomed",
+            GenParams {
+                max_new_tokens: 100_000,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    doomed.cancel();
+    let texts: Vec<String> = completions
+        .into_iter()
+        .map(|c| c.wait().expect("request completes").text)
+        .collect();
+    match doomed.wait() {
+        Err(WaitError::Cancelled(CancelReason::Client)) => {}
+        other => panic!("doomed request: unexpected outcome {other:?}"),
+    }
+    server.shutdown();
+    texts
+}
+
+/// Engine level: cached decode and full-prefix recompute generate
+/// identical tokens for every request of a staggered continuous batch —
+/// dense and compressed backends, greedy and seeded sampling alike.
+#[test]
+fn engine_cached_decode_matches_recompute_across_batches() {
+    let cfg = tiny();
+    let params = init_params(&cfg, &mut Rng::new(41));
+    let blocks = truncated_blocks(&cfg, &params);
+
+    let cached = decode_texts(&cfg, ServedModel::Dense(params.clone()), DecodeMode::Cached);
+    let recomputed =
+        decode_texts(&cfg, ServedModel::Dense(params.clone()), DecodeMode::Recompute);
+    assert_eq!(cached, recomputed, "dense cached vs recompute");
+    assert_eq!(cached.len(), 5);
+
+    let cached = decode_texts(
+        &cfg,
+        ServedModel::Compressed(params.clone(), blocks.clone()),
+        DecodeMode::Cached,
+    );
+    let recomputed = decode_texts(
+        &cfg,
+        ServedModel::Compressed(params, blocks),
+        DecodeMode::Recompute,
+    );
+    assert_eq!(cached, recomputed, "compressed cached vs recompute");
+}
+
+/// Metrics: prefill/decode token counters and KV residency are recorded on
+/// the cached path...
+#[test]
+fn cached_run_counts_prefill_decode_and_cache_bytes() {
+    let cfg = tiny();
+    let params = init_params(&cfg, &mut Rng::new(51));
+    let server = Server::start(cfg.clone(), ServedModel::Dense(params));
+    let prompt = "the cat";
+    let resp = server
+        .submit(
+            prompt,
+            GenParams {
+                max_new_tokens: 5,
+                temperature: 0.0,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(resp.tokens_generated, 5);
+    let m = server.shutdown();
+    assert_eq!(m.prefill_tokens, prompt.len());
+    // prefill seeds the first sample; each of the remaining 4 tokens costs
+    // one cached decode step
+    assert_eq!(m.decode_tokens, 4);
+    assert!(m.peak_cache_bytes() > 0.0);
+    assert!(m.summary().contains("prefill_toks=7"), "{}", m.summary());
+}
+
+/// ...and the recompute oracle path holds no cache at all.
+#[test]
+fn recompute_run_holds_no_cache() {
+    let cfg = tiny();
+    let params = init_params(&cfg, &mut Rng::new(52));
+    let server = Server::start_with(
+        cfg.clone(),
+        ServedModel::Dense(params),
+        ServerOptions {
+            decode: DecodeMode::Recompute,
+            ..Default::default()
+        },
+    );
+    let resp = server
+        .submit(
+            "the cat",
+            GenParams {
+                max_new_tokens: 5,
+                temperature: 0.0,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(resp.tokens_generated, 5);
+    let m = server.shutdown();
+    assert_eq!(m.prefill_tokens, 7);
+    assert_eq!(m.decode_tokens, 4);
+    assert_eq!(m.peak_cache_bytes(), 0.0);
+}
+
+/// Cancelling a long cached request frees its slot (and cache); later
+/// requests decode exactly as if it never ran.
+#[test]
+fn cancellation_drops_cache_and_preserves_exactness() {
+    let cfg = tiny();
+    let params = init_params(&cfg, &mut Rng::new(61));
+    let p = GenParams {
+        max_new_tokens: 6,
+        temperature: 0.0,
+        ..Default::default()
+    };
+
+    // reference text from a clean server
+    let clean = Server::start(cfg.clone(), ServedModel::Dense(params.clone()));
+    let want = clean.submit("hello", p.clone()).unwrap().wait().unwrap().text;
+    clean.shutdown();
+
+    // same request after a cancelled long-running neighbor on a 1-slot server
+    let server = Server::start_with(
+        cfg.clone(),
+        ServedModel::Dense(params),
+        ServerOptions {
+            max_batch: 1,
+            ..Default::default()
+        },
+    );
+    let hog = server
+        .submit(
+            "x",
+            GenParams {
+                max_new_tokens: 100_000,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    hog.cancel();
+    let got = server.submit("hello", p).unwrap().wait().unwrap().text;
+    assert_eq!(got, want);
+    let m = server.shutdown();
+    assert_eq!(m.cancelled, 1);
+}

@@ -5,8 +5,8 @@
 
 use aasvd::model::Config;
 use aasvd::serve::{
-    CancelReason, Event, GenParams, ModelBackend, Server, ServerOptions, SubmitError,
-    SyntheticBackend, WaitError,
+    CancelReason, DecodeMode, Event, GenParams, ModelBackend, Prefill, Server,
+    ServerOptions, Session, SubmitError, SyntheticBackend, WaitError,
 };
 use std::time::Duration;
 
@@ -265,6 +265,182 @@ fn seeded_sampling_is_deterministic() {
     let (ra, rb) = (a.wait().unwrap(), b.wait().unwrap());
     assert_eq!(ra.text, rb.text);
     server.shutdown();
+}
+
+/// The KV-cached decode path and the full-prefix recompute oracle
+/// (`DecodeMode::Recompute`) generate identical text — the engine-level
+/// face of the cache-exactness contract, on the synthetic backend.
+#[test]
+fn cached_and_recompute_modes_generate_identical_text() {
+    let run = |mode: DecodeMode| -> (String, f64) {
+        let server = synthetic_server(
+            ServerOptions {
+                decode: mode,
+                ..Default::default()
+            },
+            Duration::ZERO,
+        );
+        let resp = server
+            .submit(
+                "a",
+                GenParams {
+                    max_new_tokens: 9,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+            .wait()
+            .unwrap();
+        let metrics = server.shutdown();
+        assert_eq!(metrics.prefill_tokens, 1);
+        assert_eq!(metrics.decode_tokens, 8);
+        (resp.text, metrics.peak_cache_bytes())
+    };
+    let (cached_text, _) = run(DecodeMode::Cached);
+    let (recompute_text, recompute_kv) = run(DecodeMode::Recompute);
+    assert_eq!(cached_text, recompute_text);
+    assert_eq!(cached_text, "bcdefghij");
+    // the recompute oracle never holds a cache
+    assert_eq!(recompute_kv, 0.0);
+}
+
+/// `ServerOptions::max_context` bounds a request's total context: a
+/// request hitting the cap completes with what it has (bounding KV-cache
+/// growth), instead of decoding to max_new_tokens.
+#[test]
+fn max_context_caps_generation() {
+    let server = synthetic_server(
+        ServerOptions {
+            max_context: 10,
+            ..Default::default()
+        },
+        Duration::ZERO,
+    );
+    let resp = server
+        .submit(
+            "a",
+            GenParams {
+                max_new_tokens: 100,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    // prompt (1 token) + 9 generated = the 10-token context cap
+    assert_eq!(resp.tokens_generated, 9);
+    assert_eq!(resp.text, "bcdefghij");
+
+    // an over-long prompt is clamped to its most recent max_context
+    // tokens at admission — prefill cost and KV allocation are bounded,
+    // not just generation
+    let resp = server
+        .submit(
+            "this prompt is longer than the ten-token context cap",
+            GenParams {
+                max_new_tokens: 100,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    // clamped prompt fills the cap, leaving room to emit one token
+    assert_eq!(resp.tokens_generated, 1);
+    let metrics = server.shutdown();
+    // 1 (short prompt) + 10 (clamped long prompt)
+    assert_eq!(metrics.prefill_tokens, 11);
+}
+
+/// A synthetic backend that fails prefill for prompts starting with '!'
+/// and fails decode_step when asked to absorb `fail_on_step_token`.
+struct FlakyBackend {
+    inner: SyntheticBackend,
+    fail_on_step_token: Option<i32>,
+}
+
+impl ModelBackend for FlakyBackend {
+    fn artifact(&self) -> &'static str {
+        "flaky"
+    }
+
+    fn prefill(&mut self, tokens: &[i32]) -> anyhow::Result<Prefill> {
+        anyhow::ensure!(
+            tokens.first() != Some(&(b'!' as i32)),
+            "poisoned prompt"
+        );
+        self.inner.prefill(tokens)
+    }
+
+    fn decode_step(&mut self, session: &mut Session, token: i32) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(self.fail_on_step_token != Some(token), "poisoned token");
+        self.inner.decode_step(session, token)
+    }
+
+    fn oracle_logits(&mut self, tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
+        self.inner.oracle_logits(tokens)
+    }
+}
+
+/// A backend failure retires only the failing request (with
+/// `CancelReason::Backend`); the worker and its other requests survive.
+#[test]
+fn backend_failure_retires_only_that_request() {
+    let cfg = Config::builtin("tiny").unwrap();
+    let backend_cfg = cfg.clone();
+    let server = Server::with_backend(cfg, ServerOptions::default(), move || {
+        Ok(Box::new(FlakyBackend {
+            inner: SyntheticBackend::new(backend_cfg),
+            fail_on_step_token: Some(b'x' as i32),
+        }) as Box<dyn ModelBackend>)
+    });
+
+    // prefill failure at admission
+    let bad = server
+        .submit(
+            "!boom",
+            GenParams {
+                max_new_tokens: 4,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    match bad.wait() {
+        Err(WaitError::Cancelled(CancelReason::Backend)) => {}
+        other => panic!("expected backend cancellation, got {other:?}"),
+    }
+
+    // decode-step failure mid-request: greedy from "w" samples 'x', whose
+    // absorption fails; the request retires after streaming that token
+    let mid = server
+        .submit(
+            "w",
+            GenParams {
+                max_new_tokens: 10,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    match mid.wait() {
+        Err(WaitError::Cancelled(CancelReason::Backend)) => {}
+        other => panic!("expected backend cancellation, got {other:?}"),
+    }
+
+    // a healthy request still completes on the same worker
+    let good = server
+        .submit(
+            "a",
+            GenParams {
+                max_new_tokens: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let resp = good.wait().expect("healthy request survives the failures");
+    assert_eq!(resp.text, "bcd");
+
+    let metrics = server.shutdown();
+    assert_eq!(metrics.cancelled, 2);
 }
 
 /// Shutdown drains queued requests rather than dropping them.
