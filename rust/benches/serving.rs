@@ -8,17 +8,38 @@
 //!   full-prefix recompute oracle for a 256-token completion on the
 //!   synthetic (builtin tiny) config. Before timing, the two modes'
 //!   greedy outputs are asserted identical — speed means nothing if the
-//!   cache diverges from the oracle.
+//!   cache diverges from the oracle;
+//! - the batched rows CI gates: one stacked `decode_batch` per tick vs a
+//!   per-session `decode_step` loop at B ∈ {1, 4, 8} on the builtin
+//!   "small" config. Before timing, the two paths' logits are asserted
+//!   bitwise equal per row — the decode_batch row-equality contract.
 
 use aasvd::bench::Bench;
 use aasvd::model::init::init_params;
 use aasvd::model::lowrank::exact_factors;
 use aasvd::model::Config;
 use aasvd::serve::batcher::bench_prompts;
-use aasvd::serve::{DecodeMode, GenParams, ServedModel, Server, ServerOptions};
+use aasvd::serve::{
+    DecodeMode, DenseBackend, GenParams, ModelBackend, ServedModel, Server, ServerOptions,
+    Session,
+};
+use aasvd::util::pool::Pool;
 use aasvd::util::rng::Rng;
 
 const DECODE_TOKENS: usize = 256;
+const BATCH_TOKENS: usize = 32;
+
+/// Deterministic per-row token stream for the batched-decode rows.
+fn batch_token(row: usize, step: usize) -> i32 {
+    ((row * 31 + step * 7) % 256) as i32
+}
+
+/// Fresh one-token-prompt sessions, one per batch row.
+fn batch_sessions(be: &mut DenseBackend, rows: usize) -> Vec<Session> {
+    (0..rows)
+        .map(|r| be.prefill(&[r as i32 + 1]).unwrap().session)
+        .collect()
+}
 
 /// One single-request completion through a fresh server; returns its text.
 fn decode_one(cfg: &Config, model: ServedModel, mode: DecodeMode, max_new: usize) -> String {
@@ -137,6 +158,75 @@ fn main() {
             || {
                 let text = decode_one(&cfg, ServedModel::Dense(p.clone()), mode, DECODE_TOKENS);
                 std::hint::black_box(text);
+            },
+        );
+    }
+
+    // batched-vs-sequential decode rows (the second CI gate): B sessions
+    // on the builtin "small" config, advanced BATCH_TOKENS steps either
+    // by a per-session decode_step loop or by one stacked decode_batch
+    // per tick. The "small" config is large enough that the stacked pass
+    // dominates pool dispatch; CI gates batched (t=4) >= 2x sequential
+    // aggregate throughput at B = 8.
+    let small = Config::builtin("small").unwrap();
+    let small_params = init_params(&small, &mut Rng::new(7));
+
+    // row-equality smoke: every batched row must match its sequential
+    // decode_step twin bitwise before the two paths' speeds are compared
+    {
+        let mut be_batch = DenseBackend::new(small.clone(), small_params.clone());
+        let mut be_seq = DenseBackend::new(small.clone(), small_params.clone());
+        let mut batched = batch_sessions(&mut be_batch, 8);
+        let mut solo = batch_sessions(&mut be_seq, 8);
+        for step in 0..8usize {
+            let toks: Vec<i32> = (0..8).map(|r| batch_token(r, step)).collect();
+            let rows = Pool::exact(4).install(|| {
+                let mut refs: Vec<&mut Session> = batched.iter_mut().collect();
+                be_batch.decode_batch(&mut refs, &toks)
+            });
+            for (r, row) in rows.into_iter().enumerate() {
+                let row = row.expect("batched row succeeds");
+                let want = be_seq.decode_step(&mut solo[r], toks[r]).unwrap();
+                assert!(
+                    row.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "decode_batch row {r} diverged from decode_step at step {step}"
+                );
+            }
+        }
+    }
+
+    for rows in [1usize, 4, 8] {
+        let mut be = DenseBackend::new(small.clone(), small_params.clone());
+        b.run(
+            &format!("decode_seq[small] B={rows} x {BATCH_TOKENS} toks"),
+            Some((rows * BATCH_TOKENS) as f64),
+            || {
+                let mut sessions = batch_sessions(&mut be, rows);
+                for step in 0..BATCH_TOKENS {
+                    for (r, session) in sessions.iter_mut().enumerate() {
+                        let logits = be.decode_step(session, batch_token(r, step)).unwrap();
+                        std::hint::black_box(&logits);
+                    }
+                }
+            },
+        );
+    }
+    for (rows, threads) in [(1usize, 4usize), (4, 4), (8, 1), (8, 4)] {
+        let mut be = DenseBackend::new(small.clone(), small_params.clone());
+        let pool = Pool::exact(threads);
+        b.run(
+            &format!("decode_batch[small] B={rows} t={threads} x {BATCH_TOKENS} toks"),
+            Some((rows * BATCH_TOKENS) as f64),
+            || {
+                pool.install(|| {
+                    let mut sessions = batch_sessions(&mut be, rows);
+                    for step in 0..BATCH_TOKENS {
+                        let toks: Vec<i32> = (0..rows).map(|r| batch_token(r, step)).collect();
+                        let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+                        let out = be.decode_batch(&mut refs, &toks);
+                        std::hint::black_box(&out);
+                    }
+                });
             },
         );
     }

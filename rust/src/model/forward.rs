@@ -9,6 +9,7 @@
 
 use super::config::Config;
 use super::params::FlatStore;
+use crate::util::pool::Pool;
 
 pub const NORM_EPS: f32 = 1e-5;
 const MASK_NEG: f32 = -1e30;
@@ -66,6 +67,33 @@ pub fn apply_rope(x: &mut [f32], t: usize, hd: usize, theta: f64) {
     for (pos, row) in x.chunks_exact_mut(hd).enumerate() {
         apply_rope_row(row, pos, hd, theta);
     }
+}
+
+/// y = x W^T like [`linear`], with the output rows cut into contiguous
+/// bands solved in parallel on `pool` — the batched-decode twin of the
+/// single-row projections. Every band runs the row kernel of [`linear`]
+/// unchanged, and rows never share accumulators, so each output row is
+/// **bitwise identical** to its single-row `linear` call at any worker
+/// count (the same contract as the f64 banded matmuls in
+/// `linalg::matrix`).
+pub fn linear_batch(x: &[f32], w: &[f32], n: usize, m: usize, pool: &Pool, out: &mut [f32]) {
+    let rows = x.len() / n;
+    let bands = if pool.threads() <= 1 {
+        1
+    } else {
+        pool.threads().min(rows)
+    };
+    if bands <= 1 {
+        linear(x, w, n, m, out);
+        return;
+    }
+    let rows_per = rows.div_ceil(bands);
+    let jobs: Vec<_> = x
+        .chunks(rows_per * n)
+        .zip(out.chunks_mut(rows_per * m))
+        .map(|(xb, ob)| move || linear(xb, w, n, m, ob))
+        .collect();
+    pool.run(jobs);
 }
 
 pub fn silu(x: f32) -> f32 {
@@ -361,6 +389,100 @@ pub fn block_forward_step(
     h.iter().zip(&down).map(|(a, b)| a + b).collect()
 }
 
+/// Batched one-position dense block step: `x` stacks B hidden rows
+/// [B, d], `layers` holds each session's KV rows for this block, and the
+/// return stacks the B block-output rows [B, d].
+///
+/// The batch is cut into contiguous row bands solved in parallel on
+/// `pool`; inside a band the stacked QKV/MLP projections run through the
+/// multi-row [`linear`] kernel (one weight sweep per band, the row-banded
+/// matmul shape) while attention stays a per-session [`attention_step`]
+/// against that row's own cache. No computation ever mixes rows, and the
+/// per-row ops are exactly [`block_forward_step`]'s, so every output row
+/// is **bitwise identical** to the batch-1 step at any worker count.
+pub fn block_forward_step_batch(
+    cfg: &Config,
+    params: &FlatStore,
+    prefix: &str,
+    layers: &mut [&mut LayerKv],
+    x: &[f32],
+    pool: &Pool,
+) -> Vec<f32> {
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+    let b = layers.len();
+    assert_eq!(x.len(), b * d);
+    if b == 0 {
+        return Vec::new();
+    }
+    let g = |n: &str| params.view(&format!("{prefix}{n}"));
+    let (attn_norm, mlp_norm) = (g("attn_norm"), g("mlp_norm"));
+    let (wq, wk, wv, wo) = (g("wq"), g("wk"), g("wv"), g("wo"));
+    let (w_gate, w_up, w_down) = (g("w_gate"), g("w_up"), g("w_down"));
+
+    let mut y = vec![0.0f32; b * d];
+    let bands = if pool.threads() <= 1 {
+        1
+    } else {
+        pool.threads().min(b)
+    };
+    let rows_per = b.div_ceil(bands);
+    let jobs: Vec<_> = x
+        .chunks(rows_per * d)
+        .zip(y.chunks_mut(rows_per * d))
+        .zip(layers.chunks_mut(rows_per))
+        .map(|((xb, yb), lb)| {
+            move || {
+                let rb = lb.len();
+                let mut a_in = vec![0.0; rb * d];
+                rmsnorm(xb, attn_norm, d, &mut a_in);
+
+                let mut q = vec![0.0; rb * d];
+                let mut k = vec![0.0; rb * d];
+                let mut v = vec![0.0; rb * d];
+                linear(&a_in, wq, d, d, &mut q);
+                linear(&a_in, wk, d, d, &mut k);
+                linear(&a_in, wv, d, d, &mut v);
+
+                // per-session KV attention rows
+                let mut o_in = vec![0.0; rb * d];
+                for (r, layer) in lb.iter_mut().enumerate() {
+                    let row = attention_step(
+                        cfg,
+                        layer,
+                        &mut q[r * d..(r + 1) * d],
+                        &mut k[r * d..(r + 1) * d],
+                        &v[r * d..(r + 1) * d],
+                    );
+                    o_in[r * d..(r + 1) * d].copy_from_slice(&row);
+                }
+
+                let mut attn_out = vec![0.0; rb * d];
+                linear(&o_in, wo, d, d, &mut attn_out);
+                let h: Vec<f32> = xb.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
+
+                let mut m_in = vec![0.0; rb * d];
+                rmsnorm(&h, mlp_norm, d, &mut m_in);
+                let mut gate = vec![0.0; rb * f];
+                let mut up = vec![0.0; rb * f];
+                linear(&m_in, w_gate, d, f, &mut gate);
+                linear(&m_in, w_up, d, f, &mut up);
+                let d_in: Vec<f32> = gate
+                    .iter()
+                    .zip(&up)
+                    .map(|(&gv, &uv)| silu(gv) * uv)
+                    .collect();
+                let mut down = vec![0.0; rb * d];
+                linear(&d_in, w_down, f, d, &mut down);
+                for (yv, (hv, dv)) in yb.iter_mut().zip(h.iter().zip(&down)) {
+                    *yv = hv + dv;
+                }
+            }
+        })
+        .collect();
+    pool.run(jobs);
+    y
+}
+
 /// One KV-cached decode step: absorb `token` at position `cache.len` and
 /// return its logits row [vocab]. Bitwise identical to the last row of
 /// [`model_forward`] over the same token prefix — O(len) attention work
@@ -386,6 +508,56 @@ pub fn model_forward_step(
     let mut logits = vec![0.0; cfg.vocab];
     linear(&hn, params.view("lm_head"), d, cfg.vocab, &mut logits);
     logits
+}
+
+/// Batched KV-cached decode: absorb one token per session — stacked into
+/// a single [B, d] pass per layer — and return each session's logits row.
+/// Row i is **bitwise identical** to `model_forward_step` on cache i with
+/// token i (sessions never mix; see [`block_forward_step_batch`]), at any
+/// pool width, so batched and per-session decode are interchangeable.
+pub fn model_forward_step_batch(
+    cfg: &Config,
+    params: &FlatStore,
+    caches: &mut [&mut KvCache],
+    tokens: &[u32],
+    pool: &Pool,
+) -> Vec<Vec<f32>> {
+    assert_eq!(caches.len(), tokens.len());
+    let b = tokens.len();
+    if b == 0 {
+        return Vec::new();
+    }
+    for c in caches.iter() {
+        assert_eq!(c.layers.len(), cfg.n_layers);
+    }
+    let d = cfg.d_model;
+    let embed = params.view("embed");
+    let mut x = vec![0.0f32; b * d];
+    for (i, &tok) in tokens.iter().enumerate() {
+        let tok = tok as usize;
+        assert!(tok < cfg.vocab, "token {tok} out of range");
+        x[i * d..(i + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+    }
+    for blk in 0..cfg.n_layers {
+        let mut layers: Vec<&mut LayerKv> =
+            caches.iter_mut().map(|c| &mut c.layers[blk]).collect();
+        x = block_forward_step_batch(
+            cfg,
+            params,
+            &format!("blocks.{blk}."),
+            &mut layers,
+            &x,
+            pool,
+        );
+    }
+    for c in caches.iter_mut() {
+        c.len += 1;
+    }
+    let mut hn = vec![0.0; b * d];
+    rmsnorm(&x, params.view("final_norm"), d, &mut hn);
+    let mut logits = vec![0.0f32; b * cfg.vocab];
+    linear_batch(&hn, params.view("lm_head"), d, cfg.vocab, pool, &mut logits);
+    logits.chunks_exact(cfg.vocab).map(|r| r.to_vec()).collect()
 }
 
 /// Prefill: absorb a whole prompt into `cache` and return the logits row
@@ -627,6 +799,72 @@ mod tests {
         assert_eq!(pre, step);
         assert_eq!(c1.len, c2.len);
         assert_eq!(c1.bytes(), c2.bytes());
+    }
+
+    #[test]
+    fn batched_step_rows_match_single_steps_bitwise() {
+        let (cfg, params) = setup();
+        let b = 3;
+        // distinct prefixes of distinct lengths per session
+        let prompts: Vec<Vec<u32>> = (0..b)
+            .map(|r| (0..3 + r).map(|i| ((i * 19 + r * 7) % cfg.vocab) as u32).collect())
+            .collect();
+        let mut batched: Vec<KvCache> = prompts
+            .iter()
+            .map(|p| {
+                let mut c = KvCache::new(cfg.n_layers);
+                model_forward_prefill(&cfg, &params, &mut c, p);
+                c
+            })
+            .collect();
+        let mut solo = batched.clone();
+        let pool = crate::util::pool::Pool::exact(2);
+        for step in 0..4usize {
+            let toks: Vec<u32> =
+                (0..b).map(|r| ((r * 29 + step * 13) % cfg.vocab) as u32).collect();
+            let mut refs: Vec<&mut KvCache> = batched.iter_mut().collect();
+            let rows = model_forward_step_batch(&cfg, &params, &mut refs, &toks, &pool);
+            assert_eq!(rows.len(), b);
+            for (r, row) in rows.iter().enumerate() {
+                let want = model_forward_step(&cfg, &params, &mut solo[r], toks[r]);
+                for (i, (a, b_)) in row.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b_.to_bits(),
+                        "row {r} step {step} logit {i}: {a} vs {b_}"
+                    );
+                }
+            }
+        }
+        // the caches advanced exactly as the single-row steps did
+        for (cb, cs) in batched.iter().zip(&solo) {
+            assert_eq!(cb.len, cs.len);
+            for (lb, ls) in cb.layers.iter().zip(&cs.layers) {
+                assert_eq!(lb.k, ls.k);
+                assert_eq!(lb.v, ls.v);
+            }
+        }
+        // empty batch is a no-op
+        let rows = model_forward_step_batch(&cfg, &params, &mut [], &[], &pool);
+        assert!(rows.is_empty());
+    }
+
+    #[test]
+    fn linear_batch_matches_linear_at_any_width() {
+        let mut rng = Rng::new(41);
+        let (rows, n, m) = (7, 24, 17);
+        let x: Vec<f32> = (0..rows * n).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let mut want = vec![0.0; rows * m];
+        linear(&x, &w, n, m, &mut want);
+        for threads in [1usize, 2, 4, 16] {
+            let mut got = vec![0.0; rows * m];
+            linear_batch(&x, &w, n, m, &crate::util::pool::Pool::exact(threads), &mut got);
+            assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "linear_batch diverged at {threads} threads"
+            );
+        }
     }
 
     #[test]

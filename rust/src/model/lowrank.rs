@@ -7,9 +7,11 @@
 
 use super::config::{Config, BLOCK_LINEARS};
 use super::forward::{
-    attention, attention_step, linear, rmsnorm, silu, BlockTaps, KvCache, LayerKv,
+    attention, attention_step, linear, linear_batch, rmsnorm, silu, BlockTaps, KvCache,
+    LayerKv,
 };
 use super::params::{factor_layout, mask_layout, FlatStore};
+use crate::util::pool::Pool;
 
 /// One compressed block: trainables + rank masks.
 #[derive(Clone, Debug)]
@@ -199,6 +201,89 @@ pub fn block_lr_forward_step(
     h.iter().zip(&down).map(|(a, b)| a + b).collect()
 }
 
+/// Batched one-position compressed block step — the low-rank twin of
+/// [`crate::model::forward::block_forward_step_batch`]: the batch is cut
+/// into row bands on `pool`, stacked factored projections run through the
+/// multi-row [`BlockFactors::apply_linear`] kernel, attention stays a
+/// per-session [`attention_step`]. Rows never mix, so each output row is
+/// bitwise identical to [`block_lr_forward_step`] at any worker count.
+pub fn block_lr_forward_step_batch(
+    cfg: &Config,
+    bf: &BlockFactors,
+    layers: &mut [&mut LayerKv],
+    x: &[f32],
+    pool: &Pool,
+) -> Vec<f32> {
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+    let b = layers.len();
+    assert_eq!(x.len(), b * d);
+    if b == 0 {
+        return Vec::new();
+    }
+
+    let mut y = vec![0.0f32; b * d];
+    let bands = if pool.threads() <= 1 {
+        1
+    } else {
+        pool.threads().min(b)
+    };
+    let rows_per = b.div_ceil(bands);
+    let jobs: Vec<_> = x
+        .chunks(rows_per * d)
+        .zip(y.chunks_mut(rows_per * d))
+        .zip(layers.chunks_mut(rows_per))
+        .map(|((xb, yb), lb)| {
+            move || {
+                let rb = lb.len();
+                let mut a_in = vec![0.0; rb * d];
+                rmsnorm(xb, bf.factors.view("attn_norm"), d, &mut a_in);
+
+                let mut q = vec![0.0; rb * d];
+                let mut k = vec![0.0; rb * d];
+                let mut v = vec![0.0; rb * d];
+                bf.apply_linear(cfg, "wq", &a_in, &mut q);
+                bf.apply_linear(cfg, "wk", &a_in, &mut k);
+                bf.apply_linear(cfg, "wv", &a_in, &mut v);
+
+                let mut o_in = vec![0.0; rb * d];
+                for (r, layer) in lb.iter_mut().enumerate() {
+                    let row = attention_step(
+                        cfg,
+                        layer,
+                        &mut q[r * d..(r + 1) * d],
+                        &mut k[r * d..(r + 1) * d],
+                        &v[r * d..(r + 1) * d],
+                    );
+                    o_in[r * d..(r + 1) * d].copy_from_slice(&row);
+                }
+
+                let mut attn_out = vec![0.0; rb * d];
+                bf.apply_linear(cfg, "wo", &o_in, &mut attn_out);
+                let h: Vec<f32> = xb.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
+
+                let mut m_in = vec![0.0; rb * d];
+                rmsnorm(&h, bf.factors.view("mlp_norm"), d, &mut m_in);
+                let mut gate = vec![0.0; rb * f];
+                let mut up = vec![0.0; rb * f];
+                bf.apply_linear(cfg, "w_gate", &m_in, &mut gate);
+                bf.apply_linear(cfg, "w_up", &m_in, &mut up);
+                let d_in: Vec<f32> = gate
+                    .iter()
+                    .zip(&up)
+                    .map(|(&gv, &uv)| silu(gv) * uv)
+                    .collect();
+                let mut down = vec![0.0; rb * d];
+                bf.apply_linear(cfg, "w_down", &d_in, &mut down);
+                for (yv, (hv, dv)) in yb.iter_mut().zip(h.iter().zip(&down)) {
+                    *yv = hv + dv;
+                }
+            }
+        })
+        .collect();
+    pool.run(jobs);
+    y
+}
+
 /// One KV-cached decode step through the compressed model. Bitwise
 /// identical to the last row of [`model_lr_forward`] over the same prefix
 /// (the cache-exactness contract; enforced by tests/kv_cache.rs).
@@ -225,6 +310,51 @@ pub fn model_lr_forward_step(
     let mut logits = vec![0.0; cfg.vocab];
     linear(&hn, params.view("lm_head"), d, cfg.vocab, &mut logits);
     logits
+}
+
+/// Batched KV-cached decode through the compressed model: one stacked
+/// [B, d] pass per layer, one logits row per session. Row i is bitwise
+/// identical to [`model_lr_forward_step`] on cache i with token i, at any
+/// pool width — the low-rank twin of
+/// [`crate::model::forward::model_forward_step_batch`].
+pub fn model_lr_forward_step_batch(
+    cfg: &Config,
+    params: &FlatStore,
+    blocks: &[BlockFactors],
+    caches: &mut [&mut KvCache],
+    tokens: &[u32],
+    pool: &Pool,
+) -> Vec<Vec<f32>> {
+    assert_eq!(blocks.len(), cfg.n_layers);
+    assert_eq!(caches.len(), tokens.len());
+    let b = tokens.len();
+    if b == 0 {
+        return Vec::new();
+    }
+    for c in caches.iter() {
+        assert_eq!(c.layers.len(), cfg.n_layers);
+    }
+    let d = cfg.d_model;
+    let embed = params.view("embed");
+    let mut x = vec![0.0f32; b * d];
+    for (i, &tok) in tokens.iter().enumerate() {
+        let tok = tok as usize;
+        assert!(tok < cfg.vocab, "token {tok} out of range");
+        x[i * d..(i + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+    }
+    for (blk, bf) in blocks.iter().enumerate() {
+        let mut layers: Vec<&mut LayerKv> =
+            caches.iter_mut().map(|c| &mut c.layers[blk]).collect();
+        x = block_lr_forward_step_batch(cfg, bf, &mut layers, &x, pool);
+    }
+    for c in caches.iter_mut() {
+        c.len += 1;
+    }
+    let mut hn = vec![0.0; b * d];
+    rmsnorm(&x, params.view("final_norm"), d, &mut hn);
+    let mut logits = vec![0.0f32; b * cfg.vocab];
+    linear_batch(&hn, params.view("lm_head"), d, cfg.vocab, pool, &mut logits);
+    logits.chunks_exact(cfg.vocab).map(|r| r.to_vec()).collect()
 }
 
 /// Prefill the compressed model: absorb a whole prompt into `cache`,
@@ -483,6 +613,55 @@ mod tests {
             }
         }
         assert_eq!(cache.len, n);
+    }
+
+    #[test]
+    fn lr_batched_step_rows_match_single_steps_bitwise() {
+        let (cfg, p) = setup();
+        let mut blocks: Vec<BlockFactors> =
+            (0..cfg.n_layers).map(|i| exact_factors(&cfg, &p, i)).collect();
+        for bf in blocks.iter_mut() {
+            bf.set_rank("wv", 4);
+            bf.set_rank("w_down", 6);
+        }
+        let b = 3;
+        let prompts: Vec<Vec<u32>> = (0..b)
+            .map(|r| (0..2 + r).map(|i| ((i * 23 + r * 5) % cfg.vocab) as u32).collect())
+            .collect();
+        let mut batched: Vec<KvCache> = prompts
+            .iter()
+            .map(|pr| {
+                let mut c = KvCache::new(cfg.n_layers);
+                model_lr_forward_prefill(&cfg, &p, &blocks, &mut c, pr);
+                c
+            })
+            .collect();
+        let mut solo = batched.clone();
+        let pool = Pool::exact(2);
+        for step in 0..3usize {
+            let toks: Vec<u32> =
+                (0..b).map(|r| ((r * 31 + step * 17) % cfg.vocab) as u32).collect();
+            let mut refs: Vec<&mut KvCache> = batched.iter_mut().collect();
+            let rows =
+                model_lr_forward_step_batch(&cfg, &p, &blocks, &mut refs, &toks, &pool);
+            for (r, row) in rows.iter().enumerate() {
+                let want = model_lr_forward_step(&cfg, &p, &blocks, &mut solo[r], toks[r]);
+                for (i, (a, b_)) in row.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b_.to_bits(),
+                        "row {r} step {step} logit {i}: {a} vs {b_}"
+                    );
+                }
+            }
+        }
+        for (cb, cs) in batched.iter().zip(&solo) {
+            assert_eq!(cb.len, cs.len);
+            for (lb, ls) in cb.layers.iter().zip(&cs.layers) {
+                assert_eq!(lb.k, ls.k);
+                assert_eq!(lb.v, ls.v);
+            }
+        }
     }
 
     #[test]

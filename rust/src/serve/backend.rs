@@ -5,7 +5,12 @@
 //! [`Session`] (one O(T²)-attention pass) and returns the logits at its
 //! last position; [`ModelBackend::decode_step`] then appends one token per
 //! call at O(T) attention cost, reading and extending the session's KV
-//! cache. [`ModelBackend::oracle_logits`] keeps the pre-cache decode path
+//! cache. [`ModelBackend::decode_batch`] advances B sessions in one
+//! stacked [B, d] forward — the engine's production tick — with every row
+//! bitwise identical to its `decode_step` result and per-row failures
+//! isolated to their own session (a default implementation loops
+//! `decode_step`, so third-party backends keep working).
+//! [`ModelBackend::oracle_logits`] keeps the pre-cache decode path
 //! — a full-prefix recompute per token — as the bitwise test oracle and
 //! bench baseline (driven by `DecodeMode::Recompute`).
 //!
@@ -22,12 +27,15 @@
 //! simulated per-step latency.
 
 use crate::model::forward::{
-    model_forward, model_forward_prefill, model_forward_step, KvCache,
+    model_forward, model_forward_prefill, model_forward_step, model_forward_step_batch,
+    KvCache,
 };
 use crate::model::lowrank::{
-    model_lr_forward, model_lr_forward_prefill, model_lr_forward_step, BlockFactors,
+    model_lr_forward, model_lr_forward_prefill, model_lr_forward_step,
+    model_lr_forward_step_batch, BlockFactors,
 };
 use crate::model::{Config, FlatStore};
+use crate::util::pool::Pool;
 use anyhow::Result;
 use std::time::Duration;
 
@@ -101,6 +109,35 @@ pub trait ModelBackend {
     /// at the new last position, at O(len) attention cost.
     fn decode_step(&mut self, session: &mut Session, token: i32) -> Result<Vec<f32>>;
 
+    /// Advance B sessions by one token each in a single call — the
+    /// engine's production tick. `sessions[i]` absorbs `tokens[i]`;
+    /// result row i carries its logits, or the error that retired it.
+    ///
+    /// Contract:
+    /// - **row equality**: every `Ok` row is bitwise identical to the
+    ///   `decode_step` (and therefore `oracle_logits`) result over the
+    ///   same prefix, for any batch size, composition, or worker count;
+    /// - **per-row isolation**: a failing row leaves its own session
+    ///   unadvanced and must not disturb any other row;
+    /// - lengths must match (`sessions.len() == tokens.len()`), and the
+    ///   result has exactly one entry per session, in order.
+    ///
+    /// The default implementation loops `decode_step`, so third-party
+    /// backends keep working unchanged; the built-in backends override it
+    /// with one stacked [B, d] forward per call.
+    fn decode_batch(
+        &mut self,
+        sessions: &mut [&mut Session],
+        tokens: &[i32],
+    ) -> Vec<Result<Vec<f32>>> {
+        assert_eq!(sessions.len(), tokens.len(), "one token per session");
+        sessions
+            .iter_mut()
+            .zip(tokens)
+            .map(|(session, &token)| self.decode_step(session, token))
+            .collect()
+    }
+
     /// Full-prefix recompute oracle (the pre-KV-cache decode path):
     /// logits row [vocab] at the last position of `tokens`.
     fn oracle_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
@@ -116,6 +153,57 @@ fn ensure_owner(session: &Session, artifact: &'static str) -> Result<()> {
         session.backend
     );
     Ok(())
+}
+
+/// A `decode_batch` split into the rows a KV-cached backend can advance
+/// (stacked caches + wrapped tokens) and the rows already resolved to
+/// per-row errors (foreign owner, non-KV state).
+struct KvBatch<'a> {
+    /// per-row slots; `None` rows are filled from the stacked forward
+    out: Vec<Option<Result<Vec<f32>>>>,
+    /// original row index of each stacked cache
+    rows: Vec<usize>,
+    caches: Vec<&'a mut KvCache>,
+    toks: Vec<u32>,
+}
+
+/// Validate a batch row by row — owner tag and KV state, the same checks
+/// `decode_step` runs — resolving bad rows to errors without touching
+/// their sessions, so one foreign or corrupt session never poisons the
+/// stacked pass for the rest (the per-row isolation half of the
+/// `decode_batch` contract).
+fn partition_kv_batch<'a>(
+    artifact: &'static str,
+    vocab: usize,
+    sessions: &'a mut [&mut Session],
+    tokens: &[i32],
+) -> KvBatch<'a> {
+    assert_eq!(sessions.len(), tokens.len(), "one token per session");
+    let mut batch = KvBatch {
+        out: (0..sessions.len()).map(|_| None).collect(),
+        rows: Vec::with_capacity(sessions.len()),
+        caches: Vec::with_capacity(sessions.len()),
+        toks: Vec::with_capacity(sessions.len()),
+    };
+    for (i, session) in sessions.iter_mut().enumerate() {
+        if let Err(e) = ensure_owner(session, artifact) {
+            batch.out[i] = Some(Err(e));
+            continue;
+        }
+        match &mut session.state {
+            SessionState::Kv(cache) => {
+                batch.rows.push(i);
+                batch.toks.push(tokens[i].rem_euclid(vocab as i32) as u32);
+                batch.caches.push(cache);
+            }
+            _ => {
+                batch.out[i] = Some(Err(anyhow::anyhow!(
+                    "session does not belong to a KV-cached backend"
+                )));
+            }
+        }
+    }
+    batch
 }
 
 /// Byte tokens arrive as i32 from the client surface; wrap defensively
@@ -197,6 +285,30 @@ impl ModelBackend for DenseBackend {
         Ok(logits)
     }
 
+    fn decode_batch(
+        &mut self,
+        sessions: &mut [&mut Session],
+        tokens: &[i32],
+    ) -> Vec<Result<Vec<f32>>> {
+        let KvBatch {
+            mut out,
+            rows,
+            mut caches,
+            toks,
+        } = partition_kv_batch(self.artifact(), self.cfg.vocab, sessions, tokens);
+        let logits = model_forward_step_batch(
+            &self.cfg,
+            &self.params,
+            &mut caches,
+            &toks,
+            &Pool::auto(),
+        );
+        for (i, row) in rows.into_iter().zip(logits) {
+            out[i] = Some(Ok(row));
+        }
+        out.into_iter().map(|r| r.expect("row resolved")).collect()
+    }
+
     fn oracle_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
         anyhow::ensure!(!tokens.is_empty(), "oracle needs at least one token");
         let toks = as_vocab_tokens(self.cfg.vocab, tokens);
@@ -269,6 +381,31 @@ impl ModelBackend for CompressedBackend {
         Ok(logits)
     }
 
+    fn decode_batch(
+        &mut self,
+        sessions: &mut [&mut Session],
+        tokens: &[i32],
+    ) -> Vec<Result<Vec<f32>>> {
+        let KvBatch {
+            mut out,
+            rows,
+            mut caches,
+            toks,
+        } = partition_kv_batch(self.artifact(), self.cfg.vocab, sessions, tokens);
+        let logits = model_lr_forward_step_batch(
+            &self.cfg,
+            &self.params,
+            &self.blocks,
+            &mut caches,
+            &toks,
+            &Pool::auto(),
+        );
+        for (i, row) in rows.into_iter().zip(logits) {
+            out[i] = Some(Ok(row));
+        }
+        out.into_iter().map(|r| r.expect("row resolved")).collect()
+    }
+
     fn oracle_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
         anyhow::ensure!(!tokens.is_empty(), "oracle needs at least one token");
         let toks = as_vocab_tokens(self.cfg.vocab, tokens);
@@ -312,6 +449,19 @@ impl SyntheticBackend {
             std::thread::sleep(self.step_delay);
         }
     }
+
+    /// Advance one session without the simulated latency (shared by
+    /// `decode_step`, which pays the delay per call, and `decode_batch`,
+    /// which pays it once per batch).
+    fn advance(&self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
+        ensure_owner(session, self.artifact())?;
+        let SessionState::Synthetic { last, len } = &mut session.state else {
+            anyhow::bail!("session does not belong to the synthetic backend");
+        };
+        *last = token;
+        *len += 1;
+        Ok(self.logits_after(token))
+    }
 }
 
 impl ModelBackend for SyntheticBackend {
@@ -336,14 +486,34 @@ impl ModelBackend for SyntheticBackend {
     }
 
     fn decode_step(&mut self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
+        // validate before sleeping: a foreign session must fail
+        // immediately, not after a simulated model latency
         ensure_owner(session, self.artifact())?;
-        let SessionState::Synthetic { last, len } = &mut session.state else {
-            anyhow::bail!("session does not belong to the synthetic backend");
-        };
+        anyhow::ensure!(
+            matches!(session.state, SessionState::Synthetic { .. }),
+            "session does not belong to the synthetic backend"
+        );
         self.simulate_latency();
-        *last = token;
-        *len += 1;
-        Ok(self.logits_after(token))
+        self.advance(session, token)
+    }
+
+    /// The whole batch shares one simulated model latency — the synthetic
+    /// stand-in for a stacked forward amortizing per-call cost over B
+    /// rows — while each row advances exactly as `decode_step` would.
+    fn decode_batch(
+        &mut self,
+        sessions: &mut [&mut Session],
+        tokens: &[i32],
+    ) -> Vec<Result<Vec<f32>>> {
+        assert_eq!(sessions.len(), tokens.len(), "one token per session");
+        if !sessions.is_empty() {
+            self.simulate_latency();
+        }
+        sessions
+            .iter_mut()
+            .zip(tokens)
+            .map(|(session, &token)| self.advance(session, token))
+            .collect()
     }
 
     fn oracle_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
@@ -429,6 +599,102 @@ mod tests {
         assert!(compressed.decode_step(&mut session, b'b' as i32).is_err());
         // and the rightful owner still advances it fine afterwards
         assert!(dense.decode_step(&mut session, b'b' as i32).is_ok());
+    }
+
+    #[test]
+    fn decode_batch_rows_match_decode_step_bitwise() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(7));
+        let mut be = DenseBackend::new(cfg.clone(), params.clone());
+        let mut twin = DenseBackend::new(cfg, params);
+        let prompts = ["one", "two", "three"];
+        let mut batched: Vec<Session> = prompts
+            .iter()
+            .map(|p| {
+                let toks: Vec<i32> = p.bytes().map(|b| b as i32).collect();
+                be.prefill(&toks).unwrap().session
+            })
+            .collect();
+        let mut solo: Vec<Session> = prompts
+            .iter()
+            .map(|p| {
+                let toks: Vec<i32> = p.bytes().map(|b| b as i32).collect();
+                twin.prefill(&toks).unwrap().session
+            })
+            .collect();
+        for step in 0..3i32 {
+            let toks: Vec<i32> = (0..3).map(|r| r * 11 + step * 5 + 97).collect();
+            let mut refs: Vec<&mut Session> = batched.iter_mut().collect();
+            let rows = be.decode_batch(&mut refs, &toks);
+            assert_eq!(rows.len(), 3);
+            for (r, row) in rows.into_iter().enumerate() {
+                let row = row.expect("batched row succeeds");
+                let want = twin.decode_step(&mut solo[r], toks[r]).unwrap();
+                assert!(
+                    row.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "row {r} diverged at step {step}"
+                );
+            }
+        }
+        for (a, b) in batched.iter().zip(&solo) {
+            assert_eq!(a.len(), b.len());
+            assert_eq!(a.kv_bytes(), b.kv_bytes());
+        }
+    }
+
+    #[test]
+    fn decode_batch_isolates_foreign_rows() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(8));
+        let mut dense = DenseBackend::new(cfg.clone(), params.clone());
+        let mut twin = DenseBackend::new(cfg.clone(), params);
+        let mut synth = SyntheticBackend::new(cfg);
+        let mut good0 = dense.prefill(&[b'a' as i32]).unwrap().session;
+        let mut bad = synth.prefill(&[b'a' as i32]).unwrap().session;
+        let mut good1 = dense.prefill(&[b'b' as i32]).unwrap().session;
+        let toks = [b'x' as i32, b'y' as i32, b'z' as i32];
+        let mut refs: Vec<&mut Session> = vec![&mut good0, &mut bad, &mut good1];
+        let rows = dense.decode_batch(&mut refs, &toks);
+        assert!(rows[0].is_ok());
+        assert!(rows[1].is_err(), "foreign row must fail");
+        assert!(rows[2].is_ok());
+        // the foreign session was not advanced; the good rows match their
+        // sequential twins bitwise
+        assert_eq!(bad.len(), 1);
+        let mut t0 = twin.prefill(&[b'a' as i32]).unwrap().session;
+        let want = twin.decode_step(&mut t0, toks[0]).unwrap();
+        let got = rows[0].as_ref().unwrap();
+        assert!(got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert_eq!(good0.len(), 2);
+        assert_eq!(good1.len(), 2);
+    }
+
+    #[test]
+    fn decode_batch_empty_is_a_no_op() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(9));
+        let blocks =
+            vec![crate::model::lowrank::BlockFactors::zeros(&cfg); cfg.n_layers];
+        let mut dense = DenseBackend::new(cfg.clone(), params.clone());
+        let mut lowr = CompressedBackend::new(cfg.clone(), params, blocks).unwrap();
+        let mut synth = SyntheticBackend::new(cfg);
+        assert!(dense.decode_batch(&mut [], &[]).is_empty());
+        assert!(lowr.decode_batch(&mut [], &[]).is_empty());
+        assert!(synth.decode_batch(&mut [], &[]).is_empty());
+    }
+
+    #[test]
+    fn synthetic_decode_batch_tracks_each_row() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let mut be = SyntheticBackend::new(cfg);
+        let mut s0 = be.prefill(&[b'a' as i32]).unwrap().session;
+        let mut s1 = be.prefill(&[b'p' as i32]).unwrap().session;
+        let mut refs: Vec<&mut Session> = vec![&mut s0, &mut s1];
+        let rows = be.decode_batch(&mut refs, &[b'b' as i32, b'q' as i32]);
+        assert_eq!(argmax(rows[0].as_ref().unwrap()), b'c' as usize);
+        assert_eq!(argmax(rows[1].as_ref().unwrap()), b'r' as usize);
+        assert_eq!(s0.len(), 2);
+        assert_eq!(s1.len(), 2);
     }
 
     #[test]

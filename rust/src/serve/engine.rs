@@ -3,17 +3,21 @@
 //! bounded admission queue and observe each request through a streaming,
 //! cancellable [`Completion`] handle.
 //!
-//! Decode strategy: KV-cached incremental decode. Admission runs one
-//! prefill pass over the request's prompt (building its [`Session`] KV
-//! cache and the first logits row); every decode iteration then samples
-//! one token per active request and advances each still-running session
-//! by one `decode_step` — O(len) attention per token instead of the old
-//! windowed re-forward's O(len²) — admitting/retiring requests between
+//! Decode strategy: KV-cached batched decode. Admission runs one prefill
+//! pass over the request's prompt (building its [`Session`] KV cache and
+//! the first logits row); every decode iteration then samples one token
+//! per active request and advances *all* still-running sessions with a
+//! single `decode_batch` call — one stacked [B, d] forward per tick,
+//! amortizing weight reads and engine overhead across the batch, instead
+//! of B independent batch-1 passes — admitting/retiring requests between
 //! iterations (vLLM-style continuous batching at sequence granularity;
 //! the batch never drains to refill, and retiring a slot drops its
-//! cache). The pre-cache full-prefix recompute path survives as
-//! [`DecodeMode::Recompute`]: the engine's test oracle and bench
-//! baseline, guaranteed bitwise token-identical to the cached path.
+//! cache). A per-row backend failure retires only that request
+//! (`CancelReason::Backend`); every surviving row is bitwise identical
+//! to its per-session `decode_step` result. The pre-cache full-prefix
+//! recompute path survives as [`DecodeMode::Recompute`]: the engine's
+//! test oracle and bench baseline, guaranteed bitwise token-identical to
+//! the cached path.
 //!
 //! Request lifecycle:
 //!   submit → (queued) → admitted → Token* → Done
@@ -40,8 +44,9 @@ use std::time::{Duration, Instant};
 /// How the decode loop turns a request's prefix into logits.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum DecodeMode {
-    /// Prefill once, then one KV-cached `decode_step` per token (O(len)
-    /// attention per step). The production path.
+    /// Prefill once, then one stacked KV-cached `decode_batch` per tick
+    /// (O(len) attention per token, all active sessions in one [B, d]
+    /// forward). The production path.
     #[default]
     Cached,
     /// Re-run the full prefix through `oracle_logits` for every token
@@ -575,12 +580,11 @@ fn decode_loop(
             .queue_depths
             .push(shared.queue_depth.load(Ordering::Relaxed) as f64);
 
-        // sample each slot's held logits, stream, then advance the
-        // still-running slots by one cached decode step (or one oracle
-        // recompute) — the cache-exactness contract keeps the two modes
-        // token-identical. Rows to retire are collected as
-        // (row, backend_failed) and removed afterwards.
+        // phase 1 — sample each slot's held logits and stream the token;
+        // rows that just finished (token budget, stop sequence, context
+        // cap) retire without spending any more backend work
         let mut retire: Vec<(usize, bool)> = Vec::new();
+        let mut advance = vec![false; slots.len()];
         for (row, slot) in slots.iter_mut().enumerate() {
             let params = &slot.req.params;
             let next = slot
@@ -613,28 +617,83 @@ fn decode_loop(
                 options.max_context > 0 && slot.tokens.len() >= options.max_context;
             if generated >= params.max_new_tokens || stopped || capped {
                 retire.push((row, false));
-                continue;
+            } else {
+                advance[row] = true;
             }
-            let advanced = match options.decode {
-                DecodeMode::Cached => {
-                    let session =
-                        slot.session.as_mut().expect("cached slot has a session");
-                    backend.decode_step(session, next)
+        }
+
+        // phase 2 — advance every still-running slot: one stacked
+        // `decode_batch` call per tick on the cached path (per-row
+        // failures retire only their own slot), or one oracle recompute
+        // per slot on the baseline path. The cache-exactness and
+        // row-equality contracts keep all paths token-identical.
+        match options.decode {
+            DecodeMode::Cached => {
+                let mut rows: Vec<usize> = Vec::new();
+                let mut toks: Vec<i32> = Vec::new();
+                let mut sessions: Vec<&mut Session> = Vec::new();
+                for (row, slot) in slots.iter_mut().enumerate() {
+                    if !advance[row] {
+                        continue;
+                    }
+                    rows.push(row);
+                    toks.push(*slot.tokens.last().expect("slot holds its prompt"));
+                    sessions.push(slot.session.as_mut().expect("cached slot has a session"));
                 }
-                DecodeMode::Recompute => backend.oracle_logits(&slot.tokens),
-            };
-            match advanced {
-                Ok(logits) => {
-                    metrics.decode_tokens += 1;
-                    slot.next_logits = logits;
+                if !sessions.is_empty() {
+                    metrics.decode_batches += 1;
+                    metrics.decode_batch_rows.push(sessions.len() as f64);
+                    let mut results = backend.decode_batch(&mut sessions, &toks);
+                    drop(sessions);
+                    if results.len() != rows.len() {
+                        // defensive against a misbehaving third-party
+                        // backend: missing rows retire, surplus rows drop
+                        crate::log_warn!(
+                            "serve: decode_batch returned {} rows for {} sessions",
+                            results.len(),
+                            rows.len()
+                        );
+                        results.truncate(rows.len());
+                        results.resize_with(rows.len(), || {
+                            Err(anyhow::anyhow!("decode_batch dropped this row"))
+                        });
+                    }
+                    for (row, result) in rows.into_iter().zip(results) {
+                        match result {
+                            Ok(logits) => {
+                                metrics.decode_tokens += 1;
+                                slots[row].next_logits = logits;
+                            }
+                            Err(e) => {
+                                // per-request failure: retire only this slot
+                                crate::log_warn!(
+                                    "serve: decode step failed for request {}: {e:#}",
+                                    slots[row].req.id
+                                );
+                                retire.push((row, true));
+                            }
+                        }
+                    }
                 }
-                Err(e) => {
-                    // per-request failure: retire only this slot
-                    crate::log_warn!(
-                        "serve: decode step failed for request {}: {e:#}",
-                        slot.req.id
-                    );
-                    retire.push((row, true));
+            }
+            DecodeMode::Recompute => {
+                for (row, slot) in slots.iter_mut().enumerate() {
+                    if !advance[row] {
+                        continue;
+                    }
+                    match backend.oracle_logits(&slot.tokens) {
+                        Ok(logits) => {
+                            metrics.decode_tokens += 1;
+                            slot.next_logits = logits;
+                        }
+                        Err(e) => {
+                            crate::log_warn!(
+                                "serve: decode step failed for request {}: {e:#}",
+                                slot.req.id
+                            );
+                            retire.push((row, true));
+                        }
+                    }
                 }
             }
         }
@@ -646,8 +705,10 @@ fn decode_loop(
                 .map(|s| s.session.as_ref().map_or(0, Session::kv_bytes))
                 .sum::<usize>() as f64,
         );
-        // rows were pushed in ascending order; swap_remove in reverse so
+        // phase-1 (finished) and phase-2 (backend-failed) retirements
+        // interleave, so order by row and swap_remove highest-first so
         // earlier indices stay valid
+        retire.sort_unstable_by_key(|&(row, _)| row);
         for &(row, backend_failed) in retire.iter().rev() {
             let slot = slots.swap_remove(row);
             if backend_failed {
@@ -726,6 +787,49 @@ mod tests {
         let b = server.submit("hello", p).unwrap().wait().unwrap();
         assert_eq!(a.text, b.text);
         server.shutdown();
+    }
+
+    #[test]
+    fn cached_ticks_issue_one_batched_call_each() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(3));
+        let server = Server::start_with(
+            cfg.clone(),
+            ServedModel::Dense(params),
+            ServerOptions {
+                max_batch: 4,
+                ..Default::default()
+            },
+        );
+        let completions: Vec<_> = (0..4)
+            .map(|i| {
+                server
+                    .submit(
+                        &format!("req {i}"),
+                        GenParams {
+                            max_new_tokens: 64,
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap()
+            })
+            .collect();
+        for c in completions {
+            c.wait_timeout(Duration::from_secs(60)).unwrap();
+        }
+        let m = server.shutdown();
+        assert!(m.decode_batches > 0);
+        assert_eq!(m.decode_batches, m.decode_batch_rows.len());
+        // every advanced row came through a batched call, none failed
+        assert_eq!(
+            m.decode_batch_rows.iter().sum::<f64>() as usize,
+            m.decode_tokens
+        );
+        // occupancy never exceeds the slot budget, and with 4 long-lived
+        // requests the batch fills all 4 slots at some tick
+        let max_rows = m.decode_batch_rows.iter().cloned().fold(0.0, f64::max);
+        assert!(max_rows <= 4.0);
+        assert_eq!(max_rows, 4.0, "batch never filled: {:?}", m.decode_batch_rows);
     }
 
     #[test]

@@ -30,6 +30,12 @@ pub struct ServeMetrics {
     /// KV-cache bytes resident across all live sessions, sampled once per
     /// decode iteration (all zeros in `DecodeMode::Recompute`)
     pub cache_bytes: Vec<f64>,
+    /// stacked `decode_batch` calls the engine issued (zero in
+    /// `DecodeMode::Recompute`, which advances slots via the oracle)
+    pub decode_batches: usize,
+    /// rows stacked into each `decode_batch` call — the batch-occupancy
+    /// histogram of the batched decode path (one entry per call)
+    pub decode_batch_rows: Vec<f64>,
 }
 
 impl ServeMetrics {
@@ -54,6 +60,25 @@ impl ServeMetrics {
     /// Peak KV-cache residency over the run (0.0 when nothing was cached).
     pub fn peak_cache_bytes(&self) -> f64 {
         self.cache_bytes.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Mean rows per stacked `decode_batch` call (0.0 with no calls).
+    pub fn mean_decode_batch_rows(&self) -> f64 {
+        if self.decode_batch_rows.is_empty() {
+            0.0
+        } else {
+            mean(&self.decode_batch_rows)
+        }
+    }
+
+    /// Batch-occupancy histogram of the batched decode path:
+    /// `(rows_in_batch, call_count)` pairs, ascending by batch size.
+    pub fn decode_batch_histogram(&self) -> Vec<(usize, usize)> {
+        let mut counts = std::collections::BTreeMap::new();
+        for &rows in &self.decode_batch_rows {
+            *counts.entry(rows as usize).or_insert(0usize) += 1;
+        }
+        counts.into_iter().collect()
     }
 
     pub fn summary(&self) -> String {
@@ -91,9 +116,14 @@ impl ServeMetrics {
         } else {
             format!("{:.1}KiB", self.peak_cache_bytes() / 1024.0)
         };
+        let batch_rows = if self.decode_batch_rows.is_empty() {
+            String::from("n/a")
+        } else {
+            format!("{:.2}", self.mean_decode_batch_rows())
+        };
         format!(
             "requests={requests} rejected={} cancelled={} (deadline={}) tokens={} \
-             prefill_toks={} decode_toks={} \
+             prefill_toks={} decode_toks={} decode_batches={} batch_rows={batch_rows} \
              throughput={tput} ttft p50={tp50} p95={tp95} \
              latency p50={lp50} p95={lp95} batch_occ={occ} queue_mean={qm} \
              kv_peak={kv}",
@@ -103,6 +133,7 @@ impl ServeMetrics {
             self.tokens,
             self.prefill_tokens,
             self.decode_tokens,
+            self.decode_batches,
         )
     }
 }
@@ -142,6 +173,25 @@ mod tests {
         assert!(s.contains("rejected=3"), "{s}");
         assert!(s.contains("cancelled=2"), "{s}");
         assert!(s.contains("deadline=1"), "{s}");
+    }
+
+    #[test]
+    fn decode_batch_occupancy_histogram_and_summary() {
+        let m = ServeMetrics {
+            decode_batches: 5,
+            decode_batch_rows: vec![1.0, 4.0, 4.0, 8.0, 4.0],
+            ..Default::default()
+        };
+        assert!((m.mean_decode_batch_rows() - 4.2).abs() < 1e-9);
+        assert_eq!(m.decode_batch_histogram(), vec![(1, 1), (4, 3), (8, 1)]);
+        let s = m.summary();
+        assert!(s.contains("decode_batches=5"), "{s}");
+        assert!(s.contains("batch_rows=4.20"), "{s}");
+        // and with no batched calls the field degrades to n/a, not NaN
+        let empty = ServeMetrics::default();
+        assert_eq!(empty.mean_decode_batch_rows(), 0.0);
+        assert!(empty.decode_batch_histogram().is_empty());
+        assert!(empty.summary().contains("batch_rows=n/a"));
     }
 
     #[test]

@@ -19,13 +19,16 @@
 //! - **Backpressure**: the admission queue is bounded by
 //!   [`ServerOptions::max_queue`]; `submit` returns
 //!   `Err(SubmitError::Overloaded)` immediately instead of blocking.
-//! - **KV-cached decode**: admission runs one [`ModelBackend::prefill`]
-//!   pass over the prompt, building a per-request [`Session`]; each decode
-//!   iteration advances every active session by one
-//!   [`ModelBackend::decode_step`] at O(len) attention cost. The old
-//!   full-prefix recompute path survives as [`DecodeMode::Recompute`]
-//!   (test oracle / bench baseline) and is guaranteed **bitwise
-//!   token-identical** to the cached path.
+//! - **KV-cached batched decode**: admission runs one
+//!   [`ModelBackend::prefill`] pass over the prompt, building a
+//!   per-request [`Session`]; each decode iteration advances *all* active
+//!   sessions with a single [`ModelBackend::decode_batch`] call — one
+//!   stacked [B, d] forward per tick at O(len) attention cost per row,
+//!   each row **bitwise identical** to its per-session
+//!   [`ModelBackend::decode_step`] result, per-row failures retiring only
+//!   their own request. The old full-prefix recompute path survives as
+//!   [`DecodeMode::Recompute`] (test oracle / bench baseline) and is
+//!   guaranteed **bitwise token-identical** to the cached path.
 //! - **Backends**: the decode loop is generic over [`ModelBackend`] —
 //!   dense ([`DenseBackend`]), low-rank compressed
 //!   ([`CompressedBackend`]), or the artifact-free [`SyntheticBackend`]

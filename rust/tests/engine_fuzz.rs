@@ -1,0 +1,219 @@
+//! Randomized engine-schedule fuzzing (seeded, deterministic generation):
+//! drive the synthetic backend — wrapped in a deterministic fault
+//! injector that exercises the trait's *default* `decode_batch` — through
+//! ~200 random admit/cancel/deadline/backend-error schedules and assert
+//! the engine's lifecycle invariants:
+//!
+//! - every accepted request terminates with **exactly one** terminal
+//!   event, and no token arrives after it;
+//! - every streamed token sequence is a prefix of the synthetic oracle's
+//!   stream for that prompt (whatever mix of completion, cancellation,
+//!   deadline expiry, context capping, or injected backend failure ends
+//!   the request);
+//! - the `ServeMetrics` counters balance: submissions =
+//!   completed + cancelled + rejected, token totals agree with what the
+//!   clients saw, and every batched decode call is accounted for.
+//!
+//! Outcome *classes* may vary with timing (a cancel can land before or
+//! after completion); the invariants hold either way, which is exactly
+//! what makes them fuzzable.
+
+use aasvd::model::Config;
+use aasvd::serve::{
+    DecodeMode, Event, GenParams, GenResponse, ModelBackend, Prefill, Server,
+    ServerOptions, Session, SubmitError, SyntheticBackend,
+};
+use aasvd::util::rng::Rng;
+use std::time::Duration;
+
+/// Deterministic fault injector: every `fail_every`-th backend call
+/// (prefill, decode step, or oracle recompute) fails. Implements only the
+/// session API, so the engine reaches it through the trait's default
+/// `decode_batch` — the third-party-backend compatibility path.
+struct FaultyBackend {
+    inner: SyntheticBackend,
+    fail_every: u64,
+    calls: u64,
+}
+
+impl FaultyBackend {
+    fn tick(&mut self) -> anyhow::Result<()> {
+        self.calls += 1;
+        if self.fail_every != 0 && self.calls % self.fail_every == 0 {
+            anyhow::bail!("injected backend failure (call {})", self.calls);
+        }
+        Ok(())
+    }
+}
+
+impl ModelBackend for FaultyBackend {
+    fn artifact(&self) -> &'static str {
+        "faulty-synthetic"
+    }
+    fn prefill(&mut self, tokens: &[i32]) -> anyhow::Result<Prefill> {
+        self.tick()?;
+        self.inner.prefill(tokens)
+    }
+    fn decode_step(&mut self, session: &mut Session, token: i32) -> anyhow::Result<Vec<f32>> {
+        self.tick()?;
+        self.inner.decode_step(session, token)
+    }
+    fn oracle_logits(&mut self, tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
+        self.tick()?;
+        self.inner.oracle_logits(tokens)
+    }
+}
+
+#[test]
+fn randomized_schedules_preserve_engine_invariants() {
+    let mut rng = Rng::new(0xF0_22_5EED);
+    for schedule in 0..200u32 {
+        let cfg = Config::builtin("tiny").unwrap();
+        // fault injection on ~1/4 of schedules
+        let fail_every = if rng.below(4) == 0 {
+            3 + rng.below(6) as u64
+        } else {
+            0
+        };
+        // a sprinkle of simulated model latency so cancels and deadlines
+        // can land mid-decode, not only between requests
+        let step_delay = if rng.below(8) == 0 {
+            Duration::from_micros(200)
+        } else {
+            Duration::ZERO
+        };
+        let mode = if rng.below(4) == 0 {
+            DecodeMode::Recompute
+        } else {
+            DecodeMode::Cached
+        };
+        let options = ServerOptions {
+            max_batch: 1 + rng.below(4),
+            max_queue: 1 + rng.below(6),
+            poll_interval: Duration::from_millis(1),
+            decode: mode,
+            max_context: [0, 0, 0, 4, 16][rng.below(5)],
+        };
+        let backend_cfg = cfg.clone();
+        let server = Server::with_backend(cfg, options, move || {
+            Ok(Box::new(FaultyBackend {
+                inner: SyntheticBackend::with_delay(backend_cfg, step_delay),
+                fail_every,
+                calls: 0,
+            }) as Box<dyn ModelBackend>)
+        });
+
+        let n_requests = 1 + rng.below(7);
+        let mut accepted: Vec<(aasvd::serve::Completion, u8, usize)> = Vec::new();
+        let mut rejected = 0usize;
+        for _ in 0..n_requests {
+            let prompt_bytes: Vec<u8> = (0..rng.below(6))
+                .map(|_| b'a' + rng.below(24) as u8)
+                .collect();
+            let prompt = String::from_utf8(prompt_bytes.clone()).unwrap();
+            let params = GenParams {
+                max_new_tokens: rng.below(13),
+                temperature: 0.0,
+                deadline: if rng.below(6) == 0 {
+                    Some(Duration::ZERO)
+                } else {
+                    None
+                },
+                ..Default::default()
+            };
+            match server.submit(&prompt, params.clone()) {
+                Ok(completion) => {
+                    if rng.below(5) == 0 {
+                        completion.cancel();
+                    }
+                    // an empty prompt is seated as a single space token
+                    let last = prompt_bytes.last().copied().unwrap_or(b' ');
+                    accepted.push((completion, last, params.max_new_tokens));
+                }
+                Err(SubmitError::Overloaded) => rejected += 1,
+                Err(e) => panic!("schedule {schedule}: unexpected submit error: {e}"),
+            }
+        }
+
+        let mut completed = 0usize;
+        let mut cancelled = 0usize;
+        let mut done_tokens = 0usize;
+        for (completion, last, max_new) in accepted {
+            let mut streamed = String::new();
+            let mut terminals = 0usize;
+            let mut done: Option<GenResponse> = None;
+            while let Some(event) = completion.next_event() {
+                match event {
+                    Event::Token(t) => {
+                        assert_eq!(
+                            terminals, 0,
+                            "schedule {schedule}: token after a terminal event"
+                        );
+                        assert_eq!(
+                            t.index,
+                            streamed.chars().count(),
+                            "schedule {schedule}: token indices must be contiguous"
+                        );
+                        streamed.push(t.ch);
+                    }
+                    Event::Done(resp) => {
+                        terminals += 1;
+                        done = Some(resp);
+                    }
+                    Event::Cancelled { .. } => terminals += 1,
+                }
+            }
+            assert_eq!(
+                terminals, 1,
+                "schedule {schedule}: exactly one terminal event per request"
+            );
+            // prefix consistency: the synthetic oracle's stream after a
+            // prompt ending in byte `b` is (b+1), (b+2), ... mod 256
+            let expect: String = (1..=streamed.chars().count())
+                .map(|i| last.wrapping_add(i as u8) as char)
+                .collect();
+            assert_eq!(
+                streamed, expect,
+                "schedule {schedule}: stream diverged from the oracle prefix"
+            );
+            match done {
+                Some(resp) => {
+                    completed += 1;
+                    done_tokens += resp.tokens_generated;
+                    assert!(resp.tokens_generated <= max_new);
+                    assert_eq!(
+                        resp.text, streamed,
+                        "schedule {schedule}: final text vs streamed tokens"
+                    );
+                    assert!(resp.latency >= resp.ttft || resp.tokens_generated == 0);
+                }
+                None => cancelled += 1,
+            }
+        }
+
+        let metrics = server.shutdown();
+        assert_eq!(metrics.rejected, rejected, "schedule {schedule}: rejected");
+        assert_eq!(
+            metrics.latencies.len(),
+            completed,
+            "schedule {schedule}: completed"
+        );
+        assert_eq!(metrics.cancelled, cancelled, "schedule {schedule}: cancelled");
+        assert_eq!(
+            n_requests,
+            completed + cancelled + metrics.rejected,
+            "schedule {schedule}: every submission has exactly one outcome"
+        );
+        assert_eq!(metrics.tokens, done_tokens, "schedule {schedule}: tokens");
+        // batched-call accounting: one occupancy sample per batched call,
+        // and no batched calls at all on the recompute path
+        assert_eq!(
+            metrics.decode_batches,
+            metrics.decode_batch_rows.len(),
+            "schedule {schedule}: occupancy samples"
+        );
+        if mode == DecodeMode::Recompute {
+            assert_eq!(metrics.decode_batches, 0, "schedule {schedule}");
+        }
+    }
+}

@@ -10,6 +10,11 @@
 use aasvd::compress::{compress_model, CovTriple, Method, Objective, ReferenceCollector};
 use aasvd::data::{Batcher, Corpus, Domain, TokenBatch};
 use aasvd::linalg::{eigh_values_with, eigh_with, svd_k_with, Matrix};
+use aasvd::model::forward::{model_forward_prefill, model_forward_step_batch, KvCache};
+use aasvd::model::init::init_params;
+use aasvd::model::lowrank::{
+    exact_factors, model_lr_forward_prefill, model_lr_forward_step_batch, BlockFactors,
+};
 use aasvd::model::Config;
 use aasvd::testkit::approx::rel_err;
 use aasvd::util::pool::Pool;
@@ -124,6 +129,81 @@ fn covariance_accumulation_thread_count_invariant() {
             "covariance diverged at {threads} threads"
         );
         assert_eq!(c1.tokens, cn.tokens);
+    }
+}
+
+fn assert_f32_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+    }
+}
+
+/// The batched decode step kernels band the stacked [B, d] pass over the
+/// pool's workers; band cuts change with worker count but no computation
+/// ever mixes rows, so logits *and* the KV rows each step appends must be
+/// bitwise equal at any width — the same artifact-equality contract as
+/// the compression entries below. Dense and low-rank paths both pinned.
+#[test]
+fn batched_decode_step_kernels_thread_count_invariant() {
+    let cfg = Config::builtin("tiny").unwrap();
+    let params = init_params(&cfg, &mut Rng::new(55));
+    let mut blocks: Vec<BlockFactors> =
+        (0..cfg.n_layers).map(|i| exact_factors(&cfg, &params, i)).collect();
+    for bf in blocks.iter_mut() {
+        bf.set_rank("wk", 6);
+        bf.set_rank("w_gate", 9);
+    }
+    let b = 8;
+    let prompts: Vec<Vec<u32>> = (0..b)
+        .map(|r| (0..2 + r).map(|i| ((i * 17 + r * 3) % cfg.vocab) as u32).collect())
+        .collect();
+
+    // (per-step logits, final caches) for one worker count
+    let run = |threads: usize, lowrank: bool| -> (Vec<Vec<Vec<f32>>>, Vec<KvCache>) {
+        let pool = Pool::exact(threads);
+        let mut caches: Vec<KvCache> = prompts
+            .iter()
+            .map(|p| {
+                let mut c = KvCache::new(cfg.n_layers);
+                if lowrank {
+                    model_lr_forward_prefill(&cfg, &params, &blocks, &mut c, p);
+                } else {
+                    model_forward_prefill(&cfg, &params, &mut c, p);
+                }
+                c
+            })
+            .collect();
+        let mut steps = Vec::new();
+        for step in 0..5usize {
+            let toks: Vec<u32> =
+                (0..b).map(|r| ((r * 29 + step * 11) % cfg.vocab) as u32).collect();
+            let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+            steps.push(if lowrank {
+                model_lr_forward_step_batch(&cfg, &params, &blocks, &mut refs, &toks, &pool)
+            } else {
+                model_forward_step_batch(&cfg, &params, &mut refs, &toks, &pool)
+            });
+        }
+        (steps, caches)
+    };
+
+    for lowrank in [false, true] {
+        let label = if lowrank { "lowrank" } else { "dense" };
+        let (steps1, caches1) = run(1, lowrank);
+        let (steps4, caches4) = run(4, lowrank);
+        for (step, (s1, s4)) in steps1.iter().zip(&steps4).enumerate() {
+            for (row, (r1, r4)) in s1.iter().zip(s4).enumerate() {
+                assert_f32_bits_eq(r1, r4, &format!("{label} step {step} row {row}"));
+            }
+        }
+        for (row, (c1, c4)) in caches1.iter().zip(&caches4).enumerate() {
+            assert_eq!(c1.len, c4.len, "{label} row {row}: cache length");
+            for (blk, (l1, l4)) in c1.layers.iter().zip(&c4.layers).enumerate() {
+                assert_f32_bits_eq(&l1.k, &l4.k, &format!("{label} row {row} blk {blk} K"));
+                assert_f32_bits_eq(&l1.v, &l4.v, &format!("{label} row {row} blk {blk} V"));
+            }
+        }
     }
 }
 

@@ -160,6 +160,7 @@ fn bounded_queue_rejects_with_overloaded() {
             max_queue: 1,
             max_batch: 1,
             poll_interval: Duration::from_millis(1),
+            ..Default::default()
         },
         Duration::from_millis(40),
     );
