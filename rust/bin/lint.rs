@@ -1,0 +1,68 @@
+//! `aasvd-lint` — the repo's determinism/robustness static pass.
+//!
+//! Usage: `aasvd-lint [--json] [ROOT ...]`
+//!
+//! Scans every `.rs` file under the given roots (default: the current
+//! directory), skipping `target/` and the known-bad fixture corpus
+//! `tests/lint_fixtures/` — unless a fixture path is passed explicitly
+//! as a root, which is how CI proves the corpus still fails.
+//!
+//! Exit codes: 0 = clean, 1 = violations found, 2 = usage or I/O error.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use aasvd::lint::{render_human, render_json, scan_tree, sort_violations, Violation};
+
+const USAGE: &str = "usage: aasvd-lint [--json] [ROOT ...]\n\
+                     scans .rs files under each ROOT (default: .) for \
+                     determinism-rule violations";
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut roots: Vec<String> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other if other.starts_with('-') => {
+                eprintln!("aasvd-lint: unknown flag '{other}'\n{USAGE}");
+                return ExitCode::from(2);
+            }
+            other => roots.push(other.to_string()),
+        }
+    }
+    if roots.is_empty() {
+        roots.push(".".to_string());
+    }
+
+    let mut violations: Vec<Violation> = Vec::new();
+    let mut files_scanned = 0usize;
+    for root in &roots {
+        match scan_tree(Path::new(root)) {
+            Ok((files, found)) => {
+                files_scanned += files;
+                violations.extend(found);
+            }
+            Err(e) => {
+                eprintln!("aasvd-lint: {root}: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    sort_violations(&mut violations);
+
+    if json {
+        println!("{}", render_json(&violations, files_scanned).to_string_pretty());
+    } else {
+        print!("{}", render_human(&violations, files_scanned));
+    }
+    if violations.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -63,6 +63,7 @@ impl Default for Bench {
 impl Bench {
     pub fn new() -> Bench {
         let mut b = Bench::default();
+        // aasvd-lint: allow(env-var): bench wall-time budget knob; affects how long we measure, never what the kernels compute
         if let Ok(t) = std::env::var("BENCH_TARGET_SECS") {
             if let Ok(t) = t.parse() {
                 b.target_secs = t;

@@ -65,7 +65,7 @@ fn prune_mlp_channels(cfg: &Config, params: &mut FlatStore, block: usize, import
     let f = cfg.d_ff;
     let d = cfg.d_model;
     let mut idx: Vec<usize> = (0..f).collect();
-    idx.sort_by(|&a, &b| importance[b].partial_cmp(&importance[a]).unwrap());
+    idx.sort_by(|&a, &b| importance[b].total_cmp(&importance[a]));
     let dropped: Vec<usize> = idx[keep..].to_vec();
     for lin in ["w_gate", "w_up"] {
         let w = params.view_mut(&format!("blocks.{block}.{lin}"));
@@ -87,7 +87,7 @@ fn prune_heads(cfg: &Config, params: &mut FlatStore, block: usize, importance: &
     let d = cfg.d_model;
     let hd = cfg.head_dim();
     let mut idx: Vec<usize> = (0..cfg.n_heads).collect();
-    idx.sort_by(|&a, &b| importance[b].partial_cmp(&importance[a]).unwrap());
+    idx.sort_by(|&a, &b| importance[b].total_cmp(&importance[a]));
     for &h in &idx[keep..] {
         for lin in ["wq", "wk", "wv"] {
             let w = params.view_mut(&format!("blocks.{block}.{lin}"));
@@ -111,6 +111,7 @@ fn magnitude_importance(cfg: &Config, params: &FlatStore, block: usize) -> (Vec<
             mlp[ch] += w[ch * d..(ch + 1) * d]
                 .iter()
                 .map(|&x| (x as f64).powi(2))
+                // aasvd-lint: allow(float-reduce): sequential per-channel weight-norm in fixed slice order; single-threaded importance scoring
                 .sum::<f64>();
         }
     }
@@ -193,6 +194,7 @@ pub fn prune_model<C: Collector>(
                 // gate/up columns see m_in (dim d): use mean energy as a
                 // global factor; channel identity lives in d_in for w_down
                 let m_mean: f64 =
+                    // aasvd-lint: allow(float-reduce): sequential mean over channel scales in fixed order; single-threaded importance scoring
                     m_scale.iter().sum::<f64>() / m_scale.len() as f64;
                 for ch in 0..cfg.d_ff {
                     mlp[ch] = mlp[ch] * m_mean + d_scale[ch] * d_scale[ch];
@@ -200,6 +202,7 @@ pub fn prune_model<C: Collector>(
                 let a_scale = covs[b].0.channel_scales(); // a_in, dim d
                 let hd = cfg.head_dim();
                 for h in 0..cfg.n_heads {
+                    // aasvd-lint: allow(float-reduce): sequential energy sum in fixed slice order; single-threaded importance scoring
                     let e: f64 = a_scale.iter().map(|s| s * s).sum::<f64>();
                     heads[h] *= e / hd as f64;
                 }

@@ -63,7 +63,9 @@ impl QuantMatrix {
 /// remapping stores.
 pub fn balance_factor_columns(u: &mut [f32], m: usize, v: &mut [f32], n: usize, k: usize) {
     for p in 0..k {
+        // aasvd-lint: allow(float-reduce): sequential column-norm in fixed index order; single-threaded, identical on every run
         let nu: f64 = (0..m).map(|i| (u[i * k + p] as f64).powi(2)).sum::<f64>().sqrt();
+        // aasvd-lint: allow(float-reduce): sequential column-norm in fixed index order; single-threaded, identical on every run
         let nv: f64 = (0..n).map(|i| (v[i * k + p] as f64).powi(2)).sum::<f64>().sqrt();
         if nu <= 1e-30 || nv <= 1e-30 {
             continue;

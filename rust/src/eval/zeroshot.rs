@@ -111,6 +111,7 @@ pub fn task_accuracy(
         for (row, (_, meta)) in chunk.iter().enumerate() {
             let span = &nll[0].f32[row * t + meta.lo..row * t + meta.hi];
             let len = (meta.hi - meta.lo).max(1) as f64;
+            // aasvd-lint: allow(float-reduce): sequential mean over one answer span in token order; scoring only, upstream NLLs come from the deterministic forward
             let s = span.iter().map(|&x| x as f64).sum::<f64>() / len;
             scores[meta.instance][meta.choice] = s;
         }
@@ -123,7 +124,7 @@ pub fn task_accuracy(
             let best = scores[*ii]
                 .iter()
                 .enumerate()
-                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .min_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(i, _)| i)
                 .unwrap();
             best == inst.answer

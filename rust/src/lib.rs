@@ -12,6 +12,7 @@ pub mod experiments;
 pub mod eval;
 
 pub mod linalg;
+pub mod lint;
 pub mod model;
 pub mod refine;
 pub mod runtime;

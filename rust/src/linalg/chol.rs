@@ -39,6 +39,7 @@ pub fn cholesky(s: &Matrix) -> Result<Matrix> {
 /// Returns (R, ε_used). ε doubles from `eps0` until success.
 pub fn cholesky_jittered(s: &Matrix, eps0: f64) -> (Matrix, f64) {
     let n = s.rows;
+    // aasvd-lint: allow(float-reduce): sequential trace in fixed index order; jitter scale is single-threaded and bitwise reproducible
     let scale = (0..n).map(|i| s.get(i, i)).sum::<f64>().max(1e-300) / n as f64;
     let mut eps = 0.0;
     loop {

@@ -110,6 +110,7 @@ pub fn eigh_jacobi(s: &Matrix) -> (Vec<f64>, Matrix) {
         }
         let diag_scale: f64 = (0..n)
             .map(|i| a.get(i, i) * a.get(i, i))
+            // aasvd-lint: allow(float-reduce): sequential diagonal mass in fixed index order; Jacobi convergence test, single-threaded
             .sum::<f64>()
             .max(1e-300);
         if off <= 1e-26 * diag_scale || !off.is_finite() {

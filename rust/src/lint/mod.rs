@@ -1,0 +1,23 @@
+//! `aasvd-lint`: the repo-specific determinism/robustness static pass.
+//!
+//! The repo's correctness contract is that every parallel kernel is
+//! bitwise thread-count invariant and the serving stack never panics on
+//! its hot path. The runtime suites (`tests/parallel_determinism.rs`,
+//! `tests/batched_decode.rs`) check this dynamically; this module checks
+//! the *source* for the constructs that break it — ad-hoc threads, hash
+//! iteration in numeric trees, unsanctioned float reductions,
+//! `partial_cmp` NaN traps, hidden env knobs, wall-clock reads in
+//! compute paths, and `unwrap` in `src/serve/`.
+//!
+//! Run it with `cargo run --bin aasvd-lint -- rust/` (or any set of
+//! roots); add `--json` for machine-readable output. Suppression
+//! syntax and the policy table are documented in [`scan`] and
+//! [`rules`], and in README "Correctness tooling".
+
+pub mod report;
+pub mod rules;
+pub mod scan;
+
+pub use report::{render_human, render_json, sort_violations};
+pub use rules::{applies, policy_path, RuleDef, RULES};
+pub use scan::{scan_file, scan_source, scan_tree, Violation};

@@ -1,0 +1,129 @@
+//! Human-readable and JSON rendering of lint findings.
+
+use super::rules::RULES;
+use super::scan::Violation;
+use crate::util::json::Json;
+
+/// Sort findings into report order: path, then line, then rule name.
+pub fn sort_violations(violations: &mut [Violation]) {
+    violations.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule.as_str()).cmp(&(b.path.as_str(), b.line, b.rule.as_str()))
+    });
+}
+
+/// Human report: findings grouped by file, then a per-rule tally and a
+/// one-line verdict.
+pub fn render_human(violations: &[Violation], files_scanned: usize) -> String {
+    let mut out = String::new();
+    let mut last_path = "";
+    for v in violations {
+        if v.path != last_path {
+            if !last_path.is_empty() {
+                out.push('\n');
+            }
+            out.push_str(&format!("{}\n", v.path));
+            last_path = &v.path;
+        }
+        out.push_str(&format!("  {}: [{}] {}\n", v.line, v.rule, v.detail));
+        out.push_str(&format!("      {}\n", v.snippet));
+    }
+    if !violations.is_empty() {
+        out.push('\n');
+        for rule in RULES {
+            let n = violations.iter().filter(|v| v.rule == rule.name).count();
+            if n > 0 {
+                out.push_str(&format!("  {:>4}  {}\n", n, rule.name));
+            }
+        }
+        let directives = violations
+            .iter()
+            .filter(|v| !RULES.iter().any(|r| r.name == v.rule))
+            .count();
+        if directives > 0 {
+            out.push_str(&format!("  {directives:>4}  lint-directive\n"));
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "aasvd-lint: {} file{} scanned, {} violation{}\n",
+        files_scanned,
+        if files_scanned == 1 { "" } else { "s" },
+        violations.len(),
+        if violations.len() == 1 { "" } else { "s" },
+    ));
+    out
+}
+
+/// JSON report:
+/// `{"files_scanned": N, "violations": [{rule, path, line, snippet, detail}, ...], "clean": bool}`
+pub fn render_json(violations: &[Violation], files_scanned: usize) -> Json {
+    let items: Vec<Json> = violations
+        .iter()
+        .map(|v| {
+            Json::obj()
+                .set("rule", v.rule.as_str())
+                .set("path", v.path.as_str())
+                .set("line", v.line)
+                .set("snippet", v.snippet.as_str())
+                .set("detail", v.detail.as_str())
+        })
+        .collect();
+    Json::obj()
+        .set("files_scanned", files_scanned)
+        .set("violations", Json::Arr(items))
+        .set("clean", violations.is_empty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Violation> {
+        vec![
+            Violation {
+                rule: "wallclock".to_string(),
+                path: "src/linalg/x.rs".to_string(),
+                line: 7,
+                snippet: "let t = Instant::now();".to_string(),
+                detail: "wall-clock read in a compute path".to_string(),
+            },
+            Violation {
+                rule: "float-cmp".to_string(),
+                path: "src/eval/y.rs".to_string(),
+                line: 3,
+                snippet: "a.partial_cmp(b)".to_string(),
+                detail: "partial_cmp on floats".to_string(),
+            },
+        ]
+    }
+
+    #[test]
+    fn sorting_is_by_path_then_line() {
+        let mut vs = sample();
+        sort_violations(&mut vs);
+        assert_eq!(vs[0].path, "src/eval/y.rs");
+        assert_eq!(vs[1].path, "src/linalg/x.rs");
+    }
+
+    #[test]
+    fn human_report_mentions_every_finding() {
+        let report = render_human(&sample(), 12);
+        assert!(report.contains("src/linalg/x.rs"));
+        assert!(report.contains("[float-cmp]"));
+        assert!(report.contains("12 files scanned, 2 violations"));
+        let clean = render_human(&[], 3);
+        assert!(clean.contains("3 files scanned, 0 violations"));
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let j = render_json(&sample(), 12);
+        let parsed = Json::parse(&j.to_string_pretty()).expect("valid json");
+        assert_eq!(parsed.req("files_scanned").as_usize(), Some(12));
+        assert_eq!(parsed.req("clean").as_bool(), Some(false));
+        let vs = parsed.req("violations").as_arr().expect("array");
+        assert_eq!(vs.len(), 2);
+        assert_eq!(vs[0].req("rule").as_str(), Some("wallclock"));
+        assert_eq!(vs[0].req("line").as_usize(), Some(7));
+    }
+}

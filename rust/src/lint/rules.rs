@@ -1,0 +1,206 @@
+//! The determinism rule set and the per-path policy table.
+//!
+//! Each rule is a small set of textual patterns matched against
+//! comment- and string-stripped source lines (see `scan.rs`), gated by a
+//! policy that maps source trees to the constructs they are allowed to
+//! use. The rules encode the repo's central correctness contract: every
+//! parallel kernel is bitwise thread-count invariant, and the serving /
+//! compression stack is built on that guarantee (see README
+//! "Correctness tooling").
+
+/// One lint rule: a stable kebab-case name, the code patterns that fire
+/// it, and a one-line rationale shown in reports.
+pub struct RuleDef {
+    pub name: &'static str,
+    pub patterns: &'static [&'static str],
+    pub summary: &'static str,
+}
+
+/// Rule names (kebab-case, used in reports and suppression comments).
+pub const RULE_ADHOC_PARALLELISM: &str = "adhoc-parallelism";
+pub const RULE_HASH_ITER: &str = "hash-iter";
+pub const RULE_FLOAT_REDUCE: &str = "float-reduce";
+pub const RULE_FLOAT_CMP: &str = "float-cmp";
+pub const RULE_ENV_VAR: &str = "env-var";
+pub const RULE_WALLCLOCK: &str = "wallclock";
+pub const RULE_SERVE_UNWRAP: &str = "serve-unwrap";
+/// Pseudo-rule for malformed suppression comments (unknown rule name,
+/// missing justification). Always active, never suppressible.
+pub const RULE_LINT_DIRECTIVE: &str = "lint-directive";
+
+/// The seven determinism/robustness rules, in report order.
+pub const RULES: &[RuleDef] = &[
+    RuleDef {
+        name: RULE_ADHOC_PARALLELISM,
+        patterns: &["thread::spawn", "thread::Builder", "thread::scope", "rayon"],
+        summary: "ad-hoc parallelism outside util/pool.rs — all parallel fan-out \
+                  must go through Pool so results merge in submission order",
+    },
+    RuleDef {
+        name: RULE_HASH_ITER,
+        patterns: &["HashMap", "HashSet"],
+        summary: "hash collections in a numeric/artifact tree — iteration order \
+                  is nondeterministic; use BTreeMap/BTreeSet or Vec",
+    },
+    RuleDef {
+        name: RULE_FLOAT_REDUCE,
+        patterns: &[".sum::<f32>", ".sum::<f64>", ".fold(0.", ".fold(0f"],
+        summary: "float reduction outside the sanctioned banded-kernel files — \
+                  route accumulations through the deterministic kernels",
+    },
+    RuleDef {
+        name: RULE_FLOAT_CMP,
+        patterns: &["partial_cmp"],
+        summary: "partial_cmp on floats — NaN breaks the ordering (the eigh.rs \
+                  bug class); use f32::total_cmp / f64::total_cmp",
+    },
+    RuleDef {
+        name: RULE_ENV_VAR,
+        patterns: &["env::var", "env::set_var", "env::remove_var", "env::vars"],
+        summary: "environment read outside util/pool.rs, util/cli.rs or the \
+                  experiment setup — hidden knobs make runs irreproducible",
+    },
+    RuleDef {
+        name: RULE_WALLCLOCK,
+        patterns: &["Instant::now", "SystemTime"],
+        summary: "wall-clock read in a compute path — timing must never feed \
+                  numeric results",
+    },
+    RuleDef {
+        name: RULE_SERVE_UNWRAP,
+        patterns: &[".unwrap()", ".expect("],
+        summary: "unwrap/expect on the serving hot path — route failures \
+                  through typed errors and the CancelReason::Backend retire \
+                  path instead of panicking the worker",
+    },
+];
+
+/// Files where ordered float reductions are the whole point: the
+/// row-banded kernels whose accumulation order *defines* the repo's
+/// bitwise thread-count-invariance contract.
+const FLOAT_KERNEL_FILES: &[&str] = &[
+    "src/linalg/matrix.rs",
+    "src/linalg/tridiag.rs",
+    "src/model/forward.rs",
+    "src/model/lowrank.rs",
+];
+
+/// Files allowed to read the environment: the pool's thread-count
+/// resolution, the CLI surface, and the experiment setup path.
+const ENV_FILES: &[&str] = &["src/util/pool.rs", "src/util/cli.rs", "src/experiments.rs"];
+
+/// Trees where hash-iteration order would leak into numeric results or
+/// compression artifacts.
+const HASH_ITER_TREES: &[&str] = &["src/linalg/", "src/model/", "src/compress/", "src/refine/"];
+
+/// Trees whose compute paths must not read wall clocks.
+const WALLCLOCK_TREES: &[&str] = &["src/linalg/", "src/model/", "src/compress/"];
+
+pub fn is_known_rule(name: &str) -> bool {
+    RULES.iter().any(|r| r.name == name)
+}
+
+pub fn rule_summary(name: &str) -> &'static str {
+    RULES
+        .iter()
+        .find(|r| r.name == name)
+        .map(|r| r.summary)
+        .unwrap_or("malformed aasvd-lint suppression comment")
+}
+
+/// Normalize a filesystem path to the policy's key space: the suffix
+/// starting at the first `src` / `tests` / `benches` / `bin` component,
+/// with forward slashes (so `rust/src/serve/engine.rs` and
+/// `./src/serve/engine.rs` both resolve to `src/serve/engine.rs`).
+pub fn policy_path(path: &str) -> String {
+    let norm = path.replace('\\', "/");
+    let parts: Vec<&str> = norm.split('/').filter(|s| !s.is_empty() && *s != ".").collect();
+    for (i, p) in parts.iter().enumerate() {
+        if matches!(*p, "src" | "tests" | "benches" | "bin") {
+            return parts[i..].join("/");
+        }
+    }
+    parts.join("/")
+}
+
+/// The policy table: does `rule` apply to (normalized) `path`, given
+/// whether the current line sits inside `#[cfg(test)]` code?
+///
+/// - `adhoc-parallelism`: everywhere except `util/pool.rs` (the one
+///   sanctioned parallelism substrate), test code included.
+/// - `hash-iter`: the numeric/artifact trees (`linalg/`, `model/`,
+///   `compress/`, `refine/`), test code included — artifact equality
+///   tests are exactly where ordering bugs hide.
+/// - `float-reduce`: all of `src/` outside the four banded-kernel files;
+///   test code exempt (tests legitimately compute reference sums to
+///   compare against the kernels).
+/// - `float-cmp`: everywhere, test code included (the NaN bug class does
+///   not care where it runs).
+/// - `env-var`: all of `src/` outside the pool/CLI/setup allowlist; test
+///   code exempt (tests may pin env knobs).
+/// - `wallclock`: non-test code in `linalg/`, `model/`, `compress/`.
+/// - `serve-unwrap`: non-test code in `src/serve/`.
+pub fn applies(rule: &str, path: &str, in_test: bool) -> bool {
+    match rule {
+        RULE_ADHOC_PARALLELISM => path != "src/util/pool.rs",
+        RULE_HASH_ITER => HASH_ITER_TREES.iter().any(|t| path.starts_with(t)),
+        RULE_FLOAT_REDUCE => {
+            !in_test && path.starts_with("src/") && !FLOAT_KERNEL_FILES.contains(&path)
+        }
+        RULE_FLOAT_CMP => true,
+        RULE_ENV_VAR => !in_test && path.starts_with("src/") && !ENV_FILES.contains(&path),
+        RULE_WALLCLOCK => {
+            !in_test && WALLCLOCK_TREES.iter().any(|t| path.starts_with(t))
+        }
+        RULE_SERVE_UNWRAP => !in_test && path.starts_with("src/serve/"),
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_paths_normalize() {
+        assert_eq!(policy_path("rust/src/serve/engine.rs"), "src/serve/engine.rs");
+        assert_eq!(policy_path("./src/util/pool.rs"), "src/util/pool.rs");
+        assert_eq!(policy_path("src\\linalg\\eigh.rs"), "src/linalg/eigh.rs");
+        assert_eq!(
+            policy_path("/abs/checkout/rust/tests/kv_cache.rs"),
+            "tests/kv_cache.rs"
+        );
+        assert_eq!(policy_path("rust/bin/lint.rs"), "bin/lint.rs");
+    }
+
+    #[test]
+    fn pool_is_the_only_parallelism_site() {
+        assert!(!applies(RULE_ADHOC_PARALLELISM, "src/util/pool.rs", false));
+        assert!(applies(RULE_ADHOC_PARALLELISM, "src/serve/engine.rs", false));
+        assert!(applies(RULE_ADHOC_PARALLELISM, "tests/engine_fuzz.rs", true));
+    }
+
+    #[test]
+    fn float_reduce_sanctions_the_kernel_files() {
+        assert!(!applies(RULE_FLOAT_REDUCE, "src/linalg/matrix.rs", false));
+        assert!(!applies(RULE_FLOAT_REDUCE, "src/model/forward.rs", false));
+        assert!(applies(RULE_FLOAT_REDUCE, "src/linalg/eigh.rs", false));
+        // tests and non-src trees are exempt
+        assert!(!applies(RULE_FLOAT_REDUCE, "src/linalg/eigh.rs", true));
+        assert!(!applies(RULE_FLOAT_REDUCE, "benches/linalg.rs", false));
+    }
+
+    #[test]
+    fn serve_unwrap_scopes_to_serve_non_test() {
+        assert!(applies(RULE_SERVE_UNWRAP, "src/serve/engine.rs", false));
+        assert!(!applies(RULE_SERVE_UNWRAP, "src/serve/engine.rs", true));
+        assert!(!applies(RULE_SERVE_UNWRAP, "src/linalg/eigh.rs", false));
+    }
+
+    #[test]
+    fn unknown_rules_apply_nowhere() {
+        assert!(!applies("no-such-rule", "src/serve/engine.rs", false));
+        assert!(!is_known_rule("no-such-rule"));
+        assert!(is_known_rule(RULE_HASH_ITER));
+    }
+}

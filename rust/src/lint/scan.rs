@@ -1,0 +1,646 @@
+//! Line/token scanner: strips comments and string/char literals, tracks
+//! `#[cfg(test)]` regions, parses suppression directives, and matches
+//! the rule patterns against what is left.
+//!
+//! The scanner is deliberately textual — it does not parse Rust. That
+//! keeps it dependency-free and fast, at the cost of documented
+//! blind spots (e.g. a float `+=` accumulation loop or a bare `.sum()`
+//! without a float turbofish is not detected). The fixture corpus in
+//! `tests/lint_fixtures/` pins the exact semantics.
+//!
+//! Suppression syntax (line comments only, not block comments):
+//!
+//! - `// aasvd-lint: allow(<rule>): <justification>` — suppresses
+//!   `<rule>` on the same line if the comment trails code, otherwise on
+//!   the next line that contains code.
+//! - `// aasvd-lint: allow-file(<rule>): <justification>` — suppresses
+//!   `<rule>` for the whole file, from anywhere in it.
+//! - `// aasvd-lint: path=<virtual path>` — makes the file lint as if it
+//!   lived at `<virtual path>` (fixture corpus only; lets a file under
+//!   `tests/lint_fixtures/` exercise the `src/serve/` policy).
+//!
+//! A directive with an unknown rule name or a missing justification is
+//! itself a violation (`lint-directive`) and suppresses nothing.
+
+use std::fmt;
+use std::path::Path;
+
+use super::rules::{self, RULES, RULE_LINT_DIRECTIVE};
+
+/// One finding: which rule fired, where, and on what code.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    /// Rule name (kebab-case), or `lint-directive` for malformed
+    /// suppression comments.
+    pub rule: String,
+    /// Path as supplied to the scanner (normalized to `/` separators).
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// The offending source line, trimmed.
+    pub snippet: String,
+    /// One-line rationale / error detail.
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}\n    {}",
+            self.path, self.line, self.rule, self.detail, self.snippet
+        )
+    }
+}
+
+/// A source line after lexical stripping.
+struct ScanLine {
+    /// Code with comments and string/char literal *contents* removed
+    /// (quotes are kept, so `".expect("` inside a string cannot fire).
+    code: String,
+    /// Concatenated `//` comment text on this line (block comments are
+    /// discarded — directives must use line comments).
+    comment: String,
+    /// Raw source line (for snippets).
+    raw: String,
+}
+
+/// Strip comments and literal contents, producing one [`ScanLine`] per
+/// source line. Handles nested block comments, raw strings with hash
+/// fences, byte strings/chars, and the `'a` lifetime vs `'a'` char
+/// ambiguity.
+fn strip(source: &str) -> Vec<ScanLine> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum State {
+        Code,
+        Block(u32),   // nesting depth
+        Str,          // normal "..." (contents skipped, escapes honored)
+        RawStr(u32),  // r##"..."## with N hashes
+    }
+    let bytes = source.as_bytes();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut raw_line_start = 0usize;
+    let mut state = State::Code;
+    let mut i = 0usize;
+
+    let utf8_len = |b: u8| -> usize {
+        if b < 0x80 {
+            1
+        } else if b >= 0xF0 {
+            4
+        } else if b >= 0xE0 {
+            3
+        } else {
+            2
+        }
+    };
+
+    loop {
+        // escape skipping can step past the end on malformed input;
+        // clamp so the final line is still emitted
+        if i > bytes.len() {
+            i = bytes.len();
+        }
+        if i == bytes.len() || bytes[i] == b'\n' {
+            let raw = source[raw_line_start..i].trim_end_matches('\r').to_string();
+            lines.push(ScanLine {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+                raw,
+            });
+            if i == bytes.len() {
+                break;
+            }
+            i += 1;
+            raw_line_start = i;
+            continue;
+        }
+        let b = bytes[i];
+        match state {
+            State::Code => {
+                if b == b'/' && i + 1 < bytes.len() && bytes[i + 1] == b'/' {
+                    // line comment: capture text to end of line
+                    let mut j = i + 2;
+                    while j < bytes.len() && bytes[j] != b'\n' {
+                        j += 1;
+                    }
+                    comment.push_str(&source[i + 2..j]);
+                    i = j;
+                } else if b == b'/' && i + 1 < bytes.len() && bytes[i + 1] == b'*' {
+                    state = State::Block(1);
+                    i += 2;
+                } else if b == b'"' {
+                    code.push('"');
+                    state = State::Str;
+                    i += 1;
+                } else if b == b'r' && !prev_is_ident(bytes, i) {
+                    if let Some(n) = raw_str_hashes(bytes, i + 1) {
+                        code.push('"');
+                        state = State::RawStr(n);
+                        i += 1 + n as usize + 1; // r + hashes + quote
+                    } else {
+                        code.push('r');
+                        i += 1;
+                    }
+                } else if b == b'b' && !prev_is_ident(bytes, i) && i + 1 < bytes.len() {
+                    match bytes[i + 1] {
+                        b'"' => {
+                            code.push('"');
+                            state = State::Str;
+                            i += 2;
+                        }
+                        b'r' if raw_str_hashes(bytes, i + 2).is_some() => {
+                            let n = raw_str_hashes(bytes, i + 2).unwrap_or(0);
+                            code.push('"');
+                            state = State::RawStr(n);
+                            i += 2 + n as usize + 1;
+                        }
+                        b'\'' => {
+                            // byte char literal b'x' — always a char, never
+                            // a lifetime
+                            code.push('\'');
+                            i = skip_char_literal(bytes, i + 1);
+                        }
+                        _ => {
+                            code.push('b');
+                            i += 1;
+                        }
+                    }
+                } else if b == b'\'' {
+                    // char literal or lifetime: 'x' / '\n' are chars,
+                    // 'static / 'a (no closing quote right after one
+                    // char) are lifetimes
+                    if is_char_literal(bytes, i) {
+                        code.push('\'');
+                        i = skip_char_literal(bytes, i);
+                    } else {
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(source[i..].chars().next().unwrap_or('\u{FFFD}'));
+                    i += utf8_len(b);
+                }
+            }
+            State::Block(depth) => {
+                if b == b'*' && i + 1 < bytes.len() && bytes[i + 1] == b'/' {
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::Block(depth - 1)
+                    };
+                    i += 2;
+                } else if b == b'/' && i + 1 < bytes.len() && bytes[i + 1] == b'*' {
+                    state = State::Block(depth + 1);
+                    i += 2;
+                } else {
+                    i += utf8_len(b);
+                }
+            }
+            State::Str => {
+                if b == b'\\' {
+                    i += 2; // skip escaped byte (covers \" and \\)
+                } else if b == b'"' {
+                    code.push('"');
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    i += utf8_len(b);
+                }
+            }
+            State::RawStr(n) => {
+                if b == b'"' && hashes_after(bytes, i + 1) >= n {
+                    code.push('"');
+                    state = State::Code;
+                    i += 1 + n as usize;
+                } else {
+                    i += utf8_len(b);
+                }
+            }
+        }
+    }
+    lines
+}
+
+fn prev_is_ident(bytes: &[u8], i: usize) -> bool {
+    i > 0 && (bytes[i - 1].is_ascii_alphanumeric() || bytes[i - 1] == b'_')
+}
+
+/// At `i` (just past an `r` / `br` prefix): `Some(n)` if `#`*n `"` starts a
+/// raw string here.
+fn raw_str_hashes(bytes: &[u8], i: usize) -> Option<u32> {
+    let mut n = 0u32;
+    let mut j = i;
+    while j < bytes.len() && bytes[j] == b'#' {
+        n += 1;
+        j += 1;
+    }
+    (j < bytes.len() && bytes[j] == b'"').then_some(n)
+}
+
+fn hashes_after(bytes: &[u8], i: usize) -> u32 {
+    let mut n = 0u32;
+    let mut j = i;
+    while j < bytes.len() && bytes[j] == b'#' {
+        n += 1;
+        j += 1;
+    }
+    n
+}
+
+/// Is the `'` at `i` the start of a char literal (vs a lifetime)?
+fn is_char_literal(bytes: &[u8], i: usize) -> bool {
+    let Some(&next) = bytes.get(i + 1) else {
+        return false;
+    };
+    if next == b'\\' {
+        return true; // '\n', '\'', '\u{..}'
+    }
+    if next == b'\'' {
+        return false; // '' — not valid anyway
+    }
+    // one char (possibly multibyte) then a closing quote → char literal
+    let step = if next < 0x80 {
+        1
+    } else if next >= 0xF0 {
+        4
+    } else if next >= 0xE0 {
+        3
+    } else {
+        2
+    };
+    bytes.get(i + 1 + step) == Some(&b'\'')
+}
+
+/// Skip past the char literal whose opening `'` is at `i`; returns the
+/// index just past the closing quote.
+fn skip_char_literal(bytes: &[u8], i: usize) -> usize {
+    let mut j = i + 1;
+    while j < bytes.len() {
+        match bytes[j] {
+            b'\\' => j += 2,
+            b'\'' => return j + 1,
+            b'\n' => return j, // malformed; bail at line end
+            b => {
+                j += if b < 0x80 {
+                    1
+                } else if b >= 0xF0 {
+                    4
+                } else if b >= 0xE0 {
+                    3
+                } else {
+                    2
+                }
+            }
+        }
+    }
+    j
+}
+
+/// A parsed suppression comment.
+enum Directive {
+    Allow(&'static str),
+    AllowFile(&'static str),
+    Path(String),
+    Malformed(String),
+}
+
+/// Parse an `aasvd-lint:` directive out of a line-comment body, if any.
+fn parse_directive(comment: &str) -> Option<Directive> {
+    let body = comment.trim();
+    let rest = body.strip_prefix("aasvd-lint:")?.trim();
+    if let Some(p) = rest.strip_prefix("path=") {
+        let p = p.trim();
+        if p.is_empty() {
+            return Some(Directive::Malformed("empty path= directive".into()));
+        }
+        return Some(Directive::Path(p.to_string()));
+    }
+    for (prefix, file_wide) in [("allow-file(", true), ("allow(", false)] {
+        if let Some(rest) = rest.strip_prefix(prefix) {
+            let Some(close) = rest.find(')') else {
+                return Some(Directive::Malformed("unclosed allow(...)".into()));
+            };
+            let rule = rest[..close].trim();
+            let Some(known) = RULES.iter().find(|r| r.name == rule).map(|r| r.name) else {
+                return Some(Directive::Malformed(format!(
+                    "unknown rule '{rule}' in suppression"
+                )));
+            };
+            let tail = rest[close + 1..].trim();
+            let justification = tail.strip_prefix(':').map(str::trim).unwrap_or("");
+            if justification.is_empty() {
+                return Some(Directive::Malformed(format!(
+                    "suppression of '{rule}' missing a justification \
+                     (write `allow({rule}): <why>`)"
+                )));
+            }
+            return Some(if file_wide {
+                Directive::AllowFile(known)
+            } else {
+                Directive::Allow(known)
+            });
+        }
+    }
+    Some(Directive::Malformed(format!(
+        "unrecognized aasvd-lint directive '{rest}'"
+    )))
+}
+
+/// Scan one file's source text. `path` is used for reporting; the policy
+/// path is derived from it unless the file carries a `path=` directive.
+pub fn scan_source(path: &str, source: &str) -> Vec<Violation> {
+    let display_path = path.replace('\\', "/");
+    let lines = strip(source);
+
+    // Pre-pass: file-wide directives (path=, allow-file) act from
+    // anywhere in the file; malformed directives become violations here
+    // so the main pass can treat them as inert.
+    let mut policy_path = rules::policy_path(&display_path);
+    let mut file_allows: Vec<&'static str> = Vec::new();
+    let mut violations: Vec<Violation> = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        match parse_directive(&line.comment) {
+            Some(Directive::Path(p)) => policy_path = rules::policy_path(&p),
+            Some(Directive::AllowFile(rule)) => file_allows.push(rule),
+            Some(Directive::Malformed(detail)) => violations.push(Violation {
+                rule: RULE_LINT_DIRECTIVE.to_string(),
+                path: display_path.clone(),
+                line: idx + 1,
+                snippet: line.raw.trim().to_string(),
+                detail,
+            }),
+            Some(Directive::Allow(_)) | None => {}
+        }
+    }
+
+    // Main pass: cfg(test) tracking + line-level suppressions + rules.
+    //
+    // cfg(test) regions are tracked by brace depth: when `#[cfg(test)]`
+    // is seen, the next `{` opens a region that closes when depth
+    // returns to its pre-region value.
+    let mut depth: i32 = 0;
+    let mut test_region_floor: Option<i32> = None;
+    let mut pending_test_attr = false;
+    let mut pending_allows: Vec<&'static str> = Vec::new();
+
+    for (idx, line) in lines.iter().enumerate() {
+        let code = line.code.as_str();
+        let has_code = !code.trim().is_empty();
+        let in_test = test_region_floor.is_some();
+
+        // Collect the suppressions that target this line: a trailing
+        // directive on a code line, plus any pending standalone ones.
+        let mut line_allows: Vec<&'static str> = Vec::new();
+        if let Some(Directive::Allow(rule)) = parse_directive(&line.comment) {
+            if has_code {
+                line_allows.push(rule);
+            } else {
+                pending_allows.push(rule);
+            }
+        }
+        if has_code {
+            line_allows.append(&mut pending_allows);
+        }
+
+        if has_code {
+            for rule in RULES {
+                if !rules::applies(rule.name, &policy_path, in_test) {
+                    continue;
+                }
+                if file_allows.contains(&rule.name) || line_allows.contains(&rule.name) {
+                    continue;
+                }
+                if rule.patterns.iter().any(|p| code.contains(p)) {
+                    violations.push(Violation {
+                        rule: rule.name.to_string(),
+                        path: display_path.clone(),
+                        line: idx + 1,
+                        snippet: line.raw.trim().to_string(),
+                        detail: rule.summary.to_string(),
+                    });
+                }
+            }
+        }
+
+        // Update cfg(test) tracking *after* matching: the line opening a
+        // test region (`mod tests {`) is not itself exempt, its body is.
+        if code.contains("#[cfg(test)]") {
+            pending_test_attr = true;
+        }
+        for ch in code.chars() {
+            match ch {
+                '{' => {
+                    if pending_test_attr {
+                        if test_region_floor.is_none() {
+                            test_region_floor = Some(depth);
+                        }
+                        pending_test_attr = false;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if test_region_floor == Some(depth) {
+                        test_region_floor = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    violations.sort_by(|a, b| (a.line, a.rule.as_str()).cmp(&(b.line, b.rule.as_str())));
+    violations
+}
+
+/// Scan a file from disk.
+pub fn scan_file(path: &Path) -> std::io::Result<Vec<Violation>> {
+    let source = std::fs::read_to_string(path)?;
+    Ok(scan_source(&path.to_string_lossy(), &source))
+}
+
+/// Directories never descended into: build output, and the known-bad
+/// fixture corpus (which would otherwise fail the tree scan). Passing
+/// the fixture dir itself as a root still scans it — that is how the
+/// fixture tests and the "nonzero on the corpus" acceptance check run.
+const SKIP_DIRS: &[&str] = &["target", "lint_fixtures", ".git"];
+
+/// Recursively scan every `.rs` file under `root` (or `root` itself if
+/// it is a file). Returns `(files_scanned, violations)`, both in a
+/// deterministic (sorted) order.
+pub fn scan_tree(root: &Path) -> std::io::Result<(usize, Vec<Violation>)> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut violations = Vec::new();
+    for f in &files {
+        violations.extend(scan_file(f)?);
+    }
+    Ok((files.len(), violations))
+}
+
+fn collect_rs_files(path: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    let meta = std::fs::metadata(path)?;
+    if meta.is_file() {
+        if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path.to_path_buf());
+        }
+        return Ok(());
+    }
+    let mut entries: Vec<_> = std::fs::read_dir(path)?
+        .collect::<std::io::Result<Vec<_>>>()?
+        .into_iter()
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for entry in entries {
+        let name = entry
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        if entry.is_dir() {
+            if SKIP_DIRS.contains(&name.as_str()) || name.starts_with('.') {
+                continue;
+            }
+            collect_rs_files(&entry, out)?;
+        } else if entry.extension().is_some_and(|e| e == "rs") {
+            out.push(entry);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_fired(path: &str, src: &str) -> Vec<String> {
+        scan_source(path, src)
+            .into_iter()
+            .map(|v| v.rule)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_fire() {
+        let src = r###"
+// HashMap in a comment is fine
+/* Instant::now() in a block comment,
+   /* nested */ still fine */
+fn f() -> &'static str {
+    let _lifetime: &'static str = "thread::spawn inside a string";
+    let _raw = r#"partial_cmp in a raw "quoted" string"#;
+    let _ch = '"'; // a quote char must not open a string
+    "env::var"
+}
+"###;
+        assert!(rules_fired("src/linalg/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn patterns_fire_in_code() {
+        let src = "fn f() { let _ = std::thread::spawn(|| {}); }\n";
+        assert_eq!(rules_fired("src/model/x.rs", src), vec!["adhoc-parallelism"]);
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(rules_fired("src/refine/x.rs", src), vec!["hash-iter"]);
+        // same file outside a restricted tree: no hash-iter violation
+        assert!(rules_fired("src/util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_regions_are_exempt_where_policy_says() {
+        let src = "\
+fn hot() -> f64 {
+    0.0
+}
+#[cfg(test)]
+mod tests {
+    fn reference() -> f64 {
+        [1.0f64].iter().sum::<f64>()
+    }
+}
+";
+        // float-reduce is test-exempt, so the test-mod sum is clean
+        assert!(rules_fired("src/compress/x.rs", src).is_empty());
+        // but the same sum in non-test code fires
+        let src2 = "fn hot() -> f64 { [1.0f64].iter().sum::<f64>() }\n";
+        assert_eq!(rules_fired("src/compress/x.rs", src2), vec!["float-reduce"]);
+    }
+
+    #[test]
+    fn suppressions_target_the_next_code_line() {
+        let src = "\
+// aasvd-lint: allow(float-reduce): reference implementation for docs
+fn f() -> f64 {
+    [1.0f64].iter().sum::<f64>()
+}
+";
+        // standalone suppression above `fn f` covers the fn line, NOT
+        // the sum two lines below — the violation still fires
+        assert_eq!(rules_fired("src/eval/x.rs", src), vec!["float-reduce"]);
+        let src2 = "\
+fn f() -> f64 {
+    // aasvd-lint: allow(float-reduce): sequential, order-pinned by slice
+    [1.0f64].iter().sum::<f64>()
+}
+";
+        assert!(rules_fired("src/eval/x.rs", src2).is_empty());
+    }
+
+    #[test]
+    fn trailing_suppression_covers_its_own_line() {
+        let src =
+            "fn f() -> f64 { [1.0f64].iter().sum::<f64>() } // aasvd-lint: allow(float-reduce): doc example\n";
+        assert!(rules_fired("src/eval/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_file_covers_everything() {
+        let src = "\
+// aasvd-lint: allow-file(wallclock): operator-facing stage timings only
+fn a() { let _ = std::time::Instant::now(); }
+fn b() { let _ = std::time::Instant::now(); }
+";
+        assert!(rules_fired("src/compress/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn malformed_suppressions_are_violations_and_inert() {
+        // missing justification: directive violation AND the rule still fires
+        let src = "\
+fn f() {
+    // aasvd-lint: allow(wallclock)
+    let _ = std::time::Instant::now();
+}
+";
+        let fired = rules_fired("src/linalg/x.rs", src);
+        assert_eq!(fired, vec!["lint-directive", "wallclock"]);
+        // unknown rule name
+        let src2 = "// aasvd-lint: allow(no-such-rule): whatever\n";
+        assert_eq!(rules_fired("src/linalg/x.rs", src2), vec!["lint-directive"]);
+    }
+
+    #[test]
+    fn path_directive_reassigns_policy() {
+        let src = "\
+// aasvd-lint: path=src/serve/fake.rs
+fn f() { let _ = Some(1).unwrap(); }
+";
+        assert_eq!(
+            rules_fired("tests/lint_fixtures/x.rs", src),
+            vec!["serve-unwrap"]
+        );
+    }
+
+    #[test]
+    fn scan_is_deterministic() {
+        let src = "fn f() { let _ = Some(1).partial_cmp(&Some(2)); }\n";
+        let a = scan_source("src/x.rs", src);
+        let b = scan_source("src/x.rs", src);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].line, 1);
+    }
+}

@@ -306,7 +306,7 @@ impl ModelBackend for DenseBackend {
         for (i, row) in rows.into_iter().zip(logits) {
             out[i] = Some(Ok(row));
         }
-        out.into_iter().map(|r| r.expect("row resolved")).collect()
+        resolve_rows(out)
     }
 
     fn oracle_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
@@ -315,6 +315,23 @@ impl ModelBackend for DenseBackend {
         let all = model_forward(&self.cfg, &self.params, &toks, toks.len());
         Ok(all[(toks.len() - 1) * self.cfg.vocab..].to_vec())
     }
+}
+
+/// Collapse the partition's `Option` layer: every row is resolved by
+/// either the partition pre-pass (foreign/invalid sessions) or the
+/// stacked forward. A still-unresolved row is an internal accounting bug;
+/// surface it as a per-row error — the engine retires that request
+/// through `CancelReason::Backend` — rather than panicking the worker.
+fn resolve_rows(out: Vec<Option<Result<Vec<f32>>>>) -> Vec<Result<Vec<f32>>> {
+    out.into_iter()
+        .map(|r| {
+            r.unwrap_or_else(|| {
+                Err(anyhow::anyhow!(
+                    "decode_batch row missing from the stacked pass"
+                ))
+            })
+        })
+        .collect()
 }
 
 /// Low-rank compressed model through the KV-cached pure-Rust forward;
@@ -403,7 +420,7 @@ impl ModelBackend for CompressedBackend {
         for (i, row) in rows.into_iter().zip(logits) {
             out[i] = Some(Ok(row));
         }
-        out.into_iter().map(|r| r.expect("row resolved")).collect()
+        resolve_rows(out)
     }
 
     fn oracle_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
@@ -470,9 +487,10 @@ impl ModelBackend for SyntheticBackend {
     }
 
     fn prefill(&mut self, tokens: &[i32]) -> Result<Prefill> {
-        anyhow::ensure!(!tokens.is_empty(), "prefill needs at least one token");
+        let Some(&last) = tokens.last() else {
+            anyhow::bail!("prefill needs at least one token");
+        };
         self.simulate_latency();
-        let last = *tokens.last().unwrap();
         Ok(Prefill {
             session: Session {
                 state: SessionState::Synthetic {
@@ -517,13 +535,16 @@ impl ModelBackend for SyntheticBackend {
     }
 
     fn oracle_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
-        anyhow::ensure!(!tokens.is_empty(), "oracle needs at least one token");
+        let Some(&last) = tokens.last() else {
+            anyhow::bail!("oracle needs at least one token");
+        };
         self.simulate_latency();
-        Ok(self.logits_after(*tokens.last().unwrap()))
+        Ok(self.logits_after(last))
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::model::init::init_params;

@@ -33,6 +33,7 @@ pub fn bench_prompts(n: usize, seed: u64) -> Vec<String> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

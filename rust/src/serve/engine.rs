@@ -251,6 +251,8 @@ impl Server {
             max_queue: options.max_queue.max(1),
         });
         let worker_shared = shared.clone();
+        #[allow(clippy::expect_used)]
+        // aasvd-lint: allow(adhoc-parallelism): the one sanctioned long-lived thread — Pool is for scoped fan-out, not a persistent decode loop owning non-Send backend state
         let worker = std::thread::Builder::new()
             .name("aasvd-serve".into())
             .spawn(move || {
@@ -280,6 +282,7 @@ impl Server {
                 metrics.rejected = worker_shared.rejected.load(Ordering::Relaxed);
                 metrics
             })
+            // aasvd-lint: allow(serve-unwrap): OS thread-spawn failure at startup has no request to retire; aborting construction is the only sane outcome
             .expect("spawn serve worker");
         Server {
             tx: Some(tx),
@@ -348,8 +351,15 @@ impl Server {
     /// metrics.
     pub fn shutdown(mut self) -> ServeMetrics {
         self.tx.take(); // disconnect: worker drains and exits
-        let worker = self.worker.take().unwrap();
-        worker.join().expect("serve worker panicked")
+        match self.worker.take() {
+            Some(worker) => match worker.join() {
+                Ok(metrics) => metrics,
+                // re-raise the worker's panic on the caller's thread with
+                // its original payload
+                Err(panic) => std::panic::resume_unwind(panic),
+            },
+            None => ServeMetrics::default(),
+        }
     }
 }
 
@@ -473,7 +483,7 @@ fn decode_loop(
         while i < pending.len() {
             match cancel_reason(&pending[i]) {
                 Some(reason) => {
-                    let req = pending.remove(i).expect("index in bounds");
+                    let Some(req) = pending.remove(i) else { break };
                     shared.queue_depth.fetch_sub(1, Ordering::Relaxed);
                     retire_cancelled(req, reason, metrics);
                 }
@@ -636,9 +646,19 @@ fn decode_loop(
                     if !advance[row] {
                         continue;
                     }
+                    // an empty token buffer or a missing session on the
+                    // cached path is an internal-state bug; retire that
+                    // row through the backend-failure path instead of
+                    // panicking the worker
+                    let (Some(&tok), Some(session)) =
+                        (slot.tokens.last(), slot.session.as_mut())
+                    else {
+                        retire.push((row, true));
+                        continue;
+                    };
                     rows.push(row);
-                    toks.push(*slot.tokens.last().expect("slot holds its prompt"));
-                    sessions.push(slot.session.as_mut().expect("cached slot has a session"));
+                    toks.push(tok);
+                    sessions.push(session);
                 }
                 if !sessions.is_empty() {
                     metrics.decode_batches += 1;
@@ -733,6 +753,7 @@ fn decode_loop(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::model::init::init_params;

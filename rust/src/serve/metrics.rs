@@ -59,6 +59,7 @@ impl ServeMetrics {
 
     /// Peak KV-cache residency over the run (0.0 when nothing was cached).
     pub fn peak_cache_bytes(&self) -> f64 {
+        // aasvd-lint: allow(float-reduce): running max, order-insensitive; metrics summary only
         self.cache_bytes.iter().cloned().fold(0.0, f64::max)
     }
 

@@ -68,6 +68,13 @@
 //! println!("{}", metrics.summary());
 //! # }
 //! ```
+//!
+//! The serving hot path must not panic: a worker panic kills every
+//! in-flight request at once, where a typed error retires exactly one
+//! (`CancelReason::Backend`). `aasvd-lint`'s `serve-unwrap` rule and the
+//! clippy lints below enforce this for all non-test code in this tree;
+//! test modules opt back in with explicit `#[allow]`s.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod backend;
 pub mod batcher;

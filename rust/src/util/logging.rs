@@ -19,6 +19,7 @@ fn level() -> u8 {
     if l != 255 {
         return l;
     }
+    // aasvd-lint: allow(env-var): log verbosity only — cannot change any computed result
     let from_env = match std::env::var("AASVD_LOG").as_deref() {
         Ok("debug") => Level::Debug,
         Ok("warn") => Level::Warn,

@@ -108,6 +108,18 @@ impl Pool {
     /// submission order regardless of completion order. Jobs may borrow
     /// from the caller's stack (scoped threads). With one worker — or one
     /// job — everything runs inline on the calling thread.
+    ///
+    /// # Panics
+    ///
+    /// A panicking job panics this call: `std::thread::scope` joins every
+    /// worker and then re-raises the first worker panic with its original
+    /// payload. There is no deadlock and no corruption — no lock is held
+    /// while a job runs, so the queue and the result buffer stay healthy,
+    /// the surviving workers keep draining the queue (with a single
+    /// panicking job every other job still executes), and the pool itself
+    /// is stateless so later `run` calls are unaffected. On the inline
+    /// single-worker path the panic propagates immediately and later jobs
+    /// do not run.
     pub fn run<T, F>(&self, jobs: Vec<F>) -> Vec<T>
     where
         T: Send,
@@ -220,6 +232,36 @@ mod tests {
         });
         assert_eq!(inner_seen, 5);
         assert_eq!(outer_seen, 2);
+    }
+
+    #[test]
+    fn panicking_job_propagates_without_deadlock() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let ran = AtomicUsize::new(0);
+        let pool = Pool::exact(3);
+        let jobs: Vec<_> = (0..16usize)
+            .map(|i| {
+                let ran = &ran;
+                move || {
+                    if i == 5 {
+                        panic!("job 5 exploded");
+                    }
+                    ran.fetch_add(1, Ordering::SeqCst);
+                    i
+                }
+            })
+            .collect();
+        let panic = catch_unwind(AssertUnwindSafe(|| pool.run(jobs)))
+            .expect_err("a job panic must reach the caller");
+        // the scope re-raises the worker's panic with its original payload
+        assert_eq!(panic.downcast_ref::<&str>(), Some(&"job 5 exploded"));
+        // every surviving job still ran: the panicking worker died without
+        // holding a lock, so the other workers drained the whole queue
+        assert_eq!(ran.load(Ordering::SeqCst), 15);
+        // the pool is stateless — a subsequent run returns submission-order
+        // results as if nothing happened
+        let out = pool.run((0..8usize).map(|i| move || i * 3).collect::<Vec<_>>());
+        assert_eq!(out, (0..8usize).map(|i| i * 3).collect::<Vec<_>>());
     }
 
     #[test]

@@ -116,7 +116,7 @@ impl Rng {
             return logits
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(i, _)| i)
                 .unwrap_or(0);
         }
@@ -136,11 +136,7 @@ impl Rng {
         match k {
             Some(k) if k > 0 && k < logits.len() && temp > 0.0 => {
                 let mut idx: Vec<usize> = (0..logits.len()).collect();
-                idx.select_nth_unstable_by(k - 1, |&a, &b| {
-                    logits[b]
-                        .partial_cmp(&logits[a])
-                        .unwrap_or(std::cmp::Ordering::Equal)
-                });
+                idx.select_nth_unstable_by(k - 1, |&a, &b| logits[b].total_cmp(&logits[a]));
                 idx.truncate(k);
                 let top: Vec<f32> = idx.iter().map(|&i| logits[i]).collect();
                 idx[self.sample_logits(&top, temp)]

@@ -1,5 +1,7 @@
 //! Small numeric-summary helpers shared by eval, benches and serving metrics.
 
+// aasvd-lint: allow-file(float-reduce): sequential slice reductions with a fixed iteration order — summary statistics for reports, never on the compressed-artifact path
+
 /// Arithmetic mean (0 for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -24,7 +26,7 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
         return 0.0;
     }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(|a, b| a.total_cmp(b));
     let rank = (q / 100.0) * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;

@@ -1,0 +1,6 @@
+// aasvd-lint: path=src/compress/fixture.rs
+
+pub fn fan_out() -> i32 {
+    let handle = std::thread::spawn(|| 1 + 1);
+    handle.join().unwrap_or(0)
+}

@@ -1,0 +1,7 @@
+// aasvd-lint: path=src/compress/fixture.rs
+
+pub fn fan_out() -> i32 {
+    // aasvd-lint: allow(adhoc-parallelism): fixture justification — pretend this is a sanctioned long-lived worker
+    let handle = std::thread::spawn(|| 1 + 1);
+    handle.join().unwrap_or(0)
+}

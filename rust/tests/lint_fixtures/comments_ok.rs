@@ -1,0 +1,11 @@
+// aasvd-lint: path=src/serve/fixture.rs
+
+// Mentions of std::thread::spawn, HashMap, Instant::now and env::var in
+// line comments must not fire.
+/* Neither in block comments: .unwrap() partial_cmp SystemTime
+   /* nested blocks too: .expect( .sum::<f32> rayon */ still inside */
+pub fn describe() -> &'static str {
+    let _raw = r#"thread::spawn in a raw "quoted" string"#;
+    let _ch = '"';
+    "patterns in strings are fine: .unwrap() .expect( env::var partial_cmp"
+}

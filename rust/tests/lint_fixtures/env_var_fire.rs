@@ -1,0 +1,8 @@
+// aasvd-lint: path=src/model/fixture.rs
+
+pub fn hidden_knob() -> usize {
+    std::env::var("AASVD_FIXTURE_KNOB")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}

@@ -1,0 +1,9 @@
+// aasvd-lint: path=src/model/fixture.rs
+
+pub fn hidden_knob() -> usize {
+    // aasvd-lint: allow(env-var): fixture justification — imagine this only tunes logging
+    std::env::var("AASVD_FIXTURE_KNOB")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}

@@ -1,0 +1,10 @@
+// aasvd-lint: path=src/eval/fixture.rs
+
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        // aasvd-lint: allow(float-cmp): fixture justification — inputs proven finite one line above (they are not)
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}

@@ -1,0 +1,5 @@
+// aasvd-lint: path=src/refine/fixture.rs
+
+pub fn energy(xs: &[f32]) -> f32 {
+    xs.iter().map(|x| x * x).sum::<f32>()
+}

@@ -1,0 +1,7 @@
+// aasvd-lint: path=src/linalg/matrix.rs
+
+// In a sanctioned banded-kernel file the same reduction is the whole
+// point: this is where accumulation order is pinned. No violation.
+pub fn band_dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum::<f32>()
+}

@@ -1,0 +1,6 @@
+// aasvd-lint: path=src/refine/fixture.rs
+
+pub fn energy(xs: &[f32]) -> f32 {
+    // aasvd-lint: allow(float-reduce): fixture justification — sequential slice sum in fixed order
+    xs.iter().map(|x| x * x).sum::<f32>()
+}

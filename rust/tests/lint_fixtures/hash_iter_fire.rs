@@ -1,0 +1,7 @@
+// aasvd-lint: path=src/linalg/fixture.rs
+
+use std::collections::HashMap;
+
+pub fn cov_by_name() -> HashMap<String, f64> {
+    HashMap::new()
+}

@@ -1,0 +1,7 @@
+// aasvd-lint: path=src/serve/fixture.rs
+
+pub fn hot_path(v: &[f32]) -> f32 {
+    let first = v.first().unwrap();
+    let last = v.last().expect("nonempty");
+    first + last
+}

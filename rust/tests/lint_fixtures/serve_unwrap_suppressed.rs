@@ -1,0 +1,9 @@
+// aasvd-lint: path=src/serve/fixture.rs
+
+pub fn hot_path(v: &[f32]) -> f32 {
+    // aasvd-lint: allow(serve-unwrap): fixture justification — invariant established by the caller, panic preferable
+    let first = v.first().unwrap();
+    // aasvd-lint: allow(serve-unwrap): fixture justification — same invariant as above
+    let last = v.last().expect("nonempty");
+    first + last
+}

@@ -1,0 +1,7 @@
+// aasvd-lint: path=src/linalg/fixture.rs
+
+pub fn timed() -> f64 {
+    // aasvd-lint: allow(wallclock)
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

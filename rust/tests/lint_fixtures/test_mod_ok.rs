@@ -1,0 +1,16 @@
+// aasvd-lint: path=src/compress/fixture.rs
+
+pub fn kernel_stub() -> f64 {
+    0.0
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn reference_sum_is_exempt() {
+        let xs = [1.0f64, 2.0];
+        assert_eq!(xs.iter().sum::<f64>(), 3.0);
+        let t0 = std::time::Instant::now();
+        assert!(t0.elapsed().as_secs_f64() >= 0.0);
+    }
+}

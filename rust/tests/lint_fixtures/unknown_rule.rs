@@ -1,0 +1,3 @@
+// aasvd-lint: allow(flux-capacitor): not a real rule, must be reported as a malformed directive
+
+pub fn nothing() {}

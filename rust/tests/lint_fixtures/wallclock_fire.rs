@@ -1,0 +1,6 @@
+// aasvd-lint: path=src/linalg/fixture.rs
+
+pub fn timed_solve() -> f64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,7 @@
+// aasvd-lint: path=src/linalg/fixture.rs
+
+pub fn timed_solve() -> f64 {
+    // aasvd-lint: allow(wallclock): fixture justification — timing feeds a report field, not a numeric result
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

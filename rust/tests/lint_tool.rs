@@ -1,0 +1,153 @@
+//! Fixture-driven tests for the `aasvd-lint` determinism pass: every
+//! rule fires on its known-bad fixture, every suppression silences it,
+//! the JSON report parses, scanning is deterministic — and the repo's
+//! own tree is clean (the invariant CI's `lint` job enforces).
+
+use std::path::{Path, PathBuf};
+
+use aasvd::lint::{render_json, scan_file, scan_tree, RULES};
+use aasvd::util::json::Json;
+
+fn manifest_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture_dir() -> PathBuf {
+    manifest_dir().join("tests").join("lint_fixtures")
+}
+
+fn rules_fired(file: &Path) -> Vec<String> {
+    scan_file(file)
+        .unwrap_or_else(|e| panic!("scan {}: {e}", file.display()))
+        .into_iter()
+        .map(|v| v.rule)
+        .collect()
+}
+
+/// fixture file -> rule names expected to fire, in line order
+/// (duplicates = multiple firing lines).
+const EXPECTED: &[(&str, &[&str])] = &[
+    ("adhoc_parallelism_fire.rs", &["adhoc-parallelism"]),
+    ("adhoc_parallelism_suppressed.rs", &[]),
+    ("hash_iter_fire.rs", &["hash-iter", "hash-iter", "hash-iter"]),
+    ("hash_iter_suppressed.rs", &[]),
+    ("float_reduce_fire.rs", &["float-reduce"]),
+    ("float_reduce_suppressed.rs", &[]),
+    ("float_reduce_sanctioned.rs", &[]),
+    ("float_cmp_fire.rs", &["float-cmp"]),
+    ("float_cmp_suppressed.rs", &[]),
+    ("env_var_fire.rs", &["env-var"]),
+    ("env_var_suppressed.rs", &[]),
+    ("wallclock_fire.rs", &["wallclock"]),
+    ("wallclock_suppressed.rs", &[]),
+    ("serve_unwrap_fire.rs", &["serve-unwrap", "serve-unwrap"]),
+    ("serve_unwrap_suppressed.rs", &[]),
+    ("suppression_unjustified.rs", &["lint-directive", "wallclock"]),
+    ("unknown_rule.rs", &["lint-directive"]),
+    ("comments_ok.rs", &[]),
+    ("test_mod_ok.rs", &[]),
+];
+
+#[test]
+fn fixtures_fire_and_suppress_as_pinned() {
+    for (name, expected) in EXPECTED {
+        let path = fixture_dir().join(name);
+        assert!(path.is_file(), "missing fixture {name}");
+        let fired = rules_fired(&path);
+        assert_eq!(&fired, expected, "unexpected findings in fixture {name}");
+    }
+}
+
+#[test]
+fn every_rule_has_a_fire_and_a_suppress_fixture() {
+    for rule in RULES {
+        let stem = rule.name.replace('-', "_");
+        let fire = format!("{stem}_fire.rs");
+        let suppressed = format!("{stem}_suppressed.rs");
+        let fire_row = EXPECTED
+            .iter()
+            .find(|(n, _)| *n == fire)
+            .unwrap_or_else(|| panic!("no firing fixture for rule {}", rule.name));
+        assert!(
+            fire_row.1.contains(&rule.name),
+            "fixture {fire} does not fire rule {}",
+            rule.name
+        );
+        let suppress_row = EXPECTED
+            .iter()
+            .find(|(n, _)| *n == suppressed)
+            .unwrap_or_else(|| panic!("no suppressed fixture for rule {}", rule.name));
+        assert!(
+            suppress_row.1.is_empty(),
+            "fixture {suppressed} should be fully suppressed"
+        );
+    }
+}
+
+#[test]
+fn corpus_fails_as_a_tree_and_covers_every_rule() {
+    let (files, violations) = scan_tree(&fixture_dir()).expect("scan fixture corpus");
+    assert!(files >= EXPECTED.len(), "walker missed fixture files");
+    assert!(
+        !violations.is_empty(),
+        "the known-bad corpus must produce violations"
+    );
+    for rule in RULES {
+        assert!(
+            violations.iter().any(|v| v.rule == rule.name),
+            "rule {} never fired across the corpus",
+            rule.name
+        );
+    }
+    assert!(
+        violations.iter().any(|v| v.rule == "lint-directive"),
+        "malformed directives must be reported"
+    );
+}
+
+#[test]
+fn repo_tree_is_clean() {
+    // the invariant CI enforces: the shipped tree has zero violations
+    // (fixed or suppressed-with-justification)
+    for tree in ["src", "tests", "benches", "bin"] {
+        let root = manifest_dir().join(tree);
+        let (files, violations) = scan_tree(&root).expect("scan repo tree");
+        assert!(files > 0, "no files under {tree}/");
+        assert!(
+            violations.is_empty(),
+            "lint violations in {tree}/:\n{}",
+            violations
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}
+
+#[test]
+fn scanning_is_deterministic() {
+    let a = scan_tree(&fixture_dir()).expect("first scan");
+    let b = scan_tree(&fixture_dir()).expect("second scan");
+    assert_eq!(a.0, b.0);
+    assert_eq!(a.1, b.1);
+}
+
+#[test]
+fn json_report_parses_with_the_repo_parser() {
+    let file = fixture_dir().join("serve_unwrap_fire.rs");
+    let violations = scan_file(&file).expect("scan fixture");
+    let report = render_json(&violations, 1);
+    let parsed = Json::parse(&report.to_string_pretty()).expect("valid json");
+    assert_eq!(parsed.req("files_scanned").as_usize(), Some(1));
+    assert_eq!(parsed.req("clean").as_bool(), Some(false));
+    let items = parsed.req("violations").as_arr().expect("violations array");
+    assert_eq!(items.len(), 2);
+    for item in items {
+        assert_eq!(item.req("rule").as_str(), Some("serve-unwrap"));
+        assert!(item.req("line").as_usize().is_some());
+        assert!(item.req("path").as_str().is_some());
+        assert!(item.req("snippet").as_str().is_some());
+        assert!(item.req("detail").as_str().is_some());
+    }
+}
