@@ -19,6 +19,7 @@ use aasvd::model::init::init_params;
 use aasvd::model::lowrank::exact_factors;
 use aasvd::model::Config;
 use aasvd::serve::batcher::bench_prompts;
+use aasvd::serve::http::parse::{find_head_end, parse_head, Limits};
 use aasvd::serve::{
     DecodeMode, DenseBackend, GenParams, ModelBackend, ServedModel, Server, ServerOptions,
     Session,
@@ -227,6 +228,28 @@ fn main() {
                         std::hint::black_box(&out);
                     }
                 });
+            },
+        );
+    }
+    // HTTP front-door parse row: request-head scan + parse cost per
+    // request, measured off the wire path. This is the per-connection
+    // fixed overhead the front door adds before a request reaches the
+    // engine; it is reported for tracking, not gated.
+    {
+        const PARSES: usize = 10_000;
+        let head = b"POST /v1/completions HTTP/1.1\r\nhost: localhost\r\ncontent-type: application/json\r\ncontent-length: 64\r\naccept: text/event-stream\r\n\r\n";
+        let limits = Limits::default();
+        b.min_iters = 3;
+        b.max_iters = 6;
+        b.run(
+            &format!("http[parse_head] {PARSES} heads"),
+            Some(PARSES as f64),
+            || {
+                for _ in 0..PARSES {
+                    let end = find_head_end(head).expect("terminator present");
+                    let parsed = parse_head(&head[..end], &limits).expect("well-formed head");
+                    std::hint::black_box(&parsed);
+                }
             },
         );
     }

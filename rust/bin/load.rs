@@ -1,0 +1,483 @@
+//! `aasvd-load` — open-loop load generator for the HTTP front door.
+//!
+//! Open-loop means arrivals follow a precomputed schedule and never wait
+//! for responses: a slow server faces a growing backlog exactly like it
+//! would in production, instead of the closed-loop mercy of clients that
+//! pause while it catches up. Four arrival profiles:
+//!
+//! - `sustained` — constant rate, evenly spaced
+//! - `poisson`   — exponential inter-arrival gaps at the same mean rate
+//! - `ramp`      — rate grows linearly from 0 to the peak over the run
+//! - `burst`     — the whole second's traffic lands in its first half
+//!
+//! The whole schedule (arrival times, prompts, seeds) derives from
+//! `--seed`, so two runs issue byte-identical requests in the same
+//! order. Thousands of sockets are driven from one thread: blocking
+//! connect on loopback, then nonblocking writes/reads swept in a tight
+//! loop, with chunked-transfer and SSE frames decoded incrementally so
+//! TTFT and inter-token latency are stamped when bytes *arrive*, not
+//! when a response completes.
+//!
+//! `--serve synthetic` (the CI `http-smoke` mode) boots the in-process
+//! [`HttpServer`] over a [`SyntheticBackend`] with split prefill/step
+//! delays, so the whole harness runs artifact-free in one process.
+//! `--target host:port` aims at an external server instead.
+//!
+//! Results land in `--out` (default `results/bench_http.json`):
+//! p50/p90/p99 TTFT and inter-token latency, status-class counts, peak
+//! concurrency, and the server-side metrics summary when in-process.
+
+use aasvd::model::Config;
+use aasvd::serve::{
+    DecodeMode, HttpOptions, HttpServer, Server, ServerOptions, SyntheticBackend,
+};
+use aasvd::util::cli::Args;
+use aasvd::util::json::Json;
+use aasvd::util::rng::Rng;
+use aasvd::util::stats::{mean, percentile};
+use anyhow::{anyhow, Context, Result};
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+fn main() -> Result<()> {
+    let args = Args::parse_env(
+        "aasvd-load: open-loop HTTP load generator (see README \"HTTP API\")",
+    );
+    let profile = args.str("profile", "sustained", "arrival profile: sustained|poisson|ramp|burst");
+    let rate = args.f64("rate", 100.0, "mean arrival rate, requests/second");
+    let duration = args.f64("duration-secs", 5.0, "arrival window length in seconds");
+    let max_tokens = args.usize("max-tokens", 100, "tokens requested per completion");
+    let seed = args.u64("seed", 7, "schedule + prompt seed (full determinism)");
+    let target = args.str("target", "", "external server host:port (empty = --serve)");
+    let serve = args.str("serve", "synthetic", "in-process backend when --target is empty");
+    let model = args.str("model", "small", "builtin config for the in-process server");
+    let step_delay_ms = args.f64("step-delay-ms", 20.0, "synthetic per-decode-tick delay");
+    let prefill_delay_ms = args.f64("prefill-delay-ms", 0.0, "synthetic per-prefill delay");
+    let max_queue = args.usize("max-queue", 4096, "in-process admission queue bound");
+    let max_batch = args.usize("max-batch", 4096, "in-process decode-slot cap");
+    let max_connections = args.usize("max-connections", 4096, "in-process HTTP connection cap");
+    let out = args.str("out", "results/bench_http.json", "output JSON path");
+    args.finish_or_help();
+
+    // ---- deterministic schedule + request bodies --------------------
+    let mut rng = Rng::new(seed);
+    let schedule = build_schedule(&profile, rate, duration, &mut rng)?;
+    let mut bodies = Vec::with_capacity(schedule.len());
+    for i in 0..schedule.len() {
+        let mut fork = rng.fork(i as u64);
+        let len = 4 + fork.below(8);
+        let prompt: String = (0..len)
+            .map(|_| char::from(b'a' + fork.below(26) as u8))
+            .collect();
+        let body = Json::obj()
+            .set("prompt", prompt)
+            .set("max_tokens", max_tokens)
+            .set("stream", true)
+            .set("seed", i as f64)
+            .to_string();
+        bodies.push(body);
+    }
+
+    // ---- target: external, or an in-process synthetic stack ---------
+    let mut http = None;
+    let addr = if target.is_empty() {
+        if serve != "synthetic" {
+            return Err(anyhow!("--serve only supports 'synthetic' (got '{serve}')"));
+        }
+        let cfg = Config::builtin(&model)
+            .ok_or_else(|| anyhow!("unknown builtin config '{model}'"))?;
+        let backend_cfg = cfg.clone();
+        let prefill_delay = Duration::from_secs_f64(prefill_delay_ms.max(0.0) / 1e3);
+        let step_delay = Duration::from_secs_f64(step_delay_ms.max(0.0) / 1e3);
+        let server = Server::with_backend(
+            cfg,
+            ServerOptions {
+                max_queue,
+                max_batch,
+                decode: DecodeMode::Cached,
+                // open-loop load: drain the whole admission queue each
+                // tick, or arrival bursts stack up behind one-per-tick
+                prefill_per_tick: 0,
+                ..Default::default()
+            },
+            move || {
+                Ok(Box::new(SyntheticBackend::with_delays(
+                    backend_cfg,
+                    prefill_delay,
+                    step_delay,
+                )))
+            },
+        );
+        let front = HttpServer::start(
+            server,
+            HttpOptions {
+                max_connections,
+                ..Default::default()
+            },
+        )
+        .context("start in-process HTTP server")?;
+        let addr = front.addr().to_string();
+        http = Some(front);
+        addr
+    } else {
+        target.clone()
+    };
+
+    // ---- the open-loop sweep ----------------------------------------
+    eprintln!(
+        "aasvd-load: {} requests, profile={profile} rate={rate}/s duration={duration}s -> {addr}",
+        schedule.len()
+    );
+    let run = drive(&addr, &schedule, &bodies);
+
+    let server_summary = http.map(|h| h.shutdown().summary());
+
+    // ---- report -----------------------------------------------------
+    let pct = |xs: &[f64], q: f64| if xs.is_empty() { 0.0 } else { 1e3 * percentile(xs, q) };
+    let report = Json::obj()
+        .set("bench", "http_load")
+        .set("profile", profile.as_str())
+        .set("rate", rate)
+        .set("duration_secs", duration)
+        .set("seed", seed as f64)
+        .set("max_tokens", max_tokens)
+        .set("requests", schedule.len())
+        .set("completed", run.completed)
+        .set("failed_transport", run.failed_transport)
+        .set(
+            "status",
+            Json::obj()
+                .set("s2xx", run.s2xx)
+                .set("s4xx", run.s4xx)
+                .set("s5xx", run.s5xx),
+        )
+        .set("max_concurrent", run.max_concurrent)
+        .set("tokens_total", run.tokens_total)
+        .set("wall_secs", run.wall_secs)
+        .set(
+            "ttft_ms",
+            Json::obj()
+                .set("mean", if run.ttfts.is_empty() { 0.0 } else { 1e3 * mean(&run.ttfts) })
+                .set("p50", pct(&run.ttfts, 50.0))
+                .set("p90", pct(&run.ttfts, 90.0))
+                .set("p99", pct(&run.ttfts, 99.0)),
+        )
+        .set(
+            "itl_ms",
+            Json::obj()
+                .set("p50", pct(&run.itls, 50.0))
+                .set("p99", pct(&run.itls, 99.0)),
+        )
+        .set(
+            "server_summary",
+            server_summary.clone().map(Json::from).unwrap_or(Json::Null),
+        );
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    std::fs::write(&out, report.to_string_pretty()).with_context(|| format!("write {out}"))?;
+    eprintln!(
+        "aasvd-load: done — completed={} 2xx={} 4xx={} 5xx={} transport_failures={} \
+         max_concurrent={} ttft p50={:.0}ms p99={:.0}ms -> {out}",
+        run.completed,
+        run.s2xx,
+        run.s4xx,
+        run.s5xx,
+        run.failed_transport,
+        run.max_concurrent,
+        pct(&run.ttfts, 50.0),
+        pct(&run.ttfts, 99.0),
+    );
+    if let Some(s) = server_summary {
+        eprintln!("server: {s}");
+    }
+    Ok(())
+}
+
+/// Arrival offsets (seconds from t0), ascending.
+fn build_schedule(profile: &str, rate: f64, duration: f64, rng: &mut Rng) -> Result<Vec<f64>> {
+    anyhow::ensure!(rate > 0.0 && duration > 0.0, "rate and duration must be positive");
+    let n = (rate * duration).round().max(1.0) as usize;
+    let times = match profile {
+        "sustained" => (0..n).map(|i| i as f64 / rate).collect(),
+        "poisson" => {
+            let mut t = 0.0;
+            let mut times = Vec::with_capacity(n);
+            for _ in 0..n {
+                // exponential gap with mean 1/rate; clamp u away from 1
+                let u = rng.f64().min(1.0 - 1e-12);
+                t += -(1.0 - u).ln() / rate;
+                times.push(t);
+            }
+            times
+        }
+        "ramp" => {
+            // instantaneous rate r(t) = peak * t / duration with peak
+            // chosen so the window still carries n arrivals: the i-th
+            // arrival solves i = peak * t^2 / (2 * duration)
+            let peak = 2.0 * rate;
+            (0..n)
+                .map(|i| (2.0 * (i as f64 + 1.0) * duration / peak).sqrt())
+                .collect()
+        }
+        "burst" => {
+            // each second's quota lands evenly in its first half, then
+            // silence — a square-wave arrival pattern
+            let per_sec = rate.max(1.0) as usize;
+            let mut times = Vec::with_capacity(n);
+            'outer: for sec in 0.. {
+                for i in 0..per_sec {
+                    if times.len() >= n {
+                        break 'outer;
+                    }
+                    times.push(sec as f64 + 0.5 * i as f64 / per_sec as f64);
+                }
+            }
+            times
+        }
+        other => return Err(anyhow!("unknown profile '{other}'")),
+    };
+    Ok(times)
+}
+
+/// One in-flight socket and its incremental response decoder.
+struct Conn {
+    stream: TcpStream,
+    request: Vec<u8>,
+    written: usize,
+    /// raw bytes received, head + (possibly chunked) body
+    raw: Vec<u8>,
+    /// index just past `\r\n\r\n`, once seen
+    head_end: Option<usize>,
+    status: u16,
+    chunked: bool,
+    /// decode cursor into `raw` for the chunk parser
+    chunk_pos: usize,
+    /// decoded body bytes (SSE text, or the JSON error body)
+    body: Vec<u8>,
+    /// cursor into `body` for SSE event extraction
+    sse_pos: usize,
+    started: f64,
+    ttft: Option<f64>,
+    last_token: Option<f64>,
+    itls: Vec<f64>,
+    tokens: usize,
+}
+
+enum Pump {
+    Continue,
+    Finished,
+    TransportFailed,
+}
+
+impl Conn {
+    fn open(addr: &str, body: &str, started: f64) -> std::io::Result<Conn> {
+        // loopback connect is effectively instant; go nonblocking after
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        stream.set_nonblocking(true)?;
+        let request = format!(
+            "POST /v1/completions HTTP/1.1\r\nhost: {addr}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
+            body.len(),
+        )
+        .into_bytes();
+        Ok(Conn {
+            stream,
+            request,
+            written: 0,
+            raw: Vec::with_capacity(1024),
+            head_end: None,
+            status: 0,
+            chunked: false,
+            chunk_pos: 0,
+            body: Vec::new(),
+            sse_pos: 0,
+            started,
+            ttft: None,
+            last_token: None,
+            itls: Vec::new(),
+            tokens: 0,
+        })
+    }
+
+    /// Advance writes and reads as far as the socket allows right now.
+    fn pump(&mut self, now: f64) -> Pump {
+        // flush the request
+        while self.written < self.request.len() {
+            match self.stream.write(&self.request[self.written..]) {
+                Ok(0) => return Pump::TransportFailed,
+                Ok(n) => self.written += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return Pump::TransportFailed,
+            }
+        }
+        // drain the socket
+        let mut tmp = [0u8; 4096];
+        loop {
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    // server closed: with connection: close this is the
+                    // universal terminator
+                    self.parse(now);
+                    return if self.status != 0 { Pump::Finished } else { Pump::TransportFailed };
+                }
+                Ok(n) => {
+                    self.raw.extend_from_slice(&tmp[..n]);
+                    self.parse(now);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Pump::Continue,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return Pump::TransportFailed,
+            }
+        }
+    }
+
+    /// Incrementally decode head -> chunks -> SSE events, stamping token
+    /// arrival times as they surface.
+    fn parse(&mut self, now: f64) {
+        if self.head_end.is_none() {
+            let Some(pos) = self.raw.windows(4).position(|w| w == b"\r\n\r\n") else {
+                return;
+            };
+            let end = pos + 4;
+            self.head_end = Some(end);
+            self.chunk_pos = end;
+            let head = String::from_utf8_lossy(&self.raw[..end]);
+            self.status = head
+                .lines()
+                .next()
+                .and_then(|l| l.split(' ').nth(1))
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0);
+            self.chunked = head
+                .to_ascii_lowercase()
+                .contains("transfer-encoding: chunked");
+        }
+        if self.chunked {
+            self.decode_chunks();
+        } else if let Some(end) = self.head_end {
+            // fixed-length (error) body: everything after the head
+            self.body = self.raw[end..].to_vec();
+        }
+        self.extract_sse_events(now);
+    }
+
+    /// Peel complete `size\r\n payload \r\n` frames off `raw`.
+    fn decode_chunks(&mut self) {
+        loop {
+            let rest = &self.raw[self.chunk_pos..];
+            let Some(line_end) = rest.windows(2).position(|w| w == b"\r\n") else {
+                return;
+            };
+            let size_text = String::from_utf8_lossy(&rest[..line_end]);
+            let Ok(size) = usize::from_str_radix(size_text.trim(), 16) else {
+                return;
+            };
+            let frame = line_end + 2 + size + 2;
+            if rest.len() < frame {
+                return; // incomplete chunk; wait for more bytes
+            }
+            if size > 0 {
+                self.body
+                    .extend_from_slice(&rest[line_end + 2..line_end + 2 + size]);
+            }
+            self.chunk_pos += frame;
+            if size == 0 {
+                return; // terminal chunk
+            }
+        }
+    }
+
+    /// Count complete `event: ...\ndata: ...\n\n` blocks in `body`.
+    fn extract_sse_events(&mut self, now: f64) {
+        loop {
+            let rest = &self.body[self.sse_pos..];
+            let Some(sep) = rest.windows(2).position(|w| w == b"\n\n") else {
+                return;
+            };
+            let block = String::from_utf8_lossy(&rest[..sep]).to_string();
+            self.sse_pos += sep + 2;
+            if block.lines().any(|l| l.trim() == "event: token") {
+                self.tokens += 1;
+                let at = now - self.started;
+                if self.ttft.is_none() {
+                    self.ttft = Some(at);
+                }
+                if let Some(prev) = self.last_token {
+                    self.itls.push(at - prev);
+                }
+                self.last_token = Some(at);
+            }
+        }
+    }
+}
+
+/// Aggregated results of one sweep.
+#[derive(Default)]
+struct RunStats {
+    completed: usize,
+    failed_transport: usize,
+    s2xx: usize,
+    s4xx: usize,
+    s5xx: usize,
+    max_concurrent: usize,
+    tokens_total: usize,
+    wall_secs: f64,
+    ttfts: Vec<f64>,
+    itls: Vec<f64>,
+}
+
+impl RunStats {
+    fn settle(&mut self, conn: Conn) {
+        self.completed += 1;
+        match conn.status {
+            200..=299 => self.s2xx += 1,
+            400..=499 => self.s4xx += 1,
+            _ => self.s5xx += 1,
+        }
+        self.tokens_total += conn.tokens;
+        if let Some(t) = conn.ttft {
+            self.ttfts.push(t);
+        }
+        self.itls.extend(conn.itls);
+    }
+}
+
+/// The single-threaded nonblocking sweep over the whole schedule.
+fn drive(addr: &str, schedule: &[f64], bodies: &[String]) -> RunStats {
+    let mut stats = RunStats::default();
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut next = 0;
+    let t0 = Instant::now();
+    while next < schedule.len() || !conns.is_empty() {
+        let now = t0.elapsed().as_secs_f64();
+        // launch everything that is due (open-loop: never wait)
+        while next < schedule.len() && schedule[next] <= now {
+            match Conn::open(addr, &bodies[next], t0.elapsed().as_secs_f64()) {
+                Ok(c) => conns.push(c),
+                Err(_) => stats.failed_transport += 1,
+            }
+            next += 1;
+        }
+        stats.max_concurrent = stats.max_concurrent.max(conns.len());
+        // sweep every live socket once
+        let now = t0.elapsed().as_secs_f64();
+        let mut i = 0;
+        while i < conns.len() {
+            match conns[i].pump(now) {
+                Pump::Continue => i += 1,
+                Pump::Finished => stats.settle(conns.swap_remove(i)),
+                Pump::TransportFailed => {
+                    conns.swap_remove(i);
+                    stats.failed_transport += 1;
+                }
+            }
+        }
+        // don't spin hot between arrivals
+        std::thread::sleep(Duration::from_micros(500));
+    }
+    stats.wall_secs = t0.elapsed().as_secs_f64();
+    stats
+}

@@ -1,0 +1,84 @@
+//! `aasvd-serve` — stand-alone HTTP front door over the synthetic
+//! backend.
+//!
+//! Boots the serving engine behind [`HttpServer`], prints the bound
+//! address on stdout (one line, `listening <addr>`), then serves until
+//! stdin reaches EOF or a `quit` line arrives — at which point it drains,
+//! shuts down, and prints the merged [`ServeMetrics`] summary. Driving
+//! stdin rather than signals keeps shutdown portable and scriptable:
+//!
+//! ```text
+//! aasvd-serve --addr 127.0.0.1:8080 --step-delay-ms 20 &
+//! ... drive it with aasvd-load --target 127.0.0.1:8080 ...
+//! echo quit > /proc/<pid>/fd/0   # or close its stdin
+//! ```
+
+use aasvd::model::Config;
+use aasvd::serve::{
+    DecodeMode, HttpOptions, HttpServer, Server, ServerOptions, SyntheticBackend,
+};
+use aasvd::util::cli::Args;
+use anyhow::{anyhow, Context, Result};
+use std::io::BufRead;
+use std::time::Duration;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env(
+        "aasvd-serve: stand-alone HTTP front door (synthetic backend; see README \"HTTP API\")",
+    );
+    let addr = args.str("addr", "127.0.0.1:0", "bind address (port 0 picks a free port)");
+    let model = args.str("model", "small", "builtin config name");
+    let step_delay_ms = args.f64("step-delay-ms", 0.0, "synthetic per-decode-tick delay");
+    let prefill_delay_ms = args.f64("prefill-delay-ms", 0.0, "synthetic per-prefill delay");
+    let max_queue = args.usize("max-queue", 4096, "admission queue bound");
+    let max_batch = args.usize("max-batch", 4096, "decode-slot cap");
+    let max_connections = args.usize("max-connections", 4096, "HTTP connection cap");
+    let default_max_tokens = args.usize("default-max-tokens", 32, "max_tokens when omitted");
+    args.finish_or_help();
+
+    let cfg = Config::builtin(&model).ok_or_else(|| anyhow!("unknown builtin config '{model}'"))?;
+    let backend_cfg = cfg.clone();
+    let prefill_delay = Duration::from_secs_f64(prefill_delay_ms.max(0.0) / 1e3);
+    let step_delay = Duration::from_secs_f64(step_delay_ms.max(0.0) / 1e3);
+    let server = Server::with_backend(
+        cfg,
+        ServerOptions {
+            max_queue,
+            max_batch,
+            decode: DecodeMode::Cached,
+            prefill_per_tick: 0,
+            ..Default::default()
+        },
+        move || {
+            Ok(Box::new(SyntheticBackend::with_delays(
+                backend_cfg,
+                prefill_delay,
+                step_delay,
+            )))
+        },
+    );
+    let http = HttpServer::start(
+        server,
+        HttpOptions {
+            addr,
+            max_connections,
+            default_max_tokens,
+            ..Default::default()
+        },
+    )
+    .context("start HTTP front door")?;
+    println!("listening {}", http.addr());
+
+    // serve until stdin closes or a `quit` line arrives
+    let stdin = std::io::stdin();
+    for line in stdin.lock().lines() {
+        match line {
+            Ok(l) if l.trim() == "quit" => break,
+            Ok(_) => continue,
+            Err(_) => break,
+        }
+    }
+    let metrics = http.shutdown();
+    println!("{}", metrics.summary());
+    Ok(())
+}

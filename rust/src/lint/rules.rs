@@ -93,8 +93,17 @@ const ENV_FILES: &[&str] = &["src/util/pool.rs", "src/util/cli.rs", "src/experim
 /// compression artifacts.
 const HASH_ITER_TREES: &[&str] = &["src/linalg/", "src/model/", "src/compress/", "src/refine/"];
 
-/// Trees whose compute paths must not read wall clocks.
-const WALLCLOCK_TREES: &[&str] = &["src/linalg/", "src/model/", "src/compress/"];
+/// Trees whose compute paths must not read wall clocks. The HTTP front
+/// door is held to the same rule: its legitimate clock reads (read
+/// deadlines, TTFT samples) are latency *measurement*, and each site
+/// must carry a justified suppression saying so — anything else is a
+/// wall clock leaking toward token sampling.
+const WALLCLOCK_TREES: &[&str] = &[
+    "src/linalg/",
+    "src/model/",
+    "src/compress/",
+    "src/serve/http/",
+];
 
 pub fn is_known_rule(name: &str) -> bool {
     RULES.iter().any(|r| r.name == name)
@@ -138,7 +147,9 @@ pub fn policy_path(path: &str) -> String {
 ///   not care where it runs).
 /// - `env-var`: all of `src/` outside the pool/CLI/setup allowlist; test
 ///   code exempt (tests may pin env knobs).
-/// - `wallclock`: non-test code in `linalg/`, `model/`, `compress/`.
+/// - `wallclock`: non-test code in `linalg/`, `model/`, `compress/`, and
+///   `serve/http/` (where only justified latency-measurement sites may
+///   suppress it).
 /// - `serve-unwrap`: non-test code in `src/serve/`.
 pub fn applies(rule: &str, path: &str, in_test: bool) -> bool {
     match rule {
@@ -195,6 +206,19 @@ mod tests {
         assert!(applies(RULE_SERVE_UNWRAP, "src/serve/engine.rs", false));
         assert!(!applies(RULE_SERVE_UNWRAP, "src/serve/engine.rs", true));
         assert!(!applies(RULE_SERVE_UNWRAP, "src/linalg/eigh.rs", false));
+        // the HTTP front door sits inside src/serve/, so it inherits the rule
+        assert!(applies(RULE_SERVE_UNWRAP, "src/serve/http/server.rs", false));
+    }
+
+    #[test]
+    fn wallclock_covers_the_http_front_door() {
+        assert!(applies(RULE_WALLCLOCK, "src/serve/http/server.rs", false));
+        assert!(applies(RULE_WALLCLOCK, "src/serve/http/sse.rs", false));
+        // test code and the rest of serve/ stay exempt (the engine's
+        // deadline bookkeeping is policed by review, not this rule)
+        assert!(!applies(RULE_WALLCLOCK, "src/serve/http/server.rs", true));
+        assert!(!applies(RULE_WALLCLOCK, "src/serve/engine.rs", false));
+        assert!(applies(RULE_WALLCLOCK, "src/compress/svd.rs", false));
     }
 
     #[test]

@@ -435,10 +435,12 @@ impl ModelBackend for CompressedBackend {
 /// Artifact-free backend for tests and load experiments: the logits after
 /// any prefix deterministically favor `(last_token + 1) % vocab`, so
 /// greedy decoding of prompt "a" yields "bcde…". `step_delay` emulates
-/// model latency per prefill/decode/oracle call.
+/// model latency per decode/oracle call and `prefill_delay` per prefill
+/// pass (the single-knob [`SyntheticBackend::with_delay`] sets both).
 pub struct SyntheticBackend {
     cfg: Config,
     step_delay: Duration,
+    prefill_delay: Duration,
 }
 
 impl SyntheticBackend {
@@ -446,11 +448,33 @@ impl SyntheticBackend {
         SyntheticBackend {
             cfg,
             step_delay: Duration::ZERO,
+            prefill_delay: Duration::ZERO,
         }
     }
 
     pub fn with_delay(cfg: Config, step_delay: Duration) -> SyntheticBackend {
-        SyntheticBackend { cfg, step_delay }
+        // historical semantics: one knob paces prefill and decode alike
+        SyntheticBackend {
+            cfg,
+            step_delay,
+            prefill_delay: step_delay,
+        }
+    }
+
+    /// Split pacing: `prefill_delay` per prefill pass, `step_delay` per
+    /// decode/oracle call (paid once per batch on the batched path). The
+    /// HTTP load harness uses a free prefill with a real step delay so
+    /// admission rate and token pacing can be tuned independently.
+    pub fn with_delays(
+        cfg: Config,
+        prefill_delay: Duration,
+        step_delay: Duration,
+    ) -> SyntheticBackend {
+        SyntheticBackend {
+            cfg,
+            step_delay,
+            prefill_delay,
+        }
     }
 
     fn logits_after(&self, last: i32) -> Vec<f32> {
@@ -464,6 +488,12 @@ impl SyntheticBackend {
     fn simulate_latency(&self) {
         if !self.step_delay.is_zero() {
             std::thread::sleep(self.step_delay);
+        }
+    }
+
+    fn simulate_prefill_latency(&self) {
+        if !self.prefill_delay.is_zero() {
+            std::thread::sleep(self.prefill_delay);
         }
     }
 
@@ -490,7 +520,7 @@ impl ModelBackend for SyntheticBackend {
         let Some(&last) = tokens.last() else {
             anyhow::bail!("prefill needs at least one token");
         };
-        self.simulate_latency();
+        self.simulate_prefill_latency();
         Ok(Prefill {
             session: Session {
                 state: SessionState::Synthetic {
@@ -568,6 +598,18 @@ mod tests {
         assert!(!pf.session.is_empty());
         assert_eq!(pf.session.kv_bytes(), 0);
         assert_eq!(argmax(&pf.logits), b'b' as usize);
+    }
+
+    #[test]
+    fn synthetic_split_delays_preserve_the_logit_contract() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let mut be =
+            SyntheticBackend::with_delays(cfg, Duration::ZERO, Duration::from_millis(1));
+        let pf = be.prefill(&[b'a' as i32]).unwrap();
+        assert_eq!(argmax(&pf.logits), b'b' as usize);
+        let mut session = pf.session;
+        let logits = be.decode_step(&mut session, b'b' as i32).unwrap();
+        assert_eq!(argmax(&logits), b'c' as usize);
     }
 
     #[test]

@@ -78,6 +78,15 @@ pub struct ServerOptions {
     /// token and per-step attention cost. 0 = unlimited. Depends only on
     /// token count, so cached and recompute modes cap identically.
     pub max_context: usize,
+    /// Prefill attempts per decode iteration. 1 (the default) keeps the
+    /// historical behavior — a burst of queued long prompts interleaves
+    /// with decode steps instead of stalling token emission for every
+    /// active session. Raise it (or set 0 = drain the whole queue each
+    /// iteration) when prefill is cheap relative to a decode tick — e.g.
+    /// the HTTP front door under open-loop load against a synthetic
+    /// backend, where admitting one request per ~tick would cap the
+    /// admission rate far below the arrival rate.
+    pub prefill_per_tick: usize,
 }
 
 impl Default for ServerOptions {
@@ -88,6 +97,7 @@ impl Default for ServerOptions {
             poll_interval: Duration::from_millis(20),
             decode: DecodeMode::Cached,
             max_context: 0,
+            prefill_per_tick: 1,
         }
     }
 }
@@ -219,9 +229,92 @@ impl Drop for Completion {
 
 pub struct Server {
     tx: Option<Sender<GenRequest>>,
-    next_id: AtomicU64,
+    next_id: Arc<AtomicU64>,
     shared: Arc<Shared>,
     worker: Option<std::thread::JoinHandle<ServeMetrics>>,
+}
+
+/// A cloneable, `Send` submission handle detached from the [`Server`]'s
+/// lifetime — the HTTP front door hands one to every connection thread
+/// so requests can be submitted without sharing the server itself.
+///
+/// All handles draw ids from the server's counter and count against the
+/// same bounded admission queue. A live `Submitter` keeps the worker's
+/// request channel open, so `Server::shutdown` only drains once every
+/// clone has been dropped (connection threads drop theirs on exit);
+/// submitting after the worker exited reports `SubmitError::ShutDown`.
+#[derive(Clone)]
+pub struct Submitter {
+    tx: Sender<GenRequest>,
+    shared: Arc<Shared>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl Submitter {
+    /// Same contract as [`Server::submit`]: a streaming `Completion`, or
+    /// `Err(Overloaded)` immediately when the admission queue is full.
+    pub fn submit(&self, prompt: &str, params: GenParams) -> Result<Completion, SubmitError> {
+        do_submit(&self.tx, &self.shared, &self.next_id, prompt, params)
+    }
+
+    /// Requests submitted but not yet seated in a decode slot.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue_depth.load(Ordering::Relaxed)
+    }
+}
+
+/// The shared submit path behind [`Server::submit`] and
+/// [`Submitter::submit`]: reserve a queue slot, build the request, hand
+/// back the streaming handle.
+fn do_submit(
+    tx: &Sender<GenRequest>,
+    shared: &Shared,
+    next_id: &AtomicU64,
+    prompt: &str,
+    params: GenParams,
+) -> Result<Completion, SubmitError> {
+    // reserve a queue slot atomically (the bound lives on the counter,
+    // not the channel); the worker releases it when the request seats
+    // in a decode slot or is retired while queued
+    let reserved = shared
+        .queue_depth
+        .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |depth| {
+            (depth < shared.max_queue).then_some(depth + 1)
+        })
+        .is_ok();
+    if !reserved {
+        shared.rejected.fetch_add(1, Ordering::Relaxed);
+        return Err(SubmitError::Overloaded);
+    }
+    let (event_tx, event_rx) = channel();
+    let cancelled = Arc::new(AtomicBool::new(false));
+    let id = next_id.fetch_add(1, Ordering::Relaxed);
+    let req = GenRequest {
+        id,
+        prompt: prompt.to_string(),
+        params,
+        submitted: Instant::now(),
+        events: event_tx,
+        cancelled: cancelled.clone(),
+    };
+    match tx.send(req) {
+        Ok(()) => Ok(Completion {
+            id,
+            events: event_rx,
+            cancelled,
+            finished: Cell::new(false),
+        }),
+        Err(_) => {
+            // saturating release: a dying worker zeroes the counter, and
+            // losing the race to it must not wrap the depth to usize::MAX
+            let _ = shared.queue_depth.fetch_update(
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+                |depth| depth.checked_sub(1),
+            );
+            Err(SubmitError::ShutDown)
+        }
+    }
 }
 
 impl Server {
@@ -286,7 +379,7 @@ impl Server {
             .expect("spawn serve worker");
         Server {
             tx: Some(tx),
-            next_id: AtomicU64::new(1),
+            next_id: Arc::new(AtomicU64::new(1)),
             shared,
             worker: Some(worker),
         }
@@ -297,49 +390,18 @@ impl Server {
     /// submission never blocks on the decode loop.
     pub fn submit(&self, prompt: &str, params: GenParams) -> Result<Completion, SubmitError> {
         let tx = self.tx.as_ref().ok_or(SubmitError::ShutDown)?;
-        // reserve a queue slot atomically (the bound lives on the counter,
-        // not the channel); the worker releases it when the request seats
-        // in a decode slot or is retired while queued
-        let reserved = self
-            .shared
-            .queue_depth
-            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |depth| {
-                (depth < self.shared.max_queue).then_some(depth + 1)
-            })
-            .is_ok();
-        if !reserved {
-            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
-            return Err(SubmitError::Overloaded);
-        }
-        let (event_tx, event_rx) = channel();
-        let cancelled = Arc::new(AtomicBool::new(false));
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = GenRequest {
-            id,
-            prompt: prompt.to_string(),
-            params,
-            submitted: Instant::now(),
-            events: event_tx,
-            cancelled: cancelled.clone(),
-        };
-        match tx.send(req) {
-            Ok(()) => Ok(Completion {
-                id,
-                events: event_rx,
-                cancelled,
-                finished: Cell::new(false),
-            }),
-            Err(_) => {
-                // saturating release: a dying worker zeroes the counter, and
-                // losing the race to it must not wrap the depth to usize::MAX
-                let _ = self.shared.queue_depth.fetch_update(
-                    Ordering::Relaxed,
-                    Ordering::Relaxed,
-                    |depth| depth.checked_sub(1),
-                );
-                Err(SubmitError::ShutDown)
-            }
-        }
+        do_submit(tx, &self.shared, &self.next_id, prompt, params)
+    }
+
+    /// A detached, cloneable submission handle (see [`Submitter`]).
+    /// Returns `Err(ShutDown)` once the server has begun shutting down.
+    pub fn submitter(&self) -> Result<Submitter, SubmitError> {
+        let tx = self.tx.as_ref().ok_or(SubmitError::ShutDown)?.clone();
+        Ok(Submitter {
+            tx,
+            shared: self.shared.clone(),
+            next_id: self.next_id.clone(),
+        })
     }
 
     /// Requests submitted but not yet seated in a decode slot.
@@ -493,6 +555,7 @@ fn decode_loop(
 
         // admit into free decode slots (FIFO); nothing-to-generate
         // requests complete immediately without spending a slot
+        let mut prefills_this_tick = 0usize;
         while slots.len() < max_batch {
             let Some(req) = pending.pop_front() else { break };
             shared.queue_depth.fetch_sub(1, Ordering::Relaxed);
@@ -546,10 +609,16 @@ fn decode_loop(
                     retire_cancelled(slot.req, CancelReason::Backend, metrics);
                 }
             }
-            // one prefill attempt per iteration: a burst of queued long
-            // prompts must interleave with decode steps, not stall token
-            // emission for every already-active session
-            break;
+            // bounded prefill attempts per iteration (default 1): a burst
+            // of queued long prompts must interleave with decode steps,
+            // not stall token emission for every already-active session.
+            // `prefill_per_tick: 0` drains the queue — the right shape
+            // when prefill is cheap and the arrival rate is high (the
+            // HTTP front door's load-test configuration).
+            prefills_this_tick += 1;
+            if options.prefill_per_tick != 0 && prefills_this_tick >= options.prefill_per_tick {
+                break;
+            }
         }
 
         if slots.is_empty() {
@@ -861,5 +930,81 @@ mod tests {
         assert!(o.poll_interval > Duration::ZERO);
         assert_eq!(o.decode, DecodeMode::Cached);
         assert_eq!(o.max_context, 0); // unlimited unless the operator caps it
+        assert_eq!(o.prefill_per_tick, 1); // historical one-prefill-per-tick
+    }
+
+    #[test]
+    fn submitter_clones_share_ids_and_admission_queue() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(4));
+        let server = Server::start(cfg.clone(), ServedModel::Dense(params));
+        let sub = server.submitter().unwrap();
+        let twin = sub.clone();
+        let p = GenParams {
+            max_new_tokens: 3,
+            ..Default::default()
+        };
+        let a = sub.submit("one", p.clone()).unwrap();
+        let b = twin.submit("two", p.clone()).unwrap();
+        let c = server.submit("three", p).unwrap();
+        // one shared id counter across every handle
+        let mut ids = vec![a.id(), b.id(), c.id()];
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 3);
+        for handle in [a, b, c] {
+            let resp = handle.wait_timeout(Duration::from_secs(60)).unwrap();
+            assert_eq!(resp.tokens_generated, 3);
+        }
+        // dropping every submitter clone lets shutdown drain normally
+        drop(sub);
+        drop(twin);
+        let m = server.shutdown();
+        assert_eq!(m.latencies.len(), 3);
+    }
+
+    #[test]
+    fn prefill_per_tick_zero_drains_the_queue() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let backend_cfg = cfg.clone();
+        let server = Server::with_backend(
+            cfg,
+            ServerOptions {
+                max_batch: 16,
+                prefill_per_tick: 0,
+                ..Default::default()
+            },
+            move || {
+                // free prefill + a paced decode tick: all 12 submissions
+                // land within the first tick or two, so drain-mode
+                // admission provably stacks them into one batch
+                Ok(Box::new(super::super::backend::SyntheticBackend::with_delays(
+                    backend_cfg,
+                    Duration::ZERO,
+                    Duration::from_millis(2),
+                )))
+            },
+        );
+        let completions: Vec<_> = (0..12)
+            .map(|i| {
+                server
+                    .submit(
+                        &format!("r{i}"),
+                        GenParams {
+                            max_new_tokens: 16,
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap()
+            })
+            .collect();
+        for c in completions {
+            c.wait_timeout(Duration::from_secs(60)).unwrap();
+        }
+        let m = server.shutdown();
+        assert_eq!(m.latencies.len(), 12);
+        // draining admission lets the batch fill well past one-per-tick
+        let max_rows = m.decode_batch_rows.iter().cloned().fold(0.0, f64::max);
+        assert!(max_rows >= 10.0, "queue not drained: {:?}", m.decode_batch_rows);
     }
 }

@@ -1,0 +1,27 @@
+//! Pure-`std::net` HTTP/1.1 front door for the serving engine.
+//!
+//! Three layers, each testable on its own:
+//!
+//! - [`parse`] — request-head parsing with strict limits (head bytes,
+//!   header count, body bytes) and typed 4xx mappings
+//! - [`sse`] — response writing: status lines, JSON error bodies, and
+//!   chunked server-sent-event streams with a deferred head
+//! - [`server`] — the accept loop, per-connection threads (capped, shed
+//!   inline with 429), lazy JSON request decoding via
+//!   [`crate::util::json::JsonScan`], and the bridge from engine
+//!   [`crate::serve::request::Event`]s onto the socket
+//!
+//! Requests are decoded lazily — the body is scanned for the handful of
+//! fields the endpoint understands without building a `Json` tree, so a
+//! megabyte of ignored fields costs a skip, not an allocation.
+//!
+//! The open-loop load harness in `bin/load.rs` drives this front door;
+//! CI's `http-smoke` lane gates zero 5xx and a p99 TTFT ceiling over a
+//! sustained profile (see README "HTTP API").
+
+pub mod parse;
+pub mod server;
+pub mod sse;
+
+pub use parse::{Limits, ParseError, RequestHead};
+pub use server::{HttpOptions, HttpServer};

@@ -1,0 +1,269 @@
+//! HTTP/1.1 request-head parsing with strict limits.
+//!
+//! Deliberately minimal (std::net only, no framework — see README "HTTP
+//! API"): request line + headers, CRLF-framed, with hard caps on head
+//! size, header count and body length. Every malformed input maps to a
+//! typed [`ParseError`] carrying the 4xx/5xx status the connection
+//! handler writes back, so the error surface is testable without a
+//! socket.
+
+use std::fmt;
+
+/// Hard limits applied while reading and parsing one request.
+#[derive(Clone, Debug)]
+pub struct Limits {
+    /// Cap on the request head (request line + headers + framing). A
+    /// head that exceeds this before its terminating blank line is shed
+    /// with 431.
+    pub max_head_bytes: usize,
+    /// Cap on the number of header fields (431 beyond it).
+    pub max_headers: usize,
+    /// Cap on the declared `content-length` (413 beyond it).
+    pub max_body_bytes: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits {
+            max_head_bytes: 8 * 1024,
+            max_headers: 64,
+            max_body_bytes: 64 * 1024,
+        }
+    }
+}
+
+/// Why a request could not be parsed, with its wire status.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ParseError {
+    /// request line is not `METHOD SP TARGET SP HTTP/x.y`
+    BadRequestLine,
+    /// a header line has no `name: value` shape
+    BadHeader,
+    /// a version this server does not speak (only HTTP/1.0 and 1.1)
+    UnsupportedVersion,
+    /// head exceeded `Limits::max_head_bytes`
+    HeadTooLarge,
+    /// more than `Limits::max_headers` header fields
+    TooManyHeaders,
+    /// `content-length` present but not a base-10 integer
+    BadContentLength,
+}
+
+impl ParseError {
+    /// The HTTP status this error maps to on the wire.
+    pub fn status(&self) -> u16 {
+        match self {
+            ParseError::BadRequestLine | ParseError::BadHeader | ParseError::BadContentLength => {
+                400
+            }
+            ParseError::UnsupportedVersion => 505,
+            ParseError::HeadTooLarge | ParseError::TooManyHeaders => 431,
+        }
+    }
+
+    /// One-line detail for the error body.
+    pub fn detail(&self) -> &'static str {
+        match self {
+            ParseError::BadRequestLine => "malformed request line",
+            ParseError::BadHeader => "malformed header field",
+            ParseError::UnsupportedVersion => "only HTTP/1.0 and HTTP/1.1 are supported",
+            ParseError::HeadTooLarge => "request head too large",
+            ParseError::TooManyHeaders => "too many header fields",
+            ParseError::BadContentLength => "content-length is not a valid integer",
+        }
+    }
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} ({})", self.detail(), self.status())
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// A parsed request head. Header names are lowercased at parse time so
+/// lookups are case-insensitive, per RFC 9110.
+#[derive(Clone, Debug)]
+pub struct RequestHead {
+    pub method: String,
+    pub target: String,
+    pub version: String,
+    pub headers: Vec<(String, String)>,
+}
+
+impl RequestHead {
+    /// First value of `name` (callers pass lowercase).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// The declared body length: `Ok(None)` when absent, `Err` when
+    /// present but unparseable.
+    pub fn content_length(&self) -> Result<Option<usize>, ParseError> {
+        match self.header("content-length") {
+            None => Ok(None),
+            Some(v) => v
+                .trim()
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| ParseError::BadContentLength),
+        }
+    }
+}
+
+/// Index just past the head terminator (`\r\n\r\n`) in `buf`, if the
+/// full head has arrived.
+pub fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4)
+}
+
+/// Parse a complete request head (everything up to and including the
+/// blank line). The connection handler enforces `max_head_bytes` while
+/// reading; this enforces shape and header count.
+pub fn parse_head(head: &[u8], limits: &Limits) -> Result<RequestHead, ParseError> {
+    let text = std::str::from_utf8(head).map_err(|_| ParseError::BadRequestLine)?;
+    let mut lines = text.split("\r\n");
+    let request_line = lines.next().ok_or(ParseError::BadRequestLine)?;
+
+    let mut parts = request_line.split(' ');
+    let method = parts.next().unwrap_or("");
+    let target = parts.next().ok_or(ParseError::BadRequestLine)?;
+    let version = parts.next().ok_or(ParseError::BadRequestLine)?;
+    if parts.next().is_some() {
+        return Err(ParseError::BadRequestLine);
+    }
+    if method.is_empty() || !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(ParseError::BadRequestLine);
+    }
+    if target.is_empty() || !target.starts_with('/') {
+        return Err(ParseError::BadRequestLine);
+    }
+    if !matches!(version, "HTTP/1.1" | "HTTP/1.0") {
+        return if version.starts_with("HTTP/") {
+            Err(ParseError::UnsupportedVersion)
+        } else {
+            Err(ParseError::BadRequestLine)
+        };
+    }
+
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            // the blank line terminating the head (split leaves one or
+            // two empty tail fragments from `\r\n\r\n`)
+            continue;
+        }
+        let (name, value) = line.split_once(':').ok_or(ParseError::BadHeader)?;
+        // no whitespace is allowed inside a field name (RFC 9112 §5.1)
+        if name.is_empty() || name.contains(' ') || name.contains('\t') {
+            return Err(ParseError::BadHeader);
+        }
+        if headers.len() >= limits.max_headers {
+            return Err(ParseError::TooManyHeaders);
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    Ok(RequestHead {
+        method: method.to_string(),
+        target: target.to_string(),
+        version: version.to_string(),
+        headers,
+    })
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn head(s: &str) -> Result<RequestHead, ParseError> {
+        parse_head(s.as_bytes(), &Limits::default())
+    }
+
+    #[test]
+    fn parses_a_well_formed_head() {
+        let h = head(
+            "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: 12\r\n\r\n",
+        )
+        .unwrap();
+        assert_eq!(h.method, "POST");
+        assert_eq!(h.target, "/v1/completions");
+        assert_eq!(h.version, "HTTP/1.1");
+        // names lowercase, values trimmed
+        assert_eq!(h.header("host"), Some("x"));
+        assert_eq!(h.content_length().unwrap(), Some(12));
+    }
+
+    #[test]
+    fn find_head_end_needs_the_blank_line() {
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\nHost: x\r\n"), None);
+        assert_eq!(
+            find_head_end(b"GET / HTTP/1.1\r\nHost: x\r\n\r\nBODY"),
+            Some(28)
+        );
+    }
+
+    #[test]
+    fn malformed_request_lines_are_400() {
+        for bad in [
+            "GARBAGE\r\n\r\n",
+            "GET\r\n\r\n",
+            "get / HTTP/1.1\r\n\r\n",
+            "GET  / HTTP/1.1\r\n\r\n",
+            "GET noslash HTTP/1.1\r\n\r\n",
+            "GET / HTTP/1.1 extra\r\n\r\n",
+            "GET / FTP/1.1\r\n\r\n",
+        ] {
+            let e = head(bad).unwrap_err();
+            assert_eq!(e.status(), 400, "{bad:?} -> {e:?}");
+        }
+    }
+
+    #[test]
+    fn unsupported_version_is_505() {
+        let e = head("GET / HTTP/2.0\r\n\r\n").unwrap_err();
+        assert_eq!(e, ParseError::UnsupportedVersion);
+        assert_eq!(e.status(), 505);
+    }
+
+    #[test]
+    fn malformed_headers_are_400() {
+        for bad in [
+            "GET / HTTP/1.1\r\nnocolon\r\n\r\n",
+            "GET / HTTP/1.1\r\n: novalue-name\r\n\r\n",
+            "GET / HTTP/1.1\r\nbad name: x\r\n\r\n",
+        ] {
+            let e = head(bad).unwrap_err();
+            assert_eq!(e, ParseError::BadHeader, "{bad:?}");
+            assert_eq!(e.status(), 400);
+        }
+    }
+
+    #[test]
+    fn header_count_cap_is_431() {
+        let mut s = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..100 {
+            s.push_str(&format!("x-h{i}: v\r\n"));
+        }
+        s.push_str("\r\n");
+        let e = head(&s).unwrap_err();
+        assert_eq!(e, ParseError::TooManyHeaders);
+        assert_eq!(e.status(), 431);
+    }
+
+    #[test]
+    fn bad_content_length_is_400() {
+        let h = head("POST / HTTP/1.1\r\ncontent-length: nope\r\n\r\n").unwrap();
+        let e = h.content_length().unwrap_err();
+        assert_eq!(e, ParseError::BadContentLength);
+        assert_eq!(e.status(), 400);
+        // absent is None, not an error
+        let h = head("POST / HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(h.content_length().unwrap(), None);
+    }
+}

@@ -1,0 +1,613 @@
+//! The HTTP front door: a `std::net` accept loop bridging sockets onto
+//! the serving engine.
+//!
+//! One OS thread per live connection (capped by
+//! [`HttpOptions::max_connections`]; connections over the cap are shed
+//! inline with 429 before any thread is spawned). Each connection serves
+//! exactly one request (`connection: close`) — the open-loop load model
+//! this front door is built for opens a fresh socket per request anyway,
+//! and single-shot connections keep cancel-on-disconnect semantics
+//! trivially correct: dropping the [`Completion`] when the socket dies
+//! retires the request at the engine's next tick.
+//!
+//! Error mapping (see `tests/http_api.rs` for the full matrix):
+//!
+//! | condition                                   | wire status |
+//! |---------------------------------------------|-------------|
+//! | malformed request line / header / JSON body | 400         |
+//! | missing `content-length`                    | 411         |
+//! | body over `Limits::max_body_bytes`          | 413         |
+//! | head over limits (size or count)            | 431         |
+//! | slow-loris read past `read_timeout`         | 408         |
+//! | deadline expired before the first token     | 408         |
+//! | connection cap or admission queue full      | 429         |
+//! | engine shutting down                        | 503         |
+//! | client gone mid-request                     | (499 accounting, nothing written) |
+//!
+//! The streaming response head is deferred until the first engine event,
+//! so every pre-token failure above maps to a *real* status line rather
+//! than an aborted 200.
+
+use super::parse::{find_head_end, parse_head, Limits};
+use super::sse::{self, SseStream};
+use crate::serve::engine::{Completion, Server, Submitter, WaitError};
+use crate::serve::metrics::ServeMetrics;
+use crate::serve::request::{CancelReason, Event, GenParams, SubmitError};
+use crate::util::json::{Json, JsonError, JsonScan};
+use std::io::{self, ErrorKind, Read};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Knobs for the HTTP front door.
+#[derive(Clone, Debug)]
+pub struct HttpOptions {
+    /// Bind address; port 0 picks a free port (read it back via
+    /// [`HttpServer::addr`]).
+    pub addr: String,
+    /// Live-connection cap; accepts beyond it are shed inline with 429.
+    pub max_connections: usize,
+    /// Socket read deadline for the request head (and, doubled, the
+    /// body). Slow-loris clients are shed with 408 at this horizon.
+    pub read_timeout: Duration,
+    /// Parse-time caps (head bytes, header count, body bytes).
+    pub limits: Limits,
+    /// `max_tokens` applied when the request omits it.
+    pub default_max_tokens: usize,
+    /// Hard ceiling on per-request `max_tokens`.
+    pub max_tokens_cap: usize,
+}
+
+impl Default for HttpOptions {
+    fn default() -> Self {
+        HttpOptions {
+            addr: "127.0.0.1:0".to_string(),
+            max_connections: 1024,
+            read_timeout: Duration::from_secs(2),
+            limits: Limits::default(),
+            default_max_tokens: 32,
+            max_tokens_cap: 4096,
+        }
+    }
+}
+
+/// Socket-side counters, folded into [`ServeMetrics`] at shutdown.
+#[derive(Default)]
+struct HttpShared {
+    stop: AtomicBool,
+    /// connections currently being served (the cap applies to this)
+    active: AtomicUsize,
+    connections: AtomicUsize,
+    s2xx: AtomicUsize,
+    s4xx: AtomicUsize,
+    s5xx: AtomicUsize,
+    s429: AtomicUsize,
+    s408: AtomicUsize,
+    s499: AtomicUsize,
+    bytes_in: AtomicUsize,
+    bytes_out: AtomicUsize,
+    ttfts: Mutex<Vec<f64>>,
+}
+
+impl HttpShared {
+    fn push_ttft(&self, secs: f64) {
+        // a poisoned lock only means another connection thread panicked
+        // mid-push; the samples already in the vec are still valid
+        let mut g = match self.ttfts.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        g.push(secs);
+    }
+}
+
+/// How one connection ended, for central status accounting.
+enum Outcome {
+    /// a response with this status reached the socket
+    Wrote(u16),
+    /// the client vanished before anything useful could be written
+    /// (nginx-style 499 accounting)
+    ClientGone,
+}
+
+/// A running HTTP front door over a [`Server`].
+///
+/// [`HttpServer::shutdown`] stops accepting, drains live connections,
+/// shuts the engine down, and returns [`ServeMetrics`] with the
+/// socket-side `http_*` counters folded in.
+pub struct HttpServer {
+    addr: SocketAddr,
+    shared: Arc<HttpShared>,
+    accept: Option<JoinHandle<()>>,
+    server: Option<Server>,
+}
+
+impl HttpServer {
+    /// Bind, spawn the accept loop, and start serving.
+    pub fn start(server: Server, options: HttpOptions) -> io::Result<HttpServer> {
+        let listener = TcpListener::bind(&options.addr)?;
+        let addr = listener.local_addr()?;
+        let submitter = server
+            .submitter()
+            .map_err(|e| io::Error::new(ErrorKind::NotConnected, e.to_string()))?;
+        let shared = Arc::new(HttpShared::default());
+        let accept_shared = Arc::clone(&shared);
+        let accept_options = Arc::new(options);
+        // aasvd-lint: allow(adhoc-parallelism): long-lived socket accept loop — I/O concurrency, not compute fan-out (the compute pool stays in util::pool)
+        let accept = std::thread::Builder::new()
+            .name("aasvd-http-accept".to_string())
+            .spawn(move || accept_loop(listener, submitter, accept_options, accept_shared))?;
+        Ok(HttpServer {
+            addr,
+            shared,
+            accept: Some(accept),
+            server: Some(server),
+        })
+    }
+
+    /// The bound address (resolves port 0 to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drain live connections, shut the engine down,
+    /// and return the merged metrics.
+    pub fn shutdown(mut self) -> ServeMetrics {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        // the accept loop is parked in accept(2); poke it awake
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+        // live connection threads hold Submitter clones; the engine's
+        // channel only drains once they exit. Every connection is
+        // bounded by read timeouts and request deadlines, so this wait
+        // terminates; the horizon is a backstop, not a control knob.
+        // aasvd-lint: allow(wallclock): shutdown drain backstop — scheduling only, never feeds numerics
+        let drain_until = Instant::now() + Duration::from_secs(30);
+        while self.shared.active.load(Ordering::Relaxed) > 0 {
+            // aasvd-lint: allow(wallclock): shutdown drain backstop — scheduling only, never feeds numerics
+            if Instant::now() >= drain_until {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let mut m = match self.server.take() {
+            Some(s) => s.shutdown(),
+            None => ServeMetrics::default(),
+        };
+        m.http_connections = self.shared.connections.load(Ordering::Relaxed);
+        m.http_2xx = self.shared.s2xx.load(Ordering::Relaxed);
+        m.http_4xx = self.shared.s4xx.load(Ordering::Relaxed);
+        m.http_5xx = self.shared.s5xx.load(Ordering::Relaxed);
+        m.http_429 = self.shared.s429.load(Ordering::Relaxed);
+        m.http_408 = self.shared.s408.load(Ordering::Relaxed);
+        m.http_499 = self.shared.s499.load(Ordering::Relaxed);
+        m.http_bytes_in = self.shared.bytes_in.load(Ordering::Relaxed);
+        m.http_bytes_out = self.shared.bytes_out.load(Ordering::Relaxed);
+        m.http_ttfts = {
+            let mut g = match self.shared.ttfts.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            std::mem::take(&mut *g)
+        };
+        m
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    submitter: Submitter,
+    options: Arc<HttpOptions>,
+    shared: Arc<HttpShared>,
+) {
+    for conn in listener.incoming() {
+        let mut stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                if shared.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                crate::log_warn!("http accept failed: {e}");
+                continue;
+            }
+        };
+        if shared.stop.load(Ordering::Relaxed) {
+            // the shutdown wake-up connection lands here
+            break;
+        }
+        shared.connections.fetch_add(1, Ordering::Relaxed);
+        // admission at the socket: reserve a slot or shed inline with
+        // 429 before spending a thread on the connection
+        let admitted = shared
+            .active
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| {
+                (n < options.max_connections).then_some(n + 1)
+            })
+            .is_ok();
+        if !admitted {
+            shared.s4xx.fetch_add(1, Ordering::Relaxed);
+            shared.s429.fetch_add(1, Ordering::Relaxed);
+            let n = sse::write_error(&mut stream, 429, "connection limit reached").unwrap_or(0);
+            shared.bytes_out.fetch_add(n, Ordering::Relaxed);
+            continue;
+        }
+        let submitter = submitter.clone();
+        let options = Arc::clone(&options);
+        let conn_shared = Arc::clone(&shared);
+        // aasvd-lint: allow(adhoc-parallelism): one I/O thread per admitted connection (capped above) — blocking-socket concurrency, not compute fan-out
+        let spawned = std::thread::Builder::new()
+            .name("aasvd-http-conn".to_string())
+            .spawn(move || {
+                let guard = ActiveGuard(Arc::clone(&conn_shared));
+                handle_connection(stream, &submitter, &options, &conn_shared);
+                drop(guard);
+            });
+        if let Err(e) = spawned {
+            // thread exhaustion: the closure (and the stream in it) was
+            // dropped, so the client sees a reset; release the slot
+            shared.active.fetch_sub(1, Ordering::Relaxed);
+            shared.s5xx.fetch_add(1, Ordering::Relaxed);
+            crate::log_warn!("http connection thread spawn failed: {e}");
+        }
+    }
+}
+
+/// Releases the connection slot even if the handler unwinds.
+struct ActiveGuard(Arc<HttpShared>);
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.active.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+fn handle_connection(
+    mut stream: TcpStream,
+    submitter: &Submitter,
+    options: &HttpOptions,
+    shared: &HttpShared,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(options.read_timeout));
+    // aasvd-lint: allow(wallclock): request receipt timestamp — anchors read deadlines and the socket-side TTFT sample, never token sampling
+    let received = Instant::now();
+    let outcome = serve_request(&mut stream, received, submitter, options, shared);
+    match outcome {
+        Outcome::Wrote(status) => match status {
+            200..=299 => {
+                shared.s2xx.fetch_add(1, Ordering::Relaxed);
+            }
+            400..=499 => {
+                shared.s4xx.fetch_add(1, Ordering::Relaxed);
+                if status == 429 {
+                    shared.s429.fetch_add(1, Ordering::Relaxed);
+                }
+                if status == 408 {
+                    shared.s408.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            _ => {
+                shared.s5xx.fetch_add(1, Ordering::Relaxed);
+            }
+        },
+        Outcome::ClientGone => {
+            shared.s499.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Write an error response; the socket dying while we write downgrades
+/// the outcome to `ClientGone`.
+fn error_reply(stream: &mut TcpStream, shared: &HttpShared, status: u16, detail: &str) -> Outcome {
+    match sse::write_error(stream, status, detail) {
+        Ok(n) => {
+            shared.bytes_out.fetch_add(n, Ordering::Relaxed);
+            Outcome::Wrote(status)
+        }
+        Err(_) => Outcome::ClientGone,
+    }
+}
+
+fn json_reply(stream: &mut TcpStream, shared: &HttpShared, status: u16, body: &str) -> Outcome {
+    match sse::write_response(stream, status, "application/json", body) {
+        Ok(n) => {
+            shared.bytes_out.fetch_add(n, Ordering::Relaxed);
+            Outcome::Wrote(status)
+        }
+        Err(_) => Outcome::ClientGone,
+    }
+}
+
+fn serve_request(
+    stream: &mut TcpStream,
+    received: Instant,
+    submitter: &Submitter,
+    options: &HttpOptions,
+    shared: &HttpShared,
+) -> Outcome {
+    // ---- read the head under the read deadline ----------------------
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut tmp = [0u8; 4096];
+    let head_end = loop {
+        if let Some(end) = find_head_end(&buf) {
+            break end;
+        }
+        if buf.len() > options.limits.max_head_bytes {
+            return error_reply(stream, shared, 431, "request head too large");
+        }
+        // slow-loris guard: the whole head must arrive inside the window
+        if received.elapsed() > options.read_timeout {
+            return error_reply(stream, shared, 408, "timed out reading the request head");
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => return Outcome::ClientGone, // hung up before a full head
+            Ok(n) => {
+                shared.bytes_in.fetch_add(n, Ordering::Relaxed);
+                buf.extend_from_slice(&tmp[..n]);
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                return error_reply(stream, shared, 408, "timed out reading the request head");
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return Outcome::ClientGone,
+        }
+    };
+
+    // ---- parse + route ----------------------------------------------
+    let head = match parse_head(&buf[..head_end], &options.limits) {
+        Ok(h) => h,
+        Err(e) => return error_reply(stream, shared, e.status(), e.detail()),
+    };
+    match (head.method.as_str(), head.target.as_str()) {
+        ("POST", "/v1/completions") => {}
+        ("GET", "/healthz") => {
+            let body = Json::obj()
+                .set("ok", true)
+                .set("queue_depth", submitter.queue_depth())
+                .to_string();
+            return json_reply(stream, shared, 200, &body);
+        }
+        (_, "/v1/completions") | (_, "/healthz") => {
+            return error_reply(stream, shared, 405, "method not allowed")
+        }
+        _ => return error_reply(stream, shared, 404, "no such endpoint"),
+    }
+
+    // ---- read the body ----------------------------------------------
+    let body_len = match head.content_length() {
+        Err(e) => return error_reply(stream, shared, e.status(), e.detail()),
+        Ok(None) => return error_reply(stream, shared, 411, "content-length required"),
+        Ok(Some(n)) if n > options.limits.max_body_bytes => {
+            return error_reply(stream, shared, 413, "request body too large")
+        }
+        Ok(Some(n)) => n,
+    };
+    let mut body = buf[head_end..].to_vec();
+    while body.len() < body_len {
+        // head and body share a doubled deadline: a client that trickles
+        // the body is the same slow-loris shape as one trickling headers
+        if received.elapsed() > options.read_timeout * 2 {
+            return error_reply(stream, shared, 408, "timed out reading the request body");
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => return Outcome::ClientGone,
+            Ok(n) => {
+                shared.bytes_in.fetch_add(n, Ordering::Relaxed);
+                body.extend_from_slice(&tmp[..n]);
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                return error_reply(stream, shared, 408, "timed out reading the request body");
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return Outcome::ClientGone,
+        }
+    }
+    body.truncate(body_len);
+
+    // ---- decode the request lazily (no tree build) ------------------
+    let Ok(text) = std::str::from_utf8(&body) else {
+        return error_reply(stream, shared, 400, "body is not valid utf-8");
+    };
+    let scan = JsonScan::new(text);
+    let bad = |e: JsonError| format!("bad request json: {e}");
+    let prompt = match scan.path_str(&["prompt"]) {
+        Ok(Some(p)) => p,
+        Ok(None) => return error_reply(stream, shared, 400, "missing required field 'prompt'"),
+        Err(e) => return error_reply(stream, shared, 400, &bad(e)),
+    };
+    let max_new_tokens = match scan.path_f64(&["max_tokens"]) {
+        Ok(Some(x)) if x < 0.0 => {
+            return error_reply(stream, shared, 400, "max_tokens must be non-negative")
+        }
+        Ok(Some(x)) => (x as usize).min(options.max_tokens_cap),
+        Ok(None) => options.default_max_tokens.min(options.max_tokens_cap),
+        Err(e) => return error_reply(stream, shared, 400, &bad(e)),
+    };
+    let temperature = match scan.path_f64(&["temperature"]) {
+        Ok(v) => v.unwrap_or(0.0) as f32,
+        Err(e) => return error_reply(stream, shared, 400, &bad(e)),
+    };
+    let top_k = match scan.path_f64(&["top_k"]) {
+        Ok(v) => v.map(|x| x.max(0.0) as usize).filter(|&k| k > 0),
+        Err(e) => return error_reply(stream, shared, 400, &bad(e)),
+    };
+    let seed = match scan.path_f64(&["seed"]) {
+        Ok(v) => v.map(|x| x.max(0.0) as u64),
+        Err(e) => return error_reply(stream, shared, 400, &bad(e)),
+    };
+    let stop_sequences = match scan.path_str_array(&["stop"]) {
+        Ok(v) => v.unwrap_or_default(),
+        Err(e) => return error_reply(stream, shared, 400, &bad(e)),
+    };
+    let deadline = match scan.path_f64(&["deadline_ms"]) {
+        Ok(v) => v.map(|ms| Duration::from_millis(ms.max(0.0) as u64)),
+        Err(e) => return error_reply(stream, shared, 400, &bad(e)),
+    };
+    let streaming = match scan.path_bool(&["stream"]) {
+        Ok(v) => v.unwrap_or(true),
+        Err(e) => return error_reply(stream, shared, 400, &bad(e)),
+    };
+    let params = GenParams {
+        max_new_tokens,
+        temperature,
+        top_k,
+        seed,
+        stop_sequences,
+        deadline,
+    };
+
+    // ---- submit to the engine ---------------------------------------
+    let completion = match submitter.submit(&prompt, params) {
+        Ok(c) => c,
+        Err(SubmitError::Overloaded) => {
+            return error_reply(stream, shared, 429, "admission queue full")
+        }
+        Err(SubmitError::ShutDown) => {
+            return error_reply(stream, shared, 503, "server shutting down")
+        }
+    };
+
+    if streaming {
+        stream_completion(stream, &completion, received, shared)
+    } else {
+        blocking_completion(stream, completion, shared)
+    }
+}
+
+/// Non-streaming mode: wait out the whole generation, answer with one
+/// JSON body.
+fn blocking_completion(stream: &mut TcpStream, completion: Completion, shared: &HttpShared) -> Outcome {
+    match completion.wait() {
+        Ok(resp) => {
+            let body = Json::obj()
+                .set("id", resp.id as f64)
+                .set("text", resp.text)
+                .set("tokens_generated", resp.tokens_generated)
+                .set("ttft", resp.ttft)
+                .set("latency", resp.latency)
+                .to_string();
+            json_reply(stream, shared, 200, &body)
+        }
+        Err(WaitError::Cancelled(CancelReason::Deadline)) => {
+            error_reply(stream, shared, 408, "request deadline expired")
+        }
+        Err(WaitError::Cancelled(CancelReason::Backend)) => {
+            error_reply(stream, shared, 500, "backend failed")
+        }
+        Err(WaitError::Cancelled(CancelReason::Client)) => Outcome::ClientGone,
+        Err(WaitError::Disconnected) => error_reply(stream, shared, 503, "server shutting down"),
+    }
+}
+
+/// Streaming mode: bridge engine events onto a chunked SSE response.
+///
+/// The response head goes out with the *first* event, so failures before
+/// the first token keep a truthful status line. A write error at any
+/// point means the client is gone; dropping the `Completion` on return
+/// cancels the request at the engine's next tick.
+fn stream_completion(
+    stream: &mut TcpStream,
+    completion: &Completion,
+    received: Instant,
+    shared: &HttpShared,
+) -> Outcome {
+    let Some(first) = completion.next_event() else {
+        return error_reply(stream, shared, 503, "server shutting down");
+    };
+    if let Event::Cancelled { reason, .. } = first {
+        // still pre-head: map the retirement to a real status
+        return match reason {
+            CancelReason::Deadline => {
+                error_reply(stream, shared, 408, "deadline expired before the first token")
+            }
+            CancelReason::Backend => error_reply(stream, shared, 500, "backend failed"),
+            CancelReason::Client => Outcome::ClientGone,
+        };
+    }
+    let mut sse = match SseStream::start(stream) {
+        Ok(s) => s,
+        Err(_) => return Outcome::ClientGone,
+    };
+    let mut saw_token = false;
+    let mut event = first;
+    loop {
+        match event {
+            Event::Token(t) => {
+                if !saw_token {
+                    saw_token = true;
+                    // socket-side TTFT: receipt to first token event on
+                    // the wire (the engine's own TTFT excludes HTTP)
+                    shared.push_ttft(received.elapsed().as_secs_f64());
+                }
+                let data = Json::obj()
+                    .set("id", t.id as f64)
+                    .set("index", t.index)
+                    .set("text", t.ch.to_string())
+                    .set("at", t.at);
+                if sse.event("token", &data).is_err() {
+                    shared.bytes_out.fetch_add(sse.bytes(), Ordering::Relaxed);
+                    return Outcome::ClientGone;
+                }
+            }
+            Event::Done(resp) => {
+                let data = Json::obj()
+                    .set("id", resp.id as f64)
+                    .set("text", resp.text)
+                    .set("tokens_generated", resp.tokens_generated)
+                    .set("ttft", resp.ttft)
+                    .set("latency", resp.latency);
+                let delivered = sse.event("done", &data).is_ok() && sse.finish().is_ok();
+                shared.bytes_out.fetch_add(sse.bytes(), Ordering::Relaxed);
+                return if delivered {
+                    Outcome::Wrote(200)
+                } else {
+                    Outcome::ClientGone
+                };
+            }
+            Event::Cancelled { id, reason } => {
+                // the 200 head is already on the wire; deliver a terminal
+                // error event and account the abort out-of-band
+                let data = Json::obj()
+                    .set("id", id as f64)
+                    .set("reason", reason.to_string());
+                let _ = sse.event("error", &data);
+                let _ = sse.finish();
+                shared.bytes_out.fetch_add(sse.bytes(), Ordering::Relaxed);
+                if reason == CancelReason::Deadline {
+                    shared.s408.fetch_add(1, Ordering::Relaxed);
+                }
+                return Outcome::Wrote(200);
+            }
+        }
+        event = match completion.next_event() {
+            Some(ev) => ev,
+            None => {
+                // engine vanished without a terminal event
+                let _ = sse.finish();
+                shared.bytes_out.fetch_add(sse.bytes(), Ordering::Relaxed);
+                return Outcome::Wrote(200);
+            }
+        };
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn options_default_bounds() {
+        let o = HttpOptions::default();
+        assert_eq!(o.addr, "127.0.0.1:0");
+        assert!(o.max_connections >= 1);
+        assert!(o.read_timeout > Duration::ZERO);
+        assert!(o.max_tokens_cap >= o.default_max_tokens);
+        assert!(o.limits.max_head_bytes >= 1024);
+    }
+}

@@ -1,0 +1,158 @@
+//! Response writing: status lines, JSON error bodies, and chunked
+//! server-sent-event (SSE) streams.
+//!
+//! The streaming endpoint defers its response head until the first
+//! event is ready to go out. That keeps the status line honest: a
+//! deadline that expires before the first token becomes a real 408 on
+//! the wire instead of a half-written 200 (see `server.rs`).
+
+use crate::util::json::Json;
+use std::io::{self, Write};
+
+/// Reason phrase for the statuses this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Error",
+    }
+}
+
+/// Write a complete fixed-length response. Returns bytes written.
+pub fn write_response(
+    out: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &str,
+) -> io::Result<usize> {
+    let msg = format!(
+        "HTTP/1.1 {status} {}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
+        reason(status),
+        body.len(),
+    );
+    out.write_all(msg.as_bytes())?;
+    out.flush()?;
+    Ok(msg.len())
+}
+
+/// Write a JSON error body `{"error": <reason>, "detail": <detail>}`
+/// with the given status. Returns bytes written.
+pub fn write_error(out: &mut impl Write, status: u16, detail: &str) -> io::Result<usize> {
+    let body = Json::obj()
+        .set("error", reason(status))
+        .set("detail", detail)
+        .to_string();
+    write_response(out, status, "application/json", &body)
+}
+
+/// A chunked `text/event-stream` response in progress.
+///
+/// [`SseStream::start`] writes the 200 head; each [`SseStream::event`]
+/// goes out as one HTTP chunk holding one SSE event
+/// (`event: <name>\n` `data: <json>\n\n`), flushed immediately so
+/// time-to-first-token is socket-real. [`SseStream::finish`] writes the
+/// zero-length terminal chunk.
+pub struct SseStream<'a, W: Write> {
+    out: &'a mut W,
+    bytes: usize,
+    finished: bool,
+}
+
+impl<'a, W: Write> SseStream<'a, W> {
+    /// Write the streaming response head and return the live stream.
+    pub fn start(out: &'a mut W) -> io::Result<Self> {
+        let head = "HTTP/1.1 200 OK\r\ncontent-type: text/event-stream\r\ncache-control: no-store\r\ntransfer-encoding: chunked\r\nconnection: close\r\n\r\n";
+        out.write_all(head.as_bytes())?;
+        out.flush()?;
+        Ok(SseStream {
+            out,
+            bytes: head.len(),
+            finished: false,
+        })
+    }
+
+    /// Emit one SSE event as one chunk and flush it.
+    pub fn event(&mut self, name: &str, data: &Json) -> io::Result<()> {
+        let payload = format!("event: {name}\ndata: {data}\n\n");
+        let chunk = format!("{:x}\r\n{payload}\r\n", payload.len());
+        self.out.write_all(chunk.as_bytes())?;
+        self.out.flush()?;
+        self.bytes += chunk.len();
+        Ok(())
+    }
+
+    /// Write the terminal zero-length chunk (idempotent).
+    pub fn finish(&mut self) -> io::Result<()> {
+        if self.finished {
+            return Ok(());
+        }
+        self.finished = true;
+        self.out.write_all(b"0\r\n\r\n")?;
+        self.out.flush()?;
+        self.bytes += 5;
+        Ok(())
+    }
+
+    /// Total bytes pushed to the socket through this stream, head
+    /// included — feeds `ServeMetrics::http_bytes_out`.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_response_has_length_and_close() {
+        let mut out = Vec::new();
+        let n = write_response(&mut out, 200, "application/json", "{\"ok\":true}").unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert_eq!(n, text.len());
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("content-length: 11\r\n"), "{text}");
+        assert!(text.contains("connection: close\r\n"), "{text}");
+        assert!(text.ends_with("{\"ok\":true}"), "{text}");
+    }
+
+    #[test]
+    fn error_bodies_carry_reason_and_detail() {
+        let mut out = Vec::new();
+        write_error(&mut out, 429, "admission queue full").unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("\"error\":\"Too Many Requests\""), "{text}");
+        assert!(text.contains("\"detail\":\"admission queue full\""), "{text}");
+    }
+
+    #[test]
+    fn sse_stream_frames_chunks_and_terminates() {
+        let mut out = Vec::new();
+        let mut sse = SseStream::start(&mut out).unwrap();
+        sse.event("token", &Json::obj().set("text", "a")).unwrap();
+        sse.finish().unwrap();
+        sse.finish().unwrap(); // idempotent
+        let total = sse.bytes();
+        let text = String::from_utf8(out).unwrap();
+        assert_eq!(total, text.len());
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("transfer-encoding: chunked\r\n"), "{text}");
+        // one chunk: hex size, CRLF, payload, CRLF
+        let payload = "event: token\ndata: {\"text\":\"a\"}\n\n";
+        let framed = format!("{:x}\r\n{payload}\r\n", payload.len());
+        assert!(text.contains(&framed), "{text}");
+        assert!(text.ends_with("0\r\n\r\n"), "{text}");
+    }
+}

@@ -36,6 +36,28 @@ pub struct ServeMetrics {
     /// rows stacked into each `decode_batch` call — the batch-occupancy
     /// histogram of the batched decode path (one entry per call)
     pub decode_batch_rows: Vec<f64>,
+    /// TCP connections the HTTP front door accepted (zero when serving
+    /// through the in-process API only)
+    pub http_connections: usize,
+    /// HTTP responses by status class, as written to the socket
+    pub http_2xx: usize,
+    pub http_4xx: usize,
+    pub http_5xx: usize,
+    /// subset of 4xx: requests shed with 429 (connection cap or a full
+    /// admission queue mapped from `SubmitError::Overloaded`)
+    pub http_429: usize,
+    /// subset of 4xx: 408s (slow-loris reads past the read timeout, or a
+    /// request deadline expiring before the first token)
+    pub http_408: usize,
+    /// streams abandoned by the client mid-response (nginx-style 499
+    /// accounting — nothing useful can be written to a dead socket)
+    pub http_499: usize,
+    /// request bytes read / response bytes written at the socket
+    pub http_bytes_in: usize,
+    pub http_bytes_out: usize,
+    /// per-request TTFT measured at the socket: request receipt to the
+    /// first SSE token event hitting the wire
+    pub http_ttfts: Vec<f64>,
 }
 
 impl ServeMetrics {
@@ -122,7 +144,7 @@ impl ServeMetrics {
         } else {
             format!("{:.2}", self.mean_decode_batch_rows())
         };
-        format!(
+        let mut s = format!(
             "requests={requests} rejected={} cancelled={} (deadline={}) tokens={} \
              prefill_toks={} decode_toks={} decode_batches={} batch_rows={batch_rows} \
              throughput={tput} ttft p50={tp50} p95={tp95} \
@@ -135,7 +157,27 @@ impl ServeMetrics {
             self.prefill_tokens,
             self.decode_tokens,
             self.decode_batches,
-        )
+        );
+        // the HTTP line only exists when a front door actually served
+        // traffic, so in-process-only runs keep the historical summary
+        if self.http_connections > 0 {
+            s.push_str(&format!(
+                " | http: conns={} 2xx={} 4xx={} 5xx={} (429={} 408={} 499={}) \
+                 in={}B out={}B ttft p50={} p95={}",
+                self.http_connections,
+                self.http_2xx,
+                self.http_4xx,
+                self.http_5xx,
+                self.http_429,
+                self.http_408,
+                self.http_499,
+                self.http_bytes_in,
+                self.http_bytes_out,
+                ms(&self.http_ttfts, 50.0),
+                ms(&self.http_ttfts, 95.0),
+            ));
+        }
+        s
     }
 }
 
@@ -193,6 +235,30 @@ mod tests {
         assert_eq!(empty.mean_decode_batch_rows(), 0.0);
         assert!(empty.decode_batch_histogram().is_empty());
         assert!(empty.summary().contains("batch_rows=n/a"));
+    }
+
+    #[test]
+    fn http_counters_surface_only_when_the_front_door_served() {
+        // in-process-only runs: no http line at all
+        let quiet = ServeMetrics::default();
+        assert!(!quiet.summary().contains("http:"), "{}", quiet.summary());
+        let m = ServeMetrics {
+            http_connections: 7,
+            http_2xx: 5,
+            http_4xx: 2,
+            http_429: 1,
+            http_408: 1,
+            http_bytes_in: 640,
+            http_bytes_out: 1280,
+            http_ttfts: vec![0.010, 0.020, 0.030],
+            ..Default::default()
+        };
+        let s = m.summary();
+        assert!(s.contains("http: conns=7"), "{s}");
+        assert!(s.contains("2xx=5"), "{s}");
+        assert!(s.contains("429=1"), "{s}");
+        assert!(s.contains("in=640B out=1280B"), "{s}");
+        assert!(!s.contains("NaN"), "{s}");
     }
 
     #[test]

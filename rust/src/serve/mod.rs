@@ -35,6 +35,12 @@
 //!   for tests and load experiments. All three are artifact-free: dense
 //!   and compressed decode through the KV-cached pure-Rust reference
 //!   forward.
+//! - **HTTP front door**: [`http::HttpServer`] exposes the same engine
+//!   over a pure-`std::net` HTTP/1.1 endpoint (`POST /v1/completions`,
+//!   chunked SSE token streaming, strict request limits, 429/408/499
+//!   shed-and-cancel semantics). Multi-threaded submission goes through
+//!   the cloneable [`Submitter`] handle. See the [`http`] module docs
+//!   and README "HTTP API".
 //!
 //! ```no_run
 //! use aasvd::serve::{Event, GenParams, ServedModel, Server, ServerOptions, SubmitError};
@@ -79,6 +85,7 @@
 pub mod backend;
 pub mod batcher;
 pub mod engine;
+pub mod http;
 pub mod metrics;
 pub mod request;
 
@@ -86,7 +93,8 @@ pub use backend::{
     CompressedBackend, DenseBackend, ModelBackend, Prefill, ServedModel, Session,
     SyntheticBackend,
 };
-pub use engine::{Completion, DecodeMode, Server, ServerOptions, WaitError};
+pub use engine::{Completion, DecodeMode, Server, ServerOptions, Submitter, WaitError};
+pub use http::{HttpOptions, HttpServer};
 pub use metrics::ServeMetrics;
 pub use request::{
     CancelReason, Event, GenParams, GenRequest, GenResponse, SubmitError, TokenEvent,

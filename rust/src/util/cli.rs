@@ -76,6 +76,17 @@ impl Args {
             .unwrap_or(default)
     }
 
+    pub fn u64(&self, name: &str, default: u64, help: &str) -> u64 {
+        self.describe(name, &default.to_string(), help);
+        self.flags
+            .get(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
     pub fn f64(&self, name: &str, default: f64, help: &str) -> f64 {
         self.describe(name, &default.to_string(), help);
         self.flags
@@ -151,6 +162,13 @@ mod tests {
         assert_eq!(a.str("model", "tiny", ""), "tiny");
         assert_eq!(a.usize("n", 7, ""), 7);
         assert_eq!(a.f64("lr", 0.1, ""), 0.1);
+        assert_eq!(a.u64("seed", 42, ""), 42);
+    }
+
+    #[test]
+    fn u64_flag_parses_large_seeds() {
+        let a = Args::parse(&argv("--seed 18446744073709551615"), "");
+        assert_eq!(a.u64("seed", 0, ""), u64::MAX);
     }
 
     #[test]

@@ -55,6 +55,17 @@ impl Json {
         }
     }
 
+    /// Walk a key path through nested objects: `j.get_path(&["a", "b"])`
+    /// is `j.get("a")?.get("b")`. None when any hop is missing or not an
+    /// object. The tree-level twin of [`JsonScan`]'s lazy accessors.
+    pub fn get_path(&self, path: &[&str]) -> Option<&Json> {
+        let mut cur = self;
+        for key in path {
+            cur = cur.get(key)?;
+        }
+        Some(cur)
+    }
+
     pub fn req(&self, key: &str) -> &Json {
         self.get(key)
             .unwrap_or_else(|| panic!("missing json key '{key}'"))
@@ -427,6 +438,250 @@ impl<'a> Parser<'a> {
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))
     }
+
+    // ---- lazy skipping (no tree building) --------------------------------
+
+    /// Skip one complete value without allocating: strings advance byte
+    /// by byte (escape-aware), containers recurse. Leaves `i` just past
+    /// the value. Errors carry the same positions `value()` would report.
+    fn skip_value(&mut self) -> Result<(), JsonError> {
+        match self.peek() {
+            Some(b'n') => self.lit("null", Json::Null).map(drop),
+            Some(b't') => self.lit("true", Json::Bool(true)).map(drop),
+            Some(b'f') => self.lit("false", Json::Bool(false)).map(drop),
+            Some(b'"') => self.skip_string(),
+            Some(b'[') => {
+                self.eat(b'[')?;
+                self.ws();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.ws();
+                    self.skip_value()?;
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(self.err("expected ',' or ']'")),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.eat(b'{')?;
+                self.ws();
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.ws();
+                    self.skip_string()?;
+                    self.ws();
+                    self.eat(b':')?;
+                    self.ws();
+                    self.skip_value()?;
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(self.err("expected ',' or '}'")),
+                    }
+                }
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number().map(drop),
+            _ => Err(self.err("unexpected character")),
+        }
+    }
+
+    /// Skip a string literal without building it. Escape sequences are
+    /// still validated so malformed input fails at the same byte position
+    /// the eager parser reports.
+    fn skip_string(&mut self) -> Result<(), JsonError> {
+        self.eat(b'"')?;
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'u') => {
+                            if self.i + 4 >= self.b.len() {
+                                return Err(self.err("bad \\u escape"));
+                            }
+                            let hex = &self.b[self.i + 1..self.i + 5];
+                            if !hex.iter().all(u8::is_ascii_hexdigit) {
+                                return Err(self.err("bad \\u escape"));
+                            }
+                            self.i += 5;
+                        }
+                        Some(
+                            b'"' | b'\\' | b'/' | b'n' | b't' | b'r' | b'b' | b'f',
+                        ) => self.i += 1,
+                        _ => return Err(self.err("bad escape")),
+                    }
+                }
+                Some(_) => self.i += 1,
+            }
+        }
+    }
+}
+
+/// Lazy path-scan accessors over raw JSON text (the mik-sdk idiom): seek
+/// a key path by skipping sibling values byte-by-byte instead of building
+/// a tree, then decode only the one value asked for. The HTTP request
+/// decoder pulls half a dozen fields out of each body this way without
+/// ever allocating the full document.
+///
+/// Semantics:
+/// - `Ok(None)`: the document is well-formed along the scanned prefix
+///   but the path is absent (a missing key, or a hop through a non-object).
+/// - `Ok(Some(_))`: the value exists and has the requested type.
+/// - `Err(_)`: malformed JSON on the scanned prefix, or a value of the
+///   wrong type at the path — with the byte position, so callers can
+///   surface precise 400s.
+///
+/// Only the bytes *before* the target value (plus the value itself) are
+/// validated; garbage after it goes unnoticed by design. Run
+/// [`Json::parse`] instead when full-document validation matters.
+pub struct JsonScan<'a> {
+    src: &'a str,
+}
+
+impl<'a> JsonScan<'a> {
+    pub fn new(src: &'a str) -> JsonScan<'a> {
+        JsonScan { src }
+    }
+
+    /// Position a parser at the value for `path`, or None when absent.
+    fn seek(&self, path: &[&str]) -> Result<Option<Parser<'a>>, JsonError> {
+        let mut p = Parser {
+            b: self.src.as_bytes(),
+            i: 0,
+        };
+        p.ws();
+        for key in path {
+            if p.peek() != Some(b'{') {
+                // a hop through a non-object: absent, not malformed —
+                // but the value must still be well-formed to say so
+                p.skip_value()?;
+                return Ok(None);
+            }
+            p.i += 1;
+            p.ws();
+            if p.peek() == Some(b'}') {
+                return Ok(None);
+            }
+            loop {
+                p.ws();
+                let k = p.string()?;
+                p.ws();
+                p.eat(b':')?;
+                p.ws();
+                if k == *key {
+                    // positioned at the value; descend into the next hop
+                    break;
+                }
+                p.skip_value()?;
+                p.ws();
+                match p.peek() {
+                    Some(b',') => p.i += 1,
+                    Some(b'}') => return Ok(None),
+                    _ => return Err(p.err("expected ',' or '}'")),
+                }
+            }
+        }
+        Ok(Some(p))
+    }
+
+    /// The raw text slice of the value at `path` (any type), exactly as
+    /// it appears in the source.
+    pub fn path_raw(&self, path: &[&str]) -> Result<Option<&'a str>, JsonError> {
+        let Some(mut p) = self.seek(path)? else {
+            return Ok(None);
+        };
+        let start = p.i;
+        p.skip_value()?;
+        Ok(Some(&self.src[start..p.i]))
+    }
+
+    /// Decoded string at `path`; Err when the value is not a string.
+    pub fn path_str(&self, path: &[&str]) -> Result<Option<String>, JsonError> {
+        let Some(mut p) = self.seek(path)? else {
+            return Ok(None);
+        };
+        if p.peek() != Some(b'"') {
+            return Err(p.err("expected a string"));
+        }
+        p.string().map(Some)
+    }
+
+    /// Number at `path`; Err when the value is not a number.
+    pub fn path_f64(&self, path: &[&str]) -> Result<Option<f64>, JsonError> {
+        let Some(mut p) = self.seek(path)? else {
+            return Ok(None);
+        };
+        match p.peek() {
+            Some(c) if c == b'-' || c.is_ascii_digit() => match p.number()? {
+                Json::Num(x) => Ok(Some(x)),
+                _ => Err(p.err("expected a number")),
+            },
+            _ => Err(p.err("expected a number")),
+        }
+    }
+
+    /// Bool at `path`; Err when the value is not a bool.
+    pub fn path_bool(&self, path: &[&str]) -> Result<Option<bool>, JsonError> {
+        let Some(mut p) = self.seek(path)? else {
+            return Ok(None);
+        };
+        match p.peek() {
+            Some(b't') => p.lit("true", Json::Bool(true)).map(|_| Some(true)),
+            Some(b'f') => p.lit("false", Json::Bool(false)).map(|_| Some(false)),
+            _ => Err(p.err("expected a bool")),
+        }
+    }
+
+    /// Array of strings at `path`; Err when the value is not an array or
+    /// any element is not a string.
+    pub fn path_str_array(&self, path: &[&str]) -> Result<Option<Vec<String>>, JsonError> {
+        let Some(mut p) = self.seek(path)? else {
+            return Ok(None);
+        };
+        if p.peek() != Some(b'[') {
+            return Err(p.err("expected an array"));
+        }
+        p.i += 1;
+        let mut out = Vec::new();
+        p.ws();
+        if p.peek() == Some(b']') {
+            return Ok(Some(out));
+        }
+        loop {
+            p.ws();
+            if p.peek() != Some(b'"') {
+                return Err(p.err("expected a string"));
+            }
+            out.push(p.string()?);
+            p.ws();
+            match p.peek() {
+                Some(b',') => p.i += 1,
+                Some(b']') => return Ok(Some(out)),
+                _ => return Err(p.err("expected ',' or ']'")),
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -493,5 +748,94 @@ mod tests {
     fn integers_serialize_without_fraction() {
         assert_eq!(Json::Num(5.0).to_string(), "5");
         assert_eq!(Json::Num(5.25).to_string(), "5.25");
+    }
+
+    #[test]
+    fn get_path_walks_nested_objects() {
+        let j = Json::parse(r#"{"a": {"b": {"c": 7}}, "x": [1]}"#).unwrap();
+        assert_eq!(j.get_path(&["a", "b", "c"]).and_then(Json::as_f64), Some(7.0));
+        assert_eq!(j.get_path(&[]).unwrap(), &j);
+        assert!(j.get_path(&["a", "missing"]).is_none());
+        // a hop through a non-object is absent, not a panic
+        assert!(j.get_path(&["x", "b"]).is_none());
+    }
+
+    #[test]
+    fn scan_finds_values_without_building_a_tree() {
+        let src = r#"{"prompt": "the cat", "params": {"max_tokens": 64,
+                      "temperature": 0.5, "greedy": false},
+                      "stop": ["\n", "END"], "big": [1, 2, {"skip": "me"}]}"#;
+        let scan = JsonScan::new(src);
+        assert_eq!(scan.path_str(&["prompt"]).unwrap(), Some("the cat".into()));
+        assert_eq!(
+            scan.path_f64(&["params", "max_tokens"]).unwrap(),
+            Some(64.0)
+        );
+        assert_eq!(
+            scan.path_f64(&["params", "temperature"]).unwrap(),
+            Some(0.5)
+        );
+        assert_eq!(scan.path_bool(&["params", "greedy"]).unwrap(), Some(false));
+        assert_eq!(
+            scan.path_str_array(&["stop"]).unwrap(),
+            Some(vec!["\n".to_string(), "END".to_string()])
+        );
+        assert_eq!(scan.path_raw(&["big", "skip"]).unwrap(), None);
+        // absent keys and non-object hops are None, not errors
+        assert_eq!(scan.path_str(&["missing"]).unwrap(), None);
+        assert_eq!(scan.path_str(&["prompt", "deeper"]).unwrap(), None);
+        // the raw slice is the value text verbatim
+        assert_eq!(
+            scan.path_raw(&["params"]).unwrap().map(|s| s.starts_with('{')),
+            Some(true)
+        );
+    }
+
+    #[test]
+    fn scan_type_mismatches_are_errors_with_positions() {
+        let src = r#"{"n": "not a number", "s": 5}"#;
+        let scan = JsonScan::new(src);
+        let e = scan.path_f64(&["n"]).unwrap_err();
+        // positioned at the opening quote of the wrong-typed value
+        assert_eq!(e.pos, 6, "{e}");
+        let e = scan.path_str(&["s"]).unwrap_err();
+        assert_eq!(e.pos, 27, "{e}");
+        let e = scan.path_str_array(&["s"]).unwrap_err();
+        assert_eq!(e.pos, 27, "{e}");
+    }
+
+    #[test]
+    fn escape_sequence_error_positions() {
+        // eager parse: the bad escape char 'q' sits at byte 8 of {"a":"x\q"}
+        let src = "{\"a\":\"x\\q\"}";
+        let e = Json::parse(src).unwrap_err();
+        assert_eq!(e.pos, 8, "{e}");
+        assert!(e.msg.contains("bad escape"), "{e}");
+        // lazy skip of the same string reports the same position
+        let scan = JsonScan::new(src);
+        let e = scan.path_str(&["missing"]).unwrap_err();
+        assert_eq!(e.pos, 8, "{e}");
+        // truncated \u escape: fewer than 4 hex digits before EOF
+        let e = Json::parse("\"\\u00").unwrap_err();
+        assert_eq!(e.pos, 2, "{e}");
+        assert!(e.msg.contains("\\u"), "{e}");
+        let e = JsonScan::new("{\"k\":\"\\u12G4\"}").path_str(&["k"]).unwrap_err();
+        assert!(e.msg.contains("\\u"), "{e}");
+    }
+
+    #[test]
+    fn truncated_input_error_positions() {
+        // the eager parser points at the byte where input ran out
+        let e = Json::parse(r#"{"a": [1, 2"#).unwrap_err();
+        assert_eq!(e.pos, 11, "{e}");
+        let e = Json::parse(r#"{"a""#).unwrap_err();
+        assert_eq!(e.pos, 4, "{e}");
+        let e = Json::parse("\"open").unwrap_err();
+        assert_eq!(e.pos, 5, "{e}");
+        // and the lazy scanner agrees byte-for-byte on the same prefixes
+        let e = JsonScan::new(r#"{"a": [1, 2"#).path_raw(&["a"]).unwrap_err();
+        assert_eq!(e.pos, 11, "{e}");
+        let e = JsonScan::new("{\"a\": \"open").path_str(&["a"]).unwrap_err();
+        assert_eq!(e.pos, 11, "{e}");
     }
 }

@@ -1,0 +1,369 @@
+//! End-to-end tests for the HTTP front door: raw `TcpStream` clients
+//! against an in-process [`HttpServer`] over the synthetic backend, so
+//! the whole matrix runs artifact-free.
+//!
+//! The synthetic backend's logit contract (next = prev+1 mod vocab, and
+//! temperature 0 decodes greedily) makes outputs exact: prompt `"a"`
+//! yields `"bcde"` for four tokens.
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+use aasvd::model::Config;
+use aasvd::serve::http::{HttpOptions, HttpServer, Limits};
+use aasvd::serve::{Server, ServerOptions, SyntheticBackend};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+fn boot_with(prefill_delay: Duration, step_delay: Duration, options: HttpOptions) -> HttpServer {
+    let cfg = Config::builtin("tiny").expect("builtin tiny");
+    let backend_cfg = cfg.clone();
+    let server = Server::with_backend(
+        cfg,
+        ServerOptions {
+            max_queue: 64,
+            max_batch: 16,
+            prefill_per_tick: 0,
+            ..Default::default()
+        },
+        move || {
+            Ok(Box::new(SyntheticBackend::with_delays(
+                backend_cfg,
+                prefill_delay,
+                step_delay,
+            )))
+        },
+    );
+    HttpServer::start(server, options).expect("bind http server")
+}
+
+fn boot(step_delay: Duration, options: HttpOptions) -> HttpServer {
+    boot_with(Duration::ZERO, step_delay, options)
+}
+
+/// Read to EOF (`connection: close` framing) and split out the status.
+fn read_to_eof(s: &mut TcpStream) -> (u16, String) {
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 4096];
+    loop {
+        match s.read(&mut tmp) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        }
+    }
+    let text = String::from_utf8_lossy(&buf).to_string();
+    let status = text
+        .lines()
+        .next()
+        .and_then(|l| l.split(' ').nth(1))
+        .and_then(|x| x.parse().ok())
+        .unwrap_or(0);
+    (status, text)
+}
+
+/// Write `raw`, then read the whole response.
+fn request(addr: SocketAddr, raw: &[u8]) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    s.write_all(raw).expect("write request");
+    read_to_eof(&mut s)
+}
+
+fn post_completions(addr: SocketAddr, body: &str) -> (u16, String) {
+    let raw = format!(
+        "POST /v1/completions HTTP/1.1\r\nhost: t\r\ncontent-type: application/json\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len(),
+    );
+    request(addr, raw.as_bytes())
+}
+
+#[test]
+fn happy_path_streams_greedy_tokens_over_sse() {
+    let http = boot(Duration::ZERO, HttpOptions::default());
+    let addr = http.addr();
+    let (status, text) = post_completions(addr, r#"{"prompt":"a","max_tokens":4}"#);
+    assert_eq!(status, 200, "{text}");
+    assert!(text.contains("transfer-encoding: chunked"), "{text}");
+    assert!(text.contains("content-type: text/event-stream"), "{text}");
+    assert_eq!(text.matches("event: token").count(), 4, "{text}");
+    // greedy synthetic decode: a -> b c d e
+    for frag in ["\"text\":\"b\"", "\"text\":\"c\"", "\"text\":\"d\"", "\"text\":\"e\""] {
+        assert!(text.contains(frag), "missing {frag} in {text}");
+    }
+    assert_eq!(text.matches("event: done").count(), 1, "{text}");
+    assert!(text.contains("\"text\":\"bcde\""), "{text}");
+    assert!(text.contains("\"tokens_generated\":4"), "{text}");
+    assert!(text.ends_with("0\r\n\r\n"), "missing terminal chunk: {text}");
+    let m = http.shutdown();
+    assert_eq!(m.http_2xx, 1);
+    assert_eq!(m.http_connections, 1);
+    assert_eq!(m.http_ttfts.len(), 1, "socket-side TTFT recorded");
+    assert!(m.http_bytes_in > 0 && m.http_bytes_out > 0);
+}
+
+#[test]
+fn non_stream_mode_returns_one_json_body() {
+    let http = boot(Duration::ZERO, HttpOptions::default());
+    let (status, text) =
+        post_completions(http.addr(), r#"{"prompt":"a","max_tokens":4,"stream":false}"#);
+    assert_eq!(status, 200, "{text}");
+    assert!(text.contains("content-type: application/json"), "{text}");
+    assert!(text.contains("content-length:"), "{text}");
+    assert!(text.contains("\"text\":\"bcde\""), "{text}");
+    assert!(text.contains("\"tokens_generated\":4"), "{text}");
+    assert!(!text.contains("event:"), "{text}");
+    http.shutdown();
+}
+
+#[test]
+fn healthz_reports_ok() {
+    let http = boot(Duration::ZERO, HttpOptions::default());
+    let (status, text) = request(http.addr(), b"GET /healthz HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(status, 200, "{text}");
+    assert!(text.contains("\"ok\":true"), "{text}");
+    http.shutdown();
+}
+
+#[test]
+fn malformed_request_lines_and_headers_are_400() {
+    let http = boot(Duration::ZERO, HttpOptions::default());
+    let addr = http.addr();
+    let (status, text) = request(addr, b"GARBAGE NONSENSE\r\n\r\n");
+    assert_eq!(status, 400, "{text}");
+    let (status, text) = request(addr, b"GET / HTTP/1.1\r\nthis-is-not-a-header\r\n\r\n");
+    assert_eq!(status, 400, "{text}");
+    // not even utf-8
+    let (status, text) = request(addr, &[0xff, 0xfe, 0xfd, b'\r', b'\n', b'\r', b'\n']);
+    assert_eq!(status, 400, "{text}");
+    let m = http.shutdown();
+    assert_eq!(m.http_4xx, 3);
+    assert_eq!(m.http_2xx, 0);
+}
+
+#[test]
+fn unknown_paths_404_and_wrong_methods_405() {
+    let http = boot(Duration::ZERO, HttpOptions::default());
+    let addr = http.addr();
+    let (status, _) = request(addr, b"GET /nope HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(status, 404);
+    let (status, _) = request(addr, b"GET /v1/completions HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(status, 405);
+    let (status, _) = request(addr, b"POST /healthz HTTP/1.1\r\nhost: t\r\ncontent-length: 0\r\n\r\n");
+    assert_eq!(status, 405);
+    http.shutdown();
+}
+
+#[test]
+fn missing_content_length_is_411_and_oversized_body_is_413() {
+    let http = boot(
+        Duration::ZERO,
+        HttpOptions {
+            limits: Limits {
+                max_body_bytes: 64,
+                ..Limits::default()
+            },
+            ..HttpOptions::default()
+        },
+    );
+    let addr = http.addr();
+    let (status, text) = request(addr, b"POST /v1/completions HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(status, 411, "{text}");
+    let (status, text) = request(
+        addr,
+        b"POST /v1/completions HTTP/1.1\r\nhost: t\r\ncontent-length: 100000\r\n\r\n",
+    );
+    assert_eq!(status, 413, "{text}");
+    let (status, text) = request(
+        addr,
+        b"POST /v1/completions HTTP/1.1\r\nhost: t\r\ncontent-length: banana\r\n\r\n",
+    );
+    assert_eq!(status, 400, "{text}");
+    http.shutdown();
+}
+
+#[test]
+fn oversized_head_is_431() {
+    let http = boot(
+        Duration::ZERO,
+        HttpOptions {
+            limits: Limits {
+                max_head_bytes: 256,
+                ..Limits::default()
+            },
+            ..HttpOptions::default()
+        },
+    );
+    // stream > max_head_bytes without ever finishing the head
+    let mut junk = String::from("POST /v1/completions HTTP/1.1\r\n");
+    for i in 0..40 {
+        junk.push_str(&format!("x-filler-{i}: aaaaaaaaaaaaaaaa\r\n"));
+    }
+    // no terminating blank line — the size cap must fire first
+    let (status, text) = request(http.addr(), junk.as_bytes());
+    assert_eq!(status, 431, "{text}");
+    http.shutdown();
+}
+
+#[test]
+fn bad_json_and_missing_prompt_are_400_with_positions() {
+    let http = boot(Duration::ZERO, HttpOptions::default());
+    let addr = http.addr();
+    let (status, text) = post_completions(addr, r#"{"prompt": "unterminated"#);
+    assert_eq!(status, 400, "{text}");
+    assert!(text.contains("byte"), "lazy decoder error carries a position: {text}");
+    let (status, text) = post_completions(addr, r#"{"max_tokens":4}"#);
+    assert_eq!(status, 400, "{text}");
+    assert!(text.contains("prompt"), "{text}");
+    // wrong type for a known field is 400, not a silent default
+    let (status, text) = post_completions(addr, r#"{"prompt":"a","max_tokens":"many"}"#);
+    assert_eq!(status, 400, "{text}");
+    http.shutdown();
+}
+
+#[test]
+fn slow_loris_is_shed_with_408() {
+    let http = boot(
+        Duration::ZERO,
+        HttpOptions {
+            read_timeout: Duration::from_millis(150),
+            ..HttpOptions::default()
+        },
+    );
+    let mut s = TcpStream::connect(http.addr()).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    // trickle a partial request line and stall past the read deadline
+    s.write_all(b"POST /v1/completi").expect("partial write");
+    std::thread::sleep(Duration::from_millis(500));
+    let (status, text) = read_to_eof(&mut s);
+    assert_eq!(status, 408, "{text}");
+    let m = http.shutdown();
+    assert_eq!(m.http_408, 1);
+    assert_eq!(m.http_4xx, 1);
+}
+
+#[test]
+fn deadline_before_first_token_is_a_real_408() {
+    // the 30ms prefill alone outlives the 1ms deadline, so the engine's
+    // pre-decode deadline sweep retires the request before any token —
+    // the deferred-head design must then surface a genuine 408 status
+    // line, not an aborted 200 stream
+    let http = boot_with(
+        Duration::from_millis(30),
+        Duration::from_millis(5),
+        HttpOptions::default(),
+    );
+    let (status, text) =
+        post_completions(http.addr(), r#"{"prompt":"a","max_tokens":8,"deadline_ms":1}"#);
+    assert_eq!(status, 408, "{text}");
+    assert!(!text.contains("200 OK"), "{text}");
+    let m = http.shutdown();
+    assert_eq!(m.http_408, 1);
+    assert!(m.deadline_expired >= 1, "engine saw the deadline too");
+}
+
+#[test]
+fn midstream_disconnect_cancels_the_completion() {
+    let http = boot(Duration::from_millis(30), HttpOptions::default());
+    let addr = http.addr();
+    let body = r#"{"prompt":"a","max_tokens":200}"#;
+    let raw = format!(
+        "POST /v1/completions HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len(),
+    );
+    {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        s.write_all(raw.as_bytes()).expect("write");
+        // wait for streaming to actually start...
+        let mut seen = Vec::new();
+        let mut tmp = [0u8; 1024];
+        loop {
+            match s.read(&mut tmp) {
+                Ok(0) => break,
+                Ok(n) => {
+                    seen.extend_from_slice(&tmp[..n]);
+                    if String::from_utf8_lossy(&seen).contains("event: token") {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        assert!(
+            String::from_utf8_lossy(&seen).contains("event: token"),
+            "stream never started"
+        );
+        // ...then vanish mid-stream (drop closes the socket)
+    }
+    // the next SSE write hits the dead socket; the dropped Completion
+    // then retires the request at the engine's next tick
+    std::thread::sleep(Duration::from_millis(600));
+    let m = http.shutdown();
+    assert!(m.http_499 >= 1, "socket accounted as 499: {}", m.summary());
+    assert!(m.cancelled >= 1, "engine cancelled the request: {}", m.summary());
+    assert_eq!(m.http_5xx, 0, "{}", m.summary());
+}
+
+#[test]
+fn connection_cap_sheds_429_inline() {
+    let http = boot(
+        Duration::from_millis(50),
+        HttpOptions {
+            max_connections: 1,
+            ..HttpOptions::default()
+        },
+    );
+    let addr = http.addr();
+    let body = r#"{"prompt":"a","max_tokens":50}"#;
+    let raw = format!(
+        "POST /v1/completions HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len(),
+    );
+    // occupy the only slot with a live stream
+    let mut first = TcpStream::connect(addr).expect("connect");
+    first
+        .set_read_timeout(Some(Duration::from_secs(20)))
+        .unwrap();
+    first.write_all(raw.as_bytes()).expect("write");
+    let mut seen = Vec::new();
+    let mut tmp = [0u8; 1024];
+    loop {
+        match first.read(&mut tmp) {
+            Ok(0) => break,
+            Ok(n) => {
+                seen.extend_from_slice(&tmp[..n]);
+                if String::from_utf8_lossy(&seen).contains("event: token") {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    assert!(
+        String::from_utf8_lossy(&seen).contains("event: token"),
+        "first stream never started"
+    );
+    // the second connection must be shed before any parsing happens
+    let (status, text) = request(addr, b"GET /healthz HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(status, 429, "{text}");
+    drop(first);
+    std::thread::sleep(Duration::from_millis(300));
+    let m = http.shutdown();
+    assert!(m.http_429 >= 1, "{}", m.summary());
+}
+
+#[test]
+fn metrics_summary_carries_the_http_line() {
+    let http = boot(Duration::ZERO, HttpOptions::default());
+    let addr = http.addr();
+    post_completions(addr, r#"{"prompt":"a","max_tokens":2}"#);
+    request(addr, b"GET /nope HTTP/1.1\r\nhost: t\r\n\r\n");
+    let m = http.shutdown();
+    let s = m.summary();
+    assert!(s.contains("http: conns=2"), "{s}");
+    assert!(s.contains("2xx=1"), "{s}");
+    assert!(s.contains("4xx=1"), "{s}");
+    assert!(!s.contains("NaN"), "{s}");
+}

@@ -1,0 +1,5 @@
+// aasvd-lint: path=src/serve/http/fixture.rs
+
+pub fn first_header(headers: &[(String, String)]) -> &str {
+    headers.first().unwrap().1.as_str()
+}

@@ -1,0 +1,6 @@
+// aasvd-lint: path=src/serve/http/fixture.rs
+
+pub fn first_header(headers: &[(String, String)]) -> &str {
+    // aasvd-lint: allow(serve-unwrap): fixture justification — caller guarantees a non-empty header set
+    headers.first().unwrap().1.as_str()
+}

@@ -1,0 +1,6 @@
+// aasvd-lint: path=src/serve/http/fixture.rs
+
+pub fn respond_at() -> f64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,7 @@
+// aasvd-lint: path=src/serve/http/fixture.rs
+
+pub fn sample_ttft() -> f64 {
+    // aasvd-lint: allow(wallclock): fixture justification — socket-side latency measurement feeding metrics only
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

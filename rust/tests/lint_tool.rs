@@ -46,6 +46,13 @@ const EXPECTED: &[(&str, &[&str])] = &[
     ("unknown_rule.rs", &["lint-directive"]),
     ("comments_ok.rs", &[]),
     ("test_mod_ok.rs", &[]),
+    // src/serve/http/ policy: wallclock now applies there (latency
+    // measurement must carry a justified suppression), and serve-unwrap
+    // is inherited from src/serve/
+    ("http_wallclock_fire.rs", &["wallclock"]),
+    ("http_wallclock_suppressed.rs", &[]),
+    ("http_unwrap_fire.rs", &["serve-unwrap"]),
+    ("http_unwrap_suppressed.rs", &[]),
 ];
 
 #[test]
