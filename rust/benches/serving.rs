@@ -21,8 +21,8 @@ use aasvd::model::Config;
 use aasvd::serve::batcher::bench_prompts;
 use aasvd::serve::http::parse::{find_head_end, parse_head, Limits};
 use aasvd::serve::{
-    DecodeMode, DenseBackend, GenParams, ModelBackend, ServedModel, Server, ServerOptions,
-    Session,
+    DecodeMode, DenseBackend, GenParams, ModelBackend, PagedKvOptions, ServeMetrics, ServedModel,
+    Server, ServerOptions, Session,
 };
 use aasvd::util::pool::Pool;
 use aasvd::util::rng::Rng;
@@ -40,6 +40,53 @@ fn batch_sessions(be: &mut DenseBackend, rows: usize) -> Vec<Session> {
     (0..rows)
         .map(|r| be.prefill(&[r as i32 + 1]).unwrap().session)
         .collect()
+}
+
+/// Eight prompts sharing an exactly-4-block (64-token) prefix with short
+/// unique tails — the shared-prefix workload for the paged-KV rows.
+fn prefix_prompts() -> Vec<String> {
+    let mut prefix = String::from("shared system prompt for the prefix-reuse serving bench ");
+    while prefix.len() < 64 {
+        prefix.push('.');
+    }
+    (0..8).map(|i| format!("{prefix} tail {i:02}")).collect()
+}
+
+/// Run the 8 shared-prefix requests through one server (paged when
+/// `paged` is Some); returns per-request texts + the final metrics.
+fn prefix_round(
+    cfg: &Config,
+    model: ServedModel,
+    paged: Option<PagedKvOptions>,
+) -> (Vec<String>, ServeMetrics) {
+    let server = Server::start_with(
+        cfg.clone(),
+        model,
+        ServerOptions {
+            paged_kv: paged,
+            ..Default::default()
+        },
+    );
+    let completions: Vec<_> = prefix_prompts()
+        .iter()
+        .map(|p| {
+            server
+                .submit(
+                    p,
+                    GenParams {
+                        max_new_tokens: 8,
+                        temperature: 0.0,
+                        ..Default::default()
+                    },
+                )
+                .expect("queue has room")
+        })
+        .collect();
+    let texts: Vec<String> = completions
+        .into_iter()
+        .map(|c| c.wait().expect("request completes").text)
+        .collect();
+    (texts, server.shutdown())
 }
 
 /// One single-request completion through a fresh server; returns its text.
@@ -161,6 +208,59 @@ fn main() {
                 std::hint::black_box(text);
             },
         );
+    }
+
+    // paged-KV prefix-reuse rows (the third CI gate): 8 requests sharing
+    // a 64-token (4-block) prefix through the paged dense backend, with
+    // the radix prefix cache on vs off. work_per_iter is the *measured*
+    // prefill token count per round — the cache-on row must show >= 3x
+    // fewer prefill tokens (it skips the shared span's forward passes);
+    // CI gates on the saved work_per_iter ratio, not wall time. Before
+    // timing: all three variants (plain dense, paged+cache, paged
+    // cache-off) must produce identical tokens — prefix reuse is only a
+    // win if it is bitwise invisible.
+    {
+        let pk = |prefix_cache| PagedKvOptions {
+            blocks: 128,
+            block_tokens: 16,
+            prefix_cache,
+        };
+        let (plain_texts, _) = prefix_round(&cfg, ServedModel::Dense(params.clone()), None);
+        let (on_texts, on_m) =
+            prefix_round(&cfg, ServedModel::Dense(params.clone()), Some(pk(true)));
+        let (off_texts, off_m) =
+            prefix_round(&cfg, ServedModel::Dense(params.clone()), Some(pk(false)));
+        assert_eq!(
+            plain_texts, on_texts,
+            "paged decode with prefix sharing diverged from dense decode"
+        );
+        assert_eq!(
+            plain_texts, off_texts,
+            "paged decode (cache off) diverged from dense decode"
+        );
+        assert!(
+            on_m.prefill_tokens * 3 <= off_m.prefill_tokens,
+            "prefix cache saved too little prefill: {} on vs {} off",
+            on_m.prefill_tokens,
+            off_m.prefill_tokens
+        );
+        assert_eq!(on_m.kv_blocks_leaked, 0, "paged round leaked blocks");
+        for (label, prefix_cache, prefill_tokens) in [
+            ("prefix_on", true, on_m.prefill_tokens),
+            ("prefix_off", false, off_m.prefill_tokens),
+        ] {
+            let p = params.clone();
+            b.run(
+                &format!("serve_paged[dense {label}] B=8 shared64"),
+                Some(prefill_tokens as f64),
+                || {
+                    let (texts, m) =
+                        prefix_round(&cfg, ServedModel::Dense(p.clone()), Some(pk(prefix_cache)));
+                    assert_eq!(m.prefill_tokens, prefill_tokens, "prefill work drifted");
+                    std::hint::black_box(texts);
+                },
+            );
+        }
     }
 
     // batched-vs-sequential decode rows (the second CI gate): B sessions

@@ -27,9 +27,11 @@
 //! p50/p90/p99 TTFT and inter-token latency, status-class counts, peak
 //! concurrency, and the server-side metrics summary when in-process.
 
+use aasvd::model::init::init_params;
 use aasvd::model::Config;
 use aasvd::serve::{
-    DecodeMode, HttpOptions, HttpServer, Server, ServerOptions, SyntheticBackend,
+    DecodeMode, DenseBackend, HttpOptions, HttpServer, ModelBackend, PagedKvOptions, Server,
+    ServerOptions, SyntheticBackend,
 };
 use aasvd::util::cli::Args;
 use aasvd::util::json::Json;
@@ -57,19 +59,42 @@ fn main() -> Result<()> {
     let max_queue = args.usize("max-queue", 4096, "in-process admission queue bound");
     let max_batch = args.usize("max-batch", 4096, "in-process decode-slot cap");
     let max_connections = args.usize("max-connections", 4096, "in-process HTTP connection cap");
+    let shared_prefix = args.usize(
+        "shared-prefix",
+        0,
+        "prepend a shared prefix of this many tokens to prompts (0 = off)",
+    );
+    let prefix_ratio = args.f64(
+        "prefix-ratio",
+        1.0,
+        "fraction of requests carrying the shared prefix",
+    );
+    let kv_blocks = args.usize("kv-blocks", 0, "in-process paged KV pool size (0 = dense caches)");
+    let kv_block_tokens = args.usize("kv-block-tokens", 16, "tokens per KV block");
+    let no_prefix_cache = args.flag("no-prefix-cache", "disable radix prefix sharing when paged");
     let out = args.str("out", "results/bench_http.json", "output JSON path");
     args.finish_or_help();
 
     // ---- deterministic schedule + request bodies --------------------
     let mut rng = Rng::new(seed);
     let schedule = build_schedule(&profile, rate, duration, &mut rng)?;
+    // the shared span is a fixed letter pattern: independent of --seed so
+    // two runs with different schedules still collide on the same prefix
+    let prefix: String = (0..shared_prefix)
+        .map(|j| char::from(b'a' + (j % 26) as u8))
+        .collect();
     let mut bodies = Vec::with_capacity(schedule.len());
     for i in 0..schedule.len() {
         let mut fork = rng.fork(i as u64);
         let len = 4 + fork.below(8);
-        let prompt: String = (0..len)
+        let tail: String = (0..len)
             .map(|_| char::from(b'a' + fork.below(26) as u8))
             .collect();
+        let prompt = if shared_prefix > 0 && fork.f64() < prefix_ratio {
+            format!("{prefix}{tail}")
+        } else {
+            tail
+        };
         let body = Json::obj()
             .set("prompt", prompt)
             .set("max_tokens", max_tokens)
@@ -81,13 +106,24 @@ fn main() -> Result<()> {
 
     // ---- target: external, or an in-process synthetic stack ---------
     let mut http = None;
+    let paged_kv = (kv_blocks > 0).then(|| PagedKvOptions {
+        blocks: kv_blocks,
+        block_tokens: kv_block_tokens.max(1),
+        prefix_cache: !no_prefix_cache,
+    });
     let addr = if target.is_empty() {
-        if serve != "synthetic" {
-            return Err(anyhow!("--serve only supports 'synthetic' (got '{serve}')"));
+        if serve != "synthetic" && serve != "dense" {
+            return Err(anyhow!("--serve supports 'synthetic' or 'dense' (got '{serve}')"));
+        }
+        if paged_kv.is_some() && serve != "dense" {
+            return Err(anyhow!(
+                "--kv-blocks needs --serve dense (the synthetic backend has no KV cache to page)"
+            ));
         }
         let cfg = Config::builtin(&model)
             .ok_or_else(|| anyhow!("unknown builtin config '{model}'"))?;
         let backend_cfg = cfg.clone();
+        let backend_kind = serve.clone();
         let prefill_delay = Duration::from_secs_f64(prefill_delay_ms.max(0.0) / 1e3);
         let step_delay = Duration::from_secs_f64(step_delay_ms.max(0.0) / 1e3);
         let server = Server::with_backend(
@@ -99,9 +135,14 @@ fn main() -> Result<()> {
                 // open-loop load: drain the whole admission queue each
                 // tick, or arrival bursts stack up behind one-per-tick
                 prefill_per_tick: 0,
+                paged_kv: paged_kv.clone(),
                 ..Default::default()
             },
-            move || {
+            move || -> Result<Box<dyn ModelBackend>> {
+                if backend_kind == "dense" {
+                    let params = init_params(&backend_cfg, &mut Rng::new(0xa5_5eed));
+                    return Ok(Box::new(DenseBackend::new(backend_cfg, params)));
+                }
                 Ok(Box::new(SyntheticBackend::with_delays(
                     backend_cfg,
                     prefill_delay,
@@ -131,7 +172,8 @@ fn main() -> Result<()> {
     );
     let run = drive(&addr, &schedule, &bodies);
 
-    let server_summary = http.map(|h| h.shutdown().summary());
+    let server_metrics = http.map(|h| h.shutdown());
+    let server_summary = server_metrics.as_ref().map(|m| m.summary());
 
     // ---- report -----------------------------------------------------
     let pct = |xs: &[f64], q: f64| if xs.is_empty() { 0.0 } else { 1e3 * percentile(xs, q) };
@@ -168,6 +210,33 @@ fn main() -> Result<()> {
             Json::obj()
                 .set("p50", pct(&run.itls, 50.0))
                 .set("p99", pct(&run.itls, 99.0)),
+        )
+        .set("shared_prefix", shared_prefix)
+        .set("prefix_ratio", prefix_ratio)
+        // paged-KV + prefix-cache effectiveness (in-process server only;
+        // zeros when driving an external --target)
+        .set(
+            "prefix",
+            match &server_metrics {
+                Some(m) => Json::obj()
+                    .set("lookups", m.prefix_lookups)
+                    .set("hits", m.prefix_hits)
+                    .set("hit_rate", m.prefix_hit_rate())
+                    .set("tokens_reused", m.prefix_tokens_reused),
+                None => Json::Null,
+            },
+        )
+        .set(
+            "kv",
+            match &server_metrics {
+                Some(m) => Json::obj()
+                    .set("blocks_capacity", m.kv_blocks_capacity)
+                    .set("peak_blocks", m.kv_peak_blocks)
+                    .set("blocks_leaked", m.kv_blocks_leaked)
+                    .set("evictions", m.kv_evictions as f64)
+                    .set("pressure_rejected", m.kv_pressure_rejected),
+                None => Json::Null,
+            },
         )
         .set(
             "server_summary",

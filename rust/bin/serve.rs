@@ -1,5 +1,5 @@
 //! `aasvd-serve` — stand-alone HTTP front door over the synthetic
-//! backend.
+//! or dense backend.
 //!
 //! Boots the serving engine behind [`HttpServer`], prints the bound
 //! address on stdout (one line, `listening <addr>`), then serves until
@@ -12,34 +12,58 @@
 //! ... drive it with aasvd-load --target 127.0.0.1:8080 ...
 //! echo quit > /proc/<pid>/fd/0   # or close its stdin
 //! ```
+//!
+//! `--serve dense` decodes through the real KV-cached forward pass over
+//! randomly initialized dense weights (artifact-free, like the engine's
+//! own tests), which is what lets `--kv-blocks` exercise the paged KV
+//! pool and prefix cache over HTTP: an undersized pool sheds load with
+//! 429s instead of growing without bound (see README "KV memory").
 
+use aasvd::model::init::init_params;
 use aasvd::model::Config;
 use aasvd::serve::{
-    DecodeMode, HttpOptions, HttpServer, Server, ServerOptions, SyntheticBackend,
+    DecodeMode, DenseBackend, HttpOptions, HttpServer, ModelBackend, PagedKvOptions, Server,
+    ServerOptions, SyntheticBackend,
 };
 use aasvd::util::cli::Args;
+use aasvd::util::rng::Rng;
 use anyhow::{anyhow, Context, Result};
 use std::io::BufRead;
 use std::time::Duration;
 
 fn main() -> Result<()> {
     let args = Args::parse_env(
-        "aasvd-serve: stand-alone HTTP front door (synthetic backend; see README \"HTTP API\")",
+        "aasvd-serve: stand-alone HTTP front door, synthetic or dense (see README \"HTTP API\")",
     );
     let addr = args.str("addr", "127.0.0.1:0", "bind address (port 0 picks a free port)");
     let model = args.str("model", "small", "builtin config name");
+    let serve = args.str("serve", "synthetic", "backend: synthetic | dense (random-init weights)");
+    let seed = args.u64("seed", 0xa5_5eed, "weight-init seed for --serve dense");
     let step_delay_ms = args.f64("step-delay-ms", 0.0, "synthetic per-decode-tick delay");
     let prefill_delay_ms = args.f64("prefill-delay-ms", 0.0, "synthetic per-prefill delay");
     let max_queue = args.usize("max-queue", 4096, "admission queue bound");
     let max_batch = args.usize("max-batch", 4096, "decode-slot cap");
     let max_connections = args.usize("max-connections", 4096, "HTTP connection cap");
     let default_max_tokens = args.usize("default-max-tokens", 32, "max_tokens when omitted");
+    let kv_blocks = args.usize("kv-blocks", 0, "paged KV pool size in blocks (0 = dense caches)");
+    let kv_block_tokens = args.usize("kv-block-tokens", 16, "tokens per KV block");
+    let no_prefix_cache = args.flag("no-prefix-cache", "disable radix prefix sharing when paged");
     args.finish_or_help();
 
     let cfg = Config::builtin(&model).ok_or_else(|| anyhow!("unknown builtin config '{model}'"))?;
     let backend_cfg = cfg.clone();
     let prefill_delay = Duration::from_secs_f64(prefill_delay_ms.max(0.0) / 1e3);
     let step_delay = Duration::from_secs_f64(step_delay_ms.max(0.0) / 1e3);
+    let paged_kv = (kv_blocks > 0).then(|| PagedKvOptions {
+        blocks: kv_blocks,
+        block_tokens: kv_block_tokens.max(1),
+        prefix_cache: !no_prefix_cache,
+    });
+    if paged_kv.is_some() && serve != "dense" {
+        return Err(anyhow!(
+            "--kv-blocks needs --serve dense (the synthetic backend has no KV cache to page)"
+        ));
+    }
     let server = Server::with_backend(
         cfg,
         ServerOptions {
@@ -47,14 +71,22 @@ fn main() -> Result<()> {
             max_batch,
             decode: DecodeMode::Cached,
             prefill_per_tick: 0,
+            paged_kv,
             ..Default::default()
         },
-        move || {
-            Ok(Box::new(SyntheticBackend::with_delays(
-                backend_cfg,
-                prefill_delay,
-                step_delay,
-            )))
+        move || -> Result<Box<dyn ModelBackend>> {
+            match serve.as_str() {
+                "dense" => {
+                    let params = init_params(&backend_cfg, &mut Rng::new(seed));
+                    Ok(Box::new(DenseBackend::new(backend_cfg, params)))
+                }
+                "synthetic" => Ok(Box::new(SyntheticBackend::with_delays(
+                    backend_cfg,
+                    prefill_delay,
+                    step_delay,
+                ))),
+                other => Err(anyhow!("unknown --serve backend '{other}'")),
+            }
         },
     );
     let http = HttpServer::start(

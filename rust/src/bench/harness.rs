@@ -112,6 +112,11 @@ impl Bench {
                     .set("mean_ms", r.mean_secs * 1e3)
                     .set("p95_ms", r.p95_secs * 1e3)
                     .set("iters", r.iters)
+                    // the raw work metric too, not just the rate: CI
+                    // gates that compare *work* across rows (e.g. prefill
+                    // tokens with the prefix cache on vs off) must not
+                    // depend on wall time
+                    .set("work_per_iter", r.work_per_iter.unwrap_or(0.0))
                     .set(
                         "throughput",
                         r.throughput().unwrap_or(0.0),

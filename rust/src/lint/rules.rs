@@ -90,8 +90,17 @@ const FLOAT_KERNEL_FILES: &[&str] = &[
 const ENV_FILES: &[&str] = &["src/util/pool.rs", "src/util/cli.rs", "src/experiments.rs"];
 
 /// Trees where hash-iteration order would leak into numeric results or
-/// compression artifacts.
-const HASH_ITER_TREES: &[&str] = &["src/linalg/", "src/model/", "src/compress/", "src/refine/"];
+/// compression artifacts. `serve/kv_pool.rs` is included because the
+/// prefix trie's iteration order decides LRU eviction ties — a HashMap
+/// there would make block eviction (and thus 429s under pressure)
+/// nondeterministic across runs.
+const HASH_ITER_TREES: &[&str] = &[
+    "src/linalg/",
+    "src/model/",
+    "src/compress/",
+    "src/refine/",
+    "src/serve/kv_pool.rs",
+];
 
 /// Trees whose compute paths must not read wall clocks. The HTTP front
 /// door is held to the same rule: its legitimate clock reads (read
@@ -138,7 +147,8 @@ pub fn policy_path(path: &str) -> String {
 /// - `adhoc-parallelism`: everywhere except `util/pool.rs` (the one
 ///   sanctioned parallelism substrate), test code included.
 /// - `hash-iter`: the numeric/artifact trees (`linalg/`, `model/`,
-///   `compress/`, `refine/`), test code included — artifact equality
+///   `compress/`, `refine/`) plus the prefix-cache trie
+///   (`serve/kv_pool.rs`), test code included — artifact equality
 ///   tests are exactly where ordering bugs hide.
 /// - `float-reduce`: all of `src/` outside the four banded-kernel files;
 ///   test code exempt (tests legitimately compute reference sums to
@@ -219,6 +229,15 @@ mod tests {
         assert!(!applies(RULE_WALLCLOCK, "src/serve/http/server.rs", true));
         assert!(!applies(RULE_WALLCLOCK, "src/serve/engine.rs", false));
         assert!(applies(RULE_WALLCLOCK, "src/compress/svd.rs", false));
+    }
+
+    #[test]
+    fn hash_iter_covers_the_prefix_trie() {
+        assert!(applies(RULE_HASH_ITER, "src/serve/kv_pool.rs", false));
+        assert!(applies(RULE_HASH_ITER, "src/serve/kv_pool.rs", true));
+        assert!(applies(RULE_HASH_ITER, "src/model/paged_kv.rs", false));
+        // the rest of serve/ stays out of hash-iter scope
+        assert!(!applies(RULE_HASH_ITER, "src/serve/engine.rs", false));
     }
 
     #[test]

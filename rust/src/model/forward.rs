@@ -177,6 +177,42 @@ pub fn attention(cfg: &Config, q: &mut [f32], k: &mut [f32], v: &[f32], t: usize
     out
 }
 
+/// Read/append view over one layer's KV rows — the storage interface
+/// [`attention_step`] walks. Implemented by the contiguous [`LayerKv`]
+/// and by the paged `model::paged_kv::PagedLayer`, so dense-buffer and
+/// block-table storage run the *same* kernel code: the float ops and
+/// their order never depend on the layout, which is what makes paged
+/// decode bitwise identical to the contiguous path by construction.
+///
+/// Row width `d` (= d_model) is passed explicitly: rows are opaque
+/// [d]-float K and V slices, roped/raw exactly as [`attention_step`]
+/// produced them.
+pub trait KvSeq {
+    /// Rows currently stored (positions absorbed into this layer).
+    fn seq_rows(&self, d: usize) -> usize;
+    /// Append one roped key row and one raw value row (each [d]). Paged
+    /// implementations require a reserved tail block with room for the
+    /// row — reservation happens outside the kernels (and outside any
+    /// parallel band), so `push_row` itself never allocates.
+    fn push_row(&mut self, k: &[f32], v: &[f32]);
+    /// The j-th key row, contiguous [d].
+    fn k_row(&self, j: usize, d: usize) -> &[f32];
+    /// The j-th value row, contiguous [d].
+    fn v_row(&self, j: usize, d: usize) -> &[f32];
+}
+
+/// A per-request store of [`KvSeq`] layers the model-level step functions
+/// are generic over — contiguous ([`KvCache`]) or paged
+/// (`model::paged_kv::PagedKvCache`). Both run literally the same
+/// forward code.
+pub trait KvSeqStore {
+    type Layer: KvSeq + Send;
+    fn n_layers(&self) -> usize;
+    fn layer_mut(&mut self, i: usize) -> &mut Self::Layer;
+    /// Record one more absorbed position (prompt or generated).
+    fn advance(&mut self);
+}
+
 /// Per-layer KV rows for one sequence: RoPE'd keys and raw values,
 /// appended one position at a time by [`attention_step`]. Layout is
 /// [len, d_model] row-major with heads contiguous inside a row — the same
@@ -185,6 +221,25 @@ pub fn attention(cfg: &Config, q: &mut [f32], k: &mut [f32], v: &[f32], t: usize
 pub struct LayerKv {
     pub k: Vec<f32>,
     pub v: Vec<f32>,
+}
+
+impl KvSeq for LayerKv {
+    fn seq_rows(&self, d: usize) -> usize {
+        self.k.len() / d
+    }
+
+    fn push_row(&mut self, k: &[f32], v: &[f32]) {
+        self.k.extend_from_slice(k);
+        self.v.extend_from_slice(v);
+    }
+
+    fn k_row(&self, j: usize, d: usize) -> &[f32] {
+        &self.k[j * d..(j + 1) * d]
+    }
+
+    fn v_row(&self, j: usize, d: usize) -> &[f32] {
+        &self.v[j * d..(j + 1) * d]
+    }
 }
 
 /// Per-request KV cache: one growing K/V row pair per layer. `len` counts
@@ -213,6 +268,22 @@ impl KvCache {
     }
 }
 
+impl KvSeqStore for KvCache {
+    type Layer = LayerKv;
+
+    fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    fn layer_mut(&mut self, i: usize) -> &mut LayerKv {
+        &mut self.layers[i]
+    }
+
+    fn advance(&mut self) {
+        self.len += 1;
+    }
+}
+
 /// One causal attention step against a layer's KV cache: ropes the new
 /// q/k rows (all heads, [d]) at the next position, appends the roped key
 /// and raw value to the cache, and returns the attention output row [d].
@@ -224,9 +295,14 @@ impl KvCache {
 /// `+0.0` and leaves the running sum bit-identical; every other
 /// accumulation (q·k dot, probs·v) runs in the same index order as the
 /// packed kernel. Enforced by tests/kv_cache.rs.
-pub fn attention_step(
+///
+/// Generic over [`KvSeq`] storage (contiguous or paged): row *reads* go
+/// through `k_row`/`v_row`, which only changes where a row lives, never
+/// a float op or its order — so paged attention inherits the bitwise
+/// contract verbatim.
+pub fn attention_step<K: KvSeq + ?Sized>(
     cfg: &Config,
-    layer: &mut LayerKv,
+    layer: &mut K,
     q: &mut [f32],
     k: &mut [f32],
     v: &[f32],
@@ -236,14 +312,13 @@ pub fn attention_step(
     assert_eq!(q.len(), d);
     assert_eq!(k.len(), d);
     assert_eq!(v.len(), d);
-    let pos = layer.k.len() / d;
+    let pos = layer.seq_rows(d);
     let scale = 1.0 / (hd as f32).sqrt();
     for hi in 0..h {
         apply_rope_row(&mut q[hi * hd..(hi + 1) * hd], pos, hd, cfg.rope_theta);
         apply_rope_row(&mut k[hi * hd..(hi + 1) * hd], pos, hd, cfg.rope_theta);
     }
-    layer.k.extend_from_slice(k);
-    layer.v.extend_from_slice(v);
+    layer.push_row(k, v);
 
     let t = pos + 1;
     let mut out = vec![0.0f32; d];
@@ -251,7 +326,7 @@ pub fn attention_step(
     for hi in 0..h {
         let qrow = &q[hi * hd..(hi + 1) * hd];
         for (j, s) in scores.iter_mut().enumerate() {
-            let krow = &layer.k[j * d + hi * hd..j * d + hi * hd + hd];
+            let krow = &layer.k_row(j, d)[hi * hd..hi * hd + hd];
             let mut acc = 0.0;
             for (a, b_) in qrow.iter().zip(krow) {
                 acc += a * b_;
@@ -272,7 +347,7 @@ pub fn attention_step(
             if p == 0.0 {
                 continue;
             }
-            let vrow = &layer.v[j * d + hi * hd..j * d + hi * hd + hd];
+            let vrow = &layer.v_row(j, d)[hi * hd..hi * hd + hd];
             for (o, vv) in orow.iter_mut().zip(vrow) {
                 *o += p * vv;
             }
@@ -348,11 +423,11 @@ pub fn block_forward(
 /// hidden row [d] at the new position; returns the block output row [d].
 /// Row-for-row the same ops as [`block_forward`], so it inherits the
 /// cache-exactness contract of [`attention_step`].
-pub fn block_forward_step(
+pub fn block_forward_step<K: KvSeq>(
     cfg: &Config,
     params: &FlatStore,
     prefix: &str,
-    layer: &mut LayerKv,
+    layer: &mut K,
     x: &[f32],
 ) -> Vec<f32> {
     let (d, f) = (cfg.d_model, cfg.d_ff);
@@ -400,11 +475,11 @@ pub fn block_forward_step(
 /// against that row's own cache. No computation ever mixes rows, and the
 /// per-row ops are exactly [`block_forward_step`]'s, so every output row
 /// is **bitwise identical** to the batch-1 step at any worker count.
-pub fn block_forward_step_batch(
+pub fn block_forward_step_batch<K: KvSeq + Send>(
     cfg: &Config,
     params: &FlatStore,
     prefix: &str,
-    layers: &mut [&mut LayerKv],
+    layers: &mut [&mut K],
     x: &[f32],
     pool: &Pool,
 ) -> Vec<f32> {
@@ -487,22 +562,28 @@ pub fn block_forward_step_batch(
 /// return its logits row [vocab]. Bitwise identical to the last row of
 /// [`model_forward`] over the same token prefix — O(len) attention work
 /// instead of O(len²) per step.
-pub fn model_forward_step(
+pub fn model_forward_step<S: KvSeqStore>(
     cfg: &Config,
     params: &FlatStore,
-    cache: &mut KvCache,
+    cache: &mut S,
     token: u32,
 ) -> Vec<f32> {
-    assert_eq!(cache.layers.len(), cfg.n_layers);
+    assert_eq!(cache.n_layers(), cfg.n_layers);
     let d = cfg.d_model;
     let tok = token as usize;
     assert!(tok < cfg.vocab, "token {tok} out of range");
     let embed = params.view("embed");
     let mut x = embed[tok * d..(tok + 1) * d].to_vec();
-    for (blk, layer) in cache.layers.iter_mut().enumerate() {
-        x = block_forward_step(cfg, params, &format!("blocks.{blk}."), layer, &x);
+    for blk in 0..cfg.n_layers {
+        x = block_forward_step(
+            cfg,
+            params,
+            &format!("blocks.{blk}."),
+            cache.layer_mut(blk),
+            &x,
+        );
     }
-    cache.len += 1;
+    cache.advance();
     let mut hn = vec![0.0; d];
     rmsnorm(&x, params.view("final_norm"), d, &mut hn);
     let mut logits = vec![0.0; cfg.vocab];
@@ -515,10 +596,10 @@ pub fn model_forward_step(
 /// Row i is **bitwise identical** to `model_forward_step` on cache i with
 /// token i (sessions never mix; see [`block_forward_step_batch`]), at any
 /// pool width, so batched and per-session decode are interchangeable.
-pub fn model_forward_step_batch(
+pub fn model_forward_step_batch<S: KvSeqStore>(
     cfg: &Config,
     params: &FlatStore,
-    caches: &mut [&mut KvCache],
+    caches: &mut [&mut S],
     tokens: &[u32],
     pool: &Pool,
 ) -> Vec<Vec<f32>> {
@@ -528,7 +609,7 @@ pub fn model_forward_step_batch(
         return Vec::new();
     }
     for c in caches.iter() {
-        assert_eq!(c.layers.len(), cfg.n_layers);
+        assert_eq!(c.n_layers(), cfg.n_layers);
     }
     let d = cfg.d_model;
     let embed = params.view("embed");
@@ -539,8 +620,8 @@ pub fn model_forward_step_batch(
         x[i * d..(i + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
     }
     for blk in 0..cfg.n_layers {
-        let mut layers: Vec<&mut LayerKv> =
-            caches.iter_mut().map(|c| &mut c.layers[blk]).collect();
+        let mut layers: Vec<&mut S::Layer> =
+            caches.iter_mut().map(|c| c.layer_mut(blk)).collect();
         x = block_forward_step_batch(
             cfg,
             params,
@@ -551,7 +632,7 @@ pub fn model_forward_step_batch(
         );
     }
     for c in caches.iter_mut() {
-        c.len += 1;
+        c.advance();
     }
     let mut hn = vec![0.0; b * d];
     rmsnorm(&x, params.view("final_norm"), d, &mut hn);
@@ -563,10 +644,10 @@ pub fn model_forward_step_batch(
 /// Prefill: absorb a whole prompt into `cache` and return the logits row
 /// at its last position (one O(T²) pass over the prompt — the same total
 /// attention work as a single full forward, not one pass per token).
-pub fn model_forward_prefill(
+pub fn model_forward_prefill<S: KvSeqStore>(
     cfg: &Config,
     params: &FlatStore,
-    cache: &mut KvCache,
+    cache: &mut S,
     tokens: &[u32],
 ) -> Vec<f32> {
     assert!(!tokens.is_empty(), "prefill needs at least one token");

@@ -7,8 +7,8 @@
 
 use super::config::{Config, BLOCK_LINEARS};
 use super::forward::{
-    attention, attention_step, linear, linear_batch, rmsnorm, silu, BlockTaps, KvCache,
-    LayerKv,
+    attention, attention_step, linear, linear_batch, rmsnorm, silu, BlockTaps, KvSeq,
+    KvSeqStore,
 };
 use super::params::{factor_layout, mask_layout, FlatStore};
 use crate::util::pool::Pool;
@@ -162,10 +162,10 @@ pub fn block_lr_forward(
 /// the low-rank twin of [`crate::model::forward::block_forward_step`],
 /// sharing the same cached attention kernel so dense and compressed
 /// models decode through one cached path.
-pub fn block_lr_forward_step(
+pub fn block_lr_forward_step<K: KvSeq>(
     cfg: &Config,
     bf: &BlockFactors,
-    layer: &mut LayerKv,
+    layer: &mut K,
     x: &[f32],
 ) -> Vec<f32> {
     let (d, f) = (cfg.d_model, cfg.d_ff);
@@ -207,10 +207,10 @@ pub fn block_lr_forward_step(
 /// multi-row [`BlockFactors::apply_linear`] kernel, attention stays a
 /// per-session [`attention_step`]. Rows never mix, so each output row is
 /// bitwise identical to [`block_lr_forward_step`] at any worker count.
-pub fn block_lr_forward_step_batch(
+pub fn block_lr_forward_step_batch<K: KvSeq + Send>(
     cfg: &Config,
     bf: &BlockFactors,
-    layers: &mut [&mut LayerKv],
+    layers: &mut [&mut K],
     x: &[f32],
     pool: &Pool,
 ) -> Vec<f32> {
@@ -287,24 +287,24 @@ pub fn block_lr_forward_step_batch(
 /// One KV-cached decode step through the compressed model. Bitwise
 /// identical to the last row of [`model_lr_forward`] over the same prefix
 /// (the cache-exactness contract; enforced by tests/kv_cache.rs).
-pub fn model_lr_forward_step(
+pub fn model_lr_forward_step<S: KvSeqStore>(
     cfg: &Config,
     params: &FlatStore,
     blocks: &[BlockFactors],
-    cache: &mut KvCache,
+    cache: &mut S,
     token: u32,
 ) -> Vec<f32> {
     assert_eq!(blocks.len(), cfg.n_layers);
-    assert_eq!(cache.layers.len(), cfg.n_layers);
+    assert_eq!(cache.n_layers(), cfg.n_layers);
     let d = cfg.d_model;
     let tok = token as usize;
     assert!(tok < cfg.vocab, "token {tok} out of range");
     let embed = params.view("embed");
     let mut x = embed[tok * d..(tok + 1) * d].to_vec();
-    for (bf, layer) in blocks.iter().zip(cache.layers.iter_mut()) {
-        x = block_lr_forward_step(cfg, bf, layer, &x);
+    for (blk, bf) in blocks.iter().enumerate() {
+        x = block_lr_forward_step(cfg, bf, cache.layer_mut(blk), &x);
     }
-    cache.len += 1;
+    cache.advance();
     let mut hn = vec![0.0; d];
     rmsnorm(&x, params.view("final_norm"), d, &mut hn);
     let mut logits = vec![0.0; cfg.vocab];
@@ -317,11 +317,11 @@ pub fn model_lr_forward_step(
 /// identical to [`model_lr_forward_step`] on cache i with token i, at any
 /// pool width — the low-rank twin of
 /// [`crate::model::forward::model_forward_step_batch`].
-pub fn model_lr_forward_step_batch(
+pub fn model_lr_forward_step_batch<S: KvSeqStore>(
     cfg: &Config,
     params: &FlatStore,
     blocks: &[BlockFactors],
-    caches: &mut [&mut KvCache],
+    caches: &mut [&mut S],
     tokens: &[u32],
     pool: &Pool,
 ) -> Vec<Vec<f32>> {
@@ -332,7 +332,7 @@ pub fn model_lr_forward_step_batch(
         return Vec::new();
     }
     for c in caches.iter() {
-        assert_eq!(c.layers.len(), cfg.n_layers);
+        assert_eq!(c.n_layers(), cfg.n_layers);
     }
     let d = cfg.d_model;
     let embed = params.view("embed");
@@ -343,12 +343,12 @@ pub fn model_lr_forward_step_batch(
         x[i * d..(i + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
     }
     for (blk, bf) in blocks.iter().enumerate() {
-        let mut layers: Vec<&mut LayerKv> =
-            caches.iter_mut().map(|c| &mut c.layers[blk]).collect();
+        let mut layers: Vec<&mut S::Layer> =
+            caches.iter_mut().map(|c| c.layer_mut(blk)).collect();
         x = block_lr_forward_step_batch(cfg, bf, &mut layers, &x, pool);
     }
     for c in caches.iter_mut() {
-        c.len += 1;
+        c.advance();
     }
     let mut hn = vec![0.0; b * d];
     rmsnorm(&x, params.view("final_norm"), d, &mut hn);
@@ -359,11 +359,11 @@ pub fn model_lr_forward_step_batch(
 
 /// Prefill the compressed model: absorb a whole prompt into `cache`,
 /// returning the logits row at its last position.
-pub fn model_lr_forward_prefill(
+pub fn model_lr_forward_prefill<S: KvSeqStore>(
     cfg: &Config,
     params: &FlatStore,
     blocks: &[BlockFactors],
-    cache: &mut KvCache,
+    cache: &mut S,
     tokens: &[u32],
 ) -> Vec<f32> {
     assert!(!tokens.is_empty(), "prefill needs at least one token");
@@ -508,7 +508,7 @@ pub fn exact_factors(cfg: &Config, params: &FlatStore, block: usize) -> BlockFac
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::forward::block_forward;
+    use crate::model::forward::{block_forward, KvCache};
     use crate::model::init::init_params;
     use crate::testkit::approx::assert_close_f32;
     use crate::util::rng::Rng;

@@ -5,6 +5,7 @@ pub mod config;
 pub mod forward;
 pub mod init;
 pub mod lowrank;
+pub mod paged_kv;
 pub mod params;
 pub mod tokenizer;
 

@@ -1,0 +1,509 @@
+//! Paged KV storage: fixed-size KV blocks drawn from a bounded pool.
+//!
+//! Dense serving stores each session's KV rows in one contiguous
+//! [`KvCache`](super::forward::KvCache) that grows without bound. Paged
+//! storage instead chains fixed-size blocks (`block_tokens` rows each)
+//! behind the same [`KvSeq`]/[`KvSeqStore`] traits the step kernels walk,
+//! so:
+//!
+//! - total KV memory is hard-bounded by the pool's block budget
+//!   ([`KvBlockPool::try_alloc`] fails with [`KvPressure`] instead of
+//!   growing), and
+//! - sessions whose prompts share a token prefix can alias the *same*
+//!   `Arc<KvBlock>`s for the shared span (the radix prefix cache in
+//!   `serve::kv_pool` builds on this).
+//!
+//! ## Bitwise contract
+//!
+//! Paging changes only *where* a KV row lives, never a float operation or
+//! its order: [`PagedLayer`] hands the kernels the same contiguous
+//! `[d_model]` row slices a dense `LayerKv` would, and the kernels
+//! themselves are shared generics. Shared-prefix reuse is bitwise-safe
+//! because RoPE'd keys depend only on the absolute position and the token
+//! — identical prefixes produce identical block contents, so aliasing a
+//! block is indistinguishable from recomputing it.
+//!
+//! ## Copy-on-write discipline
+//!
+//! Shared blocks are never written. Only *full* blocks are ever published
+//! for sharing, and [`PagedLayer::push_row`] appends only to the tail
+//! block, which is either freshly allocated or was filled by this session
+//! — uniquely owned either way. `Arc::get_mut` enforces this at runtime:
+//! a write to an aliased block is a panic, not a silent corruption.
+//!
+//! ## Accounting
+//!
+//! Every block carries a [`Permit`] whose `Drop` returns it to the pool's
+//! atomic residency counter, so `in_use` tracks live blocks exactly no
+//! matter which session, trie node, or in-flight error path drops the
+//! last `Arc`. After a full drain (sessions retired, prefix cache
+//! cleared) `in_use` returning to zero is the no-leak invariant the
+//! engine fuzz suite asserts.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::forward::{KvSeq, KvSeqStore};
+
+/// The pool cannot supply the requested blocks without exceeding its
+/// budget. Carries enough context for admission control and operator
+/// logs; the engine maps it to a 429 at the HTTP front door.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvPressure {
+    /// Blocks the failed request needed.
+    pub needed: usize,
+    /// The pool's total block budget.
+    pub capacity: usize,
+    /// Blocks resident when the request failed.
+    pub in_use: usize,
+}
+
+impl std::fmt::Display for KvPressure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "kv pool pressure: need {} block(s), {}/{} in use",
+            self.needed, self.in_use, self.capacity
+        )
+    }
+}
+
+impl std::error::Error for KvPressure {}
+
+/// Shared residency counters for one pool. `in_use` is incremented by
+/// [`KvBlockPool::try_alloc`] and decremented by [`Permit::drop`]; `peak`
+/// is the high-water mark of `in_use`.
+#[derive(Debug)]
+struct PoolCounters {
+    capacity: usize,
+    in_use: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+/// Drop-guard tying one block's lifetime to the pool residency count.
+#[derive(Debug)]
+pub struct Permit {
+    counters: Arc<PoolCounters>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.counters.in_use.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// One fixed-size KV block: up to `block_tokens` RoPE'd key rows and raw
+/// value rows for a single layer, plus the pool permit that frees its
+/// budget slot when the last owner drops it. Blocks are handed out as
+/// `Arc<KvBlock>` so prefix-sharing is an `Arc::clone`, and mutation is
+/// only possible while uniquely owned (`Arc::get_mut`).
+#[derive(Debug)]
+pub struct KvBlock {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    _permit: Permit,
+}
+
+/// Bounded allocator of [`KvBlock`]s. Cloning the pool handle shares the
+/// same budget and counters.
+#[derive(Clone, Debug)]
+pub struct KvBlockPool {
+    counters: Arc<PoolCounters>,
+    block_tokens: usize,
+    d_model: usize,
+}
+
+impl KvBlockPool {
+    /// A pool of at most `blocks` blocks, each holding `block_tokens`
+    /// rows of width `d_model`.
+    pub fn new(blocks: usize, block_tokens: usize, d_model: usize) -> Self {
+        assert!(block_tokens > 0, "block_tokens must be positive");
+        assert!(d_model > 0, "d_model must be positive");
+        KvBlockPool {
+            counters: Arc::new(PoolCounters {
+                capacity: blocks,
+                in_use: AtomicUsize::new(0),
+                peak: AtomicUsize::new(0),
+            }),
+            block_tokens,
+            d_model,
+        }
+    }
+
+    /// Allocate one empty block, or fail with [`KvPressure`] if the pool
+    /// is at budget. Never blocks and never over-allocates: the
+    /// increment-if-below-capacity is a single atomic `fetch_update`.
+    pub fn try_alloc(&self) -> Result<Arc<KvBlock>, KvPressure> {
+        let c = &self.counters;
+        match c.in_use.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+            if n < c.capacity {
+                Some(n + 1)
+            } else {
+                None
+            }
+        }) {
+            Ok(prev) => {
+                c.peak.fetch_max(prev + 1, Ordering::SeqCst);
+                let floats = self.block_tokens * self.d_model;
+                Ok(Arc::new(KvBlock {
+                    k: Vec::with_capacity(floats),
+                    v: Vec::with_capacity(floats),
+                    _permit: Permit {
+                        counters: Arc::clone(c),
+                    },
+                }))
+            }
+            Err(at_cap) => Err(KvPressure {
+                needed: 1,
+                capacity: c.capacity,
+                in_use: at_cap,
+            }),
+        }
+    }
+
+    /// Rows per block.
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Total block budget.
+    pub fn capacity(&self) -> usize {
+        self.counters.capacity
+    }
+
+    /// Blocks currently resident (live `Arc<KvBlock>`s anywhere).
+    pub fn in_use(&self) -> usize {
+        self.counters.in_use.load(Ordering::SeqCst)
+    }
+
+    /// High-water mark of [`Self::in_use`] since the pool was created.
+    pub fn peak(&self) -> usize {
+        self.counters.peak.load(Ordering::SeqCst)
+    }
+
+    /// Bytes one fully-populated block occupies (k + v payload).
+    pub fn block_bytes(&self) -> usize {
+        2 * self.block_tokens * self.d_model * std::mem::size_of::<f32>()
+    }
+}
+
+/// One layer's KV rows for one session, chained across pool blocks.
+/// Prefix-shared blocks (always full) may be aliased by other sessions
+/// or the prefix trie; the partial tail block is always uniquely owned.
+#[derive(Debug, Default)]
+pub struct PagedLayer {
+    pub blocks: Vec<Arc<KvBlock>>,
+    rows: usize,
+    block_tokens: usize,
+}
+
+impl PagedLayer {
+    fn new(block_tokens: usize) -> Self {
+        PagedLayer {
+            blocks: Vec::new(),
+            rows: 0,
+            block_tokens,
+        }
+    }
+
+    /// Rows currently stored.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Whether appending one more row requires a fresh block first.
+    fn tail_full(&self) -> bool {
+        self.rows == self.blocks.len() * self.block_tokens
+    }
+
+    /// Seed this layer with already-shared full prefix blocks. Only valid
+    /// on an empty layer, and every block must be full — partial blocks
+    /// are never shared, so each one contributes exactly `block_tokens`
+    /// rows.
+    pub fn adopt_prefix(&mut self, blocks: &[Arc<KvBlock>]) {
+        assert_eq!(self.rows, 0, "adopt_prefix on a non-empty layer");
+        if blocks.is_empty() {
+            return;
+        }
+        let floats = blocks[0].k.len();
+        for b in blocks {
+            assert_eq!(b.k.len(), floats, "prefix blocks must all be full");
+            self.blocks.push(Arc::clone(b));
+        }
+        self.rows = blocks.len() * self.block_tokens;
+    }
+}
+
+impl KvSeq for PagedLayer {
+    fn seq_rows(&self, _d: usize) -> usize {
+        self.rows
+    }
+
+    fn push_row(&mut self, k: &[f32], v: &[f32]) {
+        let bi = self.rows / self.block_tokens;
+        assert!(
+            bi < self.blocks.len(),
+            "push_row without a reserved tail block (reserve_append first)"
+        );
+        let tail = Arc::get_mut(&mut self.blocks[bi])
+            .expect("paged tail block is uniquely owned (shared blocks are never written)");
+        tail.k.extend_from_slice(k);
+        tail.v.extend_from_slice(v);
+        self.rows += 1;
+    }
+
+    fn k_row(&self, j: usize, d: usize) -> &[f32] {
+        let bt = self.block_tokens;
+        let r = j % bt;
+        &self.blocks[j / bt].k[r * d..(r + 1) * d]
+    }
+
+    fn v_row(&self, j: usize, d: usize) -> &[f32] {
+        let bt = self.block_tokens;
+        let r = j % bt;
+        &self.blocks[j / bt].v[r * d..(r + 1) * d]
+    }
+}
+
+/// A session's full KV state on paged storage: one [`PagedLayer`] per
+/// transformer block plus the absorbed-position count. Drop-in
+/// [`KvSeqStore`] twin of [`KvCache`](super::forward::KvCache).
+///
+/// Deliberately not `Clone`: cloning would alias partial tail blocks,
+/// breaking the unique-tail invariant `push_row` relies on. Sharing
+/// happens only through full prefix blocks via [`PagedLayer::adopt_prefix`].
+#[derive(Debug)]
+pub struct PagedKvCache {
+    pub layers: Vec<PagedLayer>,
+    pub len: usize,
+    block_tokens: usize,
+}
+
+impl PagedKvCache {
+    pub fn new(n_layers: usize, block_tokens: usize) -> Self {
+        assert!(block_tokens > 0, "block_tokens must be positive");
+        PagedKvCache {
+            layers: (0..n_layers).map(|_| PagedLayer::new(block_tokens)).collect(),
+            len: 0,
+            block_tokens,
+        }
+    }
+
+    /// Rows per block.
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Blocks referenced by this session across all layers (shared prefix
+    /// blocks count once per referencing session).
+    pub fn blocks_referenced(&self) -> usize {
+        self.layers.iter().map(|l| l.blocks.len()).sum()
+    }
+
+    /// Payload bytes stored for this session (k + v rows actually
+    /// written, matching `KvCache::bytes` semantics for the dense twin;
+    /// shared prefix rows count toward every referencing session).
+    pub fn bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.blocks.iter().map(|b| (b.k.len() + b.v.len()) * 4).sum::<usize>())
+            .sum()
+    }
+
+    /// Ensure every layer's tail block has room for one more row,
+    /// allocating through `alloc` where needed. Must be called before
+    /// each single-position step on this cache (and therefore outside the
+    /// banded kernels — allocation never happens on a worker thread).
+    ///
+    /// On failure the cache is left consistent: layers that already got a
+    /// fresh tail keep it (it will be used by a later retry or freed with
+    /// the cache), and no rows have been written.
+    pub fn reserve_append(
+        &mut self,
+        alloc: &mut dyn FnMut() -> Result<Arc<KvBlock>, KvPressure>,
+    ) -> Result<(), KvPressure> {
+        for layer in &mut self.layers {
+            if layer.tail_full() {
+                layer.blocks.push(alloc()?);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl KvSeqStore for PagedKvCache {
+    type Layer = PagedLayer;
+
+    fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    fn layer_mut(&mut self, i: usize) -> &mut PagedLayer {
+        &mut self.layers[i]
+    }
+
+    fn advance(&mut self) {
+        self.len += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::LayerKv;
+
+    fn fill_rows(
+        pool: &KvBlockPool,
+        layer: &mut PagedLayer,
+        dense: &mut LayerKv,
+        n: usize,
+        d: usize,
+    ) {
+        for i in 0..n {
+            let k: Vec<f32> = (0..d).map(|j| (i * d + j) as f32).collect();
+            let v: Vec<f32> = (0..d).map(|j| -((i * d + j) as f32)).collect();
+            if layer.tail_full() {
+                layer.blocks.push(pool.try_alloc().expect("pool has room"));
+            }
+            layer.push_row(&k, &v);
+            dense.push_row(&k, &v);
+        }
+    }
+
+    #[test]
+    fn pool_accounts_alloc_and_drop() {
+        let pool = KvBlockPool::new(2, 4, 8);
+        assert_eq!(pool.in_use(), 0);
+        let a = pool.try_alloc().expect("first alloc fits");
+        let b = pool.try_alloc().expect("second alloc fits");
+        assert_eq!(pool.in_use(), 2);
+        assert_eq!(pool.peak(), 2);
+        let err = pool.try_alloc().expect_err("third alloc exceeds budget");
+        assert_eq!(
+            err,
+            KvPressure {
+                needed: 1,
+                capacity: 2,
+                in_use: 2
+            }
+        );
+        drop(a);
+        assert_eq!(pool.in_use(), 1);
+        let _c = pool.try_alloc().expect("freed slot is reusable");
+        assert_eq!(pool.in_use(), 2);
+        drop(b);
+        drop(_c);
+        assert_eq!(pool.in_use(), 0, "all permits returned");
+        assert_eq!(pool.peak(), 2, "peak survives frees");
+    }
+
+    #[test]
+    fn pressure_error_formats_and_boxes() {
+        let e = KvPressure {
+            needed: 3,
+            capacity: 8,
+            in_use: 7,
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("need 3"), "unexpected message: {msg}");
+        assert!(msg.contains("7/8"), "unexpected message: {msg}");
+        let boxed: Box<dyn std::error::Error> = Box::new(e);
+        assert!(boxed.to_string().contains("kv pool pressure"));
+    }
+
+    #[test]
+    fn paged_rows_match_dense_layout() {
+        let d = 6;
+        let bt = 4;
+        let pool = KvBlockPool::new(16, bt, d);
+        let mut paged = PagedLayer::new(bt);
+        let mut dense = LayerKv::default();
+        fill_rows(&pool, &mut paged, &mut dense, 11, d); // spans 3 blocks, partial tail
+        assert_eq!(paged.seq_rows(d), 11);
+        assert_eq!(paged.blocks.len(), 3);
+        for j in 0..11 {
+            assert_eq!(paged.k_row(j, d), dense.k_row(j, d), "k row {j}");
+            assert_eq!(paged.v_row(j, d), dense.v_row(j, d), "v row {j}");
+        }
+    }
+
+    #[test]
+    fn reserve_append_allocates_per_layer_tails() {
+        let d = 4;
+        let bt = 2;
+        let pool = KvBlockPool::new(8, bt, d);
+        let mut cache = PagedKvCache::new(3, bt);
+        let mut alloc = || pool.try_alloc();
+        cache.reserve_append(&mut alloc).expect("first reserve fits");
+        assert_eq!(pool.in_use(), 3, "one tail block per layer");
+        for l in 0..3 {
+            cache.layer_mut(l).push_row(&vec![0.0; d], &vec![0.0; d]);
+        }
+        cache.advance();
+        // tails have room for a second row: no new blocks needed
+        cache.reserve_append(&mut alloc).expect("tails have room");
+        assert_eq!(pool.in_use(), 3);
+        for l in 0..3 {
+            cache.layer_mut(l).push_row(&vec![1.0; d], &vec![1.0; d]);
+        }
+        cache.advance();
+        // tails now full: next reserve takes three more blocks
+        cache.reserve_append(&mut alloc).expect("pool still has room");
+        assert_eq!(pool.in_use(), 6);
+        drop(cache);
+        assert_eq!(pool.in_use(), 0, "dropping the cache frees every block");
+    }
+
+    #[test]
+    fn reserve_append_surfaces_pressure() {
+        let bt = 2;
+        let pool = KvBlockPool::new(1, bt, 4);
+        let mut cache = PagedKvCache::new(2, bt); // needs 2 tails, budget is 1
+        let mut alloc = || pool.try_alloc();
+        let err = cache.reserve_append(&mut alloc).expect_err("budget too small");
+        assert_eq!(err.capacity, 1);
+        assert_eq!(pool.in_use(), 1, "layer 0's tail was reserved before the failure");
+        drop(cache);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    fn shared_prefix_blocks_are_copy_on_write() {
+        let d = 4;
+        let bt = 2;
+        let pool = KvBlockPool::new(8, bt, d);
+        let mut owner = PagedLayer::new(bt);
+        let mut dense = LayerKv::default();
+        fill_rows(&pool, &mut owner, &mut dense, 2, d); // exactly one full block
+
+        // a second session adopts the full block and appends its own rows
+        let mut twin = PagedLayer::new(bt);
+        twin.adopt_prefix(&owner.blocks[..1]);
+        assert_eq!(twin.seq_rows(d), 2);
+        assert_eq!(pool.in_use(), 1, "adoption shares, not copies");
+        twin.blocks.push(pool.try_alloc().expect("room for a tail"));
+        twin.push_row(&[9.0; 4], &[9.0; 4]);
+        assert_eq!(twin.seq_rows(d), 3);
+        // the shared block is untouched and the owner sees its own rows
+        for j in 0..2 {
+            assert_eq!(owner.k_row(j, d), dense.k_row(j, d));
+            assert_eq!(twin.k_row(j, d), dense.k_row(j, d));
+        }
+        assert_eq!(twin.k_row(2, d), &[9.0; 4]);
+        drop(owner);
+        assert_eq!(pool.in_use(), 2, "shared block survives its first owner");
+        drop(twin);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "uniquely owned")]
+    fn writing_a_shared_tail_panics() {
+        let bt = 4;
+        let pool = KvBlockPool::new(4, bt, 2);
+        let mut a = PagedLayer::new(bt);
+        a.blocks.push(pool.try_alloc().expect("room"));
+        let _alias = Arc::clone(&a.blocks[0]);
+        a.push_row(&[0.0; 2], &[0.0; 2]);
+    }
+}

@@ -26,6 +26,7 @@
 //! experiments: logits favor `(prev_token + 1) % vocab`, with optional
 //! simulated per-step latency.
 
+use super::kv_pool::{KvPoolStats, PagedKvOptions, PagedState};
 use crate::model::forward::{
     model_forward, model_forward_prefill, model_forward_step, model_forward_step_batch,
     KvCache,
@@ -34,6 +35,7 @@ use crate::model::lowrank::{
     model_lr_forward, model_lr_forward_prefill, model_lr_forward_step,
     model_lr_forward_step_batch, BlockFactors,
 };
+use crate::model::paged_kv::PagedKvCache;
 use crate::model::{Config, FlatStore};
 use crate::util::pool::Pool;
 use anyhow::Result;
@@ -52,6 +54,10 @@ pub struct Session {
 
 enum SessionState {
     Kv(KvCache),
+    /// KV rows on pool blocks, possibly sharing full prefix blocks with
+    /// other sessions and the backend's prefix trie (copy-on-write:
+    /// shared blocks are never written).
+    Paged(PagedKvCache),
     Synthetic { last: i32, len: usize },
 }
 
@@ -61,6 +67,7 @@ impl Session {
     pub fn len(&self) -> usize {
         match &self.state {
             SessionState::Kv(c) => c.len,
+            SessionState::Paged(c) => c.len,
             SessionState::Synthetic { len, .. } => *len,
         }
     }
@@ -78,7 +85,17 @@ impl Session {
     pub fn kv_bytes(&self) -> usize {
         match &self.state {
             SessionState::Kv(c) => c.bytes(),
+            SessionState::Paged(c) => c.bytes(),
             SessionState::Synthetic { .. } => 0,
+        }
+    }
+
+    /// Pool blocks this session references across all layers (0 for
+    /// non-paged sessions; shared prefix blocks count once per session).
+    pub fn kv_blocks(&self) -> usize {
+        match &self.state {
+            SessionState::Paged(c) => c.blocks_referenced(),
+            _ => 0,
         }
     }
 }
@@ -89,6 +106,11 @@ impl Session {
 pub struct Prefill {
     pub session: Session,
     pub logits: Vec<f32>,
+    /// Prompt positions whose KV rows came from the prefix cache instead
+    /// of being computed (0 without paged KV / on a prefix miss). Always
+    /// < prompt length: at least the final token is computed so the
+    /// returned logits are real.
+    pub reused: usize,
 }
 
 /// A forward-pass provider for the continuous-batching decode loop.
@@ -141,6 +163,46 @@ pub trait ModelBackend {
     /// Full-prefix recompute oracle (the pre-KV-cache decode path):
     /// logits row [vocab] at the last position of `tokens`.
     fn oracle_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
+
+    /// Switch this backend to paged KV allocation (bounded block pool +
+    /// optional prefix cache). Returns whether paged KV is supported;
+    /// the default `false` keeps dense per-session caches and tells the
+    /// engine to skip block-projection admission.
+    fn configure_paged(&mut self, _opts: &PagedKvOptions) -> bool {
+        false
+    }
+
+    /// Pool/prefix counters, when paged KV is configured and supported.
+    fn kv_pool_stats(&self) -> Option<KvPoolStats> {
+        None
+    }
+
+    /// Drop cached prefixes (engine drain/shutdown). With no live
+    /// sessions, pool residency after this call must be zero — anything
+    /// else is a block leak.
+    fn kv_reset(&mut self) {}
+}
+
+/// Prefill `toks` on paged storage: adopt the longest cached prefix,
+/// compute the remaining positions through `step` (the same
+/// single-position kernel decode uses, so prefill is bitwise identical
+/// to a cold dense prefill by construction), and publish the prompt's
+/// full chunks for future reuse. Block reservation happens here, outside
+/// the banded kernels.
+fn paged_prefill(
+    ps: &mut PagedState,
+    n_layers: usize,
+    toks: &[u32],
+    step: &mut dyn FnMut(&mut PagedKvCache, u32) -> Vec<f32>,
+) -> Result<(PagedKvCache, usize, Vec<f32>)> {
+    let (mut cache, reused) = ps.start_session(n_layers, toks);
+    let mut logits = Vec::new();
+    for &tok in &toks[reused..] {
+        cache.reserve_append(&mut || ps.alloc_evicting())?;
+        logits = step(&mut cache, tok);
+    }
+    ps.register(toks, &cache);
+    Ok((cache, reused, logits))
 }
 
 /// A session may only be advanced by the backend kind that created it —
@@ -159,12 +221,16 @@ fn ensure_owner(session: &Session, artifact: &'static str) -> Result<()> {
 /// (stacked caches + wrapped tokens) and the rows already resolved to
 /// per-row errors (foreign owner, non-KV state).
 struct KvBatch<'a> {
-    /// per-row slots; `None` rows are filled from the stacked forward
+    /// per-row slots; `None` rows are filled from the stacked forwards
     out: Vec<Option<Result<Vec<f32>>>>,
-    /// original row index of each stacked cache
+    /// original row index of each stacked dense cache
     rows: Vec<usize>,
     caches: Vec<&'a mut KvCache>,
     toks: Vec<u32>,
+    /// original row index of each stacked paged cache
+    paged_rows: Vec<usize>,
+    paged_caches: Vec<&'a mut PagedKvCache>,
+    paged_toks: Vec<u32>,
 }
 
 /// Validate a batch row by row — owner tag and KV state, the same checks
@@ -184,6 +250,9 @@ fn partition_kv_batch<'a>(
         rows: Vec::with_capacity(sessions.len()),
         caches: Vec::with_capacity(sessions.len()),
         toks: Vec::with_capacity(sessions.len()),
+        paged_rows: Vec::new(),
+        paged_caches: Vec::new(),
+        paged_toks: Vec::new(),
     };
     for (i, session) in sessions.iter_mut().enumerate() {
         if let Err(e) = ensure_owner(session, artifact) {
@@ -196,6 +265,11 @@ fn partition_kv_batch<'a>(
                 batch.toks.push(tokens[i].rem_euclid(vocab as i32) as u32);
                 batch.caches.push(cache);
             }
+            SessionState::Paged(cache) => {
+                batch.paged_rows.push(i);
+                batch.paged_toks.push(tokens[i].rem_euclid(vocab as i32) as u32);
+                batch.paged_caches.push(cache);
+            }
             _ => {
                 batch.out[i] = Some(Err(anyhow::anyhow!(
                     "session does not belong to a KV-cached backend"
@@ -204,6 +278,43 @@ fn partition_kv_batch<'a>(
         }
     }
     batch
+}
+
+/// Reserve tail blocks for every paged row in the batch, splitting it
+/// into the rows the stacked pass can advance and the rows resolved to a
+/// per-row error right here (pool pressure with nothing evictable, or a
+/// paged session reaching a backend with no pool — per-row isolation:
+/// the failed session is left unadvanced, the rest stack normally).
+/// Allocation stays outside the banded kernels, on the engine thread.
+#[allow(clippy::type_complexity)]
+fn reserve_paged_rows<'a>(
+    paged: &mut Option<PagedState>,
+    out: &mut [Option<Result<Vec<f32>>>],
+    rows: Vec<usize>,
+    caches: Vec<&'a mut PagedKvCache>,
+    toks: Vec<u32>,
+) -> (Vec<usize>, Vec<&'a mut PagedKvCache>, Vec<u32>) {
+    let mut ready_rows = Vec::with_capacity(rows.len());
+    let mut ready_caches = Vec::with_capacity(rows.len());
+    let mut ready_toks = Vec::with_capacity(rows.len());
+    for ((i, cache), tok) in rows.into_iter().zip(caches).zip(toks) {
+        match paged {
+            Some(ps) => match cache.reserve_append(&mut || ps.alloc_evicting()) {
+                Ok(()) => {
+                    ready_rows.push(i);
+                    ready_caches.push(cache);
+                    ready_toks.push(tok);
+                }
+                Err(pressure) => out[i] = Some(Err(anyhow::Error::new(pressure))),
+            },
+            None => {
+                out[i] = Some(Err(anyhow::anyhow!(
+                    "paged session on a backend without a configured pool"
+                )));
+            }
+        }
+    }
+    (ready_rows, ready_caches, ready_toks)
 }
 
 /// Byte tokens arrive as i32 from the client surface; wrap defensively
@@ -248,11 +359,18 @@ impl ServedModel {
 pub struct DenseBackend {
     cfg: Config,
     params: FlatStore,
+    /// `Some` after `configure_paged`: sessions live on pool blocks and
+    /// share prompt prefixes through the trie.
+    paged: Option<PagedState>,
 }
 
 impl DenseBackend {
     pub fn new(cfg: Config, params: FlatStore) -> DenseBackend {
-        DenseBackend { cfg, params }
+        DenseBackend {
+            cfg,
+            params,
+            paged: None,
+        }
     }
 }
 
@@ -263,26 +381,50 @@ impl ModelBackend for DenseBackend {
 
     fn prefill(&mut self, tokens: &[i32]) -> Result<Prefill> {
         anyhow::ensure!(!tokens.is_empty(), "prefill needs at least one token");
-        let toks = as_vocab_tokens(self.cfg.vocab, tokens);
-        let mut cache = KvCache::new(self.cfg.n_layers);
-        let logits = model_forward_prefill(&self.cfg, &self.params, &mut cache, &toks);
+        let artifact = self.artifact();
+        let DenseBackend { cfg, params, paged } = self;
+        let toks = as_vocab_tokens(cfg.vocab, tokens);
+        if let Some(ps) = paged {
+            let (cache, reused, logits) =
+                paged_prefill(ps, cfg.n_layers, &toks, &mut |cache, tok| {
+                    model_forward_step(cfg, params, cache, tok)
+                })?;
+            return Ok(Prefill {
+                session: Session {
+                    state: SessionState::Paged(cache),
+                    backend: artifact,
+                },
+                logits,
+                reused,
+            });
+        }
+        let mut cache = KvCache::new(cfg.n_layers);
+        let logits = model_forward_prefill(cfg, params, &mut cache, &toks);
         Ok(Prefill {
             session: Session {
                 state: SessionState::Kv(cache),
-                backend: self.artifact(),
+                backend: artifact,
             },
             logits,
+            reused: 0,
         })
     }
 
     fn decode_step(&mut self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
         ensure_owner(session, self.artifact())?;
-        let SessionState::Kv(cache) = &mut session.state else {
-            anyhow::bail!("session does not belong to a KV-cached backend");
-        };
-        let tok = token.rem_euclid(self.cfg.vocab as i32) as u32;
-        let logits = model_forward_step(&self.cfg, &self.params, cache, tok);
-        Ok(logits)
+        let DenseBackend { cfg, params, paged } = self;
+        let tok = token.rem_euclid(cfg.vocab as i32) as u32;
+        match &mut session.state {
+            SessionState::Kv(cache) => Ok(model_forward_step(cfg, params, cache, tok)),
+            SessionState::Paged(cache) => {
+                let Some(ps) = paged else {
+                    anyhow::bail!("paged session on a backend without a configured pool");
+                };
+                cache.reserve_append(&mut || ps.alloc_evicting())?;
+                Ok(model_forward_step(cfg, params, cache, tok))
+            }
+            _ => anyhow::bail!("session does not belong to a KV-cached backend"),
+        }
     }
 
     fn decode_batch(
@@ -290,20 +432,26 @@ impl ModelBackend for DenseBackend {
         sessions: &mut [&mut Session],
         tokens: &[i32],
     ) -> Vec<Result<Vec<f32>>> {
+        let artifact = self.artifact();
+        let DenseBackend { cfg, params, paged } = self;
         let KvBatch {
             mut out,
             rows,
             mut caches,
             toks,
-        } = partition_kv_batch(self.artifact(), self.cfg.vocab, sessions, tokens);
-        let logits = model_forward_step_batch(
-            &self.cfg,
-            &self.params,
-            &mut caches,
-            &toks,
-            &Pool::auto(),
-        );
+            paged_rows,
+            paged_caches,
+            paged_toks,
+        } = partition_kv_batch(artifact, cfg.vocab, sessions, tokens);
+        let logits = model_forward_step_batch(cfg, params, &mut caches, &toks, &Pool::auto());
         for (i, row) in rows.into_iter().zip(logits) {
+            out[i] = Some(Ok(row));
+        }
+        let (ready_rows, mut ready_caches, ready_toks) =
+            reserve_paged_rows(paged, &mut out, paged_rows, paged_caches, paged_toks);
+        let logits =
+            model_forward_step_batch(cfg, params, &mut ready_caches, &ready_toks, &Pool::auto());
+        for (i, row) in ready_rows.into_iter().zip(logits) {
             out[i] = Some(Ok(row));
         }
         resolve_rows(out)
@@ -314,6 +462,21 @@ impl ModelBackend for DenseBackend {
         let toks = as_vocab_tokens(self.cfg.vocab, tokens);
         let all = model_forward(&self.cfg, &self.params, &toks, toks.len());
         Ok(all[(toks.len() - 1) * self.cfg.vocab..].to_vec())
+    }
+
+    fn configure_paged(&mut self, opts: &PagedKvOptions) -> bool {
+        self.paged = Some(PagedState::new(opts, self.cfg.d_model));
+        true
+    }
+
+    fn kv_pool_stats(&self) -> Option<KvPoolStats> {
+        self.paged.as_ref().map(PagedState::stats)
+    }
+
+    fn kv_reset(&mut self) {
+        if let Some(ps) = &mut self.paged {
+            ps.reset();
+        }
     }
 }
 
@@ -340,6 +503,8 @@ pub struct CompressedBackend {
     cfg: Config,
     params: FlatStore,
     blocks: Vec<BlockFactors>,
+    /// `Some` after `configure_paged` (see [`DenseBackend::paged`]).
+    paged: Option<PagedState>,
 }
 
 impl CompressedBackend {
@@ -358,6 +523,7 @@ impl CompressedBackend {
             cfg,
             params,
             blocks,
+            paged: None,
         })
     }
 }
@@ -369,33 +535,62 @@ impl ModelBackend for CompressedBackend {
 
     fn prefill(&mut self, tokens: &[i32]) -> Result<Prefill> {
         anyhow::ensure!(!tokens.is_empty(), "prefill needs at least one token");
-        let toks = as_vocab_tokens(self.cfg.vocab, tokens);
-        let mut cache = KvCache::new(self.cfg.n_layers);
-        let logits = model_lr_forward_prefill(
-            &self.cfg,
-            &self.params,
-            &self.blocks,
-            &mut cache,
-            &toks,
-        );
+        let artifact = self.artifact();
+        let CompressedBackend {
+            cfg,
+            params,
+            blocks,
+            paged,
+        } = self;
+        let toks = as_vocab_tokens(cfg.vocab, tokens);
+        if let Some(ps) = paged {
+            let (cache, reused, logits) =
+                paged_prefill(ps, cfg.n_layers, &toks, &mut |cache, tok| {
+                    model_lr_forward_step(cfg, params, blocks, cache, tok)
+                })?;
+            return Ok(Prefill {
+                session: Session {
+                    state: SessionState::Paged(cache),
+                    backend: artifact,
+                },
+                logits,
+                reused,
+            });
+        }
+        let mut cache = KvCache::new(cfg.n_layers);
+        let logits = model_lr_forward_prefill(cfg, params, blocks, &mut cache, &toks);
         Ok(Prefill {
             session: Session {
                 state: SessionState::Kv(cache),
-                backend: self.artifact(),
+                backend: artifact,
             },
             logits,
+            reused: 0,
         })
     }
 
     fn decode_step(&mut self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
         ensure_owner(session, self.artifact())?;
-        let SessionState::Kv(cache) = &mut session.state else {
-            anyhow::bail!("session does not belong to a KV-cached backend");
-        };
-        let tok = token.rem_euclid(self.cfg.vocab as i32) as u32;
-        let logits =
-            model_lr_forward_step(&self.cfg, &self.params, &self.blocks, cache, tok);
-        Ok(logits)
+        let CompressedBackend {
+            cfg,
+            params,
+            blocks,
+            paged,
+        } = self;
+        let tok = token.rem_euclid(cfg.vocab as i32) as u32;
+        match &mut session.state {
+            SessionState::Kv(cache) => {
+                Ok(model_lr_forward_step(cfg, params, blocks, cache, tok))
+            }
+            SessionState::Paged(cache) => {
+                let Some(ps) = paged else {
+                    anyhow::bail!("paged session on a backend without a configured pool");
+                };
+                cache.reserve_append(&mut || ps.alloc_evicting())?;
+                Ok(model_lr_forward_step(cfg, params, blocks, cache, tok))
+            }
+            _ => anyhow::bail!("session does not belong to a KV-cached backend"),
+        }
     }
 
     fn decode_batch(
@@ -403,21 +598,38 @@ impl ModelBackend for CompressedBackend {
         sessions: &mut [&mut Session],
         tokens: &[i32],
     ) -> Vec<Result<Vec<f32>>> {
+        let artifact = self.artifact();
+        let CompressedBackend {
+            cfg,
+            params,
+            blocks,
+            paged,
+        } = self;
         let KvBatch {
             mut out,
             rows,
             mut caches,
             toks,
-        } = partition_kv_batch(self.artifact(), self.cfg.vocab, sessions, tokens);
+            paged_rows,
+            paged_caches,
+            paged_toks,
+        } = partition_kv_batch(artifact, cfg.vocab, sessions, tokens);
+        let logits =
+            model_lr_forward_step_batch(cfg, params, blocks, &mut caches, &toks, &Pool::auto());
+        for (i, row) in rows.into_iter().zip(logits) {
+            out[i] = Some(Ok(row));
+        }
+        let (ready_rows, mut ready_caches, ready_toks) =
+            reserve_paged_rows(paged, &mut out, paged_rows, paged_caches, paged_toks);
         let logits = model_lr_forward_step_batch(
-            &self.cfg,
-            &self.params,
-            &self.blocks,
-            &mut caches,
-            &toks,
+            cfg,
+            params,
+            blocks,
+            &mut ready_caches,
+            &ready_toks,
             &Pool::auto(),
         );
-        for (i, row) in rows.into_iter().zip(logits) {
+        for (i, row) in ready_rows.into_iter().zip(logits) {
             out[i] = Some(Ok(row));
         }
         resolve_rows(out)
@@ -429,6 +641,21 @@ impl ModelBackend for CompressedBackend {
         let all =
             model_lr_forward(&self.cfg, &self.params, &self.blocks, &toks, toks.len());
         Ok(all[(toks.len() - 1) * self.cfg.vocab..].to_vec())
+    }
+
+    fn configure_paged(&mut self, opts: &PagedKvOptions) -> bool {
+        self.paged = Some(PagedState::new(opts, self.cfg.d_model));
+        true
+    }
+
+    fn kv_pool_stats(&self) -> Option<KvPoolStats> {
+        self.paged.as_ref().map(PagedState::stats)
+    }
+
+    fn kv_reset(&mut self) {
+        if let Some(ps) = &mut self.paged {
+            ps.reset();
+        }
     }
 }
 
@@ -530,6 +757,7 @@ impl ModelBackend for SyntheticBackend {
                 backend: self.artifact(),
             },
             logits: self.logits_after(last),
+            reused: 0,
         })
     }
 
@@ -776,5 +1004,104 @@ mod tests {
         let cfg = Config::builtin("tiny").unwrap();
         let params = init_params(&cfg, &mut Rng::new(3));
         assert!(CompressedBackend::new(cfg, params, Vec::new()).is_err());
+    }
+
+    fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn paged_backend_matches_dense_bitwise_and_reuses_prefixes() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(11));
+        let mut plain = DenseBackend::new(cfg.clone(), params.clone());
+        let mut paged = DenseBackend::new(cfg, params);
+        assert!(paged.configure_paged(&PagedKvOptions {
+            blocks: 64,
+            block_tokens: 4,
+            prefix_cache: true,
+        }));
+        let prompt: Vec<i32> = "shared system prompt!".bytes().map(|b| b as i32).collect();
+        let cold = plain.prefill(&prompt).unwrap();
+        let first = paged.prefill(&prompt).unwrap();
+        assert_eq!(first.reused, 0, "cold trie cannot reuse");
+        assert!(bits_eq(&first.logits, &cold.logits), "paged prefill diverged");
+        let second = paged.prefill(&prompt).unwrap();
+        assert_eq!(second.reused, 20, "all full chunks of the 21-token prompt reused");
+        assert!(bits_eq(&second.logits, &cold.logits), "shared-prefix prefill diverged");
+        // decode stays bitwise equal to the dense path
+        let mut s_plain = cold.session;
+        let mut s_paged = second.session;
+        for t in [b'a' as i32, b'b' as i32, b'c' as i32, b'd' as i32, b'e' as i32] {
+            let want = plain.decode_step(&mut s_plain, t).unwrap();
+            let got = paged.decode_step(&mut s_paged, t).unwrap();
+            assert!(bits_eq(&got, &want), "paged decode diverged on token {t}");
+        }
+        assert_eq!(s_paged.len(), s_plain.len());
+        assert!(s_paged.kv_blocks() > 0);
+        let stats = paged.kv_pool_stats().unwrap();
+        assert!(stats.in_use > 0 && stats.peak <= stats.capacity);
+        drop(s_paged);
+        drop(first.session);
+        paged.kv_reset();
+        assert_eq!(paged.kv_pool_stats().unwrap().in_use, 0, "blocks leaked after drain");
+    }
+
+    #[test]
+    fn paged_decode_batch_rows_match_decode_step_bitwise() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(12));
+        let mut be = DenseBackend::new(cfg.clone(), params.clone());
+        let mut twin = DenseBackend::new(cfg, params);
+        assert!(be.configure_paged(&PagedKvOptions {
+            blocks: 64,
+            block_tokens: 2,
+            prefix_cache: true,
+        }));
+        assert!(twin.configure_paged(&PagedKvOptions {
+            blocks: 64,
+            block_tokens: 2,
+            prefix_cache: true,
+        }));
+        let prompts = ["common lead-in, tail A", "common lead-in, tail B", "zzz"];
+        let mut batched: Vec<Session> = prompts
+            .iter()
+            .map(|p| {
+                let toks: Vec<i32> = p.bytes().map(|b| b as i32).collect();
+                be.prefill(&toks).unwrap().session
+            })
+            .collect();
+        let mut solo: Vec<Session> = prompts
+            .iter()
+            .map(|p| {
+                let toks: Vec<i32> = p.bytes().map(|b| b as i32).collect();
+                twin.prefill(&toks).unwrap().session
+            })
+            .collect();
+        for step in 0..5i32 {
+            let toks: Vec<i32> = (0..3).map(|r| r * 13 + step * 3 + 65).collect();
+            let mut refs: Vec<&mut Session> = batched.iter_mut().collect();
+            let rows = be.decode_batch(&mut refs, &toks);
+            for (r, row) in rows.into_iter().enumerate() {
+                let row = row.expect("paged batched row succeeds");
+                let want = twin.decode_step(&mut solo[r], toks[r]).unwrap();
+                assert!(bits_eq(&row, &want), "paged row {r} diverged at step {step}");
+            }
+        }
+        drop(batched);
+        drop(solo);
+        be.kv_reset();
+        twin.kv_reset();
+        assert_eq!(be.kv_pool_stats().unwrap().in_use, 0);
+        assert_eq!(twin.kv_pool_stats().unwrap().in_use, 0);
+    }
+
+    #[test]
+    fn synthetic_backend_declines_paged_kv() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let mut be = SyntheticBackend::new(cfg);
+        assert!(!be.configure_paged(&PagedKvOptions::default()));
+        assert!(be.kv_pool_stats().is_none());
+        be.kv_reset(); // default no-op
     }
 }

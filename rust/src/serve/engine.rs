@@ -27,10 +27,12 @@
 //!                                   next decode iteration
 
 use super::backend::{ModelBackend, ServedModel, Session};
+use super::kv_pool::PagedKvOptions;
 use super::metrics::ServeMetrics;
 use super::request::{
     CancelReason, Event, GenParams, GenRequest, GenResponse, SubmitError, TokenEvent,
 };
+use crate::model::paged_kv::KvPressure;
 use crate::model::Config;
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -87,6 +89,16 @@ pub struct ServerOptions {
     /// backend, where admitting one request per ~tick would cap the
     /// admission rate far below the arrival rate.
     pub prefill_per_tick: usize,
+    /// Paged KV memory: `Some` asks the backend to store sessions in a
+    /// bounded pool of fixed-size KV blocks (with an optional radix
+    /// prefix cache), and makes admission **memory-aware** — a request
+    /// whose projected block footprint (clamped prompt + full token
+    /// budget, per layer) can never fit the pool is rejected with
+    /// `CancelReason::KvPressure` (HTTP 429), and one that merely does
+    /// not fit *right now* waits in the queue until committed blocks
+    /// free up. Backends that do not support paging (e.g. synthetic)
+    /// decline and the engine falls back to dense per-session caches.
+    pub paged_kv: Option<PagedKvOptions>,
 }
 
 impl Default for ServerOptions {
@@ -98,6 +110,7 @@ impl Default for ServerOptions {
             decode: DecodeMode::Cached,
             max_context: 0,
             prefill_per_tick: 1,
+            paged_kv: None,
         }
     }
 }
@@ -448,6 +461,9 @@ struct Slot {
     /// logits row ([vocab]) the next token is sampled from — seeded by
     /// prefill at admission, refreshed by each decode step
     next_logits: Vec<f32>,
+    /// KV blocks this request was admitted against (0 when the backend
+    /// is not paged); released back to the committed budget on retire
+    kv_projection: usize,
 }
 
 fn new_slot(req: GenRequest) -> Slot {
@@ -467,7 +483,32 @@ fn new_slot(req: GenRequest) -> Slot {
         ttft: None,
         session: None,
         next_logits: Vec::new(),
+        kv_projection: 0,
     }
+}
+
+/// Worst-case KV block footprint of a request on a paged backend: one
+/// block chain per layer covering the clamped prompt plus the full
+/// generation budget. An upper bound — prefix-cache hits *share* blocks
+/// rather than allocating fresh ones — so admitting only while the sum
+/// of projections fits the pool guarantees every block reservation made
+/// on behalf of an admitted request succeeds (trie-only blocks are
+/// evictable on demand and sharing only lowers physical residency).
+fn kv_block_projection(
+    req: &GenRequest,
+    options: &ServerOptions,
+    cfg: &Config,
+    pk: &PagedKvOptions,
+) -> usize {
+    let mut plen = req.prompt.len().max(1); // empty prompts decode from " "
+    if options.max_context > 0 {
+        plen = plen.min(options.max_context);
+    }
+    let mut ctx = plen + req.params.max_new_tokens;
+    if options.max_context > 0 {
+        ctx = ctx.min(options.max_context);
+    }
+    cfg.n_layers * ctx.div_ceil(pk.block_tokens.max(1))
 }
 
 /// The reason a live request should be retired early, if any.
@@ -508,12 +549,23 @@ fn decode_loop(
     } else {
         options.max_batch
     };
+    // paged KV is opt-in *and* backend-negotiated: a backend that cannot
+    // page (synthetic) declines, and admission stays queue-depth-only
+    let paged: Option<PagedKvOptions> = match (&options.paged_kv, options.decode) {
+        (Some(pk), DecodeMode::Cached) if backend.configure_paged(pk) => Some(pk.clone()),
+        _ => None,
+    };
+    // KV blocks promised to admitted-but-not-yet-retired requests; the
+    // admission invariant `kv_committed ≤ pool capacity` is what makes
+    // block reservations on behalf of admitted work infallible
+    let mut kv_committed = 0usize;
     crate::log_debug!(
-        "serve: decoding '{}' via '{}' ({:?}, max_batch {max_batch}, max_queue {})",
+        "serve: decoding '{}' via '{}' ({:?}, max_batch {max_batch}, max_queue {}, paged {})",
         cfg.name,
         backend.artifact(),
         options.decode,
         shared.max_queue,
+        paged.is_some(),
     );
 
     let mut slots: Vec<Slot> = Vec::new();
@@ -558,6 +610,29 @@ fn decode_loop(
         let mut prefills_this_tick = 0usize;
         while slots.len() < max_batch {
             let Some(req) = pending.pop_front() else { break };
+            // memory-aware admission (paged backends): project the
+            // request's worst-case block footprint before seating it
+            let kv_projection = match &paged {
+                Some(pk) if req.params.max_new_tokens > 0 => {
+                    let needed = kv_block_projection(&req, options, cfg, pk);
+                    if needed > pk.blocks {
+                        // can never fit the pool, at any load: reject now
+                        // instead of stranding it in the queue forever
+                        shared.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                        metrics.kv_pressure_rejected += 1;
+                        retire_cancelled(req, CancelReason::KvPressure, metrics);
+                        continue;
+                    }
+                    if kv_committed + needed > pk.blocks {
+                        // fits eventually, not now: keep it queued (still
+                        // counted in queue_depth) until blocks free up
+                        pending.push_front(req);
+                        break;
+                    }
+                    needed
+                }
+                _ => 0,
+            };
             shared.queue_depth.fetch_sub(1, Ordering::Relaxed);
             if req.params.max_new_tokens == 0 {
                 let latency = req.submitted.elapsed().as_secs_f64();
@@ -576,6 +651,8 @@ fn decode_loop(
             // prefill pass (or one oracle recompute) — and hold the
             // resulting logits row for this iteration's sampling
             let mut slot = new_slot(req);
+            slot.kv_projection = kv_projection;
+            kv_committed += kv_projection;
             // the context cap clamps the *prompt* too (keeping the most
             // recent tokens, the old decode window's semantics): it must
             // bound the prefill cost and the KV allocation themselves,
@@ -585,28 +662,48 @@ fn decode_loop(
                 slot.tokens.drain(..cut);
                 slot.prompt_len = slot.tokens.len();
             }
+            let mut reused = 0usize;
             let seeded = match options.decode {
                 DecodeMode::Cached => backend.prefill(&slot.tokens).map(|pf| {
                     slot.session = Some(pf.session);
+                    reused = pf.reused;
                     pf.logits
                 }),
                 DecodeMode::Recompute => backend.oracle_logits(&slot.tokens),
             };
             match seeded {
                 Ok(logits) => {
-                    metrics.prefill_tokens += slot.prompt_len;
+                    // prefix-cache hits skip the shared span's forward
+                    // passes entirely; count only the work actually done
+                    metrics.prefill_tokens += slot.prompt_len - reused;
+                    if paged.as_ref().is_some_and(|pk| pk.prefix_cache) {
+                        metrics.prefix_lookups += 1;
+                        if reused > 0 {
+                            metrics.prefix_hits += 1;
+                        }
+                        metrics.prefix_tokens_reused += reused;
+                    }
                     slot.next_logits = logits;
                     slots.push(slot);
                 }
                 Err(e) => {
                     // per-request failure: retire this request and keep
                     // serving the others — one bad prompt must not take
-                    // down the worker
+                    // down the worker. Block-pool exhaustion mid-prefill
+                    // (possible only if the projection under-counted)
+                    // surfaces as KvPressure so clients see 429, not 500.
+                    kv_committed -= slot.kv_projection;
+                    let reason = if e.downcast_ref::<KvPressure>().is_some() {
+                        metrics.kv_pressure_rejected += 1;
+                        CancelReason::KvPressure
+                    } else {
+                        CancelReason::Backend
+                    };
                     crate::log_warn!(
                         "serve: prefill failed for request {}: {e:#}",
                         slot.req.id
                     );
-                    retire_cancelled(slot.req, CancelReason::Backend, metrics);
+                    retire_cancelled(slot.req, reason, metrics);
                 }
             }
             // bounded prefill attempts per iteration (default 1): a burst
@@ -645,6 +742,7 @@ fn decode_loop(
             match cancel_reason(&slots[row].req) {
                 Some(reason) => {
                     let slot = slots.swap_remove(row);
+                    kv_committed -= slot.kv_projection;
                     retire_cancelled(slot.req, reason, metrics);
                 }
                 None => row += 1,
@@ -662,7 +760,8 @@ fn decode_loop(
         // phase 1 — sample each slot's held logits and stream the token;
         // rows that just finished (token budget, stop sequence, context
         // cap) retire without spending any more backend work
-        let mut retire: Vec<(usize, bool)> = Vec::new();
+        // rows to retire: None = completed normally, Some = cancelled
+        let mut retire: Vec<(usize, Option<CancelReason>)> = Vec::new();
         let mut advance = vec![false; slots.len()];
         for (row, slot) in slots.iter_mut().enumerate() {
             let params = &slot.req.params;
@@ -695,7 +794,7 @@ fn decode_loop(
             let capped =
                 options.max_context > 0 && slot.tokens.len() >= options.max_context;
             if generated >= params.max_new_tokens || stopped || capped {
-                retire.push((row, false));
+                retire.push((row, None));
             } else {
                 advance[row] = true;
             }
@@ -722,7 +821,7 @@ fn decode_loop(
                     let (Some(&tok), Some(session)) =
                         (slot.tokens.last(), slot.session.as_mut())
                     else {
-                        retire.push((row, true));
+                        retire.push((row, Some(CancelReason::Backend)));
                         continue;
                     };
                     rows.push(row);
@@ -754,12 +853,20 @@ fn decode_loop(
                                 slots[row].next_logits = logits;
                             }
                             Err(e) => {
-                                // per-request failure: retire only this slot
+                                // per-request failure: retire only this
+                                // slot; mid-decode pool exhaustion (only
+                                // possible if the admission projection
+                                // under-counted) stays typed as pressure
+                                let reason = if e.downcast_ref::<KvPressure>().is_some() {
+                                    CancelReason::KvPressure
+                                } else {
+                                    CancelReason::Backend
+                                };
                                 crate::log_warn!(
                                     "serve: decode step failed for request {}: {e:#}",
                                     slots[row].req.id
                                 );
-                                retire.push((row, true));
+                                retire.push((row, Some(reason)));
                             }
                         }
                     }
@@ -780,7 +887,7 @@ fn decode_loop(
                                 "serve: decode step failed for request {}: {e:#}",
                                 slot.req.id
                             );
-                            retire.push((row, true));
+                            retire.push((row, Some(CancelReason::Backend)));
                         }
                     }
                 }
@@ -794,14 +901,23 @@ fn decode_loop(
                 .map(|s| s.session.as_ref().map_or(0, Session::kv_bytes))
                 .sum::<usize>() as f64,
         );
+        // paged-pool residency in blocks (shared prefix blocks counted
+        // once — the pool tracks physical, not per-session, occupancy)
+        if let Some(stats) = backend.kv_pool_stats() {
+            metrics.kv_blocks_in_use.push(stats.in_use as f64);
+        }
         // phase-1 (finished) and phase-2 (backend-failed) retirements
         // interleave, so order by row and swap_remove highest-first so
         // earlier indices stay valid
         retire.sort_unstable_by_key(|&(row, _)| row);
-        for &(row, backend_failed) in retire.iter().rev() {
+        for &(row, cancelled) in retire.iter().rev() {
             let slot = slots.swap_remove(row);
-            if backend_failed {
-                retire_cancelled(slot.req, CancelReason::Backend, metrics);
+            kv_committed -= slot.kv_projection;
+            if let Some(reason) = cancelled {
+                if reason == CancelReason::KvPressure {
+                    metrics.kv_pressure_rejected += 1;
+                }
+                retire_cancelled(slot.req, reason, metrics);
                 continue;
             }
             let latency = slot.req.submitted.elapsed().as_secs_f64();
@@ -815,6 +931,21 @@ fn decode_loop(
                 ttft,
                 latency,
             }));
+        }
+    }
+    // drain complete: every slot has retired, so after dropping the
+    // prefix trie the pool must be empty — anything still in use is a
+    // leaked block (surfaced, not panicked, so metrics reach the caller)
+    if paged.is_some() {
+        backend.kv_reset();
+        if let Some(stats) = backend.kv_pool_stats() {
+            metrics.kv_blocks_capacity = stats.capacity;
+            metrics.kv_peak_blocks = stats.peak;
+            metrics.kv_evictions = stats.evictions;
+            metrics.kv_blocks_leaked = stats.in_use;
+            if stats.in_use > 0 {
+                crate::log_warn!("serve: {} kv block(s) leaked at drain", stats.in_use);
+            }
         }
     }
     metrics.wall_secs = start.elapsed().as_secs_f64();
@@ -931,6 +1062,143 @@ mod tests {
         assert_eq!(o.decode, DecodeMode::Cached);
         assert_eq!(o.max_context, 0); // unlimited unless the operator caps it
         assert_eq!(o.prefill_per_tick, 1); // historical one-prefill-per-tick
+        assert!(o.paged_kv.is_none()); // dense per-session caches unless opted in
+    }
+
+    #[test]
+    fn paged_pool_never_fits_rejects_with_kv_pressure() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(5));
+        // 4 blocks × 4 tokens across 2 layers = at most 8 tokens of
+        // context per layer chain; a 9-byte prompt + 64 new tokens can
+        // never fit, so admission must 429 it instead of queueing forever
+        let server = Server::start_with(
+            cfg.clone(),
+            ServedModel::Dense(params),
+            ServerOptions {
+                paged_kv: Some(PagedKvOptions {
+                    blocks: 4,
+                    block_tokens: 4,
+                    prefix_cache: true,
+                }),
+                ..Default::default()
+            },
+        );
+        let doomed = server
+            .submit(
+                "the cat sat on the mat",
+                GenParams {
+                    max_new_tokens: 64,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        match doomed.wait_timeout(Duration::from_secs(60)) {
+            Err(WaitError::Cancelled(CancelReason::KvPressure)) => {}
+            other => panic!("expected KvPressure cancellation, got {other:?}"),
+        }
+        // a small request still fits the same pool and completes
+        let ok = server
+            .submit(
+                "hi",
+                GenParams {
+                    max_new_tokens: 4,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+            .wait_timeout(Duration::from_secs(60))
+            .unwrap();
+        assert_eq!(ok.tokens_generated, 4);
+        let m = server.shutdown();
+        assert_eq!(m.kv_pressure_rejected, 1);
+        assert_eq!(m.cancelled, 1);
+        assert_eq!(m.kv_blocks_leaked, 0, "blocks leaked at drain");
+        assert!(m.kv_peak_blocks <= m.kv_blocks_capacity);
+        assert_eq!(m.kv_blocks_capacity, 4);
+    }
+
+    #[test]
+    fn paged_pressure_queues_until_blocks_free_up() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(6));
+        // each request projects 2 layers × ceil((7+8)/8) = 4 blocks; a
+        // 9-block pool seats two at a time, so six requests must take
+        // turns through memory-aware admission — and all still finish
+        let server = Server::start_with(
+            cfg.clone(),
+            ServedModel::Dense(params),
+            ServerOptions {
+                paged_kv: Some(PagedKvOptions {
+                    blocks: 9,
+                    block_tokens: 8,
+                    prefix_cache: true,
+                }),
+                prefill_per_tick: 0,
+                ..Default::default()
+            },
+        );
+        let completions: Vec<_> = (0..6)
+            .map(|i| {
+                server
+                    .submit(
+                        &format!("press {i}"),
+                        GenParams {
+                            max_new_tokens: 8,
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap()
+            })
+            .collect();
+        for c in completions {
+            let resp = c.wait_timeout(Duration::from_secs(60)).unwrap();
+            assert_eq!(resp.tokens_generated, 8);
+        }
+        let m = server.shutdown();
+        assert_eq!(m.latencies.len(), 6);
+        assert_eq!(m.kv_pressure_rejected, 0);
+        assert_eq!(m.kv_blocks_leaked, 0);
+        // committed admission keeps physical residency within the pool
+        assert!(m.kv_peak_blocks <= 9, "peak {} > capacity", m.kv_peak_blocks);
+    }
+
+    #[test]
+    fn synthetic_backend_declines_paging_and_serves_normally() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let backend_cfg = cfg.clone();
+        let server = Server::with_backend(
+            cfg,
+            ServerOptions {
+                paged_kv: Some(PagedKvOptions {
+                    blocks: 1, // would reject everything if enforced
+                    block_tokens: 1,
+                    prefix_cache: true,
+                }),
+                ..Default::default()
+            },
+            move || {
+                Ok(Box::new(super::super::backend::SyntheticBackend::new(
+                    backend_cfg,
+                )))
+            },
+        );
+        let resp = server
+            .submit(
+                "synthetic ignores paging",
+                GenParams {
+                    max_new_tokens: 6,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+            .wait_timeout(Duration::from_secs(60))
+            .unwrap();
+        assert_eq!(resp.tokens_generated, 6);
+        let m = server.shutdown();
+        // the backend declined: no pool, no kv accounting
+        assert_eq!(m.kv_blocks_capacity, 0);
+        assert_eq!(m.kv_pressure_rejected, 0);
     }
 
     #[test]

@@ -499,8 +499,14 @@ fn blocking_completion(stream: &mut TcpStream, completion: Completion, shared: &
         Err(WaitError::Cancelled(CancelReason::Backend)) => {
             error_reply(stream, shared, 500, "backend failed")
         }
+        Err(WaitError::Cancelled(CancelReason::KvPressure)) => {
+            // the same shed-and-retry contract as a full admission queue
+            error_reply(stream, shared, 429, "kv pool pressure: retry later")
+        }
         Err(WaitError::Cancelled(CancelReason::Client)) => Outcome::ClientGone,
         Err(WaitError::Disconnected) => error_reply(stream, shared, 503, "server shutting down"),
+        // wait() is unbounded and never times out; arm kept for exhaustiveness
+        Err(WaitError::TimedOut) => error_reply(stream, shared, 503, "server shutting down"),
     }
 }
 
@@ -526,6 +532,11 @@ fn stream_completion(
                 error_reply(stream, shared, 408, "deadline expired before the first token")
             }
             CancelReason::Backend => error_reply(stream, shared, 500, "backend failed"),
+            CancelReason::KvPressure => {
+                // rejected by memory-aware admission before any token:
+                // same shed-and-retry contract as a full admission queue
+                error_reply(stream, shared, 429, "kv pool pressure: retry later")
+            }
             CancelReason::Client => Outcome::ClientGone,
         };
     }

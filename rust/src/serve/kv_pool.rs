@@ -1,0 +1,456 @@
+//! Serving-side paged-KV state: the bounded block pool plus the radix
+//! prefix cache that lets sessions sharing a prompt prefix reuse KV
+//! blocks copy-on-write.
+//!
+//! The storage substrate ([`KvBlockPool`], [`PagedKvCache`]) lives in
+//! `model::paged_kv`; this module owns the *policy*:
+//!
+//! - [`PrefixCache`] — a radix trie keyed by exact `block_tokens`-sized
+//!   token chunks. A node holds one full `Arc<KvBlock>` per layer for its
+//!   chunk. Lookup walks the longest cached prefix; insert publishes a
+//!   freshly prefilled session's full chunks. Only *full* blocks are ever
+//!   published, so shared blocks are never written (see the COW notes in
+//!   `model::paged_kv`). `BTreeMap` keys make iteration — and therefore
+//!   LRU tie-breaking and eviction — deterministic.
+//! - LRU eviction on unreferenced nodes: when the pool is exhausted,
+//!   [`PagedState::alloc_evicting`] peels trie leaves whose blocks no
+//!   live session references (`Arc::strong_count == 1`), oldest
+//!   `last_use` first, until the allocation fits or nothing evictable
+//!   remains. Recency is a logical clock — no wall-clock reads.
+//! - [`PagedState`] — what a backend holds when paged KV is configured:
+//!   the pool, the optional trie, and the session bootstrap
+//!   ([`PagedState::start_session`]) that adopts the longest cached
+//!   prefix while always leaving at least the final prompt token to be
+//!   computed (prefill must produce next-token logits).
+//!
+//! Reuse is bitwise-exact by construction: adopted blocks hold the very
+//! rows a cold prefill of the same prefix would write (RoPE'd keys
+//! depend only on token and absolute position), and the decode kernels
+//! are the same generics either way.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::model::paged_kv::{KvBlock, KvBlockPool, KvPressure, PagedKvCache};
+
+/// Paged-KV configuration carried by `ServerOptions::paged_kv`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PagedKvOptions {
+    /// Total block budget for the pool (all layers, all sessions).
+    pub blocks: usize,
+    /// KV rows per block.
+    pub block_tokens: usize,
+    /// Whether to run the radix prefix cache on top of the pool.
+    pub prefix_cache: bool,
+}
+
+impl Default for PagedKvOptions {
+    fn default() -> Self {
+        PagedKvOptions {
+            blocks: 256,
+            block_tokens: 16,
+            prefix_cache: true,
+        }
+    }
+}
+
+/// Point-in-time pool/prefix counters a paged backend reports up to the
+/// engine for `ServeMetrics`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvPoolStats {
+    /// Pool block budget.
+    pub capacity: usize,
+    /// Blocks currently resident.
+    pub in_use: usize,
+    /// High-water mark of `in_use`.
+    pub peak: usize,
+    /// KV rows per block.
+    pub block_tokens: usize,
+    /// Prefix nodes evicted under pool pressure so far.
+    pub evictions: u64,
+    /// Prefix trie nodes currently cached.
+    pub trie_nodes: usize,
+}
+
+/// One trie node: the per-layer KV blocks covering one token chunk, the
+/// children keyed by the next chunk, and a logical-clock recency stamp.
+#[derive(Debug)]
+struct PrefixNode {
+    /// `blocks[l]` is layer `l`'s full block for this chunk.
+    blocks: Vec<Arc<KvBlock>>,
+    children: BTreeMap<Vec<u32>, PrefixNode>,
+    last_use: u64,
+}
+
+/// Radix trie over `block_tokens`-sized token chunks.
+#[derive(Debug)]
+pub struct PrefixCache {
+    children: BTreeMap<Vec<u32>, PrefixNode>,
+    block_tokens: usize,
+    /// Logical clock: bumped on every node touch, so `last_use` values
+    /// are unique and LRU ordering is total and deterministic.
+    clock: u64,
+    evictions: u64,
+}
+
+impl PrefixCache {
+    pub fn new(block_tokens: usize) -> Self {
+        PrefixCache {
+            children: BTreeMap::new(),
+            block_tokens,
+            clock: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Walk the longest cached prefix of `tokens`, at most `max_chunks`
+    /// chunks deep. Returns one entry per matched chunk: that chunk's
+    /// per-layer block handles. Touched nodes are stamped most-recent.
+    pub fn lookup(&mut self, tokens: &[u32], max_chunks: usize) -> Vec<Vec<Arc<KvBlock>>> {
+        let clock = &mut self.clock;
+        let mut level = &mut self.children;
+        let mut out = Vec::new();
+        for chunk in tokens.chunks_exact(self.block_tokens).take(max_chunks) {
+            match level.get_mut(chunk) {
+                Some(node) => {
+                    *clock += 1;
+                    node.last_use = *clock;
+                    out.push(node.blocks.clone());
+                    level = &mut node.children;
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Publish every full chunk of `tokens` whose KV rows `cache` holds
+    /// (a just-prefilled session). Existing nodes keep their blocks —
+    /// identical prefixes produce bitwise-identical rows, so first-writer
+    /// wins is exact, and it avoids churning `Arc`s other sessions hold.
+    pub fn insert(&mut self, tokens: &[u32], cache: &PagedKvCache) {
+        let bt = self.block_tokens;
+        debug_assert_eq!(bt, cache.block_tokens(), "trie/cache block size mismatch");
+        let full_chunks = std::cmp::min(tokens.len(), cache.len) / bt;
+        let clock = &mut self.clock;
+        let mut level = &mut self.children;
+        for (ci, chunk) in tokens.chunks_exact(bt).take(full_chunks).enumerate() {
+            *clock += 1;
+            let stamp = *clock;
+            let node = level.entry(chunk.to_vec()).or_insert_with(|| PrefixNode {
+                blocks: Vec::new(),
+                children: BTreeMap::new(),
+                last_use: 0,
+            });
+            node.last_use = stamp;
+            if node.blocks.is_empty() {
+                node.blocks = cache
+                    .layers
+                    .iter()
+                    .map(|l| Arc::clone(&l.blocks[ci]))
+                    .collect();
+            }
+            level = &mut node.children;
+        }
+    }
+
+    /// Evict the least-recently-used *unreferenced leaf* node, dropping
+    /// its block handles back to the pool. A node is evictable when it
+    /// has no children (longer cached prefixes depend on it) and no live
+    /// session holds its blocks (`Arc::strong_count == 1`). Returns
+    /// whether a node was evicted; repeated calls peel the tree inward.
+    pub fn evict_lru(&mut self) -> bool {
+        fn find_min(
+            level: &BTreeMap<Vec<u32>, PrefixNode>,
+            path: &mut Vec<Vec<u32>>,
+            best: &mut Option<(u64, Vec<Vec<u32>>)>,
+        ) {
+            for (key, node) in level {
+                path.push(key.clone());
+                let evictable = node.children.is_empty()
+                    && node.blocks.iter().all(|b| Arc::strong_count(b) == 1);
+                if evictable && best.as_ref().map_or(true, |(t, _)| node.last_use < *t) {
+                    *best = Some((node.last_use, path.clone()));
+                }
+                find_min(&node.children, path, best);
+                path.pop();
+            }
+        }
+        let mut best = None;
+        find_min(&self.children, &mut Vec::new(), &mut best);
+        let Some((_, path)) = best else {
+            return false;
+        };
+        let Some((last, parents)) = path.split_last() else {
+            return false;
+        };
+        let mut level = &mut self.children;
+        for key in parents {
+            match level.get_mut(key) {
+                Some(node) => level = &mut node.children,
+                None => return false,
+            }
+        }
+        if level.remove(last).is_some() {
+            self.evictions += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Drop every cached prefix (drain/reset). Blocks still referenced by
+    /// live sessions survive through their own `Arc`s.
+    pub fn clear(&mut self) {
+        self.children.clear();
+    }
+
+    /// Nodes evicted under pressure so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Prefix nodes currently cached.
+    pub fn nodes(&self) -> usize {
+        fn count(level: &BTreeMap<Vec<u32>, PrefixNode>) -> usize {
+            level.values().map(|n| 1 + count(&n.children)).sum()
+        }
+        count(&self.children)
+    }
+}
+
+/// Everything a backend holds when paged KV is configured: the bounded
+/// block pool and (optionally) the prefix trie.
+#[derive(Debug)]
+pub struct PagedState {
+    pub pool: KvBlockPool,
+    pub trie: Option<PrefixCache>,
+}
+
+impl PagedState {
+    pub fn new(opts: &PagedKvOptions, d_model: usize) -> Self {
+        PagedState {
+            pool: KvBlockPool::new(opts.blocks, opts.block_tokens, d_model),
+            trie: opts
+                .prefix_cache
+                .then(|| PrefixCache::new(opts.block_tokens)),
+        }
+    }
+
+    /// Allocate one block, evicting LRU unreferenced prefix nodes until
+    /// the allocation fits or nothing evictable remains.
+    pub fn alloc_evicting(&mut self) -> Result<Arc<KvBlock>, KvPressure> {
+        loop {
+            match self.pool.try_alloc() {
+                Ok(b) => return Ok(b),
+                Err(pressure) => match &mut self.trie {
+                    Some(trie) if trie.evict_lru() => continue,
+                    _ => return Err(pressure),
+                },
+            }
+        }
+    }
+
+    /// Start a session cache for `tokens`: adopt the longest cached
+    /// prefix, capped so at least the final prompt token is computed
+    /// (prefill must run ≥1 real step to produce next-token logits).
+    /// Returns the seeded cache and the number of prompt positions whose
+    /// KV rows were reused.
+    pub fn start_session(&mut self, n_layers: usize, tokens: &[u32]) -> (PagedKvCache, usize) {
+        let bt = self.pool.block_tokens();
+        let mut cache = PagedKvCache::new(n_layers, bt);
+        let mut reused = 0;
+        if let Some(trie) = &mut self.trie {
+            if tokens.len() > 1 {
+                let max_chunks = (tokens.len() - 1) / bt;
+                let hit = trie.lookup(tokens, max_chunks);
+                if !hit.is_empty() {
+                    for (l, layer) in cache.layers.iter_mut().enumerate() {
+                        let per_layer: Vec<Arc<KvBlock>> =
+                            hit.iter().map(|chunk| Arc::clone(&chunk[l])).collect();
+                        layer.adopt_prefix(&per_layer);
+                    }
+                    reused = hit.len() * bt;
+                    cache.len = reused;
+                }
+            }
+        }
+        (cache, reused)
+    }
+
+    /// Publish a just-prefilled session's full prompt chunks for reuse.
+    pub fn register(&mut self, tokens: &[u32], cache: &PagedKvCache) {
+        if let Some(trie) = &mut self.trie {
+            trie.insert(tokens, cache);
+        }
+    }
+
+    /// Drop all cached prefixes (engine drain). Pool residency left after
+    /// this — with no live sessions — is a leak.
+    pub fn reset(&mut self) {
+        if let Some(trie) = &mut self.trie {
+            trie.clear();
+        }
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        KvPoolStats {
+            capacity: self.pool.capacity(),
+            in_use: self.pool.in_use(),
+            peak: self.pool.peak(),
+            block_tokens: self.pool.block_tokens(),
+            evictions: self.trie.as_ref().map_or(0, |t| t.evictions()),
+            trie_nodes: self.trie.as_ref().map_or(0, |t| t.nodes()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::{KvSeq, KvSeqStore};
+
+    const D: usize = 2;
+
+    fn state(blocks: usize, bt: usize, prefix: bool) -> PagedState {
+        PagedState::new(
+            &PagedKvOptions {
+                blocks,
+                block_tokens: bt,
+                prefix_cache: prefix,
+            },
+            D,
+        )
+    }
+
+    /// Prefill `toks` into a fresh session cache (deterministic fake KV
+    /// rows keyed by token/position/layer), registering it in the trie.
+    fn prefill(ps: &mut PagedState, n_layers: usize, toks: &[u32]) -> (PagedKvCache, usize) {
+        let (mut cache, reused) = ps.start_session(n_layers, toks);
+        for (pos, &t) in toks.iter().enumerate().skip(reused) {
+            cache
+                .reserve_append(&mut || ps.alloc_evicting())
+                .expect("pool has room (tests size it generously)");
+            for l in 0..n_layers {
+                let x = t as f32 + pos as f32 * 0.25 + l as f32 * 100.0;
+                cache.layers[l].push_row(&[x; D], &[-x; D]);
+            }
+            cache.advance();
+        }
+        ps.register(toks, &cache);
+        (cache, reused)
+    }
+
+    #[test]
+    fn lookup_misses_then_hits_shared_chunks() {
+        let mut ps = state(64, 2, true);
+        let toks: Vec<u32> = vec![5, 6, 7, 8, 9]; // 2 full chunks + 1 tail token
+        let (first, reused) = prefill(&mut ps, 2, &toks);
+        assert_eq!(reused, 0, "cold trie cannot reuse");
+
+        let (second, reused) = ps.start_session(2, &toks);
+        assert_eq!(reused, 4, "both full chunks reused; tail token computed");
+        assert_eq!(second.len, 4);
+        for l in 0..2 {
+            for j in 0..4 {
+                assert_eq!(
+                    second.layers[l].k_row(j, D),
+                    first.layers[l].k_row(j, D),
+                    "layer {l} row {j} is the same physical block"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reuse_always_leaves_a_tail_token() {
+        let mut ps = state(64, 2, true);
+        let toks: Vec<u32> = vec![1, 2, 3, 4]; // prompt length = 2 blocks exactly
+        prefill(&mut ps, 1, &toks);
+        let (_, reused) = ps.start_session(1, &toks);
+        assert_eq!(reused, 2, "final block not reused: the last token must be computed");
+        let (_, reused_single) = ps.start_session(1, &[1]);
+        assert_eq!(reused_single, 0, "single-token prompt never reuses");
+    }
+
+    #[test]
+    fn divergent_suffixes_share_only_the_common_prefix() {
+        let mut ps = state(64, 2, true);
+        prefill(&mut ps, 1, &[1, 2, 3, 4, 5]);
+        let (cache, reused) = ps.start_session(1, &[1, 2, 9, 9, 9]);
+        assert_eq!(reused, 2, "only the first chunk matches");
+        assert_eq!(cache.len, 2);
+        let (_, reused) = ps.start_session(1, &[7, 7, 7, 7, 7]);
+        assert_eq!(reused, 0, "no shared prefix, no reuse");
+    }
+
+    #[test]
+    fn prefix_cache_off_never_reuses() {
+        let mut ps = state(64, 2, false);
+        let toks: Vec<u32> = vec![1, 2, 3, 4, 5];
+        prefill(&mut ps, 1, &toks);
+        let (_, reused) = ps.start_session(1, &toks);
+        assert_eq!(reused, 0);
+        assert_eq!(ps.stats().trie_nodes, 0);
+    }
+
+    #[test]
+    fn eviction_skips_referenced_blocks_and_peels_lru_first() {
+        let mut ps = state(64, 2, true);
+        let (held, _) = prefill(&mut ps, 1, &[1, 2, 3, 4, 5]); // chunks [1,2],[3,4] held alive
+        prefill(&mut ps, 1, &[8, 9, 8, 9, 8]); // chunks [8,9],[8,9]
+        // drop the second session; its trie nodes become unreferenced
+        assert_eq!(ps.stats().trie_nodes, 4);
+        let trie = ps.trie.as_mut().unwrap();
+        assert!(trie.evict_lru(), "unreferenced leaf evicts");
+        assert!(trie.evict_lru(), "parent became an unreferenced leaf");
+        assert!(
+            !trie.evict_lru(),
+            "remaining nodes are held by the live session"
+        );
+        assert_eq!(ps.stats().evictions, 2);
+        assert_eq!(ps.stats().trie_nodes, 2);
+        drop(held);
+        assert!(ps.trie.as_mut().unwrap().evict_lru(), "now evictable");
+    }
+
+    #[test]
+    fn alloc_evicting_reclaims_trie_blocks_under_pressure() {
+        // pool of 4 blocks, 1 layer: a 5-token prompt (bt=2) uses 3.
+        let mut ps = state(4, 2, true);
+        let (cache, _) = prefill(&mut ps, 1, &[1, 2, 3, 4, 5]);
+        drop(cache); // trie still holds 2 full-chunk blocks; 1 block freed
+        assert_eq!(ps.stats().in_use, 2);
+        let a = ps.alloc_evicting().unwrap();
+        let b = ps.alloc_evicting().unwrap();
+        assert_eq!(ps.stats().in_use, 4, "pool full: 2 trie blocks + 2 fresh");
+        let c = ps.alloc_evicting().unwrap(); // evicts the LRU prefix node
+        let d = ps.alloc_evicting().unwrap(); // evicts the last prefix node
+        assert_eq!(ps.stats().evictions, 2);
+        assert_eq!(ps.stats().trie_nodes, 0);
+        assert_eq!(ps.stats().in_use, 4);
+        assert!(ps.alloc_evicting().is_err(), "nothing left to evict");
+        drop((a, b, c, d));
+        assert_eq!(ps.stats().in_use, 0, "no leaks after drops");
+    }
+
+    #[test]
+    fn reset_clears_trie_and_frees_unreferenced_blocks() {
+        let mut ps = state(64, 2, true);
+        let (cache, _) = prefill(&mut ps, 2, &[1, 2, 3, 4, 5]);
+        drop(cache);
+        assert!(ps.stats().in_use > 0, "trie keeps full chunks resident");
+        ps.reset();
+        assert_eq!(ps.stats().trie_nodes, 0);
+        assert_eq!(ps.stats().in_use, 0, "reset releases the last references");
+    }
+
+    #[test]
+    fn stats_surface_pool_counters() {
+        let mut ps = state(8, 4, true);
+        let s = ps.stats();
+        assert_eq!((s.capacity, s.in_use, s.peak, s.block_tokens), (8, 0, 0, 4));
+        let _b = ps.alloc_evicting().unwrap();
+        let s = ps.stats();
+        assert_eq!((s.in_use, s.peak), (1, 1));
+    }
+}

@@ -6,6 +6,92 @@
 
 use crate::util::stats::{mean, percentile};
 
+/// A per-tick sample series with bounded memory. The engine pushes one
+/// sample per decode iteration, forever — an unbounded `Vec` is a slow
+/// memory leak on a long-lived server. `BoundedSeries` keeps every
+/// `stride`-th sample; when the retained buffer hits its cap it drops
+/// every other retained sample and doubles the stride, so arbitrarily
+/// long runs keep an evenly spaced sketch at fixed memory. The running
+/// `peak()` and the total sample `count()` are tracked outside the
+/// buffer and stay **exact** regardless of decimation.
+#[derive(Clone, Debug)]
+pub struct BoundedSeries {
+    samples: Vec<f64>,
+    /// retain every `stride`-th pushed sample
+    stride: usize,
+    /// pushes to skip before the next retained sample
+    skip: usize,
+    /// total samples ever pushed (exact)
+    count: usize,
+    /// exact running maximum over every pushed sample (0.0 floor, like
+    /// the nonnegative residency/byte series this tracks)
+    peak: f64,
+    cap: usize,
+}
+
+/// Default retained-sample cap (~32KiB of f64 per series).
+const SERIES_CAP: usize = 4096;
+
+impl Default for BoundedSeries {
+    fn default() -> Self {
+        BoundedSeries::with_cap(SERIES_CAP)
+    }
+}
+
+impl BoundedSeries {
+    pub fn with_cap(cap: usize) -> Self {
+        BoundedSeries {
+            samples: Vec::new(),
+            stride: 1,
+            skip: 0,
+            count: 0,
+            peak: 0.0,
+            cap: cap.max(2),
+        }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.count += 1;
+        if v > self.peak {
+            self.peak = v;
+        }
+        if self.skip > 0 {
+            self.skip -= 1;
+            return;
+        }
+        if self.samples.len() >= self.cap {
+            let mut i = 0usize;
+            self.samples.retain(|_| {
+                let keep = i % 2 == 0;
+                i += 1;
+                keep
+            });
+            self.stride *= 2;
+        }
+        self.samples.push(v);
+        self.skip = self.stride - 1;
+    }
+
+    /// Exact maximum over every sample ever pushed (0.0 when empty).
+    pub fn peak(&self) -> f64 {
+        self.peak
+    }
+
+    /// Exact number of samples ever pushed.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// The retained (possibly decimated) sketch, in push order.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
     pub ttfts: Vec<f64>,
@@ -28,8 +114,30 @@ pub struct ServeMetrics {
     /// or oracle recomputes in `DecodeMode::Recompute`)
     pub decode_tokens: usize,
     /// KV-cache bytes resident across all live sessions, sampled once per
-    /// decode iteration (all zeros in `DecodeMode::Recompute`)
-    pub cache_bytes: Vec<f64>,
+    /// decode iteration (all zeros in `DecodeMode::Recompute`); bounded
+    /// by decimation, with `peak_cache_bytes()` exact
+    pub cache_bytes: BoundedSeries,
+    /// KV pool blocks resident, sampled once per decode iteration (empty
+    /// unless paged KV is active)
+    pub kv_blocks_in_use: BoundedSeries,
+    /// KV pool block budget (0 = paged KV inactive; gates the kv summary)
+    pub kv_blocks_capacity: usize,
+    /// high-water mark of pool residency over the run (exact)
+    pub kv_peak_blocks: usize,
+    /// blocks still resident after drain + prefix-cache reset — with no
+    /// live sessions this must be 0; anything else is a block leak
+    pub kv_blocks_leaked: usize,
+    /// prefix nodes evicted to reclaim blocks under pool pressure
+    pub kv_evictions: u64,
+    /// requests retired with `CancelReason::KvPressure` (projected block
+    /// footprint can never fit the pool)
+    pub kv_pressure_rejected: usize,
+    /// prefix-cache lookups (one per paged prefill when the cache is on)
+    pub prefix_lookups: usize,
+    /// subset of `prefix_lookups` that reused at least one cached block
+    pub prefix_hits: usize,
+    /// prompt positions skipped at prefill via prefix reuse
+    pub prefix_tokens_reused: usize,
     /// stacked `decode_batch` calls the engine issued (zero in
     /// `DecodeMode::Recompute`, which advances slots via the oracle)
     pub decode_batches: usize,
@@ -79,10 +187,20 @@ impl ServeMetrics {
         mean(&self.queue_depths)
     }
 
-    /// Peak KV-cache residency over the run (0.0 when nothing was cached).
+    /// Peak KV-cache residency over the run (0.0 when nothing was
+    /// cached). Exact even after the series decimates.
     pub fn peak_cache_bytes(&self) -> f64 {
-        // aasvd-lint: allow(float-reduce): running max, order-insensitive; metrics summary only
-        self.cache_bytes.iter().cloned().fold(0.0, f64::max)
+        self.cache_bytes.peak()
+    }
+
+    /// Fraction of prefix-cache lookups that reused cached blocks (0.0
+    /// with no lookups).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.prefix_lookups as f64
+        }
     }
 
     /// Mean rows per stacked `decode_batch` call (0.0 with no calls).
@@ -158,6 +276,27 @@ impl ServeMetrics {
             self.decode_tokens,
             self.decode_batches,
         );
+        // the kv line only exists when paged KV was configured, so dense
+        // per-session runs keep the historical summary
+        if self.kv_blocks_capacity > 0 {
+            let hit_rate = if self.prefix_lookups == 0 {
+                String::from("n/a")
+            } else {
+                format!("{:.0}%", 100.0 * self.prefix_hit_rate())
+            };
+            s.push_str(&format!(
+                " | kv: blocks_peak={}/{} leaked={} evictions={} pressure_rejected={} \
+                 prefix_hits={}/{} ({hit_rate}) prefill_saved={}",
+                self.kv_peak_blocks,
+                self.kv_blocks_capacity,
+                self.kv_blocks_leaked,
+                self.kv_evictions,
+                self.kv_pressure_rejected,
+                self.prefix_hits,
+                self.prefix_lookups,
+                self.prefix_tokens_reused,
+            ));
+        }
         // the HTTP line only exists when a front door actually served
         // traffic, so in-process-only runs keep the historical summary
         if self.http_connections > 0 {
@@ -263,16 +402,73 @@ mod tests {
 
     #[test]
     fn prefill_decode_and_cache_counters_surface_in_summary() {
-        let m = ServeMetrics {
+        let mut m = ServeMetrics {
             prefill_tokens: 12,
             decode_tokens: 34,
-            cache_bytes: vec![1024.0, 4096.0, 2048.0],
             ..Default::default()
         };
+        for v in [1024.0, 4096.0, 2048.0] {
+            m.cache_bytes.push(v);
+        }
         assert!((m.peak_cache_bytes() - 4096.0).abs() < 1e-9);
         let s = m.summary();
         assert!(s.contains("prefill_toks=12"), "{s}");
         assert!(s.contains("decode_toks=34"), "{s}");
         assert!(s.contains("kv_peak=4.0KiB"), "{s}");
+    }
+
+    #[test]
+    fn bounded_series_stays_bounded_with_exact_peak_and_count() {
+        let mut s = BoundedSeries::with_cap(8);
+        for i in 0..10_000usize {
+            // peak lands mid-run, between retained strides
+            let v = if i == 7_321 { 1e9 } else { (i % 97) as f64 };
+            s.push(v);
+        }
+        assert_eq!(s.count(), 10_000);
+        assert!(s.samples().len() <= 8, "retained {} > cap", s.samples().len());
+        assert!((s.peak() - 1e9).abs() < 1e-9, "peak must survive decimation");
+        assert!(!s.is_empty());
+        let empty = BoundedSeries::default();
+        assert!(empty.is_empty());
+        assert_eq!(empty.peak(), 0.0);
+    }
+
+    #[test]
+    fn bounded_series_keeps_an_evenly_spaced_sketch() {
+        let mut s = BoundedSeries::with_cap(4);
+        for i in 0..16 {
+            s.push(i as f64);
+        }
+        // retained samples stay in push order and start at the first push
+        let kept = s.samples();
+        assert_eq!(kept.first(), Some(&0.0));
+        assert!(kept.windows(2).all(|w| w[0] < w[1]), "{kept:?}");
+    }
+
+    #[test]
+    fn kv_counters_surface_only_when_paged() {
+        let quiet = ServeMetrics::default();
+        assert!(!quiet.summary().contains("| kv:"), "{}", quiet.summary());
+        let m = ServeMetrics {
+            kv_blocks_capacity: 64,
+            kv_peak_blocks: 48,
+            kv_blocks_leaked: 0,
+            kv_evictions: 3,
+            kv_pressure_rejected: 2,
+            prefix_lookups: 10,
+            prefix_hits: 7,
+            prefix_tokens_reused: 448,
+            ..Default::default()
+        };
+        assert!((m.prefix_hit_rate() - 0.7).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("kv: blocks_peak=48/64"), "{s}");
+        assert!(s.contains("leaked=0"), "{s}");
+        assert!(s.contains("evictions=3"), "{s}");
+        assert!(s.contains("pressure_rejected=2"), "{s}");
+        assert!(s.contains("prefix_hits=7/10 (70%)"), "{s}");
+        assert!(s.contains("prefill_saved=448"), "{s}");
+        assert!(!s.contains("NaN"), "{s}");
     }
 }

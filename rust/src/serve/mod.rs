@@ -86,6 +86,7 @@ pub mod backend;
 pub mod batcher;
 pub mod engine;
 pub mod http;
+pub mod kv_pool;
 pub mod metrics;
 pub mod request;
 
@@ -95,6 +96,7 @@ pub use backend::{
 };
 pub use engine::{Completion, DecodeMode, Server, ServerOptions, Submitter, WaitError};
 pub use http::{HttpOptions, HttpServer};
+pub use kv_pool::{KvPoolStats, PagedKvOptions, PagedState, PrefixCache};
 pub use metrics::ServeMetrics;
 pub use request::{
     CancelReason, Event, GenParams, GenRequest, GenResponse, SubmitError, TokenEvent,

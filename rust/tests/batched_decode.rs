@@ -11,8 +11,8 @@ use aasvd::model::init::init_params;
 use aasvd::model::lowrank::{exact_factors, BlockFactors};
 use aasvd::model::{Config, FlatStore};
 use aasvd::serve::{
-    CompressedBackend, DecodeMode, DenseBackend, GenParams, ModelBackend, Prefill,
-    ServedModel, Server, ServerOptions, Session, SyntheticBackend,
+    CompressedBackend, DecodeMode, DenseBackend, GenParams, ModelBackend, PagedKvOptions,
+    Prefill, ServedModel, Server, ServerOptions, Session, SyntheticBackend,
 };
 use aasvd::util::pool::Pool;
 use aasvd::util::rng::Rng;
@@ -93,7 +93,7 @@ fn check_batched_rows(
     let mut sessions_a: Vec<Session> = Vec::with_capacity(b);
     let mut sessions_b: Vec<Session> = Vec::with_capacity(b);
     for p in &prefixes {
-        let Prefill { session, logits } = batched.prefill(p).unwrap();
+        let Prefill { session, logits, .. } = batched.prefill(p).unwrap();
         let twin = seq.prefill(p).unwrap();
         assert_bits_eq(&logits, &twin.logits, &format!("{label}: prefill"));
         sessions_a.push(session);
@@ -129,6 +129,83 @@ fn decode_batch_matches_decode_step_and_oracle_bitwise() {
         for b in [1usize, 2, 8] {
             for threads in [1usize, 4] {
                 check_batched_rows(label, make.as_ref(), b, threads);
+            }
+        }
+    }
+}
+
+/// Paged twin of `check_batched_rows`: sessions live in a paged block
+/// pool with a shared block-aligned prompt prefix (rows past the first
+/// adopt cached blocks instead of recomputing), and every batched row
+/// must still match an *unpaged* per-session `decode_step` twin bitwise.
+fn check_paged_batched_rows(
+    label: &str,
+    make: &dyn Fn() -> Box<dyn ModelBackend>,
+    b: usize,
+    threads: usize,
+) {
+    let mut paged = make();
+    assert!(
+        paged.configure_paged(&PagedKvOptions {
+            blocks: 256,
+            block_tokens: 4,
+            prefix_cache: true,
+        }),
+        "{label}: backend must accept paging"
+    );
+    let mut seq = make(); // unpaged twin
+    let mut sessions_a: Vec<Session> = Vec::with_capacity(b);
+    let mut sessions_b: Vec<Session> = Vec::with_capacity(b);
+    for r in 0..b {
+        // 24-byte shared span = 6 full blocks, then a distinct tail
+        let prefix: Vec<i32> = format!("shared paged span prompt {r}")
+            .bytes()
+            .map(|x| x as i32)
+            .collect();
+        let pf = paged.prefill(&prefix).unwrap();
+        let twin = seq.prefill(&prefix).unwrap();
+        assert_bits_eq(&pf.logits, &twin.logits, &format!("{label}: paged prefill {r}"));
+        if r == 0 {
+            assert_eq!(pf.reused, 0, "{label}: row 0 is a cold prefill");
+        } else {
+            assert!(pf.reused >= 24, "{label}: row {r} reused {} tokens", pf.reused);
+        }
+        sessions_a.push(pf.session);
+        sessions_b.push(twin.session);
+    }
+    for step in 0..6usize {
+        let toks: Vec<i32> = (0..b)
+            .map(|r| ((r * 37 + step * 13 + 7) % 256) as i32)
+            .collect();
+        let rows = Pool::exact(threads).install(|| {
+            let mut refs: Vec<&mut Session> = sessions_a.iter_mut().collect();
+            paged.decode_batch(&mut refs, &toks)
+        });
+        assert_eq!(rows.len(), b, "{label}: one result row per session");
+        for (r, row) in rows.into_iter().enumerate() {
+            let what = format!("{label} paged B={b} t={threads} row {r} step {step}");
+            let row = row.unwrap_or_else(|e| panic!("{what}: {e}"));
+            let want = seq.decode_step(&mut sessions_b[r], toks[r]).unwrap();
+            assert_bits_eq(&row, &want, &what);
+        }
+    }
+    // every block returns to the pool once sessions drop + trie resets
+    drop(sessions_a);
+    paged.kv_reset();
+    let stats = paged.kv_pool_stats().unwrap();
+    assert_eq!(stats.in_use, 0, "{label}: blocks leaked after drain");
+    assert!(stats.peak <= stats.capacity, "{label}: pool overran its budget");
+}
+
+#[test]
+fn paged_decode_batch_matches_unpaged_decode_step_bitwise() {
+    for (label, make) in backend_factories() {
+        if label == "synthetic" {
+            continue; // declines paging (no KV cache to page)
+        }
+        for b in [1usize, 2, 8] {
+            for threads in [1usize, 4] {
+                check_paged_batched_rows(label, make.as_ref(), b, threads);
             }
         }
     }

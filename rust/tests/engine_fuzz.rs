@@ -18,10 +18,11 @@
 //! after completion); the invariants hold either way, which is exactly
 //! what makes them fuzzable.
 
+use aasvd::model::init::init_params;
 use aasvd::model::Config;
 use aasvd::serve::{
-    DecodeMode, Event, GenParams, GenResponse, ModelBackend, Prefill, Server,
-    ServerOptions, Session, SubmitError, SyntheticBackend,
+    CancelReason, DecodeMode, DenseBackend, Event, GenParams, GenResponse, ModelBackend,
+    PagedKvOptions, Prefill, Server, ServerOptions, Session, SubmitError, SyntheticBackend,
 };
 use aasvd::util::rng::Rng;
 use std::time::Duration;
@@ -93,6 +94,7 @@ fn randomized_schedules_preserve_engine_invariants() {
             poll_interval: Duration::from_millis(1),
             decode: mode,
             max_context: [0, 0, 0, 4, 16][rng.below(5)],
+            ..Default::default()
         };
         let backend_cfg = cfg.clone();
         let server = Server::with_backend(cfg, options, move || {
@@ -215,5 +217,159 @@ fn randomized_schedules_preserve_engine_invariants() {
         if mode == DecodeMode::Recompute {
             assert_eq!(metrics.decode_batches, 0, "schedule {schedule}");
         }
+    }
+}
+
+/// Paged-KV storm: random schedules against a real dense backend over tiny
+/// block pools (some deliberately too small for the largest requests, so
+/// the never-fits path fires and clients see `CancelReason::KvPressure`).
+/// Per schedule, assert the lifecycle and memory invariants the paged
+/// engine must keep under churn:
+///
+/// - every accepted request gets **exactly one** terminal event — a
+///   KvPressure rejection included — and no token precedes a rejection;
+/// - every engine-side KvPressure retirement reached exactly one client;
+/// - the pool is hard-bounded (`kv_peak_blocks <= capacity`) and fully
+///   drained at shutdown (`kv_blocks_leaked == 0`: residency returned to
+///   zero after the last request retired);
+/// - submission counts balance: n = completed + cancelled + rejected.
+#[test]
+fn paged_schedules_bound_the_pool_and_leak_no_blocks() {
+    let mut rng = Rng::new(0x9A6E_D5EE);
+    for schedule in 0..40u32 {
+        let cfg = Config::builtin("tiny").unwrap();
+        // tiny pools; with block_tokens = 4 and 2 layers a request needs
+        // 2 * ceil((prompt + max_new) / 4) blocks, so the 4-block pool
+        // rejects anything past 8 total tokens while 24 admits everything
+        let blocks = [4, 6, 8, 12, 24][rng.below(5)];
+        let paged = PagedKvOptions {
+            blocks,
+            block_tokens: 4,
+            prefix_cache: rng.below(2) == 0,
+        };
+        let options = ServerOptions {
+            max_batch: 1 + rng.below(4),
+            max_queue: 32,
+            poll_interval: Duration::from_millis(1),
+            decode: DecodeMode::Cached,
+            paged_kv: Some(paged),
+            ..Default::default()
+        };
+        let backend_cfg = cfg.clone();
+        let server = Server::with_backend(cfg, options, move || {
+            let params = init_params(&backend_cfg, &mut Rng::new(0xA5_5EED));
+            Ok(Box::new(DenseBackend::new(backend_cfg, params)) as Box<dyn ModelBackend>)
+        });
+
+        let n_requests = 4 + rng.below(8);
+        let mut accepted = Vec::new();
+        let mut rejected = 0usize;
+        for _ in 0..n_requests {
+            // half the prompts share an 8-char prefix (two full blocks),
+            // so the radix cache sees real reuse whenever it is enabled
+            let tail: String = (0..1 + rng.below(8))
+                .map(|_| char::from(b'a' + rng.below(24) as u8))
+                .collect();
+            let prompt = if rng.below(2) == 0 {
+                format!("sharedpf{tail}")
+            } else {
+                tail
+            };
+            let params = GenParams {
+                max_new_tokens: 1 + rng.below(12),
+                temperature: 0.0,
+                ..Default::default()
+            };
+            match server.submit(&prompt, params) {
+                Ok(completion) => accepted.push(completion),
+                Err(SubmitError::Overloaded) => rejected += 1,
+                Err(e) => panic!("schedule {schedule}: unexpected submit error: {e}"),
+            }
+        }
+
+        let mut completed = 0usize;
+        let mut cancelled = 0usize;
+        let mut pressure_seen = 0usize;
+        for completion in accepted {
+            let mut terminals = 0usize;
+            let mut streamed = String::new();
+            let mut done: Option<GenResponse> = None;
+            while let Some(event) = completion.next_event() {
+                match event {
+                    Event::Token(t) => {
+                        assert_eq!(
+                            terminals, 0,
+                            "schedule {schedule}: token after a terminal event"
+                        );
+                        assert_eq!(
+                            t.index,
+                            streamed.chars().count(),
+                            "schedule {schedule}: token indices must be contiguous"
+                        );
+                        streamed.push(t.ch);
+                    }
+                    Event::Done(resp) => {
+                        terminals += 1;
+                        done = Some(resp);
+                    }
+                    Event::Cancelled { reason, .. } => {
+                        terminals += 1;
+                        if reason == CancelReason::KvPressure {
+                            assert!(
+                                streamed.is_empty(),
+                                "schedule {schedule}: KvPressure must reject before any token"
+                            );
+                            pressure_seen += 1;
+                        }
+                    }
+                }
+            }
+            assert_eq!(
+                terminals, 1,
+                "schedule {schedule}: exactly one terminal event per request"
+            );
+            match done {
+                Some(resp) => {
+                    completed += 1;
+                    assert_eq!(
+                        resp.text, streamed,
+                        "schedule {schedule}: final text vs streamed tokens"
+                    );
+                }
+                None => cancelled += 1,
+            }
+        }
+
+        let metrics = server.shutdown();
+        assert_eq!(metrics.rejected, rejected, "schedule {schedule}: rejected");
+        assert_eq!(
+            metrics.latencies.len(),
+            completed,
+            "schedule {schedule}: completed"
+        );
+        assert_eq!(metrics.cancelled, cancelled, "schedule {schedule}: cancelled");
+        assert_eq!(
+            n_requests,
+            completed + cancelled + metrics.rejected,
+            "schedule {schedule}: every submission has exactly one outcome"
+        );
+        assert_eq!(
+            metrics.kv_pressure_rejected, pressure_seen,
+            "schedule {schedule}: every KvPressure retirement reached exactly one client"
+        );
+        // the pool is hard-bounded and fully drained
+        assert_eq!(
+            metrics.kv_blocks_capacity, blocks,
+            "schedule {schedule}: pool capacity"
+        );
+        assert!(
+            metrics.kv_peak_blocks <= blocks,
+            "schedule {schedule}: peak residency {} exceeded the {blocks}-block budget",
+            metrics.kv_peak_blocks
+        );
+        assert_eq!(
+            metrics.kv_blocks_leaked, 0,
+            "schedule {schedule}: blocks still resident after drain"
+        );
     }
 }

@@ -10,10 +10,12 @@ use aasvd::model::init::init_params;
 use aasvd::model::lowrank::{
     exact_factors, model_lr_forward, model_lr_forward_step, BlockFactors,
 };
+use aasvd::model::paged_kv::{KvBlockPool, PagedKvCache};
 use aasvd::model::{Config, FlatStore};
 use aasvd::serve::{
     CancelReason, CompressedBackend, DecodeMode, DenseBackend, GenParams, ModelBackend,
-    Prefill, ServedModel, Server, ServerOptions, SyntheticBackend, WaitError,
+    PagedKvOptions, Prefill, ServeMetrics, ServedModel, Server, ServerOptions,
+    SyntheticBackend, WaitError,
 };
 use aasvd::util::rng::Rng;
 
@@ -88,6 +90,99 @@ fn lowrank_cached_steps_match_full_recompute_bitwise() {
     }
 }
 
+/// Paged forward: walking KV through fixed-size blocks must be bitwise
+/// identical to the contiguous dense cache at every step — paging changes
+/// where a row lives, never a float operation. Dense and low-rank paths,
+/// with a block size that forces mid-sequence block boundaries.
+#[test]
+fn paged_forward_steps_match_dense_cache_bitwise() {
+    let cfg = tiny();
+    let params = init_params(&cfg, &mut Rng::new(25));
+    let blocks = truncated_blocks(&cfg, &params);
+    let mut rng = Rng::new(26);
+    let bt = 4usize;
+    let n = 2 * cfg.seq + 3;
+    let tokens: Vec<u32> = (0..n).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let pool = KvBlockPool::new(256, bt, cfg.d_model);
+
+    let mut dense = KvCache::new(cfg.n_layers);
+    let mut paged = PagedKvCache::new(cfg.n_layers, bt);
+    let mut lr_dense = KvCache::new(cfg.n_layers);
+    let mut lr_paged = PagedKvCache::new(cfg.n_layers, bt);
+    for (p, &tok) in tokens.iter().enumerate() {
+        paged.reserve_append(&mut || pool.try_alloc()).unwrap();
+        let got = model_forward_step(&cfg, &params, &mut paged, tok);
+        let want = model_forward_step(&cfg, &params, &mut dense, tok);
+        assert_bits_eq(&got, &want, &format!("paged dense pos {p}"));
+
+        lr_paged.reserve_append(&mut || pool.try_alloc()).unwrap();
+        let got = model_lr_forward_step(&cfg, &params, &blocks, &mut lr_paged, tok);
+        let want = model_lr_forward_step(&cfg, &params, &blocks, &mut lr_dense, tok);
+        assert_bits_eq(&got, &want, &format!("paged lowrank pos {p}"));
+    }
+    assert_eq!(paged.len, n);
+    assert_eq!(paged.blocks_referenced(), cfg.n_layers * n.div_ceil(bt));
+    drop(paged);
+    drop(lr_paged);
+    assert_eq!(pool.in_use(), 0, "paged caches must free every block");
+}
+
+/// Shared-prefix decode: a cache that *adopts* another session's full
+/// prefix blocks (copy-on-write, zero recompute) must continue bitwise
+/// identical to a cold prefill of the whole sequence. This is the
+/// hard guarantee the radix prefix cache rests on.
+#[test]
+fn paged_shared_prefix_is_bitwise_equal_to_cold_prefill() {
+    let cfg = tiny();
+    let params = init_params(&cfg, &mut Rng::new(27));
+    let mut rng = Rng::new(28);
+    let bt = 4usize;
+    let shared: Vec<u32> = (0..2 * bt).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let tail_a: Vec<u32> = (0..5).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let tail_b: Vec<u32> = (0..7).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let pool = KvBlockPool::new(256, bt, cfg.d_model);
+
+    // session A: cold prefill over shared + tail_a
+    let mut a = PagedKvCache::new(cfg.n_layers, bt);
+    for &tok in shared.iter().chain(&tail_a) {
+        a.reserve_append(&mut || pool.try_alloc()).unwrap();
+        model_forward_step(&cfg, &params, &mut a, tok);
+    }
+
+    // session B adopts A's two full prefix blocks per layer, then walks
+    // only its own tail — the shared span costs zero forward passes
+    let mut b = PagedKvCache::new(cfg.n_layers, bt);
+    for (l, layer) in b.layers.iter_mut().enumerate() {
+        layer.adopt_prefix(&a.layers[l].blocks[..2]);
+    }
+    b.len = shared.len();
+    let mut logits_b = Vec::new();
+    for &tok in &tail_b {
+        b.reserve_append(&mut || pool.try_alloc()).unwrap();
+        logits_b = model_forward_step(&cfg, &params, &mut b, tok);
+    }
+
+    // cold oracle: the whole B sequence through a fresh dense cache
+    let mut cold = KvCache::new(cfg.n_layers);
+    let mut logits_cold = Vec::new();
+    for &tok in shared.iter().chain(&tail_b) {
+        logits_cold = model_forward_step(&cfg, &params, &mut cold, tok);
+    }
+    assert_bits_eq(&logits_b, &logits_cold, "adopted prefix vs cold prefill");
+
+    // A's own continuation is undisturbed by the sharing (copy-on-write:
+    // B's appends went to fresh blocks, never A's)
+    let next = rng.below(cfg.vocab) as u32;
+    a.reserve_append(&mut || pool.try_alloc()).unwrap();
+    let a_step = model_forward_step(&cfg, &params, &mut a, next);
+    let mut cold_a = KvCache::new(cfg.n_layers);
+    let mut want_a = Vec::new();
+    for &tok in shared.iter().chain(&tail_a).chain(std::iter::once(&next)) {
+        want_a = model_forward_step(&cfg, &params, &mut cold_a, tok);
+    }
+    assert_bits_eq(&a_step, &want_a, "sharer session undisturbed");
+}
+
 /// Backend level: a prefill + greedy decode_step chain must agree bitwise
 /// with the full-prefix oracle at every position.
 fn backend_matches_oracle(mut backend: Box<dyn ModelBackend>) {
@@ -95,6 +190,7 @@ fn backend_matches_oracle(mut backend: Box<dyn ModelBackend>) {
     let Prefill {
         mut session,
         mut logits,
+        ..
     } = backend.prefill(&prompt).unwrap();
     let mut tokens = prompt.clone();
     for step in 0..12 {
@@ -121,6 +217,60 @@ fn all_backends_cached_decode_matches_oracle() {
         CompressedBackend::new(cfg.clone(), params, blocks).unwrap(),
     ));
     backend_matches_oracle(Box::new(SyntheticBackend::new(cfg)));
+}
+
+/// Backend level, paged: prefill + greedy decode through a paged backend
+/// (dense and compressed) is bitwise identical to its unpaged twin, and
+/// a second prompt sharing a block-aligned prefix reuses cached blocks
+/// without changing a single bit of its logits.
+fn paged_backend_matches_unpaged(
+    mut plain: Box<dyn ModelBackend>,
+    mut paged: Box<dyn ModelBackend>,
+) {
+    assert!(paged.configure_paged(&PagedKvOptions {
+        blocks: 128,
+        block_tokens: 4,
+        prefix_cache: true,
+    }));
+    // 24-char shared span (6 full blocks) + distinct tails
+    let prompts = ["the shared system prompt tail one", "the shared system prompt tail two"];
+    for (i, prompt) in prompts.iter().enumerate() {
+        let toks: Vec<i32> = prompt.bytes().map(|b| b as i32).collect();
+        let pf = paged.prefill(&toks).unwrap();
+        let want = plain.prefill(&toks).unwrap();
+        assert_bits_eq(&pf.logits, &want.logits, &format!("paged prefill {i}"));
+        if i == 0 {
+            assert_eq!(pf.reused, 0, "first prompt is a cold prefill");
+        } else {
+            assert!(pf.reused >= 24, "second prompt reused {} tokens", pf.reused);
+        }
+        let (mut s, mut logits) = (pf.session, pf.logits);
+        let (mut s2, _) = (want.session, want.logits);
+        for step in 0..10 {
+            let next = argmax(&logits) as i32;
+            logits = paged.decode_step(&mut s, next).unwrap();
+            let want = plain.decode_step(&mut s2, next).unwrap();
+            assert_bits_eq(&logits, &want, &format!("paged decode {i} step {step}"));
+        }
+    }
+    let stats = paged.kv_pool_stats().unwrap();
+    assert!(stats.peak <= stats.capacity);
+    paged.kv_reset();
+}
+
+#[test]
+fn paged_backends_match_unpaged_bitwise_with_prefix_reuse() {
+    let cfg = tiny();
+    let params = init_params(&cfg, &mut Rng::new(33));
+    let blocks = truncated_blocks(&cfg, &params);
+    paged_backend_matches_unpaged(
+        Box::new(DenseBackend::new(cfg.clone(), params.clone())),
+        Box::new(DenseBackend::new(cfg.clone(), params.clone())),
+    );
+    paged_backend_matches_unpaged(
+        Box::new(CompressedBackend::new(cfg.clone(), params.clone(), blocks.clone()).unwrap()),
+        Box::new(CompressedBackend::new(cfg, params, blocks).unwrap()),
+    );
 }
 
 /// Run a staggered multi-request batch (2 decode slots, 5 requests with
@@ -201,6 +351,103 @@ fn engine_cached_decode_matches_recompute_across_batches() {
         DecodeMode::Recompute,
     );
     assert_eq!(cached, recomputed, "compressed cached vs recompute");
+}
+
+/// The staggered batch of `decode_texts`, run through a paged server;
+/// returns texts + final metrics.
+fn paged_decode_texts(
+    cfg: &Config,
+    model: ServedModel,
+    paged_kv: PagedKvOptions,
+) -> (Vec<String>, ServeMetrics) {
+    let server = Server::start_with(
+        cfg.clone(),
+        model,
+        ServerOptions {
+            max_batch: 2,
+            paged_kv: Some(paged_kv),
+            ..Default::default()
+        },
+    );
+    let completions: Vec<_> = (0..5)
+        .map(|i| {
+            server
+                .submit(
+                    &format!("request {i} says"),
+                    GenParams {
+                        max_new_tokens: 6 + i,
+                        temperature: if i % 2 == 0 { 0.0 } else { 0.9 },
+                        top_k: if i % 2 == 0 { None } else { Some(16) },
+                        seed: Some(1000 + i as u64),
+                        ..Default::default()
+                    },
+                )
+                .unwrap()
+        })
+        .collect();
+    let doomed = server
+        .submit(
+            "doomed",
+            GenParams {
+                max_new_tokens: 100_000,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    doomed.cancel();
+    let texts: Vec<String> = completions
+        .into_iter()
+        .map(|c| c.wait().expect("request completes").text)
+        .collect();
+    match doomed.wait() {
+        Err(WaitError::Cancelled(CancelReason::Client)) => {}
+        other => panic!("doomed request: unexpected outcome {other:?}"),
+    }
+    (texts, server.shutdown())
+}
+
+/// Engine level, paged: the same staggered batch (shared `request N`
+/// prefix, mixed sampling, a cancelled hog) generates identical tokens
+/// through paged KV — prefix cache on and off — as through plain dense
+/// caches, the pool stays within budget, and no block leaks at drain.
+#[test]
+fn engine_paged_decode_matches_plain_across_batches() {
+    let cfg = tiny();
+    let params = init_params(&cfg, &mut Rng::new(41));
+    let blocks = truncated_blocks(&cfg, &params);
+    let pk = |prefix_cache| PagedKvOptions {
+        blocks: 256,
+        block_tokens: 4,
+        prefix_cache,
+    };
+    for label in ["dense", "compressed"] {
+        let make = || match label {
+            "dense" => ServedModel::Dense(params.clone()),
+            _ => ServedModel::Compressed(params.clone(), blocks.clone()),
+        };
+        let plain = decode_texts(&cfg, make(), DecodeMode::Cached);
+        let (paged_on, m_on) = paged_decode_texts(&cfg, make(), pk(true));
+        let (paged_off, m_off) = paged_decode_texts(&cfg, make(), pk(false));
+        assert_eq!(plain, paged_on, "{label}: paged (prefix on) vs plain texts");
+        assert_eq!(plain, paged_off, "{label}: paged (prefix off) vs plain texts");
+        // the five prompts share the 8-byte "request " span (2 blocks)
+        assert!(
+            m_on.prefix_tokens_reused >= 4 * 8,
+            "{label}: reused only {} tokens",
+            m_on.prefix_tokens_reused
+        );
+        assert_eq!(m_off.prefix_tokens_reused, 0, "{label}: cache off must not reuse");
+        for (mode, m) in [("on", &m_on), ("off", &m_off)] {
+            assert_eq!(m.kv_blocks_leaked, 0, "{label} prefix {mode}: leaked blocks");
+            assert!(
+                m.kv_peak_blocks <= m.kv_blocks_capacity,
+                "{label} prefix {mode}: peak {} over budget {}",
+                m.kv_peak_blocks,
+                m.kv_blocks_capacity
+            );
+            assert_eq!(m.kv_blocks_capacity, 256, "{label} prefix {mode}");
+        }
+    }
 }
 
 /// Metrics: prefill/decode token counters and KV residency are recorded on

@@ -1,0 +1,5 @@
+// aasvd-lint: path=src/serve/kv_pool.rs
+
+pub fn colder(a: f64, b: f64) -> bool {
+    matches!(a.partial_cmp(&b), Some(std::cmp::Ordering::Less))
+}

@@ -1,0 +1,7 @@
+// aasvd-lint: path=src/serve/kv_pool.rs
+
+use std::collections::HashMap;
+
+pub fn trie_children() -> HashMap<Vec<u32>, usize> {
+    HashMap::new()
+}

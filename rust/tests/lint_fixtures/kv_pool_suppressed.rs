@@ -1,0 +1,9 @@
+// aasvd-lint: path=src/serve/kv_pool.rs
+
+use std::collections::BTreeMap;
+
+pub fn lru_victim(clocks: &BTreeMap<Vec<u32>, u64>) -> Option<&Vec<u32>> {
+    // aasvd-lint: allow(serve-unwrap): fixture justification — caller holds the non-empty invariant
+    let (key, _) = clocks.iter().min_by_key(|(_, c)| **c).unwrap();
+    Some(key)
+}

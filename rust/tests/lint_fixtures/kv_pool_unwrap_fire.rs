@@ -1,0 +1,5 @@
+// aasvd-lint: path=src/serve/kv_pool.rs
+
+pub fn first_block(blocks: &[usize]) -> usize {
+    *blocks.first().unwrap()
+}

@@ -53,6 +53,18 @@ const EXPECTED: &[(&str, &[&str])] = &[
     ("http_wallclock_suppressed.rs", &[]),
     ("http_unwrap_fire.rs", &["serve-unwrap"]),
     ("http_unwrap_suppressed.rs", &[]),
+    // src/serve/kv_pool.rs policy: the prefix-cache trie inherits
+    // serve-unwrap and float-cmp from its tree, and is the one serve/
+    // file additionally covered by hash-iter — trie iteration order
+    // decides LRU eviction ties, so a HashMap there would make 429s
+    // under pressure nondeterministic
+    (
+        "kv_pool_hash_iter_fire.rs",
+        &["hash-iter", "hash-iter", "hash-iter"],
+    ),
+    ("kv_pool_unwrap_fire.rs", &["serve-unwrap"]),
+    ("kv_pool_float_cmp_fire.rs", &["float-cmp"]),
+    ("kv_pool_suppressed.rs", &[]),
 ];
 
 #[test]
