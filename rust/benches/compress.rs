@@ -8,7 +8,8 @@
 
 use aasvd::bench::Bench;
 use aasvd::compress::{
-    compress_layer, compress_model, CovTriple, Method, Objective, ReferenceCollector,
+    compress_layer, compress_model, CompressRun, CovTriple, Method, Objective,
+    ReferenceCollector, RunOptions,
 };
 use aasvd::data::{Batcher, Corpus, Domain, TokenBatch};
 use aasvd::model::Config;
@@ -214,6 +215,58 @@ fn main() {
                 },
             );
         }
+    }
+
+    // the streaming, checkpointed session: same Algorithm 2, but every
+    // block is committed to a run directory (shard + stream snapshot +
+    // manifest, each atomic) as it completes. The delta vs compress_model
+    // threads=4 above is the checkpoint overhead.
+    {
+        let cfg = synth_config();
+        let params = aasvd::model::init::init_params(&cfg, &mut Rng::new(5));
+        let calib = full_batches(&cfg, 4);
+        let method = Method::builder("anchored_stream")
+            .objective(Objective::Anchored)
+            .threads(4)
+            .build();
+        let dir = std::env::temp_dir().join("aasvd-bench-compress-run");
+        let stream_once = || {
+            let _ = std::fs::remove_dir_all(&dir);
+            let mut run = CompressRun::new(
+                &ReferenceCollector,
+                &cfg,
+                &params,
+                &calib,
+                &method,
+                0.6,
+                RunOptions::checkpointed(&dir),
+            )
+            .unwrap();
+            while run.next_block().unwrap().is_some() {}
+            run.finish().unwrap()
+        };
+        // pre-flight: the streamed artifact must decode to the same bits
+        // compress_model produces in memory
+        let summary = stream_once();
+        let streamed = aasvd::model::lowrank::load_blocks(
+            &cfg,
+            summary.artifact.as_ref().expect("streamed artifact"),
+        )
+        .unwrap();
+        let inmem = compress_model(&ReferenceCollector, &cfg, &params, &calib, &method, 0.6)
+            .unwrap();
+        for (a, b) in streamed.iter().zip(&inmem.blocks) {
+            assert_eq!(a.factors.data, b.factors.data, "stream/in-memory divergence");
+            assert_eq!(a.masks.data, b.masks.data, "stream/in-memory divergence");
+        }
+        b.run(
+            "compress_run stream+checkpoint synth threads=4",
+            None,
+            || {
+                std::hint::black_box(stream_once());
+            },
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     b.save("compress");

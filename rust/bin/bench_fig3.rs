@@ -4,10 +4,10 @@
 //! calibration samples {~8..512} at ratios 0.8/0.6: PPL saturates by ~64
 //! samples, accuracy keeps improving past 64.
 
-use aasvd::compress::Method;
+use aasvd::compress::{BlockOutcome, Method};
 use aasvd::data::Domain;
 use aasvd::eval::{display_ppl, Table};
-use aasvd::experiments::{eval_compressed_method, setup, Knobs};
+use aasvd::experiments::{eval_compressed_method_observed, setup, Knobs};
 use aasvd::util::cli::Args;
 use anyhow::Result;
 
@@ -34,8 +34,19 @@ fn main() -> Result<()> {
         knobs.calib_seqs = n;
         let ctx = setup(&knobs)?;
         for &ratio in &knobs.ratios {
-            let (ev, _) =
-                eval_compressed_method(&ctx, &Method::aa_svd(knobs.refine()), ratio)?;
+            let (ev, _) = eval_compressed_method_observed(
+                &ctx,
+                &Method::aa_svd(knobs.refine()),
+                ratio,
+                &mut |o: &BlockOutcome| {
+                    eprintln!(
+                        "[fig3] calib {n} @ {ratio}: block {}/{} ({:.1}s)",
+                        o.index + 1,
+                        o.total,
+                        o.secs
+                    );
+                },
+            )?;
             table.row(vec![
                 format!("{ratio}"),
                 format!("{n}"),

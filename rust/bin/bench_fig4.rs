@@ -6,7 +6,7 @@
 //! cosine-distance view with each method's final-layer distortion linked to
 //! its perplexity — emitted here as the same series plus the PPL column.
 
-use aasvd::compress::{compress_model, error::depth_profile, Method};
+use aasvd::compress::{error::depth_profile, CompressRun, Method, RunOptions};
 use aasvd::data::Domain;
 use aasvd::eval::{compressed_ppl, display_ppl, Table};
 use aasvd::experiments::{setup, Knobs};
@@ -42,7 +42,27 @@ fn main() -> Result<()> {
         &["method", "oproj_mse[L]", "oproj_cos[L]", "down_cos[L]", "block_mse[L]", "wiki_ppl"],
     );
     for method in &methods {
-        let cm = compress_model(&ctx.engine, &ctx.cfg, &ctx.params, &ctx.calib, method, ratio)?;
+        // drive the streaming session directly: the profile needs every
+        // block in memory, but the loop still paces and reports per block
+        let mut run = CompressRun::new(
+            &ctx.engine,
+            &ctx.cfg,
+            &ctx.params,
+            &ctx.calib,
+            method,
+            ratio,
+            RunOptions::in_memory(),
+        )?;
+        while let Some(o) = run.next_block()? {
+            eprintln!(
+                "[fig4] {} @ {ratio}: block {}/{} ({:.1}s)",
+                method.name,
+                o.index + 1,
+                o.total,
+                o.secs
+            );
+        }
+        let cm = run.into_model()?;
         let prof = depth_profile(&ctx.engine, &ctx.cfg, &ctx.params, &cm.blocks, &eval)?;
         let ppl = compressed_ppl(&ctx.engine, &ctx.cfg, &ctx.params, &cm.blocks, eval.as_slice())?;
         let last = prof.block_mse.len() - 1;

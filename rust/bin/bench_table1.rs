@@ -6,11 +6,11 @@
 //! family at the same ratios, same metric battery; paper LLaMA-7B numbers
 //! are printed alongside for shape comparison.
 
-use aasvd::compress::Method;
+use aasvd::compress::{BlockOutcome, Method};
 use aasvd::data::Domain;
 use aasvd::eval::{display_ppl, Table};
 use aasvd::experiments::{
-    eval_compressed_method, eval_dense, paper_ref_table1, setup, Knobs,
+    eval_compressed_method_observed, eval_dense, paper_ref_table1, setup, Knobs,
 };
 use aasvd::util::cli::Args;
 use anyhow::Result;
@@ -54,7 +54,16 @@ fn main() -> Result<()> {
 
     for &ratio in &knobs.ratios {
         for method in &methods {
-            let (ev, _) = eval_compressed_method(&ctx, method, ratio)?;
+            let (ev, _) =
+                eval_compressed_method_observed(&ctx, method, ratio, &mut |o: &BlockOutcome| {
+                    eprintln!(
+                        "[table1] {} @ {ratio}: block {}/{} ({:.1}s)",
+                        method.name,
+                        o.index + 1,
+                        o.total,
+                        o.secs
+                    );
+                })?;
             let drop = 100.0 * (dense.avg_acc - ev.avg_acc) / dense.avg_acc;
             let (pw, pa) = paper_ref_table1(ratio, &method.name)
                 .map(|(w, a)| (display_ppl(w), format!("{a:.2}")))

@@ -4,10 +4,10 @@
 //! Paper: LLaMA-2-7B/13B, LLaMA-3-1B/8B, Qwen-2.5-7B. Here: the config
 //! family small/base/compact/deep/alt playing those roles (DESIGN.md §3).
 
-use aasvd::compress::Method;
+use aasvd::compress::{BlockOutcome, Method};
 use aasvd::data::Domain;
 use aasvd::eval::{display_ppl, Table};
-use aasvd::experiments::{eval_compressed_method, eval_dense, setup, Knobs};
+use aasvd::experiments::{eval_compressed_method_observed, eval_dense, setup, Knobs};
 use aasvd::util::cli::Args;
 use anyhow::Result;
 
@@ -80,7 +80,20 @@ fn main() -> Result<()> {
         ]);
         for &ratio in &knobs.ratios {
             for method in [Method::svd_llm(), Method::aa_svd(knobs.refine())] {
-                let (ev, _) = eval_compressed_method(&ctx, &method, ratio)?;
+                let (ev, _) = eval_compressed_method_observed(
+                    &ctx,
+                    &method,
+                    ratio,
+                    &mut |o: &BlockOutcome| {
+                        eprintln!(
+                            "[table2] {cfg_name} {} @ {ratio}: block {}/{} ({:.1}s)",
+                            method.name,
+                            o.index + 1,
+                            o.total,
+                            o.secs
+                        );
+                    },
+                )?;
                 let paper = PAPER
                     .iter()
                     .find(|(r, rr, m, ..)| *r == role && *rr == ratio && *m == method.name)

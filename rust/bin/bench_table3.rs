@@ -5,9 +5,9 @@
 //! (magnitude / wanda-sp / slicegpt / blockdrop) vs AA-SVD(±q) on the same
 //! parameter budget and task battery.
 
-use aasvd::compress::{prune_model, Method, ALL_PRUNERS};
+use aasvd::compress::{prune_model, BlockOutcome, Method, ALL_PRUNERS};
 use aasvd::eval::{all_tasks_accuracy, ModelRef, Table};
-use aasvd::experiments::{eval_compressed_method, eval_dense, setup, Knobs};
+use aasvd::experiments::{eval_compressed_method_observed, eval_dense, setup, Knobs};
 use aasvd::util::cli::Args;
 use anyhow::Result;
 
@@ -81,7 +81,16 @@ fn main() -> Result<()> {
             Method::aa_svd(knobs.refine()),
             Method::aa_svd_q(knobs.refine()),
         ] {
-            let (ev, _) = eval_compressed_method(&ctx, &method, ratio)?;
+            let (ev, _) =
+                eval_compressed_method_observed(&ctx, &method, ratio, &mut |o: &BlockOutcome| {
+                    eprintln!(
+                        "[table3] {} @ {ratio}: block {}/{} ({:.1}s)",
+                        method.name,
+                        o.index + 1,
+                        o.total,
+                        o.secs
+                    );
+                })?;
             let paper = PAPER
                 .iter()
                 .find(|(r, m, _)| *r == ratio && *m == method.name)

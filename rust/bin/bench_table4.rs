@@ -5,10 +5,12 @@
 //! budget fractions applied to our model; each method is driven to the
 //! largest configuration that fits the budget.
 
-use aasvd::compress::{prune_model, ratio_for_budget, Method, PruneMethod, RankScheme};
+use aasvd::compress::{
+    prune_model, ratio_for_budget, BlockOutcome, Method, PruneMethod, RankScheme,
+};
 use aasvd::data::Domain;
 use aasvd::eval::{dense_ppl, display_ppl, Table};
-use aasvd::experiments::{eval_compressed_method, setup, Knobs};
+use aasvd::experiments::{eval_compressed_method_observed, setup, Knobs};
 use aasvd::util::cli::Args;
 use anyhow::Result;
 
@@ -50,8 +52,19 @@ fn main() -> Result<()> {
         }
         // AA-SVD at the ratio that fits the budget
         let rho = ratio_for_budget(&ctx.cfg, frac, RankScheme::Standard);
-        let (ev, _) =
-            eval_compressed_method(&ctx, &Method::aa_svd(knobs.refine()), rho)?;
+        let (ev, _) = eval_compressed_method_observed(
+            &ctx,
+            &Method::aa_svd(knobs.refine()),
+            rho,
+            &mut |o: &BlockOutcome| {
+                eprintln!(
+                    "[table4] {label} aa_svd @ {rho:.3}: block {}/{} ({:.1}s)",
+                    o.index + 1,
+                    o.total,
+                    o.secs
+                );
+            },
+        )?;
         cells.push(display_ppl(ev.ppl_of(Domain::Wiki)));
         cells.push(display_ppl(paper[3]));
         table.row(cells);

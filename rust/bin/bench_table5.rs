@@ -5,10 +5,10 @@
 //! best overall, and final quality stays sensitive to the initialization
 //! objective.
 
-use aasvd::compress::{Method, ALL_OBJECTIVES};
+use aasvd::compress::{BlockOutcome, Method, ALL_OBJECTIVES};
 use aasvd::data::Domain;
 use aasvd::eval::{display_ppl, Table};
-use aasvd::experiments::{eval_compressed_method, eval_dense, setup, Knobs};
+use aasvd::experiments::{eval_compressed_method_observed, eval_dense, setup, Knobs};
 use aasvd::util::cli::Args;
 use anyhow::Result;
 
@@ -65,7 +65,20 @@ fn main() -> Result<()> {
                     objective,
                     refined.then(|| knobs.refine()),
                 );
-                let (ev, _) = eval_compressed_method(&ctx, &method, ratio)?;
+                let (ev, _) = eval_compressed_method_observed(
+                    &ctx,
+                    &method,
+                    ratio,
+                    &mut |o: &BlockOutcome| {
+                        eprintln!(
+                            "[table5] {} @ {ratio}: block {}/{} ({:.1}s)",
+                            method.name,
+                            o.index + 1,
+                            o.total,
+                            o.secs
+                        );
+                    },
+                )?;
                 let paper = PAPER
                     .iter()
                     .find(|(r, o, rf, ..)| {

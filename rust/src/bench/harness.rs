@@ -136,6 +136,9 @@ impl Bench {
                         .map(|n| n.get())
                         .unwrap_or(1),
                 )
+                // process-lifetime high-water mark (VmHWM), so memory-bound
+                // lanes can gate on it alongside the timing rows
+                .set("peak_rss_mb", crate::util::mem::peak_rss_mb())
                 .set("results", Json::Arr(rows))
                 .to_string_pretty(),
         );

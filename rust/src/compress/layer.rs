@@ -22,6 +22,36 @@ pub struct Factors {
 }
 
 impl Factors {
+    /// Write these unpadded rank-k factors into a block's padded factor
+    /// buffers (kmax-column layout) and record the active rank in the
+    /// mask store. The streaming pipeline calls this as each group's
+    /// solves land.
+    pub fn write_into(
+        &self,
+        cfg: &crate::model::Config,
+        lin: &str,
+        bf: &mut crate::model::lowrank::BlockFactors,
+    ) {
+        let kmax = cfg.kmax(lin);
+        {
+            let ub = bf.factors.view_mut(&format!("{lin}.u"));
+            ub.fill(0.0);
+            for i in 0..self.m {
+                ub[i * kmax..i * kmax + self.k]
+                    .copy_from_slice(&self.u[i * self.k..(i + 1) * self.k]);
+            }
+        }
+        {
+            let vb = bf.factors.view_mut(&format!("{lin}.v"));
+            vb.fill(0.0);
+            for i in 0..self.n {
+                vb[i * kmax..i * kmax + self.k]
+                    .copy_from_slice(&self.v[i * self.k..(i + 1) * self.k]);
+            }
+        }
+        bf.set_rank(lin, self.k);
+    }
+
     /// Materialize W' = U Vᵀ (row-major [m, n]).
     pub fn dense(&self) -> Vec<f32> {
         let (m, n, k) = (self.m, self.n, self.k);

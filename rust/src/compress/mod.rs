@@ -5,6 +5,7 @@
 //! - `layer`: CompressLayer closed form (Theorem 3.2 / Algorithm 1)
 //! - `rank` / `quant`: allocation schemes + Dobi-style remapping (§B.3/B.4)
 //! - `pipeline`: block-wise orchestration with refinement (Algorithm 2)
+//! - `run`: streaming, checkpointed, resumable compression session
 //! - `pruning`: structured-pruning baselines (Tables 3/4)
 //! - `error`: depth-wise error profiling (Figures 1/4)
 
@@ -16,13 +17,16 @@ pub mod pipeline;
 pub mod pruning;
 pub mod quant;
 pub mod rank;
+pub mod run;
 
 pub use cov::CovTriple;
 pub use layer::{compress_layer, compress_layer_asvd, compress_layer_plain, Factors};
 pub use objective::{Objective, ALL_OBJECTIVES};
 pub use pipeline::{
-    compress_model, Collector, CompressedModel, Method, MethodBuilder, ReferenceCollector,
+    compress_model, Collector, CompressReport, CompressedModel, Method, MethodBuilder,
+    ReferenceCollector,
 };
 pub use pruning::{prune_model, PruneMethod, PrunedModel, ALL_PRUNERS};
 pub use quant::QuantMatrix;
 pub use rank::{dense_params, ratio_for_budget, Allocation, RankScheme};
+pub use run::{BlockOutcome, CompressRun, CompressSummary, RunOptions};

@@ -20,8 +20,12 @@
 //! merges partials in a fixed order, so compressed artifacts are
 //! identical for any worker count (the block-sequential error-propagation
 //! order of the paper is never reordered).
-
-// aasvd-lint: allow-file(wallclock): per-stage timings feed the operator-facing CompressReport only; no numeric result depends on them
+//!
+//! The block loop itself lives in [`super::run::CompressRun`], the
+//! streaming session behind both [`compress_model`] (in-memory, whole
+//! model at once) and the checkpointed, resumable CLI path. This module
+//! keeps the vocabulary: [`Method`], [`Collector`], the tap groups, and
+//! the per-linear solve.
 
 use super::cov::CovTriple;
 use super::layer::{
@@ -31,15 +35,14 @@ use super::objective::Objective;
 use super::quant::quantize_factors_inplace;
 use super::rank::{Allocation, RankScheme};
 use crate::data::TokenBatch;
-use crate::model::lowrank::{exact_factors, BlockFactors};
+use crate::model::lowrank::BlockFactors;
 use crate::model::{Config, FlatStore};
 #[cfg(test)]
 use crate::model::BLOCK_LINEARS;
-use crate::refine::{refine_block, RefineOptions, RefineReport};
+use crate::refine::{RefineOptions, RefineReport};
 use crate::runtime::{Engine, Value};
 use crate::util::pool::Pool;
-use anyhow::{bail, Result};
-use std::time::Instant;
+use anyhow::Result;
 
 /// A named compression method (one table row). Knobs are private: build
 /// one with a named constructor or [`Method::builder`].
@@ -201,7 +204,7 @@ impl Method {
     }
 
     /// Does this method ever need the shifted activation stream?
-    fn needs_shift(&self) -> bool {
+    pub fn needs_shift(&self) -> bool {
         self.objective.needs_shift() || self.refine.is_some() || self.quant
     }
 }
@@ -224,7 +227,7 @@ pub struct CompressReport {
 
 /// The tap groups: (tap index into collect outputs, linears fed by it).
 /// Collect outputs are (y, a_in, o_in, m_in, d_in).
-const GROUPS: [(usize, &[&str]); 4] = [
+pub(crate) const GROUPS: [(usize, &[&str]); 4] = [
     (1, &["wq", "wk", "wv"]),
     (2, &["wo"]),
     (3, &["w_gate", "w_up"]),
@@ -474,7 +477,7 @@ impl Collector for ReferenceCollector {
 /// products and the tridiagonal eigensolver. Returns the unpadded factors
 /// and the quantization error (0.0 unless the method quantizes).
 #[allow(clippy::too_many_arguments)]
-fn solve_one(
+pub(crate) fn solve_one(
     method: &Method,
     cfg: &Config,
     params: &FlatStore,
@@ -502,27 +505,11 @@ fn solve_one(
     (f, qerr)
 }
 
-/// Write unpadded factors into the block's padded buffers + rank mask.
-fn write_factors(cfg: &Config, lin: &str, f: &Factors, bf: &mut BlockFactors) {
-    let kmax = cfg.kmax(lin);
-    {
-        let ub = bf.factors.view_mut(&format!("{lin}.u"));
-        ub.fill(0.0);
-        for i in 0..f.m {
-            ub[i * kmax..i * kmax + f.k].copy_from_slice(&f.u[i * f.k..(i + 1) * f.k]);
-        }
-    }
-    {
-        let vb = bf.factors.view_mut(&format!("{lin}.v"));
-        vb.fill(0.0);
-        for i in 0..f.n {
-            vb[i * kmax..i * kmax + f.k].copy_from_slice(&f.v[i * f.k..(i + 1) * f.k]);
-        }
-    }
-    bf.set_rank(lin, f.k);
-}
-
-/// Algorithm 2. `calib` batches must all be full (`real_rows == batch`).
+/// Algorithm 2, whole model in memory: a thin wrapper that drives a
+/// [`super::run::CompressRun`] with in-memory options to completion. The
+/// streaming session executes the block loop in the exact operation
+/// order this function historically used, so outputs are bitwise
+/// unchanged. `calib` batches must all be full (`real_rows == batch`).
 pub fn compress_model<C: Collector>(
     collector: &C,
     cfg: &Config,
@@ -531,151 +518,17 @@ pub fn compress_model<C: Collector>(
     method: &Method,
     ratio: f64,
 ) -> Result<CompressedModel> {
-    assert!(
-        calib.iter().all(|b| b.real_rows == cfg.batch),
-        "calibration batches must be full"
-    );
-    let allocation = Allocation::uniform(cfg, ratio, method.scheme);
-    let mut report = CompressReport::default();
-    let pool = Pool::new(method.threads);
-
-    // step 1: X <- X' <- embedding of calibration data
-    let mut xs = embed_batches(cfg, params, calib);
-    let mut xs_shift: Vec<Vec<f32>> = if method.needs_shift() {
-        xs.clone()
-    } else {
-        Vec::new()
-    };
-
-    let mut blocks: Vec<BlockFactors> = Vec::with_capacity(cfg.n_layers);
-    let mut quant_errs: Vec<f64> = Vec::new();
-
-    for i in 0..cfg.n_layers {
-        // dense taps on original inputs (X_j for every group, plus Y target)
-        let t0 = Instant::now();
-        let dense_taps = collector.dense_taps(cfg, params, i, &xs, &pool)?;
-        report.secs_collect += t0.elapsed().as_secs_f64();
-
-        // initialize L'_i <- L_i (exact full-rank factorization)
-        let mut bf = exact_factors(cfg, params, i);
-
-        for (tap_idx, linears) in GROUPS {
-            // collect shifted tap from the *current* partial state of L'_i
-            let t0 = Instant::now();
-            let shift_tap: Option<Vec<Vec<f32>>> = if method.objective.needs_shift() {
-                Some(collector.lr_tap(cfg, &bf, &xs_shift, tap_idx - 1, &pool)?)
-            } else {
-                None
-            };
-            report.secs_collect += t0.elapsed().as_secs_f64();
-
-            // accumulate covariances (shared by all linears in the group);
-            // per-batch partials merge in batch order — thread-count
-            // invariant by construction
-            let t0 = Instant::now();
-            let dim = if tap_idx == 4 { cfg.d_ff } else { cfg.d_model };
-            let cov = match &shift_tap {
-                Some(shift) => {
-                    let pairs: Vec<(&[f32], &[f32])> = dense_taps.per_tap[tap_idx - 1]
-                        .iter()
-                        .zip(shift)
-                        .map(|(o, s)| (o.as_slice(), s.as_slice()))
-                        .collect();
-                    CovTriple::accumulate(&pool, dim, &pairs)
-                }
-                None => {
-                    let chunks: Vec<&[f32]> = dense_taps.per_tap[tap_idx - 1]
-                        .iter()
-                        .map(|o| o.as_slice())
-                        .collect();
-                    let mut cov = CovTriple::accumulate_same(&pool, dim, &chunks);
-                    cov.mirror_same();
-                    cov
-                }
-            };
-
-            // the group's linears share `cov` and are independent given it
-            // (paper §B.1): solve them concurrently. The paper's
-            // block-sequential error propagation is intact because the
-            // shifted tap above was collected before any factor changed.
-            // Each solve gets an even share of the budget, passed down
-            // explicitly to its linalg kernels (and installed, so any
-            // auto-resolved stragglers inherit it too).
-            let inner = Pool::exact(
-                (pool.threads() / linears.len().min(pool.threads())).max(1),
-            );
-            let cov_ref = &cov;
-            let alloc_ref = &allocation;
-            let solved = pool.run(
-                linears
-                    .iter()
-                    .map(|&lin| {
-                        move || {
-                            inner.install(|| {
-                                let k = alloc_ref.rank_of(lin);
-                                let (f, qerr) =
-                                    solve_one(method, cfg, params, i, lin, cov_ref, k, &inner);
-                                (lin, f, qerr)
-                            })
-                        }
-                    })
-                    .collect(),
-            );
-            for (lin, f, qerr) in solved {
-                write_factors(cfg, lin, &f, &mut bf);
-                if method.quant {
-                    quant_errs.push(qerr);
-                }
-            }
-            report.secs_solve += t0.elapsed().as_secs_f64();
-        }
-
-        // step 9: block-level local refinement
-        if let Some(ropts) = &method.refine {
-            let Some(engine) = collector.engine() else {
-                bail!(
-                    "method '{}' needs block refinement, which drives the AOT \
-                     refine_step artifact — use an Engine-backed collector",
-                    method.name
-                );
-            };
-            let t0 = Instant::now();
-            let x_shift_flat = concat_batches(&xs_shift);
-            let y_flat = concat_batches(&dense_taps.y);
-            let rep = refine_block(
-                engine,
-                cfg,
-                &mut bf,
-                &x_shift_flat,
-                &y_flat,
-                ropts,
-                &pool,
-            )?;
-            report.refine.push(rep);
-            report.secs_refine += t0.elapsed().as_secs_f64();
-        }
-
-        // step 10: advance both streams
-        if method.needs_shift() {
-            let t0 = Instant::now();
-            xs_shift = collector.lr_forward_all(cfg, &bf, &xs_shift, &pool)?;
-            report.secs_collect += t0.elapsed().as_secs_f64();
-        }
-        xs = dense_taps.y;
-        blocks.push(bf);
-    }
-
-    report.quant_err = if quant_errs.is_empty() {
-        0.0
-    } else {
-        // aasvd-lint: allow(float-reduce): sequential mean over per-block diagnostics in fixed block order; report-only
-        quant_errs.iter().sum::<f64>() / quant_errs.len() as f64
-    };
-    Ok(CompressedModel {
-        blocks,
-        allocation,
-        report,
-    })
+    let mut run = super::run::CompressRun::new(
+        collector,
+        cfg,
+        params,
+        calib,
+        method,
+        ratio,
+        super::run::RunOptions::in_memory(),
+    )?;
+    while run.next_block()?.is_some() {}
+    run.into_model()
 }
 
 /// Chain dense block_collect across the whole model, accumulating
@@ -710,7 +563,7 @@ pub fn collect_dense_taps_for_pruning<C: Collector>(
     Ok(out)
 }
 
-fn concat_batches(batches: &[Vec<f32>]) -> Vec<f32> {
+pub(crate) fn concat_batches(batches: &[Vec<f32>]) -> Vec<f32> {
     let mut out = Vec::with_capacity(batches.iter().map(|b| b.len()).sum());
     for b in batches {
         out.extend_from_slice(b);

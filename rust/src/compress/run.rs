@@ -1,0 +1,978 @@
+//! The streaming compression session behind the pipeline API.
+//!
+//! [`CompressRun`] executes Algorithm 2 one block at a time behind an
+//! iterator-style [`next_block`] loop, so callers observe progress and
+//! own the pacing, and peak memory is bounded by one block's working set
+//! plus the two activation streams — independent of model depth. The
+//! monolithic [`compress_model`](super::pipeline::compress_model) is now
+//! a thin wrapper that drives this session with in-memory options; the
+//! CLI drives it with a checkpointed run directory instead.
+//!
+//! # Checkpoint protocol
+//!
+//! A checkpointed run keeps a directory with a versioned
+//! [`RunManifest`] (`run.json`), one factor shard per block
+//! (`block_<i>.aat`), and the latest activation-stream snapshot
+//! (`state_<i>.aat` — the streams *entering* block `i`). After block `i`
+//! finishes, commit proceeds in this order, each step atomic
+//! (tmp + fsync + rename):
+//!
+//! 1. write the shard `block_<i>.aat`;
+//! 2. write the snapshot `state_<i+1>.aat` (skipped after the last block);
+//! 3. mark the block `written` in `run.json`, recording content hashes
+//!    of both files;
+//! 4. delete the now-obsolete `state_<i>.aat`.
+//!
+//! The manifest only ever references files that are already durable, so
+//! a crash at any instant — kill -9 included — leaves a resumable
+//! directory. Resume verifies every referenced file against its recorded
+//! hash, restores the streams bit-exactly, and re-runs the loop from the
+//! first unwritten block; because every parallel reduction in the solve
+//! path merges in submission order, the resumed artifact is bitwise
+//! identical to an uninterrupted run's, at any thread count.
+//!
+//! [`next_block`]: CompressRun::next_block
+
+// aasvd-lint: allow-file(wallclock): per-stage timings feed the operator-facing CompressReport and progress lines only; no numeric result depends on them
+
+use super::cov::CovTriple;
+use super::pipeline::{
+    concat_batches, embed_batches, solve_one, Collector, CompressReport, CompressedModel,
+    Method, GROUPS,
+};
+use super::rank::Allocation;
+use crate::data::TokenBatch;
+use crate::model::lowrank::{exact_factors, BlockFactors};
+use crate::model::{Config, FlatStore};
+use crate::refine::refine_block;
+use crate::runtime::manifest::{BlockEntry, RunManifest};
+use crate::util::hash::{fnv1a64, to_hex, Fnv64};
+use crate::util::io::{ArchiveWriter, Tensor, TensorArchive};
+use crate::util::pool::Pool;
+use anyhow::{bail, ensure, Context, Result};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Where a [`CompressRun`] persists its work, if anywhere.
+#[derive(Clone, Debug)]
+pub struct RunOptions {
+    dir: Option<PathBuf>,
+    artifact: Option<PathBuf>,
+    resume: bool,
+    keep_blocks: bool,
+}
+
+impl RunOptions {
+    /// No disk at all: every block is kept in memory and the run ends
+    /// with [`CompressRun::into_model`]. The historical `compress_model`
+    /// behavior.
+    pub fn in_memory() -> RunOptions {
+        RunOptions {
+            dir: None,
+            artifact: None,
+            resume: false,
+            keep_blocks: true,
+        }
+    }
+
+    /// Stream every block to a shard under `dir` and drop it from
+    /// memory; `dir/run.json` checkpoints progress. The final artifact
+    /// defaults to `dir/model.aat` (override with [`artifact`]).
+    ///
+    /// [`artifact`]: RunOptions::artifact
+    pub fn checkpointed(dir: impl Into<PathBuf>) -> RunOptions {
+        RunOptions {
+            dir: Some(dir.into()),
+            artifact: None,
+            resume: false,
+            keep_blocks: false,
+        }
+    }
+
+    /// Where [`CompressRun::finish`] assembles the whole-model artifact.
+    pub fn artifact(mut self, path: impl Into<PathBuf>) -> Self {
+        self.artifact = Some(path.into());
+        self
+    }
+
+    /// Continue an interrupted run from its last durable block instead
+    /// of refusing to reuse the directory.
+    pub fn resume(mut self) -> Self {
+        self.resume = true;
+        self
+    }
+
+    /// Keep solved blocks in memory even when checkpointing (needed for
+    /// [`CompressRun::into_model`]; costs the memory bound).
+    pub fn keep_blocks(mut self) -> Self {
+        self.keep_blocks = true;
+        self
+    }
+}
+
+/// What one [`CompressRun::next_block`] call produced.
+#[derive(Clone, Debug)]
+pub struct BlockOutcome {
+    pub index: usize,
+    pub total: usize,
+    /// wall seconds spent on this block (reporting only)
+    pub secs: f64,
+    /// the durable shard, when the run is checkpointed
+    pub shard: Option<PathBuf>,
+}
+
+/// End-of-run accounting from [`CompressRun::finish`].
+#[derive(Clone, Debug)]
+pub struct CompressSummary {
+    pub total: usize,
+    /// blocks solved in this session
+    pub solved: usize,
+    /// blocks restored from a prior session's checkpoints
+    pub resumed: usize,
+    /// blocks skipped because the run was already complete
+    pub skipped: usize,
+    pub report: CompressReport,
+    pub allocation: Allocation,
+    pub artifact: Option<PathBuf>,
+    pub artifact_hash: Option<u64>,
+}
+
+/// A streaming compression session: construct with [`new`], call
+/// [`next_block`] until it returns `None`, then [`finish`] (artifact +
+/// summary) or [`into_model`] (in-memory `CompressedModel`).
+///
+/// [`new`]: CompressRun::new
+/// [`next_block`]: CompressRun::next_block
+/// [`finish`]: CompressRun::finish
+/// [`into_model`]: CompressRun::into_model
+pub struct CompressRun<'a, C: Collector> {
+    collector: &'a C,
+    cfg: &'a Config,
+    params: &'a FlatStore,
+    method: &'a Method,
+    allocation: Allocation,
+    pool: Pool,
+    dir: Option<PathBuf>,
+    artifact: Option<PathBuf>,
+    keep_blocks: bool,
+    n_batches: usize,
+    /// X — dense-network inputs to the next block
+    xs: Vec<Vec<f32>>,
+    /// X' — partially-compressed-network inputs (empty unless needed)
+    xs_shift: Vec<Vec<f32>>,
+    /// index of the next block to solve
+    next: usize,
+    report: CompressReport,
+    quant_errs: Vec<f64>,
+    /// blocks held in memory (all of them under `keep_blocks`)
+    kept: Vec<BlockFactors>,
+    manifest: Option<RunManifest>,
+    resumed: usize,
+    skipped: usize,
+    solved: usize,
+    artifact_hash: Option<u64>,
+}
+
+impl<'a, C: Collector> CompressRun<'a, C> {
+    /// Open a session. `calib` batches must all be full
+    /// (`real_rows == batch`). With checkpointed options this creates or
+    /// (under `resume`) re-opens the run directory; with `resume`, every
+    /// durable shard is hash-verified and the activation streams are
+    /// restored bit-exactly before any new block is solved.
+    pub fn new(
+        collector: &'a C,
+        cfg: &'a Config,
+        params: &'a FlatStore,
+        calib: &[TokenBatch],
+        method: &'a Method,
+        ratio: f64,
+        options: RunOptions,
+    ) -> Result<CompressRun<'a, C>> {
+        ensure!(
+            calib.iter().all(|b| b.real_rows == cfg.batch),
+            "calibration batches must be full"
+        );
+        if method.refine_options().is_some() && collector.engine().is_none() {
+            bail!(
+                "method '{}' needs block refinement, which drives the AOT \
+                 refine_step artifact — use an Engine-backed collector",
+                method.name
+            );
+        }
+        let allocation = Allocation::uniform(cfg, ratio, method.scheme());
+        let pool = Pool::new(method.threads());
+        let fingerprint = run_fingerprint(cfg, params, calib, method, ratio, &allocation);
+
+        let RunOptions {
+            dir,
+            artifact,
+            resume,
+            keep_blocks,
+        } = options;
+        ensure!(
+            dir.is_some() || !resume,
+            "resume requires a checkpointed run directory"
+        );
+        let keep_blocks = keep_blocks || dir.is_none();
+        let artifact = artifact.or_else(|| dir.as_ref().map(|d| d.join("model.aat")));
+
+        let mut run = CompressRun {
+            collector,
+            cfg,
+            params,
+            method,
+            allocation,
+            pool,
+            dir,
+            artifact,
+            keep_blocks,
+            n_batches: calib.len(),
+            xs: Vec::new(),
+            xs_shift: Vec::new(),
+            next: 0,
+            report: CompressReport::default(),
+            quant_errs: Vec::new(),
+            kept: Vec::new(),
+            manifest: None,
+            resumed: 0,
+            skipped: 0,
+            solved: 0,
+            artifact_hash: None,
+        };
+
+        if let Some(dir) = run.dir.clone() {
+            std::fs::create_dir_all(&dir)
+                .with_context(|| format!("creating run directory {}", dir.display()))?;
+            let manifest_path = dir.join("run.json");
+            if resume {
+                if !manifest_path.exists() {
+                    bail!(
+                        "no run manifest at {} — nothing to resume; start a \
+                         fresh run without the resume option",
+                        manifest_path.display()
+                    );
+                }
+                let manifest = RunManifest::load(&manifest_path)?;
+                run.open_existing(&dir, manifest, fingerprint, ratio)?;
+            } else {
+                if manifest_path.exists() {
+                    bail!(
+                        "run directory {} already holds a run.json — pass \
+                         resume to continue the interrupted run, or remove \
+                         the directory to start over",
+                        dir.display()
+                    );
+                }
+                let manifest =
+                    RunManifest::new(&cfg.name, &method.name, ratio, cfg.n_layers, fingerprint);
+                manifest.save(&manifest_path)?;
+                run.manifest = Some(manifest);
+            }
+        }
+
+        if run.next == 0 {
+            // step 1: X <- X' <- embedding of calibration data
+            run.xs = embed_batches(cfg, params, calib);
+            if method.needs_shift() {
+                run.xs_shift = run.xs.clone();
+            }
+        }
+        Ok(run)
+    }
+
+    /// Validate a loaded manifest against this session's inputs, verify
+    /// the durable shards, and restore the activation streams for the
+    /// first unwritten block.
+    fn open_existing(
+        &mut self,
+        dir: &Path,
+        manifest: RunManifest,
+        fingerprint: u64,
+        ratio: f64,
+    ) -> Result<()> {
+        let cfg = self.cfg;
+        ensure!(
+            manifest.config == cfg.name
+                && manifest.method == self.method.name
+                && manifest.ratio == ratio,
+            "run directory {} belongs to config '{}' / method '{}' / ratio {} \
+             but this session is config '{}' / method '{}' / ratio {} — use a \
+             fresh run directory",
+            dir.display(),
+            manifest.config,
+            manifest.method,
+            manifest.ratio,
+            cfg.name,
+            self.method.name,
+            ratio,
+        );
+        ensure!(
+            manifest.fingerprint == fingerprint,
+            "run fingerprint mismatch in {}: manifest records {} but these \
+             inputs hash to {} — the config, method knobs, calibration data \
+             or weights changed since the run started, so resuming would not \
+             reproduce the uninterrupted artifact; remove the run directory \
+             to start over",
+            dir.display(),
+            to_hex(manifest.fingerprint),
+            to_hex(fingerprint),
+        );
+        ensure!(
+            manifest.blocks.len() == cfg.n_layers,
+            "run manifest in {} has {} block entries for a {}-layer config",
+            dir.display(),
+            manifest.blocks.len(),
+            cfg.n_layers,
+        );
+
+        let resume_at = manifest.first_unwritten().unwrap_or(cfg.n_layers);
+
+        // trust no durable file without its hash checking out
+        for (i, entry) in manifest.blocks.iter().take(resume_at).enumerate() {
+            let (Some(shard), Some(want)) = (&entry.shard, entry.shard_hash) else {
+                bail!(
+                    "block {i} is marked written but the manifest records no \
+                     shard for it — remove the run directory to start over"
+                );
+            };
+            let path = dir.join(shard);
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("reading shard {} for resume", path.display()))?;
+            let got = fnv1a64(&bytes);
+            ensure!(
+                got == want,
+                "shard {} content hash {} does not match the manifest's {} — \
+                 the file changed since it was written; remove the run \
+                 directory to start over",
+                path.display(),
+                to_hex(got),
+                to_hex(want),
+            );
+            if self.keep_blocks {
+                self.kept.push(
+                    decode_shard(cfg, &bytes)
+                        .with_context(|| format!("decoding shard {}", path.display()))?,
+                );
+            }
+        }
+
+        if manifest.complete {
+            ensure!(
+                resume_at >= cfg.n_layers,
+                "run manifest in {} is marked complete but block {} has no \
+                 durable shard — remove the run directory to start over",
+                dir.display(),
+                resume_at,
+            );
+            self.skipped = cfg.n_layers;
+        } else {
+            self.resumed = resume_at;
+            if resume_at > 0 && resume_at < cfg.n_layers {
+                let entry = &manifest.blocks[resume_at - 1];
+                let (Some(state), Some(want)) = (&entry.state, entry.state_hash) else {
+                    bail!(
+                        "block {} left no activation-stream snapshot to resume \
+                         from — remove the run directory to start over",
+                        resume_at - 1
+                    );
+                };
+                let path = dir.join(state);
+                let bytes = std::fs::read(&path).with_context(|| {
+                    format!("reading stream snapshot {} for resume", path.display())
+                })?;
+                let got = fnv1a64(&bytes);
+                ensure!(
+                    got == want,
+                    "stream snapshot {} content hash {} does not match the \
+                     manifest's {} — remove the run directory to start over",
+                    path.display(),
+                    to_hex(got),
+                    to_hex(want),
+                );
+                let (xs, xs_shift) = decode_state(&bytes, self.method.needs_shift())
+                    .with_context(|| format!("decoding snapshot {}", path.display()))?;
+                ensure!(
+                    xs.len() == self.n_batches,
+                    "stream snapshot holds {} batches but the calibration set \
+                     has {} — the calibration data changed; remove the run \
+                     directory to start over",
+                    xs.len(),
+                    self.n_batches,
+                );
+                self.xs = xs;
+                self.xs_shift = xs_shift;
+            }
+        }
+        self.next = resume_at;
+        self.manifest = Some(manifest);
+        Ok(())
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.cfg.n_layers
+    }
+
+    /// Blocks restored from a prior session's checkpoints.
+    pub fn resumed_blocks(&self) -> usize {
+        self.resumed
+    }
+
+    /// Blocks skipped because the run was already complete on open.
+    pub fn skipped_blocks(&self) -> usize {
+        self.skipped
+    }
+
+    /// Blocks solved by this session so far.
+    pub fn solved_blocks(&self) -> usize {
+        self.solved
+    }
+
+    /// Solve, persist (when checkpointed) and drop the next block.
+    /// Returns `None` once every block is done. The loop body is the
+    /// exact operation sequence of the historical `compress_model` —
+    /// dense taps, per-group shifted taps / covariances / concurrent
+    /// solves, refinement, stream advance — so outputs are bitwise
+    /// unchanged.
+    pub fn next_block(&mut self) -> Result<Option<BlockOutcome>> {
+        let cfg = self.cfg;
+        if self.next >= cfg.n_layers {
+            return Ok(None);
+        }
+        let i = self.next;
+        let t_block = Instant::now();
+        let (params, method) = (self.params, self.method);
+        let pool = self.pool;
+
+        // dense taps on original inputs (X_j for every group, plus Y target)
+        let t0 = Instant::now();
+        let dense_taps = self.collector.dense_taps(cfg, params, i, &self.xs, &pool)?;
+        self.report.secs_collect += t0.elapsed().as_secs_f64();
+
+        // initialize L'_i <- L_i (exact full-rank factorization)
+        let mut bf = exact_factors(cfg, params, i);
+
+        for (tap_idx, linears) in GROUPS {
+            // collect shifted tap from the *current* partial state of L'_i
+            let t0 = Instant::now();
+            let shift_tap: Option<Vec<Vec<f32>>> = if method.objective().needs_shift() {
+                Some(
+                    self.collector
+                        .lr_tap(cfg, &bf, &self.xs_shift, tap_idx - 1, &pool)?,
+                )
+            } else {
+                None
+            };
+            self.report.secs_collect += t0.elapsed().as_secs_f64();
+
+            // accumulate covariances (shared by all linears in the group);
+            // per-batch partials merge in batch order — thread-count
+            // invariant by construction
+            let t0 = Instant::now();
+            let dim = if tap_idx == 4 { cfg.d_ff } else { cfg.d_model };
+            let cov = match &shift_tap {
+                Some(shift) => {
+                    let pairs: Vec<(&[f32], &[f32])> = dense_taps.per_tap[tap_idx - 1]
+                        .iter()
+                        .zip(shift)
+                        .map(|(o, s)| (o.as_slice(), s.as_slice()))
+                        .collect();
+                    CovTriple::accumulate(&pool, dim, &pairs)
+                }
+                None => {
+                    let chunks: Vec<&[f32]> = dense_taps.per_tap[tap_idx - 1]
+                        .iter()
+                        .map(|o| o.as_slice())
+                        .collect();
+                    let mut cov = CovTriple::accumulate_same(&pool, dim, &chunks);
+                    cov.mirror_same();
+                    cov
+                }
+            };
+
+            // the group's linears share `cov` and are independent given it
+            // (paper §B.1): solve them concurrently. The paper's
+            // block-sequential error propagation is intact because the
+            // shifted tap above was collected before any factor changed.
+            // Each solve gets an even share of the budget, passed down
+            // explicitly to its linalg kernels (and installed, so any
+            // auto-resolved stragglers inherit it too).
+            let inner =
+                Pool::exact((pool.threads() / linears.len().min(pool.threads())).max(1));
+            let cov_ref = &cov;
+            let alloc_ref = &self.allocation;
+            let solved = pool.run(
+                linears
+                    .iter()
+                    .map(|&lin| {
+                        move || {
+                            inner.install(|| {
+                                let k = alloc_ref.rank_of(lin);
+                                let (f, qerr) =
+                                    solve_one(method, cfg, params, i, lin, cov_ref, k, &inner);
+                                (lin, f, qerr)
+                            })
+                        }
+                    })
+                    .collect(),
+            );
+            for (lin, f, qerr) in solved {
+                f.write_into(cfg, lin, &mut bf);
+                if method.quantized() {
+                    self.quant_errs.push(qerr);
+                }
+            }
+            self.report.secs_solve += t0.elapsed().as_secs_f64();
+        }
+
+        // step 9: block-level local refinement
+        if let Some(ropts) = method.refine_options() {
+            let Some(engine) = self.collector.engine() else {
+                bail!(
+                    "method '{}' needs block refinement, which drives the AOT \
+                     refine_step artifact — use an Engine-backed collector",
+                    method.name
+                );
+            };
+            let t0 = Instant::now();
+            let x_shift_flat = concat_batches(&self.xs_shift);
+            let y_flat = concat_batches(&dense_taps.y);
+            let rep = refine_block(engine, cfg, &mut bf, &x_shift_flat, &y_flat, ropts, &pool)?;
+            self.report.refine.push(rep);
+            self.report.secs_refine += t0.elapsed().as_secs_f64();
+        }
+
+        // step 10: advance both streams
+        if method.needs_shift() {
+            let t0 = Instant::now();
+            let advanced = self
+                .collector
+                .lr_forward_all(cfg, &bf, &self.xs_shift, &pool)?;
+            self.xs_shift = advanced;
+            self.report.secs_collect += t0.elapsed().as_secs_f64();
+        }
+        self.xs = dense_taps.y;
+
+        // make the block durable, then drop it (unless kept)
+        let shard = self.commit(i, &bf)?;
+        if self.keep_blocks {
+            self.kept.push(bf);
+        }
+        self.solved += 1;
+        self.next = i + 1;
+        Ok(Some(BlockOutcome {
+            index: i,
+            total: cfg.n_layers,
+            secs: t_block.elapsed().as_secs_f64(),
+            shard,
+        }))
+    }
+
+    /// Persist block `i` per the module-level checkpoint protocol.
+    /// Must run *after* the streams advance: `state_<i+1>.aat` is the
+    /// streams entering block `i+1`.
+    fn commit(&mut self, i: usize, bf: &BlockFactors) -> Result<Option<PathBuf>> {
+        let Some(dir) = self.dir.clone() else {
+            return Ok(None);
+        };
+        let manifest_path = dir.join("run.json");
+        let Some(manifest) = self.manifest.as_mut() else {
+            bail!("checkpointed run lost its manifest (internal invariant)");
+        };
+
+        // transient marker: factors exist in memory, shard not durable yet
+        // (resume treats `solved` as unwritten and re-solves the block)
+        manifest.blocks[i] = BlockEntry::solved();
+        manifest.save(&manifest_path)?;
+
+        // 1. durable factor shard
+        let shard_name = format!("block_{i}.aat");
+        let shard_path = dir.join(&shard_name);
+        let shard_hash = write_shard(&shard_path, bf)
+            .with_context(|| format!("writing shard {}", shard_path.display()))?;
+
+        // 2. stream snapshot the next block resumes from
+        let (state_name, state_hash) = if i + 1 < self.cfg.n_layers {
+            let name = format!("state_{}.aat", i + 1);
+            let path = dir.join(&name);
+            let hash = write_state(&path, &self.xs, &self.xs_shift)
+                .with_context(|| format!("writing stream snapshot {}", path.display()))?;
+            (Some(name), Some(hash))
+        } else {
+            (None, None)
+        };
+
+        // 3. the shard and snapshot are durable — record them
+        manifest.blocks[i] = BlockEntry::written(shard_name, shard_hash, state_name, state_hash);
+        manifest.save(&manifest_path)?;
+
+        // 4. the snapshot this block resumed from is obsolete now
+        if i > 0 {
+            let stale = dir.join(format!("state_{i}.aat"));
+            if stale.exists() {
+                std::fs::remove_file(&stale)
+                    .with_context(|| format!("removing stale snapshot {}", stale.display()))?;
+            }
+        }
+        Ok(Some(shard_path))
+    }
+
+    /// Complete the run: fold diagnostics, assemble the whole-model
+    /// artifact (streamed shard by shard — never all blocks in memory),
+    /// and mark the manifest complete.
+    fn finalize(&mut self) -> Result<()> {
+        ensure!(
+            self.next >= self.cfg.n_layers,
+            "compress run is incomplete ({} of {} blocks done) — drive \
+             next_block() to completion; the checkpoints persist, so a later \
+             session can resume",
+            self.next,
+            self.cfg.n_layers,
+        );
+        self.report.quant_err = if self.quant_errs.is_empty() {
+            0.0
+        } else {
+            // aasvd-lint: allow(float-reduce): sequential mean over per-block diagnostics in fixed block order; report-only
+            self.quant_errs.iter().sum::<f64>() / self.quant_errs.len() as f64
+        };
+
+        let Some(artifact) = self.artifact.clone() else {
+            return Ok(());
+        };
+
+        // a prior session may have finalized already: keep the artifact
+        // if it still verifies, rebuild it bit-identically otherwise
+        if let Some(manifest) = self.manifest.as_ref() {
+            if manifest.complete {
+                if let (Some(want), Ok(bytes)) =
+                    (manifest.artifact_hash, std::fs::read(&artifact))
+                {
+                    if fnv1a64(&bytes) == want {
+                        self.artifact_hash = Some(want);
+                        if let Some(dir) = self.dir.as_ref() {
+                            sweep_states(dir, self.cfg.n_layers);
+                        }
+                        return Ok(());
+                    }
+                }
+            }
+        }
+
+        let mut w = ArchiveWriter::create(&artifact, 2 * self.cfg.n_layers)
+            .with_context(|| format!("assembling artifact {}", artifact.display()))?;
+        for i in 0..self.cfg.n_layers {
+            let (fdata, mdata) = if i < self.kept.len() {
+                (
+                    self.kept[i].factors.data.clone(),
+                    self.kept[i].masks.data.clone(),
+                )
+            } else {
+                let Some(dir) = self.dir.as_ref() else {
+                    bail!(
+                        "block {i} is neither in memory nor on disk \
+                         (internal invariant)"
+                    );
+                };
+                let bf = load_shard(self.cfg, &dir.join(format!("block_{i}.aat")))?;
+                (bf.factors.data, bf.masks.data)
+            };
+            w.append(
+                &format!("blocks.{i}.factors"),
+                &Tensor::new(vec![fdata.len()], fdata),
+            )?;
+            w.append(
+                &format!("blocks.{i}.masks"),
+                &Tensor::new(vec![mdata.len()], mdata),
+            )?;
+        }
+        let hash = w
+            .finish()
+            .with_context(|| format!("assembling artifact {}", artifact.display()))?;
+        self.artifact_hash = Some(hash);
+
+        if let Some(dir) = self.dir.clone() {
+            let Some(manifest) = self.manifest.as_mut() else {
+                bail!("checkpointed run lost its manifest (internal invariant)");
+            };
+            manifest.complete = true;
+            manifest.artifact_hash = Some(hash);
+            manifest.save(dir.join("run.json"))?;
+            sweep_states(&dir, self.cfg.n_layers);
+        }
+        Ok(())
+    }
+
+    /// Finish a (typically checkpointed) run: write the artifact and
+    /// return the accounting summary.
+    pub fn finish(mut self) -> Result<CompressSummary> {
+        self.finalize()?;
+        Ok(CompressSummary {
+            total: self.cfg.n_layers,
+            solved: self.solved,
+            resumed: self.resumed,
+            skipped: self.skipped,
+            report: self.report,
+            allocation: self.allocation,
+            artifact: self.artifact,
+            artifact_hash: self.artifact_hash,
+        })
+    }
+
+    /// Finish an in-memory (`keep_blocks`) run as a [`CompressedModel`].
+    pub fn into_model(mut self) -> Result<CompressedModel> {
+        self.finalize()?;
+        ensure!(
+            self.kept.len() == self.cfg.n_layers,
+            "into_model needs the keep_blocks option; this run streamed its \
+             blocks to disk — load the artifact with load_blocks instead"
+        );
+        Ok(CompressedModel {
+            blocks: self.kept,
+            allocation: self.allocation,
+            report: self.report,
+        })
+    }
+}
+
+/// FNV-1a 64 over every input that determines the output bits: config
+/// dims, method knobs, rank allocation, calibration tokens, and the
+/// dense weights. The thread count is deliberately excluded — artifacts
+/// are bitwise thread-count invariant, so a run may resume under a
+/// different worker count.
+fn run_fingerprint(
+    cfg: &Config,
+    params: &FlatStore,
+    calib: &[TokenBatch],
+    method: &Method,
+    ratio: f64,
+    allocation: &Allocation,
+) -> u64 {
+    let mut h = Fnv64::new();
+    h.update(cfg.name.as_bytes());
+    for dim in [
+        cfg.vocab,
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.n_layers,
+        cfg.d_ff,
+        cfg.batch,
+        cfg.seq,
+        cfg.refine_batch,
+        cfg.train_batch,
+    ] {
+        h.update_u64(dim as u64);
+    }
+    h.update_u64(cfg.rope_theta.to_bits());
+    h.update(method.name.as_bytes());
+    h.update(method.objective().name().as_bytes());
+    h.update(&[u8::from(method.asvd_diag()), u8::from(method.quantized())]);
+    h.update(method.scheme().name().as_bytes());
+    match method.refine_options() {
+        None => h.update(&[0]),
+        Some(r) => {
+            h.update(&[1]);
+            h.update_u64(r.epochs as u64);
+            h.update_u64(r.base_lr.to_bits());
+            h.update_u64(r.warmup_frac.to_bits());
+            h.update_u64(r.plateau_tol.to_bits());
+            h.update_u64(r.seed);
+        }
+    }
+    h.update_u64(ratio.to_bits());
+    for &k in &allocation.ranks {
+        h.update_u64(k as u64);
+    }
+    h.update_u64(calib.len() as u64);
+    for b in calib {
+        h.update_i32s(&b.tokens);
+        h.update_u64(b.real_rows as u64);
+    }
+    h.update_f32s(&params.data);
+    h.finish()
+}
+
+/// One block's factors as a durable `.aat` shard; returns the file hash.
+fn write_shard(path: &Path, bf: &BlockFactors) -> Result<u64> {
+    let mut w = ArchiveWriter::create(path, 2)?;
+    w.append(
+        "factors",
+        &Tensor::new(vec![bf.factors.data.len()], bf.factors.data.clone()),
+    )?;
+    w.append(
+        "masks",
+        &Tensor::new(vec![bf.masks.data.len()], bf.masks.data.clone()),
+    )?;
+    w.finish()
+}
+
+fn decode_shard(cfg: &Config, bytes: &[u8]) -> Result<BlockFactors> {
+    let arch = TensorArchive::from_bytes(bytes)?;
+    let mut bf = BlockFactors::zeros(cfg);
+    let f = arch.get("factors").context("shard is missing 'factors'")?;
+    let m = arch.get("masks").context("shard is missing 'masks'")?;
+    ensure!(
+        f.data.len() == bf.factors.data.len() && m.data.len() == bf.masks.data.len(),
+        "shard tensor sizes do not match this config's factor layout"
+    );
+    bf.factors.data.copy_from_slice(&f.data);
+    bf.masks.data.copy_from_slice(&m.data);
+    Ok(bf)
+}
+
+fn load_shard(cfg: &Config, path: &Path) -> Result<BlockFactors> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading shard {}", path.display()))?;
+    decode_shard(cfg, &bytes).with_context(|| format!("decoding shard {}", path.display()))
+}
+
+/// Snapshot the activation streams entering the next block; returns the
+/// file hash. The f32 bits round-trip exactly, so a restored stream is
+/// indistinguishable from one that never left memory.
+fn write_state(path: &Path, xs: &[Vec<f32>], xs_shift: &[Vec<f32>]) -> Result<u64> {
+    let mut w = ArchiveWriter::create(path, xs.len() + xs_shift.len())?;
+    for (b, x) in xs.iter().enumerate() {
+        w.append(&format!("xs.{b}"), &Tensor::new(vec![x.len()], x.clone()))?;
+    }
+    for (b, x) in xs_shift.iter().enumerate() {
+        w.append(
+            &format!("xs_shift.{b}"),
+            &Tensor::new(vec![x.len()], x.clone()),
+        )?;
+    }
+    w.finish()
+}
+
+fn decode_state(bytes: &[u8], needs_shift: bool) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+    let arch = TensorArchive::from_bytes(bytes)?;
+    let collect = |prefix: &str| -> Vec<Vec<f32>> {
+        let mut out: Vec<Vec<f32>> = Vec::new();
+        while let Some(t) = arch.get(&format!("{prefix}.{}", out.len())) {
+            out.push(t.data.clone());
+        }
+        out
+    };
+    let xs = collect("xs");
+    ensure!(!xs.is_empty(), "stream snapshot holds no activation batches");
+    let xs_shift = collect("xs_shift");
+    if needs_shift {
+        ensure!(
+            xs_shift.len() == xs.len(),
+            "stream snapshot is missing the shifted stream this method needs"
+        );
+    }
+    Ok((xs, xs_shift))
+}
+
+/// Remove stream snapshots once the artifact is durable: they are pure
+/// resume state and only waste space afterwards. Best-effort — a
+/// leftover snapshot is harmless (complete runs never read it).
+fn sweep_states(dir: &Path, n_layers: usize) {
+    for b in 1..n_layers {
+        let p = dir.join(format!("state_{b}.aat"));
+        if p.exists() {
+            let _ = std::fs::remove_file(&p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Batcher, Corpus, Domain};
+    use crate::model::init::init_params;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (Config, FlatStore, Vec<TokenBatch>) {
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(9));
+        let corpus = Corpus::generate(Domain::Wiki, 10_000, 7);
+        let calib: Vec<_> = Batcher::new(cfg.batch, cfg.seq)
+            .sequential(&corpus.train, 2)
+            .into_iter()
+            .filter(|b| b.real_rows == cfg.batch)
+            .collect();
+        assert!(!calib.is_empty());
+        (cfg, params, calib)
+    }
+
+    #[test]
+    fn fingerprint_tracks_inputs_but_not_threads() {
+        let (cfg, params, calib) = setup();
+        let m1 = Method::builder("anchored")
+            .objective(crate::compress::Objective::Anchored)
+            .threads(1)
+            .build();
+        let m4 = Method::builder("anchored")
+            .objective(crate::compress::Objective::Anchored)
+            .threads(4)
+            .build();
+        let alloc = Allocation::uniform(&cfg, 0.6, m1.scheme());
+        let base = run_fingerprint(&cfg, &params, &calib, &m1, 0.6, &alloc);
+
+        // thread count must NOT move the fingerprint (cross-thread resume)
+        assert_eq!(
+            base,
+            run_fingerprint(&cfg, &params, &calib, &m4, 0.6, &alloc)
+        );
+        // ratio does
+        let alloc2 = Allocation::uniform(&cfg, 0.5, m1.scheme());
+        assert_ne!(
+            base,
+            run_fingerprint(&cfg, &params, &calib, &m1, 0.5, &alloc2)
+        );
+        // weights do
+        let mut p2 = params.clone();
+        p2.data[0] += 1.0;
+        assert_ne!(base, run_fingerprint(&cfg, &p2, &calib, &m1, 0.6, &alloc));
+        // calibration data does
+        let fewer = &calib[..calib.len() - 1];
+        assert_ne!(base, run_fingerprint(&cfg, &params, fewer, &m1, 0.6, &alloc));
+        // method identity does
+        let other = Method::builder("other")
+            .objective(crate::compress::Objective::Anchored)
+            .build();
+        assert_ne!(
+            base,
+            run_fingerprint(&cfg, &params, &calib, &other, 0.6, &alloc)
+        );
+    }
+
+    #[test]
+    fn state_snapshot_roundtrips_bit_exactly() {
+        let dir = std::env::temp_dir().join("aasvd-run-unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state_rt.aat");
+        let xs = vec![vec![1.0f32, -0.0, 3.5e-20], vec![f32::MIN_POSITIVE; 4]];
+        let xs_shift = vec![vec![2.0f32; 3], vec![0.25f32; 4]];
+        let hash = write_state(&path, &xs, &xs_shift).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(hash, fnv1a64(&bytes));
+        let (rxs, rshift) = decode_state(&bytes, true).unwrap();
+        // bit-for-bit: -0.0 stays -0.0, subnormals survive
+        for (a, b) in xs.iter().zip(&rxs) {
+            assert!(a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+        for (a, b) in xs_shift.iter().zip(&rshift) {
+            assert!(a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+        // a method without the shifted stream accepts its absence
+        let path2 = dir.join("state_noshift.aat");
+        write_state(&path2, &xs, &[]).unwrap();
+        let (_, empty) = decode_state(&std::fs::read(&path2).unwrap(), false).unwrap();
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn shard_roundtrips_through_bytes() {
+        let (cfg, params, _) = setup();
+        let bf = exact_factors(&cfg, &params, 0);
+        let dir = std::env::temp_dir().join("aasvd-run-unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("shard_rt.aat");
+        let hash = write_shard(&path, &bf).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(hash, fnv1a64(&bytes));
+        let back = decode_shard(&cfg, &bytes).unwrap();
+        assert_eq!(back.factors.data, bf.factors.data);
+        assert_eq!(back.masks.data, bf.masks.data);
+    }
+}

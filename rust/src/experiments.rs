@@ -2,7 +2,7 @@
 //! paper's reference numbers — used by every bench_table*/bench_fig*
 //! binary (DESIGN.md §5 experiment index).
 
-use crate::compress::{compress_model, CompressedModel, Method};
+use crate::compress::{BlockOutcome, CompressRun, CompressedModel, Method, RunOptions};
 use crate::data::{Batcher, Corpus, Domain, TokenBatch, ALL_TASKS};
 use crate::eval::{all_tasks_accuracy, compressed_ppl, dense_ppl, ModelRef};
 use crate::model::{Config, FlatStore};
@@ -156,13 +156,46 @@ pub fn eval_dense(ctx: &Ctx) -> Result<MethodEval> {
 }
 
 /// Compress with `method` at `ratio`, then evaluate PPL + all tasks.
+/// Per-block progress goes to the default observer (the shared log).
 pub fn eval_compressed_method(
     ctx: &Ctx,
     method: &Method,
     ratio: f64,
 ) -> Result<(MethodEval, CompressedModel)> {
+    eval_compressed_method_observed(ctx, method, ratio, &mut |o: &BlockOutcome| {
+        crate::log_info!(
+            "{} @ {ratio}: block {}/{} in {:.1}s",
+            method.name,
+            o.index + 1,
+            o.total,
+            o.secs
+        );
+    })
+}
+
+/// [`eval_compressed_method`] with an explicit per-block observer: the
+/// harness sees each block as it completes (the streaming pipeline's
+/// pacing hook) instead of waiting out the whole model silently.
+pub fn eval_compressed_method_observed(
+    ctx: &Ctx,
+    method: &Method,
+    ratio: f64,
+    on_block: &mut dyn FnMut(&BlockOutcome),
+) -> Result<(MethodEval, CompressedModel)> {
     let t0 = std::time::Instant::now();
-    let cm = compress_model(&ctx.engine, &ctx.cfg, &ctx.params, &ctx.calib, method, ratio)?;
+    let mut run = CompressRun::new(
+        &ctx.engine,
+        &ctx.cfg,
+        &ctx.params,
+        &ctx.calib,
+        method,
+        ratio,
+        RunOptions::in_memory(),
+    )?;
+    while let Some(outcome) = run.next_block()? {
+        on_block(&outcome);
+    }
+    let cm = run.into_model()?;
     let mut ppl = Vec::new();
     for (domain, batches) in &ctx.eval {
         ppl.push((

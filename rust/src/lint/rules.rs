@@ -69,9 +69,10 @@ pub const RULES: &[RuleDef] = &[
     RuleDef {
         name: RULE_SERVE_UNWRAP,
         patterns: &[".unwrap()", ".expect("],
-        summary: "unwrap/expect on the serving hot path — route failures \
-                  through typed errors and the CancelReason::Backend retire \
-                  path instead of panicking the worker",
+        summary: "unwrap/expect on the serving hot path or the checkpoint \
+                  persistence surface — route failures through typed errors \
+                  (CancelReason::Backend on the serve side, anyhow context on \
+                  the resume side) instead of panicking",
     },
 ];
 
@@ -101,6 +102,13 @@ const HASH_ITER_TREES: &[&str] = &[
     "src/refine/",
     "src/serve/kv_pool.rs",
 ];
+
+/// The checkpoint persistence surface, held to the serve-side unwrap
+/// standard: a panic in the run-manifest or streaming-pipeline code can
+/// strand a half-written run directory in a state that `--resume` then
+/// misreads, so every failure must surface as a typed error with enough
+/// context to act on (which file, what to remove).
+const PERSIST_FILES: &[&str] = &["src/runtime/manifest.rs", "src/compress/run.rs"];
 
 /// Trees whose compute paths must not read wall clocks. The HTTP front
 /// door is held to the same rule: its legitimate clock reads (read
@@ -160,7 +168,9 @@ pub fn policy_path(path: &str) -> String {
 /// - `wallclock`: non-test code in `linalg/`, `model/`, `compress/`, and
 ///   `serve/http/` (where only justified latency-measurement sites may
 ///   suppress it).
-/// - `serve-unwrap`: non-test code in `src/serve/`.
+/// - `serve-unwrap`: non-test code in `src/serve/`, plus the checkpoint
+///   persistence surface (`runtime/manifest.rs`, `compress/run.rs`) where
+///   a panic strands a run directory mid-checkpoint.
 pub fn applies(rule: &str, path: &str, in_test: bool) -> bool {
     match rule {
         RULE_ADHOC_PARALLELISM => path != "src/util/pool.rs",
@@ -173,7 +183,9 @@ pub fn applies(rule: &str, path: &str, in_test: bool) -> bool {
         RULE_WALLCLOCK => {
             !in_test && WALLCLOCK_TREES.iter().any(|t| path.starts_with(t))
         }
-        RULE_SERVE_UNWRAP => !in_test && path.starts_with("src/serve/"),
+        RULE_SERVE_UNWRAP => {
+            !in_test && (path.starts_with("src/serve/") || PERSIST_FILES.contains(&path))
+        }
         _ => false,
     }
 }
@@ -218,6 +230,23 @@ mod tests {
         assert!(!applies(RULE_SERVE_UNWRAP, "src/linalg/eigh.rs", false));
         // the HTTP front door sits inside src/serve/, so it inherits the rule
         assert!(applies(RULE_SERVE_UNWRAP, "src/serve/http/server.rs", false));
+    }
+
+    #[test]
+    fn persistence_surface_is_unwrap_hardened() {
+        // the checkpoint files are held to the serve-side unwrap standard
+        assert!(applies(RULE_SERVE_UNWRAP, "src/runtime/manifest.rs", false));
+        assert!(applies(RULE_SERVE_UNWRAP, "src/compress/run.rs", false));
+        // test code in those files keeps its unwraps
+        assert!(!applies(RULE_SERVE_UNWRAP, "src/runtime/manifest.rs", true));
+        assert!(!applies(RULE_SERVE_UNWRAP, "src/compress/run.rs", true));
+        // the rest of runtime/ is not swept in
+        assert!(!applies(RULE_SERVE_UNWRAP, "src/runtime/engine.rs", false));
+        // and the streaming pipeline inherits the compress-tree rules too
+        assert!(applies(RULE_WALLCLOCK, "src/compress/run.rs", false));
+        assert!(applies(RULE_HASH_ITER, "src/compress/run.rs", false));
+        assert!(applies(RULE_ENV_VAR, "src/compress/run.rs", false));
+        assert!(applies(RULE_ENV_VAR, "src/runtime/manifest.rs", false));
     }
 
     #[test]

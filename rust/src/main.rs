@@ -4,18 +4,26 @@
 //! Subcommands:
 //!   pretrain  --config base [--steps N]            train + checkpoint
 //!   compress  --config base --method aa_svd --ratio 0.6 [--out path]
+//!             checkpointed + resumable: every solved block lands in a run
+//!             directory (--run-dir, default <out>.run); --resume continues
+//!             an interrupted run bitwise-identically, --status reports a
+//!             run directory's progress, --json emits a machine summary,
+//!             --synthetic runs artifact-free on a builtin config
 //!   eval      --config base [--compressed path]    PPL + zero-shot battery
 //!   generate  --config base --prompt "..."         decode via the server
 //!   info                                           manifest + configs
 
-use aasvd::compress::{compress_model, Method};
+use aasvd::compress::{Collector, CompressRun, Method, RunOptions};
+use aasvd::data::TokenBatch;
 use aasvd::eval::{all_tasks_accuracy, compressed_ppl, dense_ppl, display_ppl, ModelRef, Table};
 use aasvd::experiments::{setup, Knobs};
-use aasvd::model::lowrank::{load_blocks, save_blocks};
+use aasvd::model::lowrank::load_blocks;
+use aasvd::model::{Config, FlatStore};
 use aasvd::refine::RefineOptions;
-use aasvd::runtime::Engine;
+use aasvd::runtime::{BlockStatus, Engine, RunManifest};
 use aasvd::serve::{Event, GenParams, ServedModel, Server};
 use aasvd::util::cli::Args;
+use aasvd::util::json::Json;
 use anyhow::{bail, Result};
 use std::io::Write;
 
@@ -40,17 +48,32 @@ fn main() -> Result<()> {
     }
 }
 
-pub fn method_by_name(name: &str, refine: RefineOptions) -> Result<Method> {
+/// Resolve a method name. `refine` is `None` when no engine is available
+/// (the synthetic path): methods that *require* refinement are refused
+/// there, and bare-objective ablation names resolve without it.
+pub fn method_by_name(name: &str, refine: Option<RefineOptions>) -> Result<Method> {
     Ok(match name {
         "naive_svd" => Method::naive_svd(),
         "asvd" => Method::asvd(),
         "svd_llm" => Method::svd_llm(),
         "dobi" => Method::dobi(),
         "dobi_q" => Method::dobi_q(),
-        "aa_svd" => Method::aa_svd(refine),
-        "aa_svd_q" => Method::aa_svd_q(refine),
+        "aa_svd" | "aa_svd_q" => {
+            let Some(r) = refine else {
+                bail!(
+                    "method '{name}' includes block refinement, which drives \
+                     the AOT refine_step artifact and is unavailable here — \
+                     pick a refinement-free method (e.g. anchored, svd_llm)"
+                );
+            };
+            if name == "aa_svd" {
+                Method::aa_svd(r)
+            } else {
+                Method::aa_svd_q(r)
+            }
+        }
         other => match aasvd::compress::Objective::from_name(other) {
-            Some(o) => Method::ablation(o, Some(refine)),
+            Some(o) => Method::ablation(o, refine),
             None => bail!("unknown method '{other}'"),
         },
     })
@@ -88,6 +111,16 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Flags shared by both compress paths (engine-backed and synthetic).
+struct CompressCli {
+    ratio: f64,
+    out: String,
+    run_dir: String,
+    resume: bool,
+    json: bool,
+    crash_after: Option<usize>,
+}
+
 fn cmd_compress(args: &Args) -> Result<()> {
     let knobs = Knobs::parse(args, "base");
     let method_name = args.str("method", "aa_svd", "compression method");
@@ -95,29 +128,206 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let out = args.str(
         "out",
         &format!("checkpoints/{}_{}_{}.aat", knobs.config, method_name, ratio),
-        "output path",
+        "output artifact path",
+    );
+    let run_dir = args.str("run-dir", &format!("{out}.run"), "checkpoint directory");
+    let resume = args.flag("resume", "continue an interrupted run from its checkpoints");
+    let status = args.flag("status", "report the run directory's progress and exit");
+    let json = args.flag("json", "emit the summary as JSON on stdout");
+    let synthetic = args.flag(
+        "synthetic",
+        "artifact-free: builtin config, generated weights/data, reference collector",
+    );
+    let seed = args.u64("seed", 3, "synthetic weight-init seed");
+    let crash_after = args.str(
+        "crash-after-block",
+        "",
+        "abort() right after this block commits (crash testing)",
     );
     args.finish_or_help();
+
+    let crash_after: Option<usize> = match crash_after.as_str() {
+        "" => None,
+        s => Some(s.parse().map_err(|_| {
+            anyhow::anyhow!("--crash-after-block expects a block index, got '{s}'")
+        })?),
+    };
+    if status {
+        return compress_status(&run_dir, json);
+    }
+    let cli = CompressCli {
+        ratio,
+        out,
+        run_dir,
+        resume,
+        json,
+        crash_after,
+    };
+
+    if synthetic {
+        aasvd::util::pool::set_global_threads(knobs.threads);
+        let Some(cfg) = Config::builtin(&knobs.config) else {
+            bail!(
+                "--synthetic needs a builtin config and '{}' is not one",
+                knobs.config
+            );
+        };
+        let params = aasvd::model::init::init_params(
+            &cfg,
+            &mut aasvd::util::rng::Rng::new(seed),
+        );
+        let n_batches = (knobs.calib_seqs / cfg.batch).max(1);
+        let bytes = (n_batches * cfg.batch * (cfg.seq + 1) * 4).max(40_000);
+        let corpus = aasvd::data::Corpus::generate(aasvd::data::Domain::Wiki, bytes, 42);
+        let calib: Vec<TokenBatch> = aasvd::data::Batcher::new(cfg.batch, cfg.seq)
+            .sequential(&corpus.train, n_batches)
+            .into_iter()
+            .filter(|b| b.real_rows == cfg.batch)
+            .collect();
+        let method = method_by_name(&method_name, None)?;
+        return run_compress(
+            &cli,
+            &aasvd::compress::ReferenceCollector,
+            &cfg,
+            &params,
+            &calib,
+            &method,
+        );
+    }
+
     let ctx = setup(&knobs)?;
-    let method = method_by_name(&method_name, knobs.refine())?;
+    let method = method_by_name(&method_name, Some(knobs.refine()))?;
+    run_compress(&cli, &ctx.engine, &ctx.cfg, &ctx.params, &ctx.calib, &method)
+}
+
+/// Drive a checkpointed [`CompressRun`] to completion, pacing the block
+/// loop from here so progress is visible and crash injection lands at a
+/// deterministic point.
+fn run_compress<C: Collector>(
+    cli: &CompressCli,
+    collector: &C,
+    cfg: &Config,
+    params: &FlatStore,
+    calib: &[TokenBatch],
+    method: &Method,
+) -> Result<()> {
     let t0 = std::time::Instant::now();
-    let cm = compress_model(&ctx.engine, &ctx.cfg, &ctx.params, &ctx.calib, &method, ratio)?;
-    save_blocks(&cm.blocks, &out)?;
-    println!(
-        "compressed '{}' with {method_name} @ {ratio} in {:.1}s on {} threads \
-         (collect {:.1}s, solve {:.1}s, refine {:.1}s) -> {out}",
-        knobs.config,
-        t0.elapsed().as_secs_f64(),
-        aasvd::util::pool::auto_threads(),
-        cm.report.secs_collect,
-        cm.report.secs_solve,
-        cm.report.secs_refine,
-    );
-    println!(
-        "achieved parameter ratio: {:.3} (per-linear ranks: {:?})",
-        cm.allocation.achieved_ratio(&ctx.cfg),
-        cm.allocation.ranks
-    );
+    let mut options = RunOptions::checkpointed(&cli.run_dir).artifact(&cli.out);
+    if cli.resume {
+        options = options.resume();
+    }
+    let mut run = CompressRun::new(collector, cfg, params, calib, method, cli.ratio, options)?;
+    if run.resumed_blocks() > 0 {
+        eprintln!(
+            "resuming at block {}/{} from {}",
+            run.resumed_blocks(),
+            run.total_blocks(),
+            cli.run_dir
+        );
+    }
+    while let Some(done) = run.next_block()? {
+        eprintln!(
+            "block {}/{} solved in {:.1}s",
+            done.index + 1,
+            done.total,
+            done.secs
+        );
+        if cli.crash_after == Some(done.index) {
+            eprintln!("--crash-after-block {}: aborting mid-run", done.index);
+            std::process::abort();
+        }
+    }
+    let summary = run.finish()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let peak_mb = aasvd::util::mem::peak_rss_mb();
+    let artifact = summary
+        .artifact
+        .as_ref()
+        .map(|p| p.display().to_string())
+        .unwrap_or_default();
+    if cli.json {
+        let j = Json::obj()
+            .set("config", cfg.name.as_str())
+            .set("method", method.name.as_str())
+            .set("ratio", cli.ratio)
+            .set("blocks_total", summary.total)
+            .set("blocks_solved", summary.solved)
+            .set("blocks_resumed", summary.resumed)
+            .set("blocks_skipped", summary.skipped)
+            .set("achieved_ratio", summary.allocation.achieved_ratio(cfg))
+            .set("secs_wall", wall)
+            .set("secs_collect", summary.report.secs_collect)
+            .set("secs_solve", summary.report.secs_solve)
+            .set("secs_refine", summary.report.secs_refine)
+            .set("peak_rss_mb", peak_mb)
+            .set("artifact", artifact.as_str())
+            .set(
+                "artifact_hash",
+                summary
+                    .artifact_hash
+                    .map(aasvd::util::hash::to_hex)
+                    .unwrap_or_default(),
+            )
+            .set("run_dir", cli.run_dir.as_str());
+        println!("{}", j.to_string_pretty());
+    } else {
+        println!(
+            "compressed '{}' with {} @ {} in {wall:.1}s on {} threads \
+             (collect {:.1}s, solve {:.1}s, refine {:.1}s; peak rss {peak_mb:.0} MB)",
+            cfg.name,
+            method.name,
+            cli.ratio,
+            aasvd::util::pool::auto_threads(),
+            summary.report.secs_collect,
+            summary.report.secs_solve,
+            summary.report.secs_refine,
+        );
+        println!(
+            "blocks: {} solved, {} resumed, {} skipped of {} -> {artifact}",
+            summary.solved, summary.resumed, summary.skipped, summary.total
+        );
+        println!(
+            "achieved parameter ratio: {:.3} (per-linear ranks: {:?})",
+            summary.allocation.achieved_ratio(cfg),
+            summary.allocation.ranks
+        );
+    }
+    Ok(())
+}
+
+/// `compress --status`: report a run directory's checkpoint progress.
+fn compress_status(run_dir: &str, json: bool) -> Result<()> {
+    let path = std::path::Path::new(run_dir).join("run.json");
+    let m = RunManifest::load(&path)?;
+    let written = m
+        .blocks
+        .iter()
+        .filter(|b| b.status == BlockStatus::Written)
+        .count();
+    let next = m.first_unwritten();
+    if json {
+        let j = Json::obj()
+            .set("config", m.config.as_str())
+            .set("method", m.method.as_str())
+            .set("ratio", m.ratio)
+            .set("complete", m.complete)
+            .set("blocks_total", m.blocks.len())
+            .set("blocks_written", written)
+            .set("next_block", next.map(|i| i as i64).unwrap_or(-1));
+        println!("{}", j.to_string_pretty());
+    } else {
+        println!(
+            "run {run_dir}: config '{}' method '{}' ratio {} — {written}/{} blocks written{}",
+            m.config,
+            m.method,
+            m.ratio,
+            m.blocks.len(),
+            if m.complete { ", complete" } else { "" },
+        );
+        if let Some(i) = next {
+            println!("next block to solve: {i} (pass --resume to continue)");
+        }
+    }
     Ok(())
 }
 

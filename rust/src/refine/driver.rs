@@ -16,6 +16,9 @@ use anyhow::Result;
 
 use super::schedule::CosineSchedule;
 
+/// Every field here feeds the compress-run fingerprint
+/// (`compress::run`): refinement moves the output bits, so a
+/// checkpointed run refuses to resume under different knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct RefineOptions {
     pub epochs: usize,

@@ -1,4 +1,5 @@
-//! Block-level local refinement (Algorithm 2, step 9).
+//! Block-level local refinement (Algorithm 2, step 9), invoked per
+//! block by the streaming compression session (`compress::run`).
 
 pub mod driver;
 pub mod schedule;

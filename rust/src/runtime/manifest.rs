@@ -1,11 +1,21 @@
-//! AOT artifact manifest: what `make artifacts` produced and how to call it.
+//! Artifact manifests: the load-only AOT manifest and the read/write
+//! compress-run checkpoint manifest.
 //!
-//! Parsed from artifacts/manifest.json (written by python/compile/aot.py).
-//! The manifest is the single source of truth for artifact signatures and
-//! flat-tensor layouts; the Rust builtin configs are validated against it.
+//! [`Manifest`] is parsed from artifacts/manifest.json (written by
+//! python/compile/aot.py) and is the single source of truth for artifact
+//! signatures and flat-tensor layouts; the Rust builtin configs are
+//! validated against it.
+//!
+//! [`RunManifest`] is the versioned `run.json` a streaming compress run
+//! (`compress/run.rs`) keeps next to its per-block shards: one
+//! [`BlockEntry`] per layer with a status and content hashes, updated
+//! atomically after each durable step so an interrupted run — kill -9
+//! included — resumes at the last completed block.
 
 use crate::model::config::Config;
 use crate::model::params::Layout;
+use crate::util::hash::{from_hex, to_hex};
+use crate::util::io::write_bytes_atomic;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -75,8 +85,8 @@ fn parse_specs(j: &Json) -> Result<Vec<TensorSpec>> {
                     .as_arr()
                     .context("shape")?
                     .iter()
-                    .map(|d| d.as_usize().unwrap())
-                    .collect(),
+                    .map(|d| d.as_usize().context("non-integer shape dim"))
+                    .collect::<Result<_>>()?,
                 dtype: DType::parse(s.req("dtype").as_str().context("dtype")?)?,
             })
         })
@@ -93,7 +103,9 @@ impl Manifest {
                 path.display()
             )
         })?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        // surface the offending file and byte position, JsonScan-style
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("corrupt manifest {}: {e}", path.display()))?;
         let mut configs = BTreeMap::new();
         for (name, entry) in j.req("configs").as_obj().context("configs")? {
             let dims = entry.req("dims");
@@ -122,7 +134,12 @@ impl Manifest {
             configs.insert(
                 name.clone(),
                 ConfigEntry {
-                    cov_chunk: dims.req("cov_chunk").as_usize().unwrap(),
+                    cov_chunk: dims
+                        .get("cov_chunk")
+                        .and_then(|v| v.as_usize())
+                        .with_context(|| {
+                            format!("config '{name}': dims.cov_chunk missing or not an integer")
+                        })?,
                     param_layout: Layout::from_manifest(entry.req("param_layout")),
                     // python emits block tensors as "blocks.0.<name>"; the
                     // rust block store uses bare names
@@ -168,6 +185,282 @@ impl ConfigEntry {
         self.artifacts.get(name).with_context(|| {
             format!("artifact '{name}' missing for config '{}'", self.config.name)
         })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compress-run checkpoint manifest
+// ---------------------------------------------------------------------------
+
+/// Format version of `run.json`. Bumped when the schema changes; a
+/// mismatched file refuses to resume rather than misinterpreting state.
+pub const RUN_MANIFEST_VERSION: u64 = 1;
+
+/// Lifecycle of one block in a streaming compress run.
+///
+/// `Solved` is transient: factors exist in memory but the shard is not
+/// durable yet, so resume treats it as unwritten and re-solves the block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockStatus {
+    Pending,
+    Solved,
+    Written,
+}
+
+impl BlockStatus {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BlockStatus::Pending => "pending",
+            BlockStatus::Solved => "solved",
+            BlockStatus::Written => "written",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<BlockStatus> {
+        match s {
+            "pending" => Ok(BlockStatus::Pending),
+            "solved" => Ok(BlockStatus::Solved),
+            "written" => Ok(BlockStatus::Written),
+            _ => bail!("unknown block status '{s}'"),
+        }
+    }
+}
+
+/// Checkpoint record for one block: where its factor shard landed, the
+/// content hash that guards it, and (for all but the last block) the
+/// activation-stream snapshot the *next* block resumes from. File names
+/// are relative to the run directory — never absolute — so manifests are
+/// bitwise comparable across machines and working directories.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockEntry {
+    pub status: BlockStatus,
+    pub shard: Option<String>,
+    pub shard_hash: Option<u64>,
+    pub state: Option<String>,
+    pub state_hash: Option<u64>,
+}
+
+impl BlockEntry {
+    pub fn pending() -> BlockEntry {
+        BlockEntry {
+            status: BlockStatus::Pending,
+            shard: None,
+            shard_hash: None,
+            state: None,
+            state_hash: None,
+        }
+    }
+
+    pub fn solved() -> BlockEntry {
+        BlockEntry {
+            status: BlockStatus::Solved,
+            ..BlockEntry::pending()
+        }
+    }
+
+    pub fn written(
+        shard: String,
+        shard_hash: u64,
+        state: Option<String>,
+        state_hash: Option<u64>,
+    ) -> BlockEntry {
+        BlockEntry {
+            status: BlockStatus::Written,
+            shard: Some(shard),
+            shard_hash: Some(shard_hash),
+            state,
+            state_hash,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj().set("status", self.status.name());
+        if let Some(s) = &self.shard {
+            j = j.set("shard", s.as_str());
+        }
+        if let Some(h) = self.shard_hash {
+            j = j.set("shard_hash", to_hex(h).as_str());
+        }
+        if let Some(s) = &self.state {
+            j = j.set("state", s.as_str());
+        }
+        if let Some(h) = self.state_hash {
+            j = j.set("state_hash", to_hex(h).as_str());
+        }
+        j
+    }
+
+    fn from_json(j: &Json, block: usize) -> Result<BlockEntry> {
+        let status = j
+            .get("status")
+            .and_then(Json::as_str)
+            .with_context(|| format!("block {block}: missing 'status'"))?;
+        let hex = |key: &str| -> Result<Option<u64>> {
+            match j.get(key) {
+                None => Ok(None),
+                Some(v) => {
+                    let s = v
+                        .as_str()
+                        .with_context(|| format!("block {block}: '{key}' not a string"))?;
+                    Ok(Some(from_hex(s).with_context(|| {
+                        format!("block {block}: '{key}' is not a 16-digit hex hash")
+                    })?))
+                }
+            }
+        };
+        Ok(BlockEntry {
+            status: BlockStatus::parse(status)
+                .with_context(|| format!("block {block}"))?,
+            shard: j.get("shard").and_then(Json::as_str).map(str::to_string),
+            shard_hash: hex("shard_hash")?,
+            state: j.get("state").and_then(Json::as_str).map(str::to_string),
+            state_hash: hex("state_hash")?,
+        })
+    }
+}
+
+/// The `run.json` a [`CompressRun`](crate::compress::CompressRun) keeps in
+/// its run directory: run identity (config/method/ratio plus an input
+/// fingerprint) and one [`BlockEntry`] per layer. Contains no wall times,
+/// thread counts, or absolute paths — by design, so the manifest of a
+/// resumed run is bitwise identical to that of an uninterrupted one and
+/// stable across thread counts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunManifest {
+    pub version: u64,
+    pub config: String,
+    pub method: String,
+    pub ratio: f64,
+    /// FNV-1a 64 over every input that determines the output bits
+    /// (config dims, method knobs, ranks, calibration tokens, weights —
+    /// thread count deliberately excluded). A resume whose inputs hash
+    /// differently is refused.
+    pub fingerprint: u64,
+    pub complete: bool,
+    pub artifact_hash: Option<u64>,
+    pub blocks: Vec<BlockEntry>,
+}
+
+impl RunManifest {
+    pub fn new(
+        config: &str,
+        method: &str,
+        ratio: f64,
+        n_layers: usize,
+        fingerprint: u64,
+    ) -> RunManifest {
+        RunManifest {
+            version: RUN_MANIFEST_VERSION,
+            config: config.to_string(),
+            method: method.to_string(),
+            ratio,
+            fingerprint,
+            complete: false,
+            artifact_hash: None,
+            blocks: vec![BlockEntry::pending(); n_layers],
+        }
+    }
+
+    /// The resume point: index of the first block without a durable
+    /// shard. `None` when every block is written.
+    pub fn first_unwritten(&self) -> Option<usize> {
+        self.blocks
+            .iter()
+            .position(|b| b.status != BlockStatus::Written)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("version", self.version as usize)
+            .set("config", self.config.as_str())
+            .set("method", self.method.as_str())
+            .set("ratio", self.ratio)
+            .set("fingerprint", to_hex(self.fingerprint).as_str())
+            .set("complete", self.complete);
+        if let Some(h) = self.artifact_hash {
+            j = j.set("artifact_hash", to_hex(h).as_str());
+        }
+        j.set(
+            "blocks",
+            Json::Arr(self.blocks.iter().map(BlockEntry::to_json).collect()),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunManifest> {
+        let version = j
+            .get("version")
+            .and_then(Json::as_usize)
+            .context("missing 'version'")? as u64;
+        if version != RUN_MANIFEST_VERSION {
+            bail!(
+                "run manifest version {version} but this build reads version \
+                 {RUN_MANIFEST_VERSION} — finish the run with the build that \
+                 started it, or remove the run directory to start over"
+            );
+        }
+        let str_field = |key: &str| -> Result<String> {
+            Ok(j.get(key)
+                .and_then(Json::as_str)
+                .with_context(|| format!("missing '{key}'"))?
+                .to_string())
+        };
+        let fingerprint = str_field("fingerprint")?;
+        let blocks = j
+            .get("blocks")
+            .and_then(Json::as_arr)
+            .context("missing 'blocks'")?
+            .iter()
+            .enumerate()
+            .map(|(i, b)| BlockEntry::from_json(b, i))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RunManifest {
+            version,
+            config: str_field("config")?,
+            method: str_field("method")?,
+            ratio: j
+                .get("ratio")
+                .and_then(Json::as_f64)
+                .context("missing 'ratio'")?,
+            fingerprint: from_hex(&fingerprint)
+                .context("'fingerprint' is not a 16-digit hex hash")?,
+            complete: j
+                .get("complete")
+                .and_then(Json::as_bool)
+                .context("missing 'complete'")?,
+            artifact_hash: match j.get("artifact_hash") {
+                None => None,
+                Some(v) => Some(
+                    v.as_str()
+                        .and_then(from_hex)
+                        .context("'artifact_hash' is not a 16-digit hex hash")?,
+                ),
+            },
+            blocks,
+        })
+    }
+
+    /// Atomically persist to `path` (tmp + fsync + rename): a crash mid-
+    /// save leaves the previous manifest, never a torn one.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        write_bytes_atomic(path, text.as_bytes())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<RunManifest> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading run manifest {}", path.display()))?;
+        // the JsonError Display carries the byte position
+        let j = Json::parse(&text).map_err(|e| {
+            anyhow::anyhow!(
+                "corrupt compress-run manifest {}: {e} — the file cannot be \
+                 trusted for resume; remove the run directory to start over",
+                path.display()
+            )
+        })?;
+        Self::from_json(&j)
+            .with_context(|| format!("in run manifest {}", path.display()))
     }
 }
 
@@ -226,5 +519,105 @@ mod tests {
         let Some(m) = manifest() else { return };
         assert!(m.entry("no-such-config").is_err());
         assert!(m.entry("tiny").unwrap().artifact("no-such").is_err());
+    }
+
+    #[test]
+    fn corrupt_aot_manifest_reports_file_and_byte() {
+        let dir = std::env::temp_dir().join("aasvd-manifest-tests/corrupt-aot");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{\"configs\": {").unwrap();
+        let err = format!("{:#}", Manifest::load(&dir).unwrap_err());
+        assert!(err.contains("manifest.json"), "{err}");
+        assert!(err.contains("byte"), "{err}");
+    }
+
+    // ---- run manifest ----------------------------------------------------
+
+    fn sample_run() -> RunManifest {
+        let mut m = RunManifest::new("synth", "anchored", 0.6, 3, 0xabcd1234ef567890);
+        m.blocks[0] = BlockEntry::written(
+            "block_0.aat".to_string(),
+            0x1111222233334444,
+            Some("state_1.aat".to_string()),
+            Some(0x5555666677778888),
+        );
+        m.blocks[1] = BlockEntry::solved();
+        m
+    }
+
+    #[test]
+    fn run_manifest_roundtrips_and_is_bitwise_stable() {
+        let m = sample_run();
+        let text = m.to_json().to_string_pretty();
+        let back = RunManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(m, back);
+        // re-serialization is byte-identical — the property the resume
+        // tests lean on when comparing manifests across runs
+        assert_eq!(back.to_json().to_string_pretty(), text);
+        assert_eq!(m.first_unwritten(), Some(1));
+    }
+
+    #[test]
+    fn run_manifest_save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("aasvd-manifest-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run_roundtrip.json");
+        let mut m = sample_run();
+        m.complete = true;
+        m.artifact_hash = Some(0x9999aaaabbbbcccc);
+        m.save(&path).unwrap();
+        assert_eq!(RunManifest::load(&path).unwrap(), m);
+    }
+
+    #[test]
+    fn truncated_run_manifest_refuses_resume_with_position() {
+        let dir = std::env::temp_dir().join("aasvd-manifest-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run_truncated.json");
+        sample_run().save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let err = format!("{:#}", RunManifest::load(&path).unwrap_err());
+        assert!(err.contains("run_truncated.json"), "{err}");
+        assert!(err.contains("byte"), "{err}");
+        assert!(err.contains("remove the run directory"), "{err}");
+    }
+
+    #[test]
+    fn wrong_version_refuses_resume() {
+        let mut m = sample_run();
+        m.version = RUN_MANIFEST_VERSION + 1;
+        let text = m.to_json().to_string_pretty();
+        let err = format!(
+            "{:#}",
+            RunManifest::from_json(&Json::parse(&text).unwrap()).unwrap_err()
+        );
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn malformed_fields_name_the_key() {
+        let good = sample_run().to_json().to_string_pretty();
+        for (needle, replacement, want) in [
+            ("\"status\": \"solved\"", "\"status\": \"maybe\"", "status"),
+            (
+                "\"shard_hash\": \"1111222233334444\"",
+                "\"shard_hash\": \"zzzz\"",
+                "shard_hash",
+            ),
+            (
+                "\"fingerprint\": \"abcd1234ef567890\"",
+                "\"fingerprint\": \"nope\"",
+                "fingerprint",
+            ),
+        ] {
+            let bad = good.replace(needle, replacement);
+            assert_ne!(bad, good, "replacement '{needle}' did not apply");
+            let err = format!(
+                "{:#}",
+                RunManifest::from_json(&Json::parse(&bad).unwrap()).unwrap_err()
+            );
+            assert!(err.contains(want), "expected '{want}' in: {err}");
+        }
     }
 }

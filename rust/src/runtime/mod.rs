@@ -4,4 +4,7 @@ pub mod engine;
 pub mod manifest;
 
 pub use engine::{Engine, HostTensor, Value};
-pub use manifest::{ArtifactSpec, ConfigEntry, DType, Manifest, TensorSpec};
+pub use manifest::{
+    ArtifactSpec, BlockEntry, BlockStatus, ConfigEntry, DType, Manifest, RunManifest,
+    TensorSpec, RUN_MANIFEST_VERSION,
+};

@@ -1,0 +1,131 @@
+//! FNV-1a 64-bit content hashing for checkpoint integrity.
+//!
+//! The compress-run checkpoint protocol (`compress/run.rs`,
+//! `runtime/manifest.rs`) fingerprints run inputs and verifies shard /
+//! stream-snapshot files with a streaming FNV-1a 64 hash:
+//! dependency-free, byte-order stable, and fast enough to hash
+//! activation snapshots without showing up in profiles. Not
+//! cryptographic — it guards against truncation and accidental edits,
+//! not adversaries.
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// Streaming FNV-1a 64 hasher.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64 {
+    state: u64,
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64 { state: FNV_OFFSET }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    /// Hash a `u64` in little-endian byte order.
+    pub fn update_u64(&mut self, v: u64) {
+        self.update(&v.to_le_bytes());
+    }
+
+    /// Hash an f32 slice by bit pattern (little-endian), so hashes are
+    /// exact under the repo's bitwise-equality contract.
+    pub fn update_f32s(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.update(&x.to_bits().to_le_bytes());
+        }
+    }
+
+    pub fn update_i32s(&mut self, xs: &[i32]) {
+        for &x in xs {
+            self.update(&x.to_le_bytes());
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// One-shot FNV-1a 64 of a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// Fixed-width lowercase hex of a hash. Hashes cross into JSON as hex
+/// strings, never numbers: the repo's JSON numbers are f64 and cannot
+/// hold a u64 exactly.
+pub fn to_hex(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+/// Parse a hash serialized by [`to_hex`].
+pub fn from_hex(s: &str) -> Option<u64> {
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn streaming_matches_oneshot() {
+        let mut h = Fnv64::new();
+        h.update(b"foo");
+        h.update(b"bar");
+        assert_eq!(h.finish(), fnv1a64(b"foobar"));
+    }
+
+    #[test]
+    fn order_and_content_sensitive() {
+        assert_ne!(fnv1a64(b"ab"), fnv1a64(b"ba"));
+        let mut a = Fnv64::new();
+        a.update_f32s(&[1.0, 2.0]);
+        let mut b = Fnv64::new();
+        b.update_f32s(&[2.0, 1.0]);
+        assert_ne!(a.finish(), b.finish());
+        // -0.0 and 0.0 hash differently: bit-pattern, not value
+        let mut c = Fnv64::new();
+        c.update_f32s(&[0.0]);
+        let mut d = Fnv64::new();
+        d.update_f32s(&[-0.0]);
+        assert_ne!(c.finish(), d.finish());
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        for v in [0u64, 1, 0xdeadbeef, u64::MAX, fnv1a64(b"x")] {
+            let s = to_hex(v);
+            assert_eq!(s.len(), 16);
+            assert_eq!(from_hex(&s), Some(v));
+        }
+        assert_eq!(from_hex("xyz"), None);
+        assert_eq!(from_hex("00"), None);
+        assert_eq!(from_hex("zzzzzzzzzzzzzzzz"), None);
+    }
+}

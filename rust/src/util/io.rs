@@ -53,28 +53,22 @@ impl TensorArchive {
         self.tensors.get(name)
     }
 
-    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+    /// Serialize to the on-disk byte layout — the exact bytes [`save`]
+    /// writes (tensors in name order).
+    ///
+    /// [`save`]: TensorArchive::save
+    pub fn to_bytes(&self) -> Vec<u8> {
         let mut buf: Vec<u8> = Vec::new();
         buf.extend_from_slice(b"AAT1");
         buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
         for (name, t) in &self.tensors {
-            buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
-            buf.extend_from_slice(name.as_bytes());
-            buf.extend_from_slice(&(t.dims.len() as u32).to_le_bytes());
-            for &d in &t.dims {
-                buf.extend_from_slice(&(d as u64).to_le_bytes());
-            }
-            buf.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
-            for &x in &t.data {
-                buf.extend_from_slice(&x.to_le_bytes());
-            }
+            tensor_bytes_into(&mut buf, name, t);
         }
-        let tmp = path.as_ref().with_extension("tmp");
-        std::fs::File::create(&tmp)
-            .and_then(|mut f| f.write_all(&buf))
-            .with_context(|| format!("writing {}", tmp.display()))?;
-        std::fs::rename(&tmp, path.as_ref())?;
-        Ok(())
+        buf
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        write_bytes_atomic(path, &self.to_bytes())
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<TensorArchive> {
@@ -82,6 +76,14 @@ impl TensorArchive {
         std::fs::File::open(path.as_ref())
             .with_context(|| format!("opening {}", path.as_ref().display()))?
             .read_to_end(&mut buf)?;
+        Self::from_bytes(&buf)
+    }
+
+    /// Decode the [`to_bytes`] layout (the checkpoint protocol hashes
+    /// file bytes before decoding, so it reads then parses).
+    ///
+    /// [`to_bytes`]: TensorArchive::to_bytes
+    pub fn from_bytes(buf: &[u8]) -> Result<TensorArchive> {
         let mut pos = 0usize;
         let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
             if *pos + n > buf.len() {
@@ -116,6 +118,136 @@ impl TensorArchive {
             arch.tensors.insert(name, Tensor { dims, data });
         }
         Ok(arch)
+    }
+}
+
+/// Serialize one named tensor record (the per-tensor wire layout).
+fn tensor_bytes_into(buf: &mut Vec<u8>, name: &str, t: &Tensor) {
+    buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+    buf.extend_from_slice(name.as_bytes());
+    buf.extend_from_slice(&(t.dims.len() as u32).to_le_bytes());
+    for &d in &t.dims {
+        buf.extend_from_slice(&(d as u64).to_le_bytes());
+    }
+    buf.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
+    for &x in &t.data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Atomically replace `path` with `bytes`: write a sibling `.tmp` file,
+/// fsync, rename. A crash at any instant (kill -9 included) leaves
+/// either the old file or the complete new one, never a torn write —
+/// the durability primitive under the compress-run checkpoint protocol.
+pub fn write_bytes_atomic(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    let tmp = path.with_extension("tmp");
+    let mut f = std::fs::File::create(&tmp)
+        .with_context(|| format!("creating {}", tmp.display()))?;
+    f.write_all(bytes)
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    f.sync_all()
+        .with_context(|| format!("syncing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+/// Streaming `.aat` writer: appends tensors one at a time, so a
+/// whole-model artifact can be assembled from per-block shards without
+/// ever holding more than one tensor in memory. Bytes go to `<path>.tmp`
+/// and land at `path` atomically on [`finish`], which also returns the
+/// FNV-1a 64 of everything written (the hash the run manifest records).
+/// Output is byte-identical to [`TensorArchive::save`] when tensors are
+/// appended in name order.
+///
+/// [`finish`]: ArchiveWriter::finish
+pub struct ArchiveWriter {
+    path: std::path::PathBuf,
+    tmp: std::path::PathBuf,
+    file: std::io::BufWriter<std::fs::File>,
+    declared: usize,
+    written: usize,
+    hash: crate::util::hash::Fnv64,
+}
+
+impl ArchiveWriter {
+    /// Start an archive that will hold exactly `n_tensors` tensors.
+    pub fn create(path: impl AsRef<Path>, n_tensors: usize) -> Result<ArchiveWriter> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        let tmp = path.with_extension("tmp");
+        let file = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        let mut w = ArchiveWriter {
+            path,
+            tmp,
+            file: std::io::BufWriter::new(file),
+            declared: n_tensors,
+            written: 0,
+            hash: crate::util::hash::Fnv64::new(),
+        };
+        let mut header = Vec::with_capacity(8);
+        header.extend_from_slice(b"AAT1");
+        header.extend_from_slice(&(n_tensors as u32).to_le_bytes());
+        w.emit(&header)?;
+        Ok(w)
+    }
+
+    fn emit(&mut self, bytes: &[u8]) -> Result<()> {
+        self.hash.update(bytes);
+        self.file
+            .write_all(bytes)
+            .with_context(|| format!("writing {}", self.tmp.display()))
+    }
+
+    /// Append the next tensor. Order is the caller's contract — readers
+    /// index by name, but byte-level reproducibility needs a fixed order.
+    pub fn append(&mut self, name: &str, t: &Tensor) -> Result<()> {
+        anyhow::ensure!(
+            self.written < self.declared,
+            "archive {} declared {} tensors, '{name}' would be one more",
+            self.path.display(),
+            self.declared
+        );
+        let mut rec = Vec::new();
+        tensor_bytes_into(&mut rec, name, t);
+        self.emit(&rec)?;
+        self.written += 1;
+        Ok(())
+    }
+
+    /// Flush, fsync, rename into place; returns the content hash.
+    pub fn finish(mut self) -> Result<u64> {
+        anyhow::ensure!(
+            self.written == self.declared,
+            "archive {} declared {} tensors but only {} were appended",
+            self.path.display(),
+            self.declared,
+            self.written
+        );
+        self.file
+            .flush()
+            .with_context(|| format!("flushing {}", self.tmp.display()))?;
+        self.file
+            .get_ref()
+            .sync_all()
+            .with_context(|| format!("syncing {}", self.tmp.display()))?;
+        std::fs::rename(&self.tmp, &self.path).with_context(|| {
+            format!("renaming {} -> {}", self.tmp.display(), self.path.display())
+        })?;
+        Ok(self.hash.finish())
     }
 }
 

@@ -1,0 +1,55 @@
+//! Process peak-memory probe for the pipeline's bounded-memory claims.
+//!
+//! The streaming compression run promises peak memory bounded by one
+//! block's working set plus the activation streams, independent of model
+//! depth. The bench harness and `aasvd compress --json` record the
+//! process high-water mark so CI's compress-resume lane can gate on it.
+
+/// Peak resident set size of this process in bytes (Linux `VmHWM` from
+/// /proc/self/status). `None` on platforms without procfs or when the
+/// field is absent.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Peak RSS in MiB, 0.0 when unavailable — shaped for JSON reports
+/// (absence folds to a value gates can still compare against).
+pub fn peak_rss_mb() -> f64 {
+    peak_rss_bytes()
+        .map(|b| b as f64 / (1024.0 * 1024.0))
+        .unwrap_or(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_is_sane() {
+        // on Linux the probe must parse; elsewhere None is the contract
+        if let Some(bytes) = peak_rss_bytes() {
+            assert!(bytes > 0);
+            assert!(peak_rss_mb() > 0.0);
+            // a live test process has touched more than a page
+            assert!(bytes >= 4096);
+        } else {
+            assert_eq!(peak_rss_mb(), 0.0);
+        }
+    }
+
+    #[test]
+    fn high_water_mark_never_decreases() {
+        let Some(before) = peak_rss_bytes() else { return };
+        let buf = vec![1u8; 1 << 20];
+        std::hint::black_box(&buf);
+        let after = peak_rss_bytes().expect("probe disappeared mid-test");
+        assert!(after >= before);
+    }
+}

@@ -4,9 +4,11 @@
 //! so the conveniences normally pulled from clap/serde/rand/rayon live here.
 
 pub mod cli;
+pub mod hash;
 pub mod io;
 pub mod json;
 pub mod logging;
+pub mod mem;
 pub mod pool;
 pub mod rng;
 pub mod stats;

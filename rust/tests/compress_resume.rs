@@ -1,0 +1,479 @@
+//! Resume-equivalence tests for the checkpointed compression pipeline:
+//! a run interrupted after any block and resumed — at the same or a
+//! different thread count — must produce an artifact and a run manifest
+//! bitwise identical to an uninterrupted run's. Also pins the refusal
+//! paths: stale directories, tampered shards, changed inputs, future
+//! manifest versions.
+//!
+//! Interrupts are simulated by dropping a `CompressRun` mid-loop without
+//! calling `finish()`: `CompressRun` has no Drop logic, so the run
+//! directory is left in exactly the state a kill -9 after the last
+//! commit would leave it in. (The CLI-level `--crash-after-block` smoke
+//! in CI covers the literal process-abort path.)
+
+use std::path::{Path, PathBuf};
+
+use aasvd::compress::{
+    compress_model, CompressRun, CompressSummary, Method, Objective, ReferenceCollector,
+    RunOptions,
+};
+use aasvd::data::{Batcher, Corpus, Domain, TokenBatch};
+use aasvd::model::init::init_params;
+use aasvd::model::lowrank::load_blocks;
+use aasvd::model::{Config, FlatStore};
+use aasvd::runtime::{BlockEntry, RunManifest};
+use aasvd::util::hash::fnv1a64;
+use aasvd::util::rng::Rng;
+
+const RATIO: f64 = 0.6;
+
+/// Everything a run borrows, bundled so helpers can hand out
+/// `CompressRun`s tied to one lifetime.
+struct Env {
+    cfg: Config,
+    params: FlatStore,
+    calib: Vec<TokenBatch>,
+}
+
+/// Small but deep enough for interesting interrupt points: 4 layers,
+/// 2 full calibration batches.
+fn env() -> Env {
+    let cfg = Config {
+        name: "resume_synth".into(),
+        vocab: 128,
+        d_model: 48,
+        n_heads: 2,
+        n_layers: 4,
+        d_ff: 96,
+        rope_theta: 10000.0,
+        batch: 2,
+        seq: 24,
+        refine_batch: 4,
+        train_batch: 4,
+    };
+    let params = init_params(&cfg, &mut Rng::new(11));
+    let corpus = Corpus::generate(Domain::Wiki, 20_000, 11);
+    let calib: Vec<_> = Batcher::new(cfg.batch, cfg.seq)
+        .sequential(&corpus.train, 2)
+        .into_iter()
+        .filter(|b| b.real_rows == cfg.batch)
+        .collect();
+    assert!(calib.len() >= 2, "synthetic calibration set too small");
+    Env { cfg, params, calib }
+}
+
+/// Constant name across thread counts: the method name feeds the run
+/// fingerprint, and cross-thread resume must hash identically.
+fn anchored(threads: usize) -> Method {
+    Method::builder("anchored")
+        .objective(Objective::Anchored)
+        .threads(threads)
+        .build()
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("aasvd-resume-tests/{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn options(dir: &Path, resume: bool) -> RunOptions {
+    let opts = RunOptions::checkpointed(dir);
+    if resume {
+        opts.resume()
+    } else {
+        opts
+    }
+}
+
+/// Drive a checkpointed run to completion and return its summary.
+fn run_all(env: &Env, m: &Method, dir: &Path, resume: bool) -> CompressSummary {
+    let mut run = CompressRun::new(
+        &ReferenceCollector,
+        &env.cfg,
+        &env.params,
+        &env.calib,
+        m,
+        RATIO,
+        options(dir, resume),
+    )
+    .unwrap();
+    while run.next_block().unwrap().is_some() {}
+    run.finish().unwrap()
+}
+
+/// Solve exactly `blocks` blocks, then drop the run without `finish()` —
+/// the on-disk state of a crash right after block `blocks - 1` committed.
+fn run_partial(env: &Env, m: &Method, dir: &Path, blocks: usize) {
+    let mut run = CompressRun::new(
+        &ReferenceCollector,
+        &env.cfg,
+        &env.params,
+        &env.calib,
+        m,
+        RATIO,
+        options(dir, false),
+    )
+    .unwrap();
+    for _ in 0..blocks {
+        run.next_block().unwrap().unwrap();
+    }
+}
+
+fn artifact_bytes(dir: &Path) -> Vec<u8> {
+    std::fs::read(dir.join("model.aat")).unwrap()
+}
+
+fn manifest_text(dir: &Path) -> String {
+    std::fs::read_to_string(dir.join("run.json")).unwrap()
+}
+
+#[test]
+fn streaming_run_completes_with_counts_and_verified_artifact() {
+    let env = env();
+    let m = anchored(2);
+    let dir = fresh_dir("complete");
+    let summary = run_all(&env, &m, &dir, false);
+
+    assert_eq!(summary.total, env.cfg.n_layers);
+    assert_eq!(summary.solved, env.cfg.n_layers);
+    assert_eq!(summary.resumed, 0);
+    assert_eq!(summary.skipped, 0);
+
+    let bytes = artifact_bytes(&dir);
+    assert_eq!(summary.artifact_hash, Some(fnv1a64(&bytes)));
+    assert_eq!(summary.artifact.as_deref(), Some(dir.join("model.aat")).as_deref());
+
+    let manifest = RunManifest::load(dir.join("run.json")).unwrap();
+    assert!(manifest.complete);
+    assert_eq!(manifest.first_unwritten(), None);
+    assert_eq!(manifest.artifact_hash, summary.artifact_hash);
+
+    // stream snapshots are pure resume state — swept once the artifact
+    // is durable
+    for b in 1..env.cfg.n_layers {
+        assert!(
+            !dir.join(format!("state_{b}.aat")).exists(),
+            "state_{b}.aat survived finish()"
+        );
+    }
+}
+
+#[test]
+fn streamed_artifact_matches_the_in_memory_wrapper() {
+    let env = env();
+    let m = anchored(2);
+    let dir = fresh_dir("vs-inmem");
+    run_all(&env, &m, &dir, false);
+
+    let streamed = load_blocks(&env.cfg, dir.join("model.aat")).unwrap();
+    let inmem = compress_model(
+        &ReferenceCollector,
+        &env.cfg,
+        &env.params,
+        &env.calib,
+        &m,
+        RATIO,
+    )
+    .unwrap();
+    assert_eq!(streamed.len(), inmem.blocks.len());
+    for (a, b) in streamed.iter().zip(&inmem.blocks) {
+        assert_eq!(a.factors.data, b.factors.data, "factors diverged");
+        assert_eq!(a.masks.data, b.masks.data, "masks diverged");
+    }
+}
+
+#[test]
+fn resume_is_bitwise_identical_at_every_interrupt_point_and_thread_count() {
+    let env = env();
+    let dir_ref = fresh_dir("equiv-ref");
+    run_all(&env, &anchored(1), &dir_ref, false);
+    let want_artifact = artifact_bytes(&dir_ref);
+    let want_manifest = manifest_text(&dir_ref);
+
+    // (interrupt threads, resume threads): same-width resume plus both
+    // cross-width directions — the fingerprint excludes the thread count
+    // precisely so these are legal
+    for (t_int, t_res) in [(1usize, 1usize), (1, 4), (4, 1)] {
+        for k in 1..env.cfg.n_layers {
+            let dir = fresh_dir(&format!("equiv-{t_int}-{t_res}-{k}"));
+            run_partial(&env, &anchored(t_int), &dir, k);
+            assert!(
+                !dir.join("model.aat").exists(),
+                "interrupted run must not leave a final artifact"
+            );
+
+            let mut run = CompressRun::new(
+                &ReferenceCollector,
+                &env.cfg,
+                &env.params,
+                &env.calib,
+                &anchored(t_res),
+                RATIO,
+                options(&dir, true),
+            )
+            .unwrap();
+            assert_eq!(run.resumed_blocks(), k, "resume point after {k} blocks");
+            while run.next_block().unwrap().is_some() {}
+            let summary = run.finish().unwrap();
+            assert_eq!(summary.resumed, k);
+            assert_eq!(summary.solved, env.cfg.n_layers - k);
+
+            assert_eq!(
+                artifact_bytes(&dir),
+                want_artifact,
+                "artifact diverged: interrupt after {k} at t={t_int}, resume at t={t_res}"
+            );
+            assert_eq!(
+                manifest_text(&dir),
+                want_manifest,
+                "manifest diverged: interrupt after {k} at t={t_int}, resume at t={t_res}"
+            );
+        }
+    }
+}
+
+#[test]
+fn resume_under_quantization_is_bitwise() {
+    // quantized methods carry the shifted stream (X') through the state
+    // snapshots — the round-trip must preserve it bit-exactly too
+    let env = env();
+    let quantized = |threads: usize| {
+        Method::builder("anchored_q")
+            .objective(Objective::Anchored)
+            .quant()
+            .threads(threads)
+            .build()
+    };
+    let dir_ref = fresh_dir("quant-ref");
+    run_all(&env, &quantized(2), &dir_ref, false);
+
+    let dir = fresh_dir("quant-resume");
+    run_partial(&env, &quantized(2), &dir, 2);
+    let summary = run_all(&env, &quantized(2), &dir, true);
+    assert_eq!(summary.resumed, 2);
+    assert_eq!(summary.solved, env.cfg.n_layers - 2);
+    assert_eq!(artifact_bytes(&dir), artifact_bytes(&dir_ref));
+    assert_eq!(manifest_text(&dir), manifest_text(&dir_ref));
+}
+
+#[test]
+fn resuming_a_complete_run_skips_every_block() {
+    let env = env();
+    let m = anchored(2);
+    let dir = fresh_dir("skip-complete");
+    let first = run_all(&env, &m, &dir, false);
+    let bytes = artifact_bytes(&dir);
+
+    let mut run = CompressRun::new(
+        &ReferenceCollector,
+        &env.cfg,
+        &env.params,
+        &env.calib,
+        &m,
+        RATIO,
+        options(&dir, true),
+    )
+    .unwrap();
+    assert_eq!(run.skipped_blocks(), env.cfg.n_layers);
+    assert!(run.next_block().unwrap().is_none(), "nothing left to solve");
+    let summary = run.finish().unwrap();
+    assert_eq!(summary.solved, 0);
+    assert_eq!(summary.skipped, env.cfg.n_layers);
+    assert_eq!(summary.artifact_hash, first.artifact_hash);
+    assert_eq!(artifact_bytes(&dir), bytes, "re-open must not rewrite the artifact");
+}
+
+#[test]
+fn resume_treats_a_solved_marker_as_unwritten() {
+    // a crash between the `solved` marker and the shard write leaves a
+    // solved-but-shardless entry; resume must re-solve that block
+    let env = env();
+    let m = anchored(2);
+    let dir_ref = fresh_dir("solved-ref");
+    run_all(&env, &m, &dir_ref, false);
+
+    let dir = fresh_dir("solved-marker");
+    run_partial(&env, &m, &dir, 2);
+    let mut manifest = RunManifest::load(dir.join("run.json")).unwrap();
+    manifest.blocks[2] = BlockEntry::solved();
+    manifest.save(dir.join("run.json")).unwrap();
+
+    let summary = run_all(&env, &m, &dir, true);
+    assert_eq!(summary.resumed, 2, "solved entry must not count as durable");
+    assert_eq!(summary.solved, env.cfg.n_layers - 2);
+    assert_eq!(artifact_bytes(&dir), artifact_bytes(&dir_ref));
+}
+
+#[test]
+fn fresh_run_refuses_an_existing_directory() {
+    let env = env();
+    let m = anchored(1);
+    let dir = fresh_dir("refuse-existing");
+    run_partial(&env, &m, &dir, 1);
+    let err = format!(
+        "{:#}",
+        CompressRun::new(
+            &ReferenceCollector,
+            &env.cfg,
+            &env.params,
+            &env.calib,
+            &m,
+            RATIO,
+            options(&dir, false),
+        )
+        .unwrap_err()
+    );
+    assert!(err.contains("resume"), "{err}");
+}
+
+#[test]
+fn resume_refuses_an_empty_directory() {
+    let env = env();
+    let m = anchored(1);
+    let dir = fresh_dir("refuse-empty");
+    std::fs::create_dir_all(&dir).unwrap();
+    let err = format!(
+        "{:#}",
+        CompressRun::new(
+            &ReferenceCollector,
+            &env.cfg,
+            &env.params,
+            &env.calib,
+            &m,
+            RATIO,
+            options(&dir, true),
+        )
+        .unwrap_err()
+    );
+    assert!(err.contains("no run manifest"), "{err}");
+}
+
+#[test]
+fn resume_refuses_a_changed_ratio() {
+    let env = env();
+    let m = anchored(1);
+    let dir = fresh_dir("refuse-ratio");
+    run_partial(&env, &m, &dir, 1);
+    let err = format!(
+        "{:#}",
+        CompressRun::new(
+            &ReferenceCollector,
+            &env.cfg,
+            &env.params,
+            &env.calib,
+            &m,
+            0.5,
+            options(&dir, true),
+        )
+        .unwrap_err()
+    );
+    assert!(err.contains("fresh run directory"), "{err}");
+}
+
+#[test]
+fn resume_refuses_changed_weights() {
+    // same config/method/ratio identity, different weight bits: only the
+    // input fingerprint can catch this
+    let env = env();
+    let m = anchored(1);
+    let dir = fresh_dir("refuse-weights");
+    run_partial(&env, &m, &dir, 1);
+    let mut tweaked = env.params.clone();
+    tweaked.data[0] += 1.0;
+    let err = format!(
+        "{:#}",
+        CompressRun::new(
+            &ReferenceCollector,
+            &env.cfg,
+            &tweaked,
+            &env.calib,
+            &m,
+            RATIO,
+            options(&dir, true),
+        )
+        .unwrap_err()
+    );
+    assert!(err.contains("fingerprint"), "{err}");
+}
+
+#[test]
+fn resume_refuses_a_tampered_shard() {
+    let env = env();
+    let m = anchored(1);
+    let dir = fresh_dir("refuse-tamper");
+    run_partial(&env, &m, &dir, 2);
+    let shard = dir.join("block_0.aat");
+    let mut bytes = std::fs::read(&shard).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xff;
+    std::fs::write(&shard, &bytes).unwrap();
+    let err = format!(
+        "{:#}",
+        CompressRun::new(
+            &ReferenceCollector,
+            &env.cfg,
+            &env.params,
+            &env.calib,
+            &m,
+            RATIO,
+            options(&dir, true),
+        )
+        .unwrap_err()
+    );
+    assert!(err.contains("does not match"), "{err}");
+    assert!(err.contains("block_0.aat"), "{err}");
+}
+
+#[test]
+fn resume_refuses_a_future_manifest_version() {
+    let env = env();
+    let m = anchored(1);
+    let dir = fresh_dir("refuse-version");
+    run_partial(&env, &m, &dir, 1);
+    let path = dir.join("run.json");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let bumped = text.replacen("\"version\": 1", "\"version\": 99", 1);
+    assert_ne!(bumped, text, "version field not found in run.json");
+    std::fs::write(&path, bumped).unwrap();
+    let err = format!(
+        "{:#}",
+        CompressRun::new(
+            &ReferenceCollector,
+            &env.cfg,
+            &env.params,
+            &env.calib,
+            &m,
+            RATIO,
+            options(&dir, true),
+        )
+        .unwrap_err()
+    );
+    assert!(err.contains("version"), "{err}");
+}
+
+#[test]
+fn resume_refuses_a_truncated_manifest() {
+    let env = env();
+    let m = anchored(1);
+    let dir = fresh_dir("refuse-truncated");
+    run_partial(&env, &m, &dir, 1);
+    let path = dir.join("run.json");
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    let err = format!(
+        "{:#}",
+        CompressRun::new(
+            &ReferenceCollector,
+            &env.cfg,
+            &env.params,
+            &env.calib,
+            &m,
+            RATIO,
+            options(&dir, true),
+        )
+        .unwrap_err()
+    );
+    assert!(err.contains("run.json"), "{err}");
+    assert!(err.contains("byte"), "{err}");
+}

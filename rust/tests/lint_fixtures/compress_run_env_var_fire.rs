@@ -1,0 +1,5 @@
+// aasvd-lint: path=src/compress/run.rs
+
+pub fn resume_dir() -> Option<String> {
+    std::env::var("AASVD_RESUME_DIR").ok()
+}

@@ -1,0 +1,5 @@
+// aasvd-lint: path=src/compress/run.rs
+
+pub fn first_shard(shards: &[String]) -> &str {
+    shards.first().expect("at least one shard").as_str()
+}

@@ -1,0 +1,5 @@
+// aasvd-lint: path=src/runtime/manifest.rs
+
+pub fn shard_hash(entries: &[(String, Option<u64>)]) -> u64 {
+    entries.first().unwrap().1.unwrap_or(0)
+}

@@ -1,0 +1,6 @@
+// aasvd-lint: path=src/runtime/manifest.rs
+
+pub fn shard_hash(entries: &[(String, Option<u64>)]) -> u64 {
+    // aasvd-lint: allow(serve-unwrap): fixture justification — caller guarantees a written entry exists
+    entries.first().unwrap().1.unwrap_or(0)
+}

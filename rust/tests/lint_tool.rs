@@ -65,6 +65,14 @@ const EXPECTED: &[(&str, &[&str])] = &[
     ("kv_pool_unwrap_fire.rs", &["serve-unwrap"]),
     ("kv_pool_float_cmp_fire.rs", &["float-cmp"]),
     ("kv_pool_suppressed.rs", &[]),
+    // checkpoint-persistence policy: serve-unwrap extends to the files
+    // that write/read the compress-run manifest and shards — a panic
+    // mid-commit would defeat the crash-consistency protocol, so every
+    // fallible path there must thread a Result
+    ("manifest_unwrap_fire.rs", &["serve-unwrap"]),
+    ("manifest_unwrap_suppressed.rs", &[]),
+    ("compress_run_unwrap_fire.rs", &["serve-unwrap"]),
+    ("compress_run_env_var_fire.rs", &["env-var"]),
 ];
 
 #[test]
