@@ -12,17 +12,25 @@
 //! - the batched rows CI gates: one stacked `decode_batch` per tick vs a
 //!   per-session `decode_step` loop at B ∈ {1, 4, 8} on the builtin
 //!   "small" config. Before timing, the two paths' logits are asserted
-//!   bitwise equal per row — the decode_batch row-equality contract.
+//!   bitwise equal per row — the decode_batch row-equality contract;
+//! - the quantized rows CI gates: the B=8 t=4 stacked-decode workload
+//!   through the f32 low-rank backend vs the fused int8 backend built
+//!   from the same factors (see README "Quantized serving"). Before
+//!   timing, each backend's rows are asserted bitwise against its own
+//!   decode_step and the int8 model's PPL within 10% of f32 low-rank.
 
 use aasvd::bench::Bench;
+use aasvd::data::{Batcher, Corpus, Domain};
+use aasvd::eval::{lowrank_ppl, quant_ppl};
 use aasvd::model::init::init_params;
 use aasvd::model::lowrank::exact_factors;
+use aasvd::model::quant_lowrank::QuantBlockFactors;
 use aasvd::model::Config;
 use aasvd::serve::batcher::bench_prompts;
 use aasvd::serve::http::parse::{find_head_end, parse_head, Limits};
 use aasvd::serve::{
-    DecodeMode, DenseBackend, GenParams, ModelBackend, PagedKvOptions, ServeMetrics, ServedModel,
-    Server, ServerOptions, Session,
+    CompressedBackend, DecodeMode, DenseBackend, GenParams, ModelBackend, PagedKvOptions,
+    QuantizedBackend, ServeMetrics, ServedModel, Server, ServerOptions, Session,
 };
 use aasvd::util::pool::Pool;
 use aasvd::util::rng::Rng;
@@ -36,10 +44,36 @@ fn batch_token(row: usize, step: usize) -> i32 {
 }
 
 /// Fresh one-token-prompt sessions, one per batch row.
-fn batch_sessions(be: &mut DenseBackend, rows: usize) -> Vec<Session> {
+fn batch_sessions<B: ModelBackend + ?Sized>(be: &mut B, rows: usize) -> Vec<Session> {
     (0..rows)
         .map(|r| be.prefill(&[r as i32 + 1]).unwrap().session)
         .collect()
+}
+
+/// The decode_batch row contract for one backend: every batched row
+/// must match its sequential decode_step twin bitwise.
+fn assert_batch_rows_match(
+    be_batch: &mut dyn ModelBackend,
+    be_seq: &mut dyn ModelBackend,
+    label: &str,
+) {
+    let mut batched = batch_sessions(be_batch, 8);
+    let mut solo = batch_sessions(be_seq, 8);
+    for step in 0..8usize {
+        let toks: Vec<i32> = (0..8).map(|r| batch_token(r, step)).collect();
+        let rows = Pool::exact(4).install(|| {
+            let mut refs: Vec<&mut Session> = batched.iter_mut().collect();
+            be_batch.decode_batch(&mut refs, &toks)
+        });
+        for (r, row) in rows.into_iter().enumerate() {
+            let row = row.expect("batched row succeeds");
+            let want = be_seq.decode_step(&mut solo[r], toks[r]).unwrap();
+            assert!(
+                row.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{label}: decode_batch row {r} diverged from decode_step at step {step}"
+            );
+        }
+    }
 }
 
 /// Eight prompts sharing an exactly-4-block (64-token) prefix with short
@@ -331,6 +365,92 @@ fn main() {
             },
         );
     }
+    // quantized-vs-lowrank batched decode rows (the fourth CI gate): the
+    // same B=8 t=4 stacked-decode workload through the f32 low-rank
+    // backend and the fused int8 backend built from the same exact
+    // factors. Before timing: (a) each backend's decode_batch rows must
+    // match its own decode_step bitwise (the row contract, per backend);
+    // (b) the int8 model's artifact-free perplexity on the tiny config
+    // must land within 10% of the f32 low-rank model's — throughput
+    // means nothing if the quantized model decodes garbage. CI gates
+    // quant >= 1.0x lowrank throughput: the fused kernels touch 4x
+    // fewer factor bytes, so they must not lose to the f32 path they
+    // replace.
+    {
+        // perplexity-delta ceiling, artifact-free on the tiny config
+        let qtiny: Vec<_> = blocks
+            .iter()
+            .map(|bf| QuantBlockFactors::from_block(&cfg, bf).expect("exact factors are finite"))
+            .collect();
+        let corpus = Corpus::generate(Domain::Wiki, 20_000, 9);
+        let ppl_batches: Vec<_> = Batcher::new(cfg.batch, cfg.seq).sequential(&corpus.valid, 2);
+        let lr_ppl = lowrank_ppl(&cfg, &params, &blocks, &ppl_batches);
+        let q_ppl = quant_ppl(&cfg, &params, &qtiny, &ppl_batches);
+        assert!(
+            (q_ppl - lr_ppl).abs() <= 0.10 * lr_ppl,
+            "quantized ppl {q_ppl} drifted beyond 10% of lowrank ppl {lr_ppl}"
+        );
+
+        let small_blocks: Vec<_> = (0..small.n_layers)
+            .map(|i| exact_factors(&small, &small_params, i))
+            .collect();
+        let small_q: Vec<_> = small_blocks
+            .iter()
+            .map(|bf| QuantBlockFactors::from_block(&small, bf).expect("exact factors are finite"))
+            .collect();
+        type BackendFactory = Box<dyn Fn() -> Box<dyn ModelBackend>>;
+        let backends: Vec<(&str, BackendFactory)> = vec![
+            (
+                "lowrank",
+                Box::new({
+                    let (c, p, bl) = (small.clone(), small_params.clone(), small_blocks.clone());
+                    move || {
+                        Box::new(
+                            CompressedBackend::new(c.clone(), p.clone(), bl.clone())
+                                .expect("block count matches"),
+                        )
+                    }
+                }),
+            ),
+            (
+                "quant",
+                Box::new({
+                    let (c, p, bl) = (small.clone(), small_params.clone(), small_q.clone());
+                    move || {
+                        Box::new(
+                            QuantizedBackend::new(c.clone(), p.clone(), bl.clone())
+                                .expect("block count matches"),
+                        )
+                    }
+                }),
+            ),
+        ];
+        for (label, make) in backends {
+            let mut be_batch = make();
+            let mut be_seq = make();
+            assert_batch_rows_match(be_batch.as_mut(), be_seq.as_mut(), label);
+
+            let mut be = make();
+            let pool = Pool::exact(4);
+            b.run(
+                &format!("decode_batch[small {label}] B=8 t=4 x {BATCH_TOKENS} toks"),
+                Some((8 * BATCH_TOKENS) as f64),
+                || {
+                    pool.install(|| {
+                        let mut sessions = batch_sessions(be.as_mut(), 8);
+                        for step in 0..BATCH_TOKENS {
+                            let toks: Vec<i32> =
+                                (0..8).map(|r| batch_token(r, step)).collect();
+                            let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+                            let out = be.decode_batch(&mut refs, &toks);
+                            std::hint::black_box(&out);
+                        }
+                    });
+                },
+            );
+        }
+    }
+
     // HTTP front-door parse row: request-head scan + parse cost per
     // request, measured off the wire path. This is the per-connection
     // fixed overhead the front door adds before a request reaches the

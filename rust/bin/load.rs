@@ -28,10 +28,12 @@
 //! concurrency, and the server-side metrics summary when in-process.
 
 use aasvd::model::init::init_params;
+use aasvd::model::lowrank::exact_factors;
+use aasvd::model::quant_lowrank::QuantBlockFactors;
 use aasvd::model::Config;
 use aasvd::serve::{
-    DecodeMode, DenseBackend, HttpOptions, HttpServer, ModelBackend, PagedKvOptions, Server,
-    ServerOptions, SyntheticBackend,
+    DecodeMode, DenseBackend, HttpOptions, HttpServer, ModelBackend, PagedKvOptions,
+    QuantizedBackend, Server, ServerOptions, SyntheticBackend,
 };
 use aasvd::util::cli::Args;
 use aasvd::util::json::Json;
@@ -112,12 +114,14 @@ fn main() -> Result<()> {
         prefix_cache: !no_prefix_cache,
     });
     let addr = if target.is_empty() {
-        if serve != "synthetic" && serve != "dense" {
-            return Err(anyhow!("--serve supports 'synthetic' or 'dense' (got '{serve}')"));
-        }
-        if paged_kv.is_some() && serve != "dense" {
+        if !matches!(serve.as_str(), "synthetic" | "dense" | "quantized") {
             return Err(anyhow!(
-                "--kv-blocks needs --serve dense (the synthetic backend has no KV cache to page)"
+                "--serve supports 'synthetic', 'dense', or 'quantized' (got '{serve}')"
+            ));
+        }
+        if paged_kv.is_some() && serve == "synthetic" {
+            return Err(anyhow!(
+                "--kv-blocks needs --serve dense or quantized (the synthetic backend has no KV cache to page)"
             ));
         }
         let cfg = Config::builtin(&model)
@@ -142,6 +146,16 @@ fn main() -> Result<()> {
                 if backend_kind == "dense" {
                     let params = init_params(&backend_cfg, &mut Rng::new(0xa5_5eed));
                     return Ok(Box::new(DenseBackend::new(backend_cfg, params)));
+                }
+                if backend_kind == "quantized" {
+                    let params = init_params(&backend_cfg, &mut Rng::new(0xa5_5eed));
+                    let blocks = (0..backend_cfg.n_layers)
+                        .map(|i| {
+                            let bf = exact_factors(&backend_cfg, &params, i);
+                            QuantBlockFactors::from_block(&backend_cfg, &bf)
+                        })
+                        .collect::<Result<Vec<_>, _>>()?;
+                    return Ok(Box::new(QuantizedBackend::new(backend_cfg, params, blocks)?));
                 }
                 Ok(Box::new(SyntheticBackend::with_delays(
                     backend_cfg,

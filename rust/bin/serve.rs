@@ -18,12 +18,17 @@
 //! own tests), which is what lets `--kv-blocks` exercise the paged KV
 //! pool and prefix cache over HTTP: an undersized pool sheds load with
 //! 429s instead of growing without bound (see README "KV memory").
+//! `--serve quantized` factors the same random-init weights exactly,
+//! quantizes them to int8, and decodes through the fused-dequant kernels
+//! (see README "Quantized serving") — paged KV works there too.
 
 use aasvd::model::init::init_params;
+use aasvd::model::lowrank::exact_factors;
+use aasvd::model::quant_lowrank::QuantBlockFactors;
 use aasvd::model::Config;
 use aasvd::serve::{
-    DecodeMode, DenseBackend, HttpOptions, HttpServer, ModelBackend, PagedKvOptions, Server,
-    ServerOptions, SyntheticBackend,
+    DecodeMode, DenseBackend, HttpOptions, HttpServer, ModelBackend, PagedKvOptions,
+    QuantizedBackend, Server, ServerOptions, SyntheticBackend,
 };
 use aasvd::util::cli::Args;
 use aasvd::util::rng::Rng;
@@ -37,8 +42,12 @@ fn main() -> Result<()> {
     );
     let addr = args.str("addr", "127.0.0.1:0", "bind address (port 0 picks a free port)");
     let model = args.str("model", "small", "builtin config name");
-    let serve = args.str("serve", "synthetic", "backend: synthetic | dense (random-init weights)");
-    let seed = args.u64("seed", 0xa5_5eed, "weight-init seed for --serve dense");
+    let serve = args.str(
+        "serve",
+        "synthetic",
+        "backend: synthetic | dense | quantized (random-init weights)",
+    );
+    let seed = args.u64("seed", 0xa5_5eed, "weight-init seed for --serve dense/quantized");
     let step_delay_ms = args.f64("step-delay-ms", 0.0, "synthetic per-decode-tick delay");
     let prefill_delay_ms = args.f64("prefill-delay-ms", 0.0, "synthetic per-prefill delay");
     let max_queue = args.usize("max-queue", 4096, "admission queue bound");
@@ -59,9 +68,9 @@ fn main() -> Result<()> {
         block_tokens: kv_block_tokens.max(1),
         prefix_cache: !no_prefix_cache,
     });
-    if paged_kv.is_some() && serve != "dense" {
+    if paged_kv.is_some() && !matches!(serve.as_str(), "dense" | "quantized") {
         return Err(anyhow!(
-            "--kv-blocks needs --serve dense (the synthetic backend has no KV cache to page)"
+            "--kv-blocks needs --serve dense or quantized (the synthetic backend has no KV cache to page)"
         ));
     }
     let server = Server::with_backend(
@@ -79,6 +88,16 @@ fn main() -> Result<()> {
                 "dense" => {
                     let params = init_params(&backend_cfg, &mut Rng::new(seed));
                     Ok(Box::new(DenseBackend::new(backend_cfg, params)))
+                }
+                "quantized" => {
+                    let params = init_params(&backend_cfg, &mut Rng::new(seed));
+                    let blocks = (0..backend_cfg.n_layers)
+                        .map(|i| {
+                            let bf = exact_factors(&backend_cfg, &params, i);
+                            QuantBlockFactors::from_block(&backend_cfg, &bf)
+                        })
+                        .collect::<Result<Vec<_>, _>>()?;
+                    Ok(Box::new(QuantizedBackend::new(backend_cfg, params, blocks)?))
                 }
                 "synthetic" => Ok(Box::new(SyntheticBackend::with_delays(
                     backend_cfg,

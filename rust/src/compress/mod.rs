@@ -27,6 +27,6 @@ pub use pipeline::{
     ReferenceCollector,
 };
 pub use pruning::{prune_model, PruneMethod, PrunedModel, ALL_PRUNERS};
-pub use quant::QuantMatrix;
+pub use quant::{QuantError, QuantMatrix, QUANT_GROUP_ROWS};
 pub use rank::{dense_params, ratio_for_budget, Allocation, RankScheme};
 pub use run::{BlockOutcome, CompressRun, CompressSummary, RunOptions};

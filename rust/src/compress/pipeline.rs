@@ -475,7 +475,10 @@ impl Collector for ReferenceCollector {
 /// group's solves run concurrently, each with its own share of the worker
 /// budget (`pool`) threaded down through the whitening solve, the Gram
 /// products and the tridiagonal eigensolver. Returns the unpadded factors
-/// and the quantization error (0.0 unless the method quantizes).
+/// and the quantization error (0.0 unless the method quantizes). The only
+/// error path is quantizing non-finite factors (a poisoned solve), which
+/// surfaces as a typed [`super::quant::QuantError`] instead of silently
+/// zeroing NaNs.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn solve_one(
     method: &Method,
@@ -486,7 +489,7 @@ pub(crate) fn solve_one(
     cov: &CovTriple,
     k: usize,
     pool: &Pool,
-) -> (Factors, f64) {
+) -> Result<(Factors, f64)> {
     let (m, n) = cfg.linear_dims(lin);
     let w = params.view(&format!("blocks.{block}.{lin}"));
     let mut f = if method.asvd_diag {
@@ -499,10 +502,11 @@ pub(crate) fn solve_one(
     };
     let mut qerr = 0.0;
     if method.quant {
-        let (eu, ev) = quantize_factors_inplace(&mut f.u, m, &mut f.v, n, f.k);
+        let (eu, ev) = quantize_factors_inplace(&mut f.u, m, &mut f.v, n, f.k)
+            .map_err(|e| anyhow::anyhow!("block {block} {lin}: {e}"))?;
         qerr = 0.5 * (eu + ev);
     }
-    (f, qerr)
+    Ok((f, qerr))
 }
 
 /// Algorithm 2, whole model in memory: a thin wrapper that drives a

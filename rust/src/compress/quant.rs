@@ -2,53 +2,159 @@
 //! remapping (paper §B.4, the AA-SVDᵠ rows).
 //!
 //! We implement the *actual* precision reduction, not just the accounting:
-//! factor matrices are quantized per-column (symmetric int8 with f32
-//! scales) and dequantized into the padded factor buffers at load time, so
-//! the quality effect of remapping is measured, not assumed.
+//! factor matrices are quantized symmetrically to int8 with f32 scales,
+//! one scale per column per row-group ([`QUANT_GROUP_ROWS`] rows share a
+//! scale; short matrices get a single group, so this degrades to plain
+//! per-column scaling). Dequantization is exactly `q as f32 * scale`,
+//! which the fused serving kernels (`model::forward::qlinear`) reproduce
+//! in-register — so "dequantize then multiply" and "multiply fused" are
+//! the same f32 sequence, bit for bit.
+//!
+//! Non-finite input is a typed [`QuantError`], never silent: the
+//! saturating `as i8` cast would otherwise map NaN to 0 and corrupt the
+//! factors without a trace.
 
-/// A per-column symmetric int8 quantized matrix [rows, cols].
+use std::fmt;
+
+/// Rows per scale group: long columns get one scale per
+/// `QUANT_GROUP_ROWS` rows so a single outlier only inflates its own
+/// group's step size. Matrices with `rows <= QUANT_GROUP_ROWS` keep the
+/// historical one-scale-per-column layout.
+pub const QUANT_GROUP_ROWS: usize = 256;
+
+/// Typed rejection of non-finite input to quantization.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantError {
+    pub row: usize,
+    pub col: usize,
+    pub value: f32,
+}
+
+impl fmt::Display for QuantError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "non-finite value {} at [{}, {}] cannot be int8-quantized",
+            self.value, self.row, self.col
+        )
+    }
+}
+
+impl std::error::Error for QuantError {}
+
+/// A symmetric int8 quantized matrix [rows, cols] with per-column,
+/// per-row-group f32 scales (`scales` is [n_groups, cols] row-major;
+/// matrix row `i` uses scale row `i / group_rows`).
 #[derive(Clone, Debug)]
 pub struct QuantMatrix {
     pub rows: usize,
     pub cols: usize,
+    /// rows covered by one scale group (the last group may be shorter)
+    pub group_rows: usize,
     pub data: Vec<i8>,
-    pub scales: Vec<f32>, // one per column
+    /// [n_groups, cols] row-major
+    pub scales: Vec<f32>,
 }
 
 impl QuantMatrix {
-    pub fn quantize(x: &[f32], rows: usize, cols: usize) -> QuantMatrix {
+    /// Quantize with the default group policy: one group per
+    /// [`QUANT_GROUP_ROWS`] rows (a single group for short matrices).
+    pub fn quantize(x: &[f32], rows: usize, cols: usize) -> Result<QuantMatrix, QuantError> {
+        Self::quantize_grouped(x, rows, cols, rows.min(QUANT_GROUP_ROWS).max(1))
+    }
+
+    /// Quantize with an explicit group height (must match at load time —
+    /// the `.aat` serialization records it).
+    pub fn quantize_grouped(
+        x: &[f32],
+        rows: usize,
+        cols: usize,
+        group_rows: usize,
+    ) -> Result<QuantMatrix, QuantError> {
         assert_eq!(x.len(), rows * cols);
-        let mut scales = vec![0f32; cols];
-        for j in 0..cols {
-            let mut mx = 0f32;
-            for i in 0..rows {
-                mx = mx.max(x[i * cols + j].abs());
-            }
-            scales[j] = if mx > 0.0 { mx / 127.0 } else { 1.0 };
+        assert!(group_rows >= 1, "group_rows must be positive");
+        if rows == 0 || cols == 0 {
+            return Ok(QuantMatrix {
+                rows,
+                cols,
+                group_rows,
+                data: Vec::new(),
+                scales: Vec::new(),
+            });
         }
-        let data = (0..rows * cols)
-            .map(|idx| {
-                let j = idx % cols;
-                (x[idx] / scales[j]).round().clamp(-127.0, 127.0) as i8
-            })
-            .collect();
-        QuantMatrix {
+        // reject non-finite input before any arithmetic: the saturating
+        // `as i8` cast would silently map NaN to 0
+        for (i, xr) in x.chunks_exact(cols).enumerate() {
+            for (j, &v) in xr.iter().enumerate() {
+                if !v.is_finite() {
+                    return Err(QuantError {
+                        row: i,
+                        col: j,
+                        value: v,
+                    });
+                }
+            }
+        }
+        // scale pass: per-group max|x| per column, row-major over each
+        // group with a per-column accumulator row (no idx % cols)
+        let n_groups = rows.div_ceil(group_rows);
+        let mut scales = vec![0f32; n_groups * cols];
+        for (g, rows_chunk) in x.chunks(group_rows * cols).enumerate() {
+            let smax = &mut scales[g * cols..(g + 1) * cols];
+            for xr in rows_chunk.chunks_exact(cols) {
+                for (s, &v) in smax.iter_mut().zip(xr) {
+                    *s = s.max(v.abs());
+                }
+            }
+            for s in smax.iter_mut() {
+                *s = if *s > 0.0 { *s / 127.0 } else { 1.0 };
+            }
+        }
+        // quantize pass: zip each row with its group's scale row
+        let mut data = Vec::with_capacity(rows * cols);
+        for (i, xr) in x.chunks_exact(cols).enumerate() {
+            let srow = &scales[(i / group_rows) * cols..][..cols];
+            for (&v, &s) in xr.iter().zip(srow) {
+                data.push((v / s).round().clamp(-127.0, 127.0) as i8);
+            }
+        }
+        Ok(QuantMatrix {
             rows,
             cols,
+            group_rows,
             data,
             scales,
-        }
+        })
     }
 
+    /// Scale groups (rows of `scales`).
+    pub fn n_groups(&self) -> usize {
+        self.rows.div_ceil(self.group_rows)
+    }
+
+    /// The `cols` scales covering matrix row `i` (its group's scale row).
+    pub fn scale_row(&self, i: usize) -> &[f32] {
+        let g = i / self.group_rows;
+        &self.scales[g * self.cols..(g + 1) * self.cols]
+    }
+
+    /// Reconstruct f32 values: exactly `q as f32 * scale` per element —
+    /// the oracle the fused kernels are bitwise-equal to.
     pub fn dequantize(&self) -> Vec<f32> {
-        self.data
-            .iter()
-            .enumerate()
-            .map(|(idx, &q)| q as f32 * self.scales[idx % self.cols])
-            .collect()
+        if self.cols == 0 {
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity(self.data.len());
+        for (i, qr) in self.data.chunks_exact(self.cols).enumerate() {
+            let srow = self.scale_row(i);
+            for (&q, &s) in qr.iter().zip(srow) {
+                out.push(q as f32 * s);
+            }
+        }
+        out
     }
 
-    /// Storage in bytes: 1 byte/entry + 4 bytes/column scale.
+    /// Storage in bytes: 1 byte/entry + 4 bytes per stored scale.
     pub fn bytes(&self) -> usize {
         self.data.len() + 4 * self.scales.len()
     }
@@ -89,17 +195,17 @@ pub fn quantize_factors_inplace(
     v: &mut [f32],
     n: usize,
     k: usize,
-) -> (f64, f64) {
+) -> Result<(f64, f64), QuantError> {
     balance_factor_columns(u, m, v, n, k);
-    let qu = QuantMatrix::quantize(u, m, k);
-    let qv = QuantMatrix::quantize(v, n, k);
+    let qu = QuantMatrix::quantize(u, m, k)?;
+    let qv = QuantMatrix::quantize(v, n, k)?;
     let du = qu.dequantize();
     let dv = qv.dequantize();
     let eu = rel(u, &du);
     let ev = rel(v, &dv);
     u.copy_from_slice(&du);
     v.copy_from_slice(&dv);
-    (eu, ev)
+    Ok((eu, ev))
 }
 
 fn rel(a: &[f32], b: &[f32]) -> f64 {
@@ -122,13 +228,15 @@ mod tests {
         let mut rng = Rng::new(1);
         let (rows, cols) = (64, 16);
         let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
-        let q = QuantMatrix::quantize(&x, rows, cols);
+        let q = QuantMatrix::quantize(&x, rows, cols).unwrap();
+        assert_eq!(q.n_groups(), 1, "64 rows fit one scale group");
         let d = q.dequantize();
         // max error per entry <= scale/2
-        for j in 0..cols {
-            for i in 0..rows {
+        for i in 0..rows {
+            let srow = q.scale_row(i);
+            for j in 0..cols {
                 let err = (x[i * cols + j] - d[i * cols + j]).abs();
-                assert!(err <= q.scales[j] * 0.5 + 1e-7);
+                assert!(err <= srow[j] * 0.5 + 1e-7);
             }
         }
         assert!(rel(&x, &d) < 0.01, "rel {}", rel(&x, &d));
@@ -137,7 +245,7 @@ mod tests {
     #[test]
     fn zero_matrix_safe() {
         let x = vec![0f32; 12];
-        let q = QuantMatrix::quantize(&x, 3, 4);
+        let q = QuantMatrix::quantize(&x, 3, 4).unwrap();
         assert_eq!(q.dequantize(), x);
     }
 
@@ -145,15 +253,64 @@ mod tests {
     fn per_column_scales_adapt() {
         // column 1 is 100x column 0: per-column scaling keeps both accurate
         let x = vec![0.01f32, 1.0, -0.02, 2.0, 0.015, -1.5];
-        let q = QuantMatrix::quantize(&x, 3, 2);
+        let q = QuantMatrix::quantize(&x, 3, 2).unwrap();
         let d = q.dequantize();
         assert!(rel(&x, &d) < 0.01);
     }
 
     #[test]
     fn bytes_accounting() {
-        let q = QuantMatrix::quantize(&[1.0; 50], 10, 5);
+        let q = QuantMatrix::quantize(&[1.0; 50], 10, 5).unwrap();
         assert_eq!(q.bytes(), 50 + 20);
+    }
+
+    #[test]
+    fn non_finite_input_is_a_typed_error() {
+        let mut x = vec![1.0f32; 12];
+        x[7] = f32::NAN; // row 1, col 3 of a [3, 4]
+        let err = QuantMatrix::quantize(&x, 3, 4).unwrap_err();
+        assert_eq!((err.row, err.col), (1, 3));
+        assert!(err.value.is_nan());
+        assert!(err.to_string().contains("non-finite"));
+        x[7] = f32::INFINITY;
+        assert!(QuantMatrix::quantize(&x, 3, 4).is_err());
+        // the in-place factor path surfaces the same error
+        let mut u = vec![1.0f32; 8];
+        let mut v = vec![f32::NEG_INFINITY; 8];
+        assert!(quantize_factors_inplace(&mut u, 4, &mut v, 4, 2).is_err());
+    }
+
+    #[test]
+    fn long_columns_get_grouped_scales() {
+        let (rows, cols) = (600, 3);
+        // magnitude jumps 100x past row 255: group scales keep the small
+        // region accurate where a single column scale could not
+        let x: Vec<f32> = (0..rows * cols)
+            .map(|idx| {
+                let i = idx / cols;
+                let base = 0.01 + (idx % 7) as f32 * 0.003;
+                if i >= QUANT_GROUP_ROWS {
+                    base * 100.0
+                } else {
+                    base
+                }
+            })
+            .collect();
+        let q = QuantMatrix::quantize(&x, rows, cols).unwrap();
+        assert_eq!(q.group_rows, QUANT_GROUP_ROWS);
+        assert_eq!(q.n_groups(), 3);
+        assert_eq!(q.scales.len(), 3 * cols);
+        assert_eq!(q.bytes(), rows * cols + 4 * 3 * cols);
+        let d = q.dequantize();
+        assert!(rel(&x, &d) < 0.01, "rel {}", rel(&x, &d));
+        // the first group's scale reflects the small region only
+        assert!(q.scale_row(0)[0] < q.scale_row(QUANT_GROUP_ROWS)[0] / 50.0);
+        // a forced single group is legal but coarser on the small rows
+        let single = QuantMatrix::quantize_grouped(&x, rows, cols, rows).unwrap();
+        assert_eq!(single.n_groups(), 1);
+        let ds = single.dequantize();
+        let head = rows.min(QUANT_GROUP_ROWS) * cols;
+        assert!(rel(&x[..head], &d[..head]) < rel(&x[..head], &ds[..head]));
     }
 
     #[test]
@@ -185,7 +342,7 @@ mod tests {
             assert!((nu / nv - 1.0).abs() < 1e-3);
         }
         // quantization after balancing keeps the product accurate
-        let (eu, ev) = quantize_factors_inplace(&mut u, m, &mut v, n, k);
+        let (eu, ev) = quantize_factors_inplace(&mut u, m, &mut v, n, k).unwrap();
         assert!(eu < 0.02 && ev < 0.02);
         let quantized = dense(&u, &v);
         assert!(rel(&before, &quantized) < 0.05, "rel {}", rel(&before, &quantized));
@@ -198,7 +355,7 @@ mod tests {
         let mut u: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
         let mut v: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
         let orig_u = u.clone();
-        let (eu, ev) = quantize_factors_inplace(&mut u, m, &mut v, n, k);
+        let (eu, ev) = quantize_factors_inplace(&mut u, m, &mut v, n, k).unwrap();
         assert!(eu > 0.0 && eu < 0.02);
         assert!(ev > 0.0 && ev < 0.02);
         assert_ne!(u, orig_u); // actually changed

@@ -43,6 +43,7 @@ use super::pipeline::{
 use super::rank::Allocation;
 use crate::data::TokenBatch;
 use crate::model::lowrank::{exact_factors, BlockFactors};
+use crate::model::quant_lowrank::{save_quant_blocks, QuantBlockFactors};
 use crate::model::{Config, FlatStore};
 use crate::refine::refine_block;
 use crate::runtime::manifest::{BlockEntry, RunManifest};
@@ -507,15 +508,17 @@ impl<'a, C: Collector> CompressRun<'a, C> {
                         move || {
                             inner.install(|| {
                                 let k = alloc_ref.rank_of(lin);
-                                let (f, qerr) =
-                                    solve_one(method, cfg, params, i, lin, cov_ref, k, &inner);
-                                (lin, f, qerr)
+                                (lin, solve_one(method, cfg, params, i, lin, cov_ref, k, &inner))
                             })
                         }
                     })
                     .collect(),
             );
-            for (lin, f, qerr) in solved {
+            // unwrap the per-linear Results in submission order so the
+            // quant_errs push order (and any error surfaced) is
+            // thread-count invariant
+            for (lin, solved) in solved {
+                let (f, qerr) = solved?;
                 f.write_into(cfg, lin, &mut bf);
                 if method.quantized() {
                     self.quant_errs.push(qerr);
@@ -657,36 +660,67 @@ impl<'a, C: Collector> CompressRun<'a, C> {
             }
         }
 
-        let mut w = ArchiveWriter::create(&artifact, 2 * self.cfg.n_layers)
-            .with_context(|| format!("assembling artifact {}", artifact.display()))?;
-        for i in 0..self.cfg.n_layers {
-            let (fdata, mdata) = if i < self.kept.len() {
-                (
-                    self.kept[i].factors.data.clone(),
-                    self.kept[i].masks.data.clone(),
-                )
-            } else {
-                let Some(dir) = self.dir.as_ref() else {
-                    bail!(
-                        "block {i} is neither in memory nor on disk \
-                         (internal invariant)"
-                    );
+        let hash = if self.method.quantized() {
+            // Quantized methods persist what serving actually loads: the
+            // int8 factors plus their scale tables (AAT2), not a 4x-larger
+            // f32 dequantization of them. The per-block QuantBlockFactors
+            // are ~1/4 the f32 working set, so holding the archive in
+            // memory here keeps the peak bound of the streaming loop.
+            let mut qblocks = Vec::with_capacity(self.cfg.n_layers);
+            for i in 0..self.cfg.n_layers {
+                let qb = if i < self.kept.len() {
+                    QuantBlockFactors::from_block(self.cfg, &self.kept[i])
+                } else {
+                    let Some(dir) = self.dir.as_ref() else {
+                        bail!(
+                            "block {i} is neither in memory nor on disk \
+                             (internal invariant)"
+                        );
+                    };
+                    let bf = load_shard(self.cfg, &dir.join(format!("block_{i}.aat")))?;
+                    QuantBlockFactors::from_block(self.cfg, &bf)
                 };
-                let bf = load_shard(self.cfg, &dir.join(format!("block_{i}.aat")))?;
-                (bf.factors.data, bf.masks.data)
-            };
-            w.append(
-                &format!("blocks.{i}.factors"),
-                &Tensor::new(vec![fdata.len()], fdata),
-            )?;
-            w.append(
-                &format!("blocks.{i}.masks"),
-                &Tensor::new(vec![mdata.len()], mdata),
-            )?;
-        }
-        let hash = w
-            .finish()
-            .with_context(|| format!("assembling artifact {}", artifact.display()))?;
+                match qb {
+                    Ok(qb) => qblocks.push(qb),
+                    Err(e) => bail!("quantizing block {i} for the artifact: {e}"),
+                }
+            }
+            save_quant_blocks(&qblocks, &artifact)
+                .with_context(|| format!("assembling artifact {}", artifact.display()))?;
+            let bytes = std::fs::read(&artifact)
+                .with_context(|| format!("hashing artifact {}", artifact.display()))?;
+            fnv1a64(&bytes)
+        } else {
+            let mut w = ArchiveWriter::create(&artifact, 2 * self.cfg.n_layers)
+                .with_context(|| format!("assembling artifact {}", artifact.display()))?;
+            for i in 0..self.cfg.n_layers {
+                let (fdata, mdata) = if i < self.kept.len() {
+                    (
+                        self.kept[i].factors.data.clone(),
+                        self.kept[i].masks.data.clone(),
+                    )
+                } else {
+                    let Some(dir) = self.dir.as_ref() else {
+                        bail!(
+                            "block {i} is neither in memory nor on disk \
+                             (internal invariant)"
+                        );
+                    };
+                    let bf = load_shard(self.cfg, &dir.join(format!("block_{i}.aat")))?;
+                    (bf.factors.data, bf.masks.data)
+                };
+                w.append(
+                    &format!("blocks.{i}.factors"),
+                    &Tensor::new(vec![fdata.len()], fdata),
+                )?;
+                w.append(
+                    &format!("blocks.{i}.masks"),
+                    &Tensor::new(vec![mdata.len()], mdata),
+                )?;
+            }
+            w.finish()
+                .with_context(|| format!("assembling artifact {}", artifact.display()))?
+        };
         self.artifact_hash = Some(hash);
 
         if let Some(dir) = self.dir.clone() {

@@ -4,6 +4,6 @@ pub mod perplexity;
 pub mod report;
 pub mod zeroshot;
 
-pub use perplexity::{compressed_ppl, dense_ppl, display_ppl};
+pub use perplexity::{compressed_ppl, dense_ppl, display_ppl, lowrank_ppl, quant_ppl};
 pub use report::Table;
 pub use zeroshot::{all_tasks_accuracy, task_accuracy, ModelRef};

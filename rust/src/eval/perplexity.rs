@@ -3,7 +3,9 @@
 //! artifacts, masking padded batch rows.
 
 use crate::data::TokenBatch;
-use crate::model::lowrank::{concat_factors, BlockFactors};
+use crate::model::forward::nll_from_logits;
+use crate::model::lowrank::{concat_factors, model_lr_forward, BlockFactors};
+use crate::model::quant_lowrank::{model_q_forward, QuantBlockFactors};
 use crate::model::{Config, FlatStore};
 use crate::runtime::{Engine, Value};
 use anyhow::Result;
@@ -60,6 +62,50 @@ pub fn compressed_ppl(
     Ok((total / count.max(1) as f64).exp())
 }
 
+/// Artifact-free PPL of an f32 low-rank model through the pure-Rust
+/// reference forward — no Engine needed. The baseline that
+/// [`quant_ppl`] deltas are measured against (benches, CI gates).
+pub fn lowrank_ppl(
+    cfg: &Config,
+    params: &FlatStore,
+    blocks: &[BlockFactors],
+    batches: &[TokenBatch],
+) -> f64 {
+    ppl_with(cfg, batches, |toks, t| {
+        model_lr_forward(cfg, params, blocks, toks, t)
+    })
+}
+
+/// Artifact-free PPL of an int8-quantized low-rank model through the
+/// fused-dequant reference forward.
+pub fn quant_ppl(
+    cfg: &Config,
+    params: &FlatStore,
+    blocks: &[QuantBlockFactors],
+    batches: &[TokenBatch],
+) -> f64 {
+    ppl_with(cfg, batches, |toks, t| {
+        model_q_forward(cfg, params, blocks, toks, t)
+    })
+}
+
+fn ppl_with(
+    cfg: &Config,
+    batches: &[TokenBatch],
+    forward: impl Fn(&[u32], usize) -> Vec<f32>,
+) -> f64 {
+    let mut total = 0f64;
+    let mut count = 0usize;
+    for tb in batches {
+        let toks: Vec<u32> = tb.tokens.iter().map(|&t| t as u32).collect();
+        let tgts: Vec<u32> = tb.targets.iter().map(|&t| t as u32).collect();
+        let logits = forward(&toks, cfg.seq);
+        let nll = nll_from_logits(&logits, &tgts, cfg.vocab);
+        accumulate(&nll, tb, cfg, &mut total, &mut count);
+    }
+    (total / count.max(1) as f64).exp()
+}
+
 fn accumulate(nll: &[f32], tb: &TokenBatch, cfg: &Config, total: &mut f64, count: &mut usize) {
     let t = cfg.seq;
     for row in 0..tb.real_rows {
@@ -95,6 +141,28 @@ mod tests {
         assert_eq!(display_ppl(438.58), "439");
         assert_eq!(display_ppl(5e7), "5e7");
         assert_eq!(display_ppl(f64::INFINITY), "1e30");
+    }
+
+    #[test]
+    fn quant_ppl_tracks_lowrank_ppl() {
+        use crate::model::quant_lowrank::QuantBlockFactors;
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(5));
+        let corpus = Corpus::generate(Domain::Wiki, 20_000, 5);
+        let batches: Vec<_> = Batcher::new(cfg.batch, cfg.seq)
+            .sequential(&corpus.valid, 2);
+        let blocks: Vec<_> = (0..cfg.n_layers)
+            .map(|i| exact_factors(&cfg, &params, i))
+            .collect();
+        let qblocks: Vec<_> = blocks
+            .iter()
+            .map(|bf| QuantBlockFactors::from_block(&cfg, bf).unwrap())
+            .collect();
+        let lr = lowrank_ppl(&cfg, &params, &blocks, &batches);
+        let q = quant_ppl(&cfg, &params, &qblocks, &batches);
+        assert!(lr.is_finite() && q.is_finite());
+        // int8 rounding moves PPL a little, not qualitatively
+        assert!((q - lr).abs() < 0.10 * lr, "lowrank {lr} vs quant {q}");
     }
 
     #[test]

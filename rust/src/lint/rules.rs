@@ -84,6 +84,7 @@ const FLOAT_KERNEL_FILES: &[&str] = &[
     "src/linalg/tridiag.rs",
     "src/model/forward.rs",
     "src/model/lowrank.rs",
+    "src/model/quant_lowrank.rs",
 ];
 
 /// Files allowed to read the environment: the pool's thread-count
@@ -107,8 +108,15 @@ const HASH_ITER_TREES: &[&str] = &[
 /// standard: a panic in the run-manifest or streaming-pipeline code can
 /// strand a half-written run directory in a state that `--resume` then
 /// misreads, so every failure must surface as a typed error with enough
-/// context to act on (which file, what to remove).
-const PERSIST_FILES: &[&str] = &["src/runtime/manifest.rs", "src/compress/run.rs"];
+/// context to act on (which file, what to remove). The quantized
+/// block (de)serialization lives on the same surface — it decodes the
+/// int8 artifacts the run writer persists, and it sits on the serving
+/// boot path, where a panic kills every in-flight request at once.
+const PERSIST_FILES: &[&str] = &[
+    "src/runtime/manifest.rs",
+    "src/compress/run.rs",
+    "src/model/quant_lowrank.rs",
+];
 
 /// Trees whose compute paths must not read wall clocks. The HTTP front
 /// door is held to the same rule: its legitimate clock reads (read
@@ -158,7 +166,7 @@ pub fn policy_path(path: &str) -> String {
 ///   `compress/`, `refine/`) plus the prefix-cache trie
 ///   (`serve/kv_pool.rs`), test code included — artifact equality
 ///   tests are exactly where ordering bugs hide.
-/// - `float-reduce`: all of `src/` outside the four banded-kernel files;
+/// - `float-reduce`: all of `src/` outside the five banded-kernel files;
 ///   test code exempt (tests legitimately compute reference sums to
 ///   compare against the kernels).
 /// - `float-cmp`: everywhere, test code included (the NaN bug class does
@@ -169,8 +177,9 @@ pub fn policy_path(path: &str) -> String {
 ///   `serve/http/` (where only justified latency-measurement sites may
 ///   suppress it).
 /// - `serve-unwrap`: non-test code in `src/serve/`, plus the checkpoint
-///   persistence surface (`runtime/manifest.rs`, `compress/run.rs`) where
-///   a panic strands a run directory mid-checkpoint.
+///   persistence surface (`runtime/manifest.rs`, `compress/run.rs`,
+///   `model/quant_lowrank.rs`) where a panic strands a run directory
+///   mid-checkpoint or kills serving at artifact-load time.
 pub fn applies(rule: &str, path: &str, in_test: bool) -> bool {
     match rule {
         RULE_ADHOC_PARALLELISM => path != "src/util/pool.rs",
@@ -217,6 +226,8 @@ mod tests {
     fn float_reduce_sanctions_the_kernel_files() {
         assert!(!applies(RULE_FLOAT_REDUCE, "src/linalg/matrix.rs", false));
         assert!(!applies(RULE_FLOAT_REDUCE, "src/model/forward.rs", false));
+        // the fused int8 kernels pin accumulation order like the f32 ones
+        assert!(!applies(RULE_FLOAT_REDUCE, "src/model/quant_lowrank.rs", false));
         assert!(applies(RULE_FLOAT_REDUCE, "src/linalg/eigh.rs", false));
         // tests and non-src trees are exempt
         assert!(!applies(RULE_FLOAT_REDUCE, "src/linalg/eigh.rs", true));
@@ -237,9 +248,12 @@ mod tests {
         // the checkpoint files are held to the serve-side unwrap standard
         assert!(applies(RULE_SERVE_UNWRAP, "src/runtime/manifest.rs", false));
         assert!(applies(RULE_SERVE_UNWRAP, "src/compress/run.rs", false));
+        // ...as is the int8 artifact (de)serialization + serving kernels
+        assert!(applies(RULE_SERVE_UNWRAP, "src/model/quant_lowrank.rs", false));
         // test code in those files keeps its unwraps
         assert!(!applies(RULE_SERVE_UNWRAP, "src/runtime/manifest.rs", true));
         assert!(!applies(RULE_SERVE_UNWRAP, "src/compress/run.rs", true));
+        assert!(!applies(RULE_SERVE_UNWRAP, "src/model/quant_lowrank.rs", true));
         // the rest of runtime/ is not swept in
         assert!(!applies(RULE_SERVE_UNWRAP, "src/runtime/engine.rs", false));
         // and the streaming pipeline inherits the compress-tree rules too

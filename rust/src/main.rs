@@ -17,7 +17,8 @@ use aasvd::compress::{Collector, CompressRun, Method, RunOptions};
 use aasvd::data::TokenBatch;
 use aasvd::eval::{all_tasks_accuracy, compressed_ppl, dense_ppl, display_ppl, ModelRef, Table};
 use aasvd::experiments::{setup, Knobs};
-use aasvd::model::lowrank::load_blocks;
+use aasvd::model::lowrank::{load_blocks, BlockFactors};
+use aasvd::model::quant_lowrank::load_quant_blocks;
 use aasvd::model::{Config, FlatStore};
 use aasvd::refine::RefineOptions;
 use aasvd::runtime::{BlockStatus, Engine, RunManifest};
@@ -240,6 +241,13 @@ fn run_compress<C: Collector>(
     let summary = run.finish()?;
     let wall = t0.elapsed().as_secs_f64();
     let peak_mb = aasvd::util::mem::peak_rss_mb();
+    // quantized methods store int8 factors + scales, so report the ratio
+    // of what the artifact actually holds, not its f32-equivalent size
+    let achieved_ratio = if method.quantized() {
+        summary.allocation.achieved_ratio_quantized(cfg)
+    } else {
+        summary.allocation.achieved_ratio(cfg)
+    };
     let artifact = summary
         .artifact
         .as_ref()
@@ -254,7 +262,7 @@ fn run_compress<C: Collector>(
             .set("blocks_solved", summary.solved)
             .set("blocks_resumed", summary.resumed)
             .set("blocks_skipped", summary.skipped)
-            .set("achieved_ratio", summary.allocation.achieved_ratio(cfg))
+            .set("achieved_ratio", achieved_ratio)
             .set("secs_wall", wall)
             .set("secs_collect", summary.report.secs_collect)
             .set("secs_solve", summary.report.secs_solve)
@@ -287,8 +295,9 @@ fn run_compress<C: Collector>(
             summary.solved, summary.resumed, summary.skipped, summary.total
         );
         println!(
-            "achieved parameter ratio: {:.3} (per-linear ranks: {:?})",
-            summary.allocation.achieved_ratio(cfg),
+            "achieved parameter ratio: {:.3}{} (per-linear ranks: {:?})",
+            achieved_ratio,
+            if method.quantized() { " (int8 + scales)" } else { "" },
             summary.allocation.ranks
         );
     }
@@ -331,21 +340,52 @@ fn compress_status(run_dir: &str, json: bool) -> Result<()> {
     Ok(())
 }
 
+/// Whether a compress artifact holds int8 quantized factors (AAT2
+/// layout from a quantized method) rather than f32 low-rank factors
+/// (AAT1). Decided by the archive magic, not the method name, so
+/// renamed artifacts still load correctly.
+fn artifact_is_quantized(path: &str) -> Result<bool> {
+    use std::io::Read;
+    let mut magic = [0u8; 4];
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("opening artifact {path}: {e}"))?;
+    f.read_exact(&mut magic)
+        .map_err(|e| anyhow::anyhow!("reading artifact magic of {path}: {e}"))?;
+    Ok(&magic == b"AAT2")
+}
+
+/// Load either artifact flavor as f32 block factors for evaluation.
+/// Quantized artifacts dequantize through `to_block`, so the evaluated
+/// weights are bit-for-bit the ones the fused int8 kernels compute with.
+fn load_blocks_any(cfg: &Config, path: &str) -> Result<(Vec<BlockFactors>, bool)> {
+    if artifact_is_quantized(path)? {
+        let qblocks = load_quant_blocks(cfg, path)?;
+        Ok((qblocks.iter().map(|qb| qb.to_block(cfg)).collect(), true))
+    } else {
+        Ok((load_blocks(cfg, path)?, false))
+    }
+}
+
 fn cmd_eval(args: &Args) -> Result<()> {
     let knobs = Knobs::parse(args, "base");
     let compressed = args.str("compressed", "", "path to compressed blocks (.aat)");
     args.finish_or_help();
     let ctx = setup(&knobs)?;
-    let blocks = if compressed.is_empty() {
-        None
+    let (blocks, quantized) = if compressed.is_empty() {
+        (None, false)
     } else {
-        Some(load_blocks(&ctx.cfg, &compressed)?)
+        let (b, q) = load_blocks_any(&ctx.cfg, &compressed)?;
+        (Some(b), q)
     };
     let mut table = Table::new(
         &format!(
             "eval — {} {}",
             knobs.config,
-            if blocks.is_some() { "(compressed)" } else { "(dense)" }
+            match (&blocks, quantized) {
+                (None, _) => "(dense)",
+                (Some(_), false) => "(compressed)",
+                (Some(_), true) => "(compressed, int8)",
+            }
         ),
         &["metric", "value"],
     );
@@ -385,6 +425,9 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let ctx = setup(&knobs)?;
     let model = if compressed.is_empty() {
         ServedModel::Dense(ctx.params.clone())
+    } else if artifact_is_quantized(&compressed)? {
+        // decode through the fused int8 kernels, not a dequantized copy
+        ServedModel::Quantized(ctx.params.clone(), load_quant_blocks(&ctx.cfg, &compressed)?)
     } else {
         ServedModel::Compressed(ctx.params.clone(), load_blocks(&ctx.cfg, &compressed)?)
     };

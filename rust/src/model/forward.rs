@@ -9,6 +9,7 @@
 
 use super::config::Config;
 use super::params::FlatStore;
+use crate::compress::quant::QuantMatrix;
 use crate::util::pool::Pool;
 
 pub const NORM_EPS: f32 = 1e-5;
@@ -92,6 +93,57 @@ pub fn linear_batch(x: &[f32], w: &[f32], n: usize, m: usize, pool: &Pool, out: 
         .chunks(rows_per * n)
         .zip(out.chunks_mut(rows_per * m))
         .map(|(xb, ob)| move || linear(xb, w, n, m, ob))
+        .collect();
+    pool.run(jobs);
+}
+
+/// y = x W^T with W int8-quantized [m, n], dequantized **in-register**:
+/// each weight is reconstructed as `q as f32 * scale` right at its
+/// multiply, never materializing an f32 weight matrix. Because
+/// [`QuantMatrix::dequantize`] produces exactly `q as f32 * scale` per
+/// element and this loop runs [`linear`]'s index order unchanged, the
+/// output is **bitwise identical** to `linear(x, &w.dequantize(), ..)` —
+/// the oracle tests/quantized_backend.rs pins.
+pub fn qlinear(x: &[f32], w: &QuantMatrix, out: &mut [f32]) {
+    let (m, n) = (w.rows, w.cols);
+    let rows = x.len() / n;
+    assert_eq!(x.len(), rows * n);
+    assert_eq!(w.data.len(), m * n);
+    assert_eq!(out.len(), rows * m);
+    for (xr, yr) in x.chunks_exact(n).zip(out.chunks_exact_mut(m)) {
+        for (j, yj) in yr.iter_mut().enumerate() {
+            let qrow = &w.data[j * n..(j + 1) * n];
+            let srow = w.scale_row(j);
+            let mut acc = 0.0f32;
+            for ((xv, &qv), &sv) in xr.iter().zip(qrow).zip(srow) {
+                acc += xv * (qv as f32 * sv);
+            }
+            *yj = acc;
+        }
+    }
+}
+
+/// Row-banded [`qlinear`]: the int8 twin of [`linear_batch`], with the
+/// same banding rule — so every output row is **bitwise identical** to
+/// its single-band `qlinear` result at any worker count, and therefore
+/// to the dequantize-then-`linear_batch` oracle.
+pub fn qlinear_batch(x: &[f32], w: &QuantMatrix, pool: &Pool, out: &mut [f32]) {
+    let (m, n) = (w.rows, w.cols);
+    let rows = x.len() / n;
+    let bands = if pool.threads() <= 1 {
+        1
+    } else {
+        pool.threads().min(rows)
+    };
+    if bands <= 1 {
+        qlinear(x, w, out);
+        return;
+    }
+    let rows_per = rows.div_ceil(bands);
+    let jobs: Vec<_> = x
+        .chunks(rows_per * n)
+        .zip(out.chunks_mut(rows_per * m))
+        .map(|(xb, ob)| move || qlinear(xb, w, ob))
         .collect();
     pool.run(jobs);
 }
@@ -946,6 +998,47 @@ mod tests {
                 "linear_batch diverged at {threads} threads"
             );
         }
+    }
+
+    #[test]
+    fn qlinear_is_bitwise_equal_to_dequantize_then_linear() {
+        let mut rng = Rng::new(51);
+        let (rows, n, m) = (5, 24, 17);
+        let x: Vec<f32> = (0..rows * n).map(|_| rng.normal()).collect();
+        let wf: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let w = QuantMatrix::quantize(&wf, m, n).unwrap();
+        let mut want = vec![0.0; rows * m];
+        linear(&x, &w.dequantize(), n, m, &mut want);
+        let mut got = vec![0.0; rows * m];
+        qlinear(&x, &w, &mut got);
+        assert!(
+            got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "fused qlinear diverged from the dequant oracle"
+        );
+        for threads in [1usize, 2, 4, 16] {
+            let mut banded = vec![0.0; rows * m];
+            qlinear_batch(&x, &w, &crate::util::pool::Pool::exact(threads), &mut banded);
+            assert!(
+                banded.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "qlinear_batch diverged at {threads} threads"
+            );
+        }
+    }
+
+    #[test]
+    fn qlinear_grouped_scales_stay_bitwise_exact() {
+        // force multiple scale groups (m > QUANT_GROUP_ROWS)
+        let mut rng = Rng::new(52);
+        let (rows, n, m) = (3, 8, crate::compress::quant::QUANT_GROUP_ROWS + 40);
+        let x: Vec<f32> = (0..rows * n).map(|_| rng.normal()).collect();
+        let wf: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let w = QuantMatrix::quantize(&wf, m, n).unwrap();
+        assert!(w.n_groups() > 1);
+        let mut want = vec![0.0; rows * m];
+        linear(&x, &w.dequantize(), n, m, &mut want);
+        let mut got = vec![0.0; rows * m];
+        qlinear(&x, &w, &mut got);
+        assert!(got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]

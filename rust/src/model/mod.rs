@@ -7,8 +7,10 @@ pub mod init;
 pub mod lowrank;
 pub mod paged_kv;
 pub mod params;
+pub mod quant_lowrank;
 pub mod tokenizer;
 
 pub use config::{Config, BLOCK_LINEARS};
 pub use lowrank::BlockFactors;
+pub use quant_lowrank::{QuantBlockFactors, QuantLinear};
 pub use params::{factor_layout, mask_layout, param_layout, FlatStore, Layout};

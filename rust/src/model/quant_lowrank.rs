@@ -1,0 +1,756 @@
+//! Int8-quantized low-rank model: fused-dequant forwards + AAT2 artifacts.
+//!
+//! The quantized twin of [`super::lowrank`]: each linear stores exact-rank
+//! factors U[m,k] / V[n,k] as [`QuantMatrix`] (int8 data + per-column,
+//! per-row-group f32 scales) instead of kmax-padded f32 factors with a
+//! rank mask. Dequantization is fused into the matmuls — every product
+//! reads `q as f32 * scale` in-register, so the fused path is bitwise
+//! identical to dequantize-then-f32-kernel (the test oracle), and the
+//! banded batch steps inherit the repo-wide thread-count-invariance
+//! contract from [`super::forward::qlinear_batch`].
+//!
+//! Artifacts are AAT2 tensor archives (see `util::io`): int8 factor data
+//! rides as i8 records, scales and norm gains as f32, plus a
+//! `quant.group_rows` meta scalar recording the group cap the writer
+//! quantized under (the cap is policy, not derivable from shapes).
+
+use super::config::{Config, BLOCK_LINEARS};
+use super::forward::{
+    attention, attention_step, linear, linear_batch, qlinear, rmsnorm, silu, KvSeq,
+    KvSeqStore,
+};
+use super::lowrank::BlockFactors;
+use super::params::FlatStore;
+use crate::compress::quant::{balance_factor_columns, QuantError, QuantMatrix, QUANT_GROUP_ROWS};
+use crate::util::pool::Pool;
+
+/// One quantized linear: exact-rank int8 factors (no mask — the rank is
+/// the stored width `k`).
+#[derive(Clone, Debug)]
+pub struct QuantLinear {
+    /// U [m, k] int8 + grouped scales
+    pub u: QuantMatrix,
+    /// V [n, k] int8 + grouped scales
+    pub v: QuantMatrix,
+}
+
+impl QuantLinear {
+    /// Output dim m, input dim n, rank k.
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.u.rows, self.v.rows, self.u.cols)
+    }
+
+    /// Stored bytes: int8 payloads + f32 scales of both factors.
+    pub fn bytes(&self) -> usize {
+        self.u.bytes() + self.v.bytes()
+    }
+
+    /// y = U (V^T x) with dequantization fused into both products;
+    /// x: [rows, n] -> out: [rows, m]. Bitwise identical to dequantizing
+    /// U and V and running the f32 low-rank apply (same index order,
+    /// same zero-skip).
+    pub fn apply(&self, x: &[f32], out: &mut [f32]) {
+        let (m, n, k) = self.dims();
+        let rows = x.len() / n;
+        assert_eq!(x.len(), rows * n);
+        assert_eq!(out.len(), rows * m);
+        if k == 0 {
+            out.fill(0.0);
+            return;
+        }
+        // z = x V (V stored [n, k] => z_j = sum_i x_i V[i, j]), dequant
+        // fused per element: V[i, j] = q * scale, never materialized
+        let mut z = vec![0.0f32; rows * k];
+        for (xr, zr) in x.chunks_exact(n).zip(z.chunks_exact_mut(k)) {
+            for (i, &xv) in xr.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let qrow = &self.v.data[i * k..(i + 1) * k];
+                let srow = self.v.scale_row(i);
+                for ((zv, &qv), &sv) in zr.iter_mut().zip(qrow).zip(srow) {
+                    *zv += xv * (qv as f32 * sv);
+                }
+            }
+        }
+        // y = z U^T, dequant fused in the banded int8 kernel
+        qlinear(&z, &self.u, out);
+    }
+}
+
+/// One quantized block: f32 norm gains + int8 factors per linear, in
+/// [`BLOCK_LINEARS`] order.
+#[derive(Clone, Debug)]
+pub struct QuantBlockFactors {
+    pub attn_norm: Vec<f32>,
+    pub mlp_norm: Vec<f32>,
+    pub linears: Vec<QuantLinear>,
+}
+
+impl QuantBlockFactors {
+    fn lin(&self, name: &str) -> &QuantLinear {
+        match BLOCK_LINEARS.iter().position(|l| *l == name) {
+            Some(i) => &self.linears[i],
+            None => panic!("unknown linear '{name}'"),
+        }
+    }
+
+    /// Quantize a solved f32 block at its active ranks: active factor
+    /// columns are copied out of the kmax-padded store, norm-balanced
+    /// (int8 error is relative per column), then quantized with the
+    /// default group policy. Non-finite factors surface as [`QuantError`].
+    pub fn from_block(cfg: &Config, bf: &BlockFactors) -> Result<QuantBlockFactors, QuantError> {
+        let mut linears = Vec::with_capacity(BLOCK_LINEARS.len());
+        for lin in BLOCK_LINEARS {
+            let (m, n) = cfg.linear_dims(lin);
+            let kmax = cfg.kmax(lin);
+            let k = bf.rank(lin);
+            let u_full = bf.factors.view(&format!("{lin}.u"));
+            let v_full = bf.factors.view(&format!("{lin}.v"));
+            let mut u = vec![0.0f32; m * k];
+            let mut v = vec![0.0f32; n * k];
+            for i in 0..m {
+                u[i * k..(i + 1) * k].copy_from_slice(&u_full[i * kmax..i * kmax + k]);
+            }
+            for i in 0..n {
+                v[i * k..(i + 1) * k].copy_from_slice(&v_full[i * kmax..i * kmax + k]);
+            }
+            balance_factor_columns(&mut u, m, &mut v, n, k);
+            linears.push(QuantLinear {
+                u: QuantMatrix::quantize(&u, m, k)?,
+                v: QuantMatrix::quantize(&v, n, k)?,
+            });
+        }
+        Ok(QuantBlockFactors {
+            attn_norm: bf.factors.view("attn_norm").to_vec(),
+            mlp_norm: bf.factors.view("mlp_norm").to_vec(),
+            linears,
+        })
+    }
+
+    /// Dequantize back into a kmax-padded [`BlockFactors`] (rank masks
+    /// set to the stored widths) — the f32 interop path for eval and
+    /// backend-equality tests.
+    pub fn to_block(&self, cfg: &Config) -> BlockFactors {
+        let mut bf = BlockFactors::zeros(cfg);
+        bf.factors
+            .view_mut("attn_norm")
+            .copy_from_slice(&self.attn_norm);
+        bf.factors
+            .view_mut("mlp_norm")
+            .copy_from_slice(&self.mlp_norm);
+        for (lin, ql) in BLOCK_LINEARS.iter().zip(&self.linears) {
+            let (m, n, k) = ql.dims();
+            let kmax = cfg.kmax(lin);
+            let du = ql.u.dequantize();
+            let dv = ql.v.dequantize();
+            {
+                let u = bf.factors.view_mut(&format!("{lin}.u"));
+                for i in 0..m {
+                    u[i * kmax..i * kmax + k].copy_from_slice(&du[i * k..(i + 1) * k]);
+                }
+            }
+            {
+                let v = bf.factors.view_mut(&format!("{lin}.v"));
+                for i in 0..n {
+                    v[i * kmax..i * kmax + k].copy_from_slice(&dv[i * k..(i + 1) * k]);
+                }
+            }
+            bf.set_rank(lin, k);
+        }
+        bf
+    }
+
+    /// Stored bytes: norm gains (f32) + both quantized factors per linear.
+    pub fn bytes(&self) -> usize {
+        let mut total = 4 * (self.attn_norm.len() + self.mlp_norm.len());
+        for ql in &self.linears {
+            total += ql.bytes();
+        }
+        total
+    }
+}
+
+/// Quantized block forward (full sequence, no cache) — the quantized twin
+/// of [`super::lowrank::block_lr_forward`], minus taps (quantized blocks
+/// are a serving format, never a calibration target).
+pub fn block_q_forward(cfg: &Config, qb: &QuantBlockFactors, x: &[f32], t: usize) -> Vec<f32> {
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+    let rows = x.len() / d;
+
+    let mut a_in = vec![0.0; x.len()];
+    rmsnorm(x, &qb.attn_norm, d, &mut a_in);
+
+    let mut q = vec![0.0; rows * d];
+    let mut k = vec![0.0; rows * d];
+    let mut v = vec![0.0; rows * d];
+    qb.lin("wq").apply(&a_in, &mut q);
+    qb.lin("wk").apply(&a_in, &mut k);
+    qb.lin("wv").apply(&a_in, &mut v);
+    let o_in = attention(cfg, &mut q, &mut k, &v, t);
+
+    let mut attn_out = vec![0.0; rows * d];
+    qb.lin("wo").apply(&o_in, &mut attn_out);
+    let h: Vec<f32> = x.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
+
+    let mut m_in = vec![0.0; h.len()];
+    rmsnorm(&h, &qb.mlp_norm, d, &mut m_in);
+    let mut gate = vec![0.0; rows * f];
+    let mut up = vec![0.0; rows * f];
+    qb.lin("w_gate").apply(&m_in, &mut gate);
+    qb.lin("w_up").apply(&m_in, &mut up);
+    let d_in: Vec<f32> = gate
+        .iter()
+        .zip(&up)
+        .map(|(&gv, &uv)| silu(gv) * uv)
+        .collect();
+    let mut down = vec![0.0; rows * d];
+    qb.lin("w_down").apply(&d_in, &mut down);
+    h.iter().zip(&down).map(|(a, b)| a + b).collect()
+}
+
+/// One-position quantized block step against the layer's KV cache — the
+/// quantized twin of [`super::lowrank::block_lr_forward_step`], sharing
+/// the same cached attention kernel.
+pub fn block_q_forward_step<K: KvSeq>(
+    cfg: &Config,
+    qb: &QuantBlockFactors,
+    layer: &mut K,
+    x: &[f32],
+) -> Vec<f32> {
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+
+    let mut a_in = vec![0.0; d];
+    rmsnorm(x, &qb.attn_norm, d, &mut a_in);
+
+    let mut q = vec![0.0; d];
+    let mut k = vec![0.0; d];
+    let mut v = vec![0.0; d];
+    qb.lin("wq").apply(&a_in, &mut q);
+    qb.lin("wk").apply(&a_in, &mut k);
+    qb.lin("wv").apply(&a_in, &mut v);
+    let o_in = attention_step(cfg, layer, &mut q, &mut k, &v);
+
+    let mut attn_out = vec![0.0; d];
+    qb.lin("wo").apply(&o_in, &mut attn_out);
+    let h: Vec<f32> = x.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
+
+    let mut m_in = vec![0.0; d];
+    rmsnorm(&h, &qb.mlp_norm, d, &mut m_in);
+    let mut gate = vec![0.0; f];
+    let mut up = vec![0.0; f];
+    qb.lin("w_gate").apply(&m_in, &mut gate);
+    qb.lin("w_up").apply(&m_in, &mut up);
+    let d_in: Vec<f32> = gate
+        .iter()
+        .zip(&up)
+        .map(|(&gv, &uv)| silu(gv) * uv)
+        .collect();
+    let mut down = vec![0.0; d];
+    qb.lin("w_down").apply(&d_in, &mut down);
+    h.iter().zip(&down).map(|(a, b)| a + b).collect()
+}
+
+/// Batched one-position quantized block step — the quantized twin of
+/// [`super::lowrank::block_lr_forward_step_batch`]: the batch is cut into
+/// row bands on `pool`, stacked fused-dequant projections run through the
+/// multi-row [`QuantLinear::apply`] kernel, attention stays a per-session
+/// [`attention_step`]. Rows never mix, so each output row is bitwise
+/// identical to [`block_q_forward_step`] at any worker count.
+pub fn block_q_forward_step_batch<K: KvSeq + Send>(
+    cfg: &Config,
+    qb: &QuantBlockFactors,
+    layers: &mut [&mut K],
+    x: &[f32],
+    pool: &Pool,
+) -> Vec<f32> {
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+    let b = layers.len();
+    assert_eq!(x.len(), b * d);
+    if b == 0 {
+        return Vec::new();
+    }
+
+    let mut y = vec![0.0f32; b * d];
+    let bands = if pool.threads() <= 1 {
+        1
+    } else {
+        pool.threads().min(b)
+    };
+    let rows_per = b.div_ceil(bands);
+    let jobs: Vec<_> = x
+        .chunks(rows_per * d)
+        .zip(y.chunks_mut(rows_per * d))
+        .zip(layers.chunks_mut(rows_per))
+        .map(|((xb, yb), lb)| {
+            move || {
+                let rb = lb.len();
+                let mut a_in = vec![0.0; rb * d];
+                rmsnorm(xb, &qb.attn_norm, d, &mut a_in);
+
+                let mut q = vec![0.0; rb * d];
+                let mut k = vec![0.0; rb * d];
+                let mut v = vec![0.0; rb * d];
+                qb.lin("wq").apply(&a_in, &mut q);
+                qb.lin("wk").apply(&a_in, &mut k);
+                qb.lin("wv").apply(&a_in, &mut v);
+
+                let mut o_in = vec![0.0; rb * d];
+                for (r, layer) in lb.iter_mut().enumerate() {
+                    let row = attention_step(
+                        cfg,
+                        layer,
+                        &mut q[r * d..(r + 1) * d],
+                        &mut k[r * d..(r + 1) * d],
+                        &v[r * d..(r + 1) * d],
+                    );
+                    o_in[r * d..(r + 1) * d].copy_from_slice(&row);
+                }
+
+                let mut attn_out = vec![0.0; rb * d];
+                qb.lin("wo").apply(&o_in, &mut attn_out);
+                let h: Vec<f32> = xb.iter().zip(&attn_out).map(|(a, b)| a + b).collect();
+
+                let mut m_in = vec![0.0; rb * d];
+                rmsnorm(&h, &qb.mlp_norm, d, &mut m_in);
+                let mut gate = vec![0.0; rb * f];
+                let mut up = vec![0.0; rb * f];
+                qb.lin("w_gate").apply(&m_in, &mut gate);
+                qb.lin("w_up").apply(&m_in, &mut up);
+                let d_in: Vec<f32> = gate
+                    .iter()
+                    .zip(&up)
+                    .map(|(&gv, &uv)| silu(gv) * uv)
+                    .collect();
+                let mut down = vec![0.0; rb * d];
+                qb.lin("w_down").apply(&d_in, &mut down);
+                for (yv, (hv, dv)) in yb.iter_mut().zip(h.iter().zip(&down)) {
+                    *yv = hv + dv;
+                }
+            }
+        })
+        .collect();
+    pool.run(jobs);
+    y
+}
+
+/// One KV-cached decode step through the quantized model. Bitwise
+/// identical to the last row of [`model_q_forward`] over the same prefix
+/// (the cache-exactness contract).
+pub fn model_q_forward_step<S: KvSeqStore>(
+    cfg: &Config,
+    params: &FlatStore,
+    blocks: &[QuantBlockFactors],
+    cache: &mut S,
+    token: u32,
+) -> Vec<f32> {
+    assert_eq!(blocks.len(), cfg.n_layers);
+    assert_eq!(cache.n_layers(), cfg.n_layers);
+    let d = cfg.d_model;
+    let tok = token as usize;
+    assert!(tok < cfg.vocab, "token {tok} out of range");
+    let embed = params.view("embed");
+    let mut x = embed[tok * d..(tok + 1) * d].to_vec();
+    for (blk, qb) in blocks.iter().enumerate() {
+        x = block_q_forward_step(cfg, qb, cache.layer_mut(blk), &x);
+    }
+    cache.advance();
+    let mut hn = vec![0.0; d];
+    rmsnorm(&x, params.view("final_norm"), d, &mut hn);
+    let mut logits = vec![0.0; cfg.vocab];
+    linear(&hn, params.view("lm_head"), d, cfg.vocab, &mut logits);
+    logits
+}
+
+/// Batched KV-cached decode through the quantized model: one stacked
+/// [B, d] pass per layer, one logits row per session. Row i is bitwise
+/// identical to [`model_q_forward_step`] on cache i with token i, at any
+/// pool width.
+pub fn model_q_forward_step_batch<S: KvSeqStore>(
+    cfg: &Config,
+    params: &FlatStore,
+    blocks: &[QuantBlockFactors],
+    caches: &mut [&mut S],
+    tokens: &[u32],
+    pool: &Pool,
+) -> Vec<Vec<f32>> {
+    assert_eq!(blocks.len(), cfg.n_layers);
+    assert_eq!(caches.len(), tokens.len());
+    let b = tokens.len();
+    if b == 0 {
+        return Vec::new();
+    }
+    for c in caches.iter() {
+        assert_eq!(c.n_layers(), cfg.n_layers);
+    }
+    let d = cfg.d_model;
+    let embed = params.view("embed");
+    let mut x = vec![0.0f32; b * d];
+    for (i, &tok) in tokens.iter().enumerate() {
+        let tok = tok as usize;
+        assert!(tok < cfg.vocab, "token {tok} out of range");
+        x[i * d..(i + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+    }
+    for (blk, qb) in blocks.iter().enumerate() {
+        let mut layers: Vec<&mut S::Layer> =
+            caches.iter_mut().map(|c| c.layer_mut(blk)).collect();
+        x = block_q_forward_step_batch(cfg, qb, &mut layers, &x, pool);
+    }
+    for c in caches.iter_mut() {
+        c.advance();
+    }
+    let mut hn = vec![0.0; b * d];
+    rmsnorm(&x, params.view("final_norm"), d, &mut hn);
+    let mut logits = vec![0.0f32; b * cfg.vocab];
+    linear_batch(&hn, params.view("lm_head"), d, cfg.vocab, pool, &mut logits);
+    logits.chunks_exact(cfg.vocab).map(|r| r.to_vec()).collect()
+}
+
+/// Prefill the quantized model: absorb a whole prompt into `cache`,
+/// returning the logits row at its last position.
+pub fn model_q_forward_prefill<S: KvSeqStore>(
+    cfg: &Config,
+    params: &FlatStore,
+    blocks: &[QuantBlockFactors],
+    cache: &mut S,
+    tokens: &[u32],
+) -> Vec<f32> {
+    assert!(!tokens.is_empty(), "prefill needs at least one token");
+    let mut logits = Vec::new();
+    for &tok in tokens {
+        logits = model_q_forward_step(cfg, params, blocks, cache, tok);
+    }
+    logits
+}
+
+/// Quantized full-model forward (dense embed/head + quantized blocks).
+pub fn model_q_forward(
+    cfg: &Config,
+    params: &FlatStore,
+    blocks: &[QuantBlockFactors],
+    tokens: &[u32],
+    t: usize,
+) -> Vec<f32> {
+    assert_eq!(blocks.len(), cfg.n_layers);
+    let d = cfg.d_model;
+    let b = tokens.len() / t;
+    let embed = params.view("embed");
+    let mut x = vec![0.0f32; b * t * d];
+    for (i, &tok) in tokens.iter().enumerate() {
+        let tok = tok as usize;
+        x[i * d..(i + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+    }
+    for qb in blocks {
+        x = block_q_forward(cfg, qb, &x, t);
+    }
+    let mut hn = vec![0.0; x.len()];
+    rmsnorm(&x, params.view("final_norm"), d, &mut hn);
+    let mut logits = vec![0.0; b * t * cfg.vocab];
+    linear(&hn, params.view("lm_head"), d, cfg.vocab, &mut logits);
+    logits
+}
+
+/// Save quantized blocks to an AAT2 tensor archive: int8 factor payloads
+/// (`{lin}.u_q` / `{lin}.v_q`), f32 scales (`{lin}.u_s` / `{lin}.v_s`),
+/// f32 norm gains, and a `quant.group_rows` meta scalar pinning the
+/// group cap the writer quantized under.
+pub fn save_quant_blocks(
+    blocks: &[QuantBlockFactors],
+    path: impl AsRef<std::path::Path>,
+) -> anyhow::Result<()> {
+    use crate::util::io::{Tensor, TensorArchive, TensorI8};
+    let mut arch = TensorArchive::new();
+    arch.insert(
+        "quant.group_rows",
+        Tensor::new(vec![1], vec![QUANT_GROUP_ROWS as f32]),
+    );
+    for (i, b) in blocks.iter().enumerate() {
+        arch.insert(
+            &format!("blocks.{i}.attn_norm"),
+            Tensor::new(vec![b.attn_norm.len()], b.attn_norm.clone()),
+        );
+        arch.insert(
+            &format!("blocks.{i}.mlp_norm"),
+            Tensor::new(vec![b.mlp_norm.len()], b.mlp_norm.clone()),
+        );
+        for (lin, ql) in BLOCK_LINEARS.iter().zip(&b.linears) {
+            for (tag, q) in [("u", &ql.u), ("v", &ql.v)] {
+                arch.insert_i8(
+                    &format!("blocks.{i}.{lin}.{tag}_q"),
+                    TensorI8::new(vec![q.rows, q.cols], q.data.clone()),
+                );
+                arch.insert(
+                    &format!("blocks.{i}.{lin}.{tag}_s"),
+                    Tensor::new(vec![q.n_groups(), q.cols], q.scales.clone()),
+                );
+            }
+        }
+    }
+    arch.save(path)
+}
+
+/// Load quantized blocks saved by [`save_quant_blocks`], validating
+/// shapes against `cfg` and scale layouts against the recorded group cap.
+pub fn load_quant_blocks(
+    cfg: &Config,
+    path: impl AsRef<std::path::Path>,
+) -> anyhow::Result<Vec<QuantBlockFactors>> {
+    use crate::util::io::TensorArchive;
+    use anyhow::{anyhow, bail, ensure};
+    let arch = TensorArchive::load(path)?;
+    let cap = match arch.get("quant.group_rows").and_then(|t| t.data.first()) {
+        Some(&c) if c >= 1.0 && c.fract() == 0.0 => c as usize,
+        Some(&c) => bail!("bad quant.group_rows {c}"),
+        None => bail!("missing quant.group_rows meta tensor"),
+    };
+    let d = cfg.d_model;
+    let mut out = Vec::with_capacity(cfg.n_layers);
+    for i in 0..cfg.n_layers {
+        let norm = |name: &str| -> anyhow::Result<Vec<f32>> {
+            let t = arch
+                .get(&format!("blocks.{i}.{name}"))
+                .ok_or_else(|| anyhow!("missing block {i} {name}"))?;
+            ensure!(t.data.len() == d, "block {i} {name}: {} != d_model", t.data.len());
+            Ok(t.data.clone())
+        };
+        let mut linears = Vec::with_capacity(BLOCK_LINEARS.len());
+        for lin in BLOCK_LINEARS {
+            let (m, n) = cfg.linear_dims(lin);
+            let kmax = cfg.kmax(lin);
+            let load_half = |tag: &str, rows: usize| -> anyhow::Result<QuantMatrix> {
+                let qn = format!("blocks.{i}.{lin}.{tag}_q");
+                let sn = format!("blocks.{i}.{lin}.{tag}_s");
+                let q = arch.get_i8(&qn).ok_or_else(|| anyhow!("missing tensor {qn}"))?;
+                let s = arch.get(&sn).ok_or_else(|| anyhow!("missing tensor {sn}"))?;
+                ensure!(q.dims.len() == 2 && q.dims[0] == rows, "{qn}: bad dims {:?}", q.dims);
+                let k = q.dims[1];
+                ensure!(k <= kmax, "{qn}: rank {k} exceeds kmax {kmax}");
+                let group_rows = rows.min(cap).max(1);
+                let n_groups = rows.div_ceil(group_rows);
+                ensure!(
+                    s.dims == [n_groups, k],
+                    "{sn}: dims {:?} != [{n_groups}, {k}] under group cap {cap}",
+                    s.dims
+                );
+                Ok(QuantMatrix {
+                    rows,
+                    cols: k,
+                    group_rows,
+                    data: q.data.clone(),
+                    scales: s.data.clone(),
+                })
+            };
+            let u = load_half("u", m)?;
+            let v = load_half("v", n)?;
+            ensure!(
+                u.cols == v.cols,
+                "block {i} {lin}: u rank {} != v rank {}",
+                u.cols,
+                v.cols
+            );
+            linears.push(QuantLinear { u, v });
+        }
+        out.push(QuantBlockFactors {
+            attn_norm: norm("attn_norm")?,
+            mlp_norm: norm("mlp_norm")?,
+            linears,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::KvCache;
+    use crate::model::init::init_params;
+    use crate::model::lowrank::{exact_factors, model_lr_forward};
+    use crate::testkit::approx::assert_close_f32;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (Config, FlatStore, Vec<QuantBlockFactors>) {
+        let cfg = Config::builtin("tiny").unwrap();
+        let p = init_params(&cfg, &mut Rng::new(11));
+        let blocks: Vec<QuantBlockFactors> = (0..cfg.n_layers)
+            .map(|i| {
+                let mut bf = exact_factors(&cfg, &p, i);
+                bf.set_rank("wq", 5);
+                bf.set_rank("w_up", 7);
+                QuantBlockFactors::from_block(&cfg, &bf).unwrap()
+            })
+            .collect();
+        (cfg, p, blocks)
+    }
+
+    #[test]
+    fn fused_apply_is_bitwise_equal_to_dequant_oracle() {
+        let (_cfg, _p, blocks) = setup();
+        let qb = &blocks[0];
+        let mut rng = Rng::new(21);
+        for lin in BLOCK_LINEARS {
+            let ql = qb.lin(lin);
+            let (m, n, k) = ql.dims();
+            let rows = 3;
+            let x: Vec<f32> = (0..rows * n).map(|_| rng.normal()).collect();
+            let mut fused = vec![0.0f32; rows * m];
+            ql.apply(&x, &mut fused);
+            // oracle: dequantize both factors, run the identical f32 loops
+            let du = ql.u.dequantize();
+            let dv = ql.v.dequantize();
+            let mut z = vec![0.0f32; rows * k];
+            for (xr, zr) in x.chunks_exact(n).zip(z.chunks_exact_mut(k)) {
+                for (i, &xv) in xr.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    for (zv, &vv) in zr.iter_mut().zip(&dv[i * k..(i + 1) * k]) {
+                        *zv += xv * vv;
+                    }
+                }
+            }
+            let mut oracle = vec![0.0f32; rows * m];
+            linear(&z, &du, k, m, &mut oracle);
+            for (i, (a, b)) in fused.iter().zip(&oracle).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{lin} out {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_block_roundtrips_through_to_block() {
+        let (cfg, p, blocks) = setup();
+        let bf0 = {
+            let mut bf = exact_factors(&cfg, &p, 0);
+            bf.set_rank("wq", 5);
+            bf.set_rank("w_up", 7);
+            bf
+        };
+        let back = blocks[0].to_block(&cfg);
+        for lin in BLOCK_LINEARS {
+            assert_eq!(back.rank(lin), bf0.rank(lin), "{lin} rank");
+            let w0 = bf0.dense_weight(&cfg, lin);
+            let w1 = back.dense_weight(&cfg, lin);
+            let num: f64 = w0
+                .iter()
+                .zip(&w1)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>();
+            let den: f64 = w0.iter().map(|&a| (a as f64).powi(2)).sum::<f64>();
+            assert!(
+                (num / den.max(1e-300)).sqrt() < 0.05,
+                "{lin} quant error too large"
+            );
+        }
+        assert_close_f32(&back.factors.view("attn_norm").to_vec(), &blocks[0].attn_norm, 0.0);
+    }
+
+    #[test]
+    fn q_cached_step_matches_full_forward_bitwise() {
+        let (cfg, p, blocks) = setup();
+        let mut rng = Rng::new(18);
+        let n = cfg.seq + 2;
+        let tokens: Vec<u32> = (0..n).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let mut cache = KvCache::new(cfg.n_layers);
+        for (pos, &tok) in tokens.iter().enumerate() {
+            let step = model_q_forward_step(&cfg, &p, &blocks, &mut cache, tok);
+            let full = model_q_forward(&cfg, &p, &blocks, &tokens[..=pos], pos + 1);
+            let want = &full[pos * cfg.vocab..];
+            for (i, (a, b)) in step.iter().zip(want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "pos {pos} logit {i}: {a} vs {b}");
+            }
+        }
+        assert_eq!(cache.len, n);
+    }
+
+    #[test]
+    fn q_batched_step_rows_match_single_steps_bitwise() {
+        let (cfg, p, blocks) = setup();
+        let b = 3;
+        let prompts: Vec<Vec<u32>> = (0..b)
+            .map(|r| (0..2 + r).map(|i| ((i * 23 + r * 5) % cfg.vocab) as u32).collect())
+            .collect();
+        let mut batched: Vec<KvCache> = prompts
+            .iter()
+            .map(|pr| {
+                let mut c = KvCache::new(cfg.n_layers);
+                model_q_forward_prefill(&cfg, &p, &blocks, &mut c, pr);
+                c
+            })
+            .collect();
+        let mut solo = batched.clone();
+        for threads in [1usize, 2, 4] {
+            let pool = Pool::exact(threads);
+            let toks: Vec<u32> =
+                (0..b).map(|r| ((r * 31 + threads * 17) % cfg.vocab) as u32).collect();
+            let mut refs: Vec<&mut KvCache> = batched.iter_mut().collect();
+            let rows = model_q_forward_step_batch(&cfg, &p, &blocks, &mut refs, &toks, &pool);
+            for (r, row) in rows.iter().enumerate() {
+                let want = model_q_forward_step(&cfg, &p, &blocks, &mut solo[r], toks[r]);
+                for (i, (a, b_)) in row.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b_.to_bits(),
+                        "row {r} threads {threads} logit {i}: {a} vs {b_}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_forward_tracks_f32_lowrank_closely() {
+        let (cfg, p, blocks) = setup();
+        let f32_blocks: Vec<_> = blocks.iter().map(|qb| qb.to_block(&cfg)).collect();
+        let t = cfg.seq;
+        let tokens: Vec<u32> = (0..t).map(|i| (i * 7 % cfg.vocab) as u32).collect();
+        let ql = model_q_forward(&cfg, &p, &blocks, &tokens, t);
+        let fl = model_lr_forward(&cfg, &p, &f32_blocks, &tokens, t);
+        // the dequantized f32 model is the same math modulo kmax zero
+        // padding, which only ever adds exact zeros
+        assert_close_f32(&ql, &fl, 1e-5);
+    }
+
+    #[test]
+    fn quant_artifact_roundtrips_exactly() {
+        let (cfg, _, blocks) = setup();
+        let dir = std::env::temp_dir().join("aasvd-quant-lowrank-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("quant.aat");
+        save_quant_blocks(&blocks, &path).unwrap();
+        let loaded = load_quant_blocks(&cfg, &path).unwrap();
+        assert_eq!(loaded.len(), blocks.len());
+        for (a, b) in blocks.iter().zip(&loaded) {
+            assert_eq!(a.attn_norm, b.attn_norm);
+            assert_eq!(a.mlp_norm, b.mlp_norm);
+            for (qa, qb) in a.linears.iter().zip(&b.linears) {
+                for (ma, mb) in [(&qa.u, &qb.u), (&qa.v, &qb.v)] {
+                    assert_eq!(ma.rows, mb.rows);
+                    assert_eq!(ma.cols, mb.cols);
+                    assert_eq!(ma.group_rows, mb.group_rows);
+                    assert_eq!(ma.data, mb.data);
+                    assert_eq!(
+                        ma.scales.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+                        mb.scales.iter().map(|s| s.to_bits()).collect::<Vec<_>>()
+                    );
+                }
+            }
+        }
+        assert_eq!(blocks[0].bytes(), loaded[0].bytes());
+    }
+
+    #[test]
+    fn load_rejects_missing_meta() {
+        let (cfg, _, blocks) = setup();
+        let dir = std::env::temp_dir().join("aasvd-quant-lowrank-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.aat");
+        // strip the meta tensor by re-saving a doctored archive
+        use crate::util::io::TensorArchive;
+        save_quant_blocks(&blocks, &path).unwrap();
+        let mut arch = TensorArchive::load(&path).unwrap();
+        arch.tensors.remove("quant.group_rows");
+        arch.save(&path).unwrap();
+        let err = load_quant_blocks(&cfg, &path).unwrap_err();
+        assert!(err.to_string().contains("quant.group_rows"), "{err}");
+    }
+}

@@ -14,11 +14,11 @@
 //! — a full-prefix recompute per token — as the bitwise test oracle and
 //! bench baseline (driven by `DecodeMode::Recompute`).
 //!
-//! All three built-in backends are artifact-free: the dense and low-rank
-//! paths decode through the pure-Rust reference forward
-//! (`model::forward`, `model::lowrank`), which the AOT artifacts are
-//! validated against, so cached and recomputed logits can be compared
-//! bit for bit. The PJRT artifacts stay on the batch-shaped paths
+//! All built-in backends are artifact-free: the dense, low-rank, and
+//! int8-quantized paths decode through the pure-Rust reference forwards
+//! (`model::forward`, `model::lowrank`, `model::quant_lowrank`), which
+//! the AOT artifacts are validated against, so cached and recomputed
+//! logits can be compared bit for bit. The PJRT artifacts stay on the batch-shaped paths
 //! (calibration, refinement, eval), where round-tripping a KV cache
 //! through host literals per step would dominate the win (see DESIGN.md).
 //!
@@ -36,6 +36,10 @@ use crate::model::lowrank::{
     model_lr_forward_step_batch, BlockFactors,
 };
 use crate::model::paged_kv::PagedKvCache;
+use crate::model::quant_lowrank::{
+    model_q_forward, model_q_forward_prefill, model_q_forward_step,
+    model_q_forward_step_batch, QuantBlockFactors,
+};
 use crate::model::{Config, FlatStore};
 use crate::util::pool::Pool;
 use anyhow::Result;
@@ -327,10 +331,11 @@ fn as_vocab_tokens(vocab: usize, tokens: &[i32]) -> Vec<u32> {
         .collect()
 }
 
-/// What the server is serving (the two built-in backend kinds).
+/// What the server is serving (the built-in backend kinds).
 pub enum ServedModel {
     Dense(FlatStore),
     Compressed(FlatStore, Vec<BlockFactors>),
+    Quantized(FlatStore, Vec<QuantBlockFactors>),
 }
 
 impl ServedModel {
@@ -339,6 +344,7 @@ impl ServedModel {
         match self {
             ServedModel::Dense(_) => "dense_kv",
             ServedModel::Compressed(..) => "lowrank_kv",
+            ServedModel::Quantized(..) => "quant_kv",
         }
     }
 
@@ -350,6 +356,9 @@ impl ServedModel {
             }
             ServedModel::Compressed(params, blocks) => {
                 Box::new(CompressedBackend::new(cfg.clone(), params, blocks)?)
+            }
+            ServedModel::Quantized(params, blocks) => {
+                Box::new(QuantizedBackend::new(cfg.clone(), params, blocks)?)
             }
         })
     }
@@ -640,6 +649,171 @@ impl ModelBackend for CompressedBackend {
         let toks = as_vocab_tokens(self.cfg.vocab, tokens);
         let all =
             model_lr_forward(&self.cfg, &self.params, &self.blocks, &toks, toks.len());
+        Ok(all[(toks.len() - 1) * self.cfg.vocab..].to_vec())
+    }
+
+    fn configure_paged(&mut self, opts: &PagedKvOptions) -> bool {
+        self.paged = Some(PagedState::new(opts, self.cfg.d_model));
+        true
+    }
+
+    fn kv_pool_stats(&self) -> Option<KvPoolStats> {
+        self.paged.as_ref().map(PagedState::stats)
+    }
+
+    fn kv_reset(&mut self) {
+        if let Some(ps) = &mut self.paged {
+            ps.reset();
+        }
+    }
+}
+
+/// Int8-quantized low-rank model through the KV-cached pure-Rust forward.
+/// Factors stay int8 end-to-end — dequantization is fused into the banded
+/// kernels (`model::quant_lowrank`) — while the KV cache, paged pool, and
+/// prefix trie are the same f32 machinery the other backends use, so
+/// paged sessions and prefix reuse work unchanged.
+pub struct QuantizedBackend {
+    cfg: Config,
+    params: FlatStore,
+    blocks: Vec<QuantBlockFactors>,
+    /// `Some` after `configure_paged` (see [`DenseBackend::paged`]).
+    paged: Option<PagedState>,
+}
+
+impl QuantizedBackend {
+    pub fn new(
+        cfg: Config,
+        params: FlatStore,
+        blocks: Vec<QuantBlockFactors>,
+    ) -> Result<QuantizedBackend> {
+        anyhow::ensure!(
+            blocks.len() == cfg.n_layers,
+            "expected {} quantized blocks, got {}",
+            cfg.n_layers,
+            blocks.len()
+        );
+        Ok(QuantizedBackend {
+            cfg,
+            params,
+            blocks,
+            paged: None,
+        })
+    }
+}
+
+impl ModelBackend for QuantizedBackend {
+    fn artifact(&self) -> &'static str {
+        "quant_kv"
+    }
+
+    fn prefill(&mut self, tokens: &[i32]) -> Result<Prefill> {
+        anyhow::ensure!(!tokens.is_empty(), "prefill needs at least one token");
+        let artifact = self.artifact();
+        let QuantizedBackend {
+            cfg,
+            params,
+            blocks,
+            paged,
+        } = self;
+        let toks = as_vocab_tokens(cfg.vocab, tokens);
+        if let Some(ps) = paged {
+            let (cache, reused, logits) =
+                paged_prefill(ps, cfg.n_layers, &toks, &mut |cache, tok| {
+                    model_q_forward_step(cfg, params, blocks, cache, tok)
+                })?;
+            return Ok(Prefill {
+                session: Session {
+                    state: SessionState::Paged(cache),
+                    backend: artifact,
+                },
+                logits,
+                reused,
+            });
+        }
+        let mut cache = KvCache::new(cfg.n_layers);
+        let logits = model_q_forward_prefill(cfg, params, blocks, &mut cache, &toks);
+        Ok(Prefill {
+            session: Session {
+                state: SessionState::Kv(cache),
+                backend: artifact,
+            },
+            logits,
+            reused: 0,
+        })
+    }
+
+    fn decode_step(&mut self, session: &mut Session, token: i32) -> Result<Vec<f32>> {
+        ensure_owner(session, self.artifact())?;
+        let QuantizedBackend {
+            cfg,
+            params,
+            blocks,
+            paged,
+        } = self;
+        let tok = token.rem_euclid(cfg.vocab as i32) as u32;
+        match &mut session.state {
+            SessionState::Kv(cache) => {
+                Ok(model_q_forward_step(cfg, params, blocks, cache, tok))
+            }
+            SessionState::Paged(cache) => {
+                let Some(ps) = paged else {
+                    anyhow::bail!("paged session on a backend without a configured pool");
+                };
+                cache.reserve_append(&mut || ps.alloc_evicting())?;
+                Ok(model_q_forward_step(cfg, params, blocks, cache, tok))
+            }
+            _ => anyhow::bail!("session does not belong to a KV-cached backend"),
+        }
+    }
+
+    fn decode_batch(
+        &mut self,
+        sessions: &mut [&mut Session],
+        tokens: &[i32],
+    ) -> Vec<Result<Vec<f32>>> {
+        let artifact = self.artifact();
+        let QuantizedBackend {
+            cfg,
+            params,
+            blocks,
+            paged,
+        } = self;
+        let KvBatch {
+            mut out,
+            rows,
+            mut caches,
+            toks,
+            paged_rows,
+            paged_caches,
+            paged_toks,
+        } = partition_kv_batch(artifact, cfg.vocab, sessions, tokens);
+        let logits =
+            model_q_forward_step_batch(cfg, params, blocks, &mut caches, &toks, &Pool::auto());
+        for (i, row) in rows.into_iter().zip(logits) {
+            out[i] = Some(Ok(row));
+        }
+        let (ready_rows, mut ready_caches, ready_toks) =
+            reserve_paged_rows(paged, &mut out, paged_rows, paged_caches, paged_toks);
+        let logits = model_q_forward_step_batch(
+            cfg,
+            params,
+            blocks,
+            &mut ready_caches,
+            &ready_toks,
+            &Pool::auto(),
+        );
+        for (i, row) in ready_rows.into_iter().zip(logits) {
+            out[i] = Some(Ok(row));
+        }
+        resolve_rows(out)
+    }
+
+    fn oracle_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(!tokens.is_empty(), "oracle needs at least one token");
+        let toks = as_vocab_tokens(self.cfg.vocab, tokens);
+        let all =
+            model_q_forward(&self.cfg, &self.params, &self.blocks, &toks, toks.len());
         Ok(all[(toks.len() - 1) * self.cfg.vocab..].to_vec())
     }
 
@@ -994,8 +1168,12 @@ mod tests {
         let params = init_params(&cfg, &mut Rng::new(1));
         assert_eq!(ServedModel::Dense(params.clone()).artifact(), "dense_kv");
         assert_eq!(
-            ServedModel::Compressed(params, Vec::new()).artifact(),
+            ServedModel::Compressed(params.clone(), Vec::new()).artifact(),
             "lowrank_kv"
+        );
+        assert_eq!(
+            ServedModel::Quantized(params, Vec::new()).artifact(),
+            "quant_kv"
         );
     }
 
@@ -1003,7 +1181,29 @@ mod tests {
     fn compressed_backend_rejects_wrong_block_count() {
         let cfg = Config::builtin("tiny").unwrap();
         let params = init_params(&cfg, &mut Rng::new(3));
-        assert!(CompressedBackend::new(cfg, params, Vec::new()).is_err());
+        assert!(CompressedBackend::new(cfg.clone(), params.clone(), Vec::new()).is_err());
+        assert!(QuantizedBackend::new(cfg, params, Vec::new()).is_err());
+    }
+
+    #[test]
+    fn quantized_sessions_enforce_ownership() {
+        let cfg = Config::builtin("tiny").unwrap();
+        let params = init_params(&cfg, &mut Rng::new(21));
+        let blocks: Vec<QuantBlockFactors> = (0..cfg.n_layers)
+            .map(|i| {
+                let bf = crate::model::lowrank::exact_factors(&cfg, &params, i);
+                QuantBlockFactors::from_block(&cfg, &bf).unwrap()
+            })
+            .collect();
+        let mut quant = QuantizedBackend::new(cfg.clone(), params.clone(), blocks).unwrap();
+        let mut dense = DenseBackend::new(cfg, params);
+        let Prefill { mut session, .. } = quant.prefill(&[b'a' as i32]).unwrap();
+        assert_eq!(session.backend(), "quant_kv");
+        // a dense backend must refuse the quantized session, and vice versa
+        assert!(dense.decode_step(&mut session, b'b' as i32).is_err());
+        assert!(quant.decode_step(&mut session, b'b' as i32).is_ok());
+        let Prefill { mut session, .. } = dense.prefill(&[b'a' as i32]).unwrap();
+        assert!(quant.decode_step(&mut session, b'b' as i32).is_err());
     }
 
     fn bits_eq(a: &[f32], b: &[f32]) -> bool {

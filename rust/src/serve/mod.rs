@@ -31,10 +31,11 @@
 //!   guaranteed **bitwise token-identical** to the cached path.
 //! - **Backends**: the decode loop is generic over [`ModelBackend`] —
 //!   dense ([`DenseBackend`]), low-rank compressed
-//!   ([`CompressedBackend`]), or the artifact-free [`SyntheticBackend`]
-//!   for tests and load experiments. All three are artifact-free: dense
-//!   and compressed decode through the KV-cached pure-Rust reference
-//!   forward.
+//!   ([`CompressedBackend`]), int8-quantized low-rank
+//!   ([`QuantizedBackend`], fused-dequant kernels over the same KV
+//!   machinery; see README "Quantized serving"), or the artifact-free
+//!   [`SyntheticBackend`] for tests and load experiments. All decode
+//!   through KV-cached pure-Rust reference forwards.
 //! - **HTTP front door**: [`http::HttpServer`] exposes the same engine
 //!   over a pure-`std::net` HTTP/1.1 endpoint (`POST /v1/completions`,
 //!   chunked SSE token streaming, strict request limits, 429/408/499
@@ -91,8 +92,8 @@ pub mod metrics;
 pub mod request;
 
 pub use backend::{
-    CompressedBackend, DenseBackend, ModelBackend, Prefill, ServedModel, Session,
-    SyntheticBackend,
+    CompressedBackend, DenseBackend, ModelBackend, Prefill, QuantizedBackend, ServedModel,
+    Session, SyntheticBackend,
 };
 pub use engine::{Completion, DecodeMode, Server, ServerOptions, Submitter, WaitError};
 pub use http::{HttpOptions, HttpServer};

@@ -1,13 +1,19 @@
 //! Binary tensor archive: the on-disk format for model weights, optimizer
 //! state and cached activations ("`.aat`" — AA-SVD tensors).
 //!
-//! Layout (little-endian):
+//! Version 1 layout (little-endian, f32-only):
 //!   magic  b"AAT1"
 //!   u32    n_tensors
 //!   per tensor:
 //!     u32        name_len, name bytes (utf-8)
 //!     u32        n_dims,  u64 dims[n_dims]
 //!     u64        data_len (f32 count), f32 data[data_len]
+//!
+//! Version 2 (b"AAT2") adds one dtype byte per record, right after the
+//! name (0 = f32, 1 = i8), so quantized artifacts store int8 factor
+//! matrices at their real size. Readers accept both magics; writers emit
+//! AAT1 whenever no i8 tensor is present, so every pre-quantization
+//! artifact stays byte-identical.
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -35,9 +41,25 @@ impl Tensor {
     }
 }
 
+/// An int8 tensor (AAT2 records with dtype byte 1); payload is raw i8
+/// bytes, dequantization scales travel as a sibling f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI8 {
+    pub dims: Vec<usize>,
+    pub data: Vec<i8>,
+}
+
+impl TensorI8 {
+    pub fn new(dims: Vec<usize>, data: Vec<i8>) -> TensorI8 {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        TensorI8 { dims, data }
+    }
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct TensorArchive {
     pub tensors: BTreeMap<String, Tensor>,
+    pub tensors_i8: BTreeMap<String, TensorI8>,
 }
 
 impl TensorArchive {
@@ -46,23 +68,52 @@ impl TensorArchive {
     }
 
     pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors_i8.remove(name);
         self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn insert_i8(&mut self, name: &str, t: TensorI8) {
+        self.tensors.remove(name);
+        self.tensors_i8.insert(name.to_string(), t);
     }
 
     pub fn get(&self, name: &str) -> Option<&Tensor> {
         self.tensors.get(name)
     }
 
+    pub fn get_i8(&self, name: &str) -> Option<&TensorI8> {
+        self.tensors_i8.get(name)
+    }
+
     /// Serialize to the on-disk byte layout — the exact bytes [`save`]
-    /// writes (tensors in name order).
+    /// writes (tensors in name order; AAT1 when every tensor is f32,
+    /// AAT2 as soon as one int8 tensor is present).
     ///
     /// [`save`]: TensorArchive::save
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut buf: Vec<u8> = Vec::new();
-        buf.extend_from_slice(b"AAT1");
-        buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
-        for (name, t) in &self.tensors {
-            tensor_bytes_into(&mut buf, name, t);
+        if self.tensors_i8.is_empty() {
+            buf.extend_from_slice(b"AAT1");
+            buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+            for (name, t) in &self.tensors {
+                tensor_bytes_into(&mut buf, name, t);
+            }
+            return buf;
+        }
+        buf.extend_from_slice(b"AAT2");
+        let total = self.tensors.len() + self.tensors_i8.len();
+        buf.extend_from_slice(&(total as u32).to_le_bytes());
+        // one global name order across both dtypes (insert/insert_i8 keep
+        // the maps disjoint)
+        let mut names: Vec<&String> =
+            self.tensors.keys().chain(self.tensors_i8.keys()).collect();
+        names.sort();
+        for name in names {
+            if let Some(t) = self.tensors.get(name.as_str()) {
+                tensor_bytes_into_v2(&mut buf, name, t);
+            } else if let Some(t) = self.tensors_i8.get(name.as_str()) {
+                tensor_i8_bytes_into_v2(&mut buf, name, t);
+            }
         }
         buf
     }
@@ -93,35 +144,52 @@ impl TensorArchive {
             *pos += n;
             Ok(s)
         };
-        if take(&mut pos, 4)? != b"AAT1" {
-            bail!("bad magic: not a tensor archive");
-        }
+        let v2 = match take(&mut pos, 4)? {
+            b"AAT1" => false,
+            b"AAT2" => true,
+            _ => bail!("bad magic: not a tensor archive"),
+        };
         let n_tensors = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
         let mut arch = TensorArchive::new();
         for _ in 0..n_tensors {
             let name_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
             let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())?;
+            let dtype = if v2 { take(&mut pos, 1)?[0] } else { DTYPE_F32 };
             let n_dims = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
             let mut dims = Vec::with_capacity(n_dims);
             for _ in 0..n_dims {
                 dims.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into()?) as usize);
             }
             let len = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?) as usize;
-            let bytes = take(&mut pos, len * 4)?;
-            let data: Vec<f32> = bytes
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                .collect();
-            if dims.iter().product::<usize>() != data.len() {
+            if dims.iter().product::<usize>() != len {
                 bail!("tensor '{name}' dims/data mismatch");
             }
-            arch.tensors.insert(name, Tensor { dims, data });
+            match dtype {
+                DTYPE_F32 => {
+                    let bytes = take(&mut pos, len * 4)?;
+                    let data: Vec<f32> = bytes
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    arch.tensors.insert(name, Tensor { dims, data });
+                }
+                DTYPE_I8 => {
+                    let bytes = take(&mut pos, len)?;
+                    let data: Vec<i8> = bytes.iter().map(|&b| b as i8).collect();
+                    arch.tensors_i8.insert(name, TensorI8 { dims, data });
+                }
+                d => bail!("tensor '{name}' has unknown dtype {d}"),
+            }
         }
         Ok(arch)
     }
 }
 
-/// Serialize one named tensor record (the per-tensor wire layout).
+/// AAT2 dtype bytes.
+const DTYPE_F32: u8 = 0;
+const DTYPE_I8: u8 = 1;
+
+/// Serialize one named tensor record (the AAT1 per-tensor wire layout).
 fn tensor_bytes_into(buf: &mut Vec<u8>, name: &str, t: &Tensor) {
     buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
     buf.extend_from_slice(name.as_bytes());
@@ -132,6 +200,32 @@ fn tensor_bytes_into(buf: &mut Vec<u8>, name: &str, t: &Tensor) {
     buf.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
     for &x in &t.data {
         buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// AAT2 record header: name, dtype byte, dims, element count.
+fn record_header_v2(buf: &mut Vec<u8>, name: &str, dtype: u8, dims: &[usize], len: usize) {
+    buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+    buf.extend_from_slice(name.as_bytes());
+    buf.push(dtype);
+    buf.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+    for &d in dims {
+        buf.extend_from_slice(&(d as u64).to_le_bytes());
+    }
+    buf.extend_from_slice(&(len as u64).to_le_bytes());
+}
+
+fn tensor_bytes_into_v2(buf: &mut Vec<u8>, name: &str, t: &Tensor) {
+    record_header_v2(buf, name, DTYPE_F32, &t.dims, t.data.len());
+    for &x in &t.data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn tensor_i8_bytes_into_v2(buf: &mut Vec<u8>, name: &str, t: &TensorI8) {
+    record_header_v2(buf, name, DTYPE_I8, &t.dims, t.data.len());
+    for &x in &t.data {
+        buf.push(x as u8);
     }
 }
 
@@ -174,12 +268,30 @@ pub struct ArchiveWriter {
     file: std::io::BufWriter<std::fs::File>,
     declared: usize,
     written: usize,
+    /// AAT2 stream: dtype byte per record, i8 tensors allowed
+    v2: bool,
     hash: crate::util::hash::Fnv64,
 }
 
 impl ArchiveWriter {
-    /// Start an archive that will hold exactly `n_tensors` tensors.
+    /// Start an AAT1 (f32-only) archive holding exactly `n_tensors`.
     pub fn create(path: impl AsRef<Path>, n_tensors: usize) -> Result<ArchiveWriter> {
+        Self::create_versioned(path, n_tensors, false)
+    }
+
+    /// Start an AAT2 archive: records carry a dtype byte and may be int8
+    /// ([`append_i8`]) — the quantized-artifact stream format.
+    ///
+    /// [`append_i8`]: ArchiveWriter::append_i8
+    pub fn create_v2(path: impl AsRef<Path>, n_tensors: usize) -> Result<ArchiveWriter> {
+        Self::create_versioned(path, n_tensors, true)
+    }
+
+    fn create_versioned(
+        path: impl AsRef<Path>,
+        n_tensors: usize,
+        v2: bool,
+    ) -> Result<ArchiveWriter> {
         let path = path.as_ref().to_path_buf();
         if let Some(parent) = path.parent() {
             if !parent.as_os_str().is_empty() {
@@ -196,10 +308,11 @@ impl ArchiveWriter {
             file: std::io::BufWriter::new(file),
             declared: n_tensors,
             written: 0,
+            v2,
             hash: crate::util::hash::Fnv64::new(),
         };
         let mut header = Vec::with_capacity(8);
-        header.extend_from_slice(b"AAT1");
+        header.extend_from_slice(if v2 { b"AAT2" } else { b"AAT1" });
         header.extend_from_slice(&(n_tensors as u32).to_le_bytes());
         w.emit(&header)?;
         Ok(w)
@@ -222,7 +335,31 @@ impl ArchiveWriter {
             self.declared
         );
         let mut rec = Vec::new();
-        tensor_bytes_into(&mut rec, name, t);
+        if self.v2 {
+            tensor_bytes_into_v2(&mut rec, name, t);
+        } else {
+            tensor_bytes_into(&mut rec, name, t);
+        }
+        self.emit(&rec)?;
+        self.written += 1;
+        Ok(())
+    }
+
+    /// Append an int8 tensor (AAT2 streams only).
+    pub fn append_i8(&mut self, name: &str, t: &TensorI8) -> Result<()> {
+        anyhow::ensure!(
+            self.v2,
+            "archive {} is AAT1 (f32-only); int8 tensors need create_v2",
+            self.path.display()
+        );
+        anyhow::ensure!(
+            self.written < self.declared,
+            "archive {} declared {} tensors, '{name}' would be one more",
+            self.path.display(),
+            self.declared
+        );
+        let mut rec = Vec::new();
+        tensor_i8_bytes_into_v2(&mut rec, name, t);
         self.emit(&rec)?;
         self.written += 1;
         Ok(())
@@ -312,5 +449,78 @@ mod tests {
     #[should_panic]
     fn tensor_dims_must_match_data() {
         Tensor::new(vec![2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn f32_only_archives_stay_aat1() {
+        let mut a = TensorArchive::new();
+        a.insert("w", Tensor::new(vec![3], vec![1., 2., 3.]));
+        let bytes = a.to_bytes();
+        assert_eq!(&bytes[..4], b"AAT1", "pre-quantization artifacts must not change");
+    }
+
+    #[test]
+    fn mixed_archive_roundtrips_as_aat2() {
+        let mut a = TensorArchive::new();
+        a.insert("u_s", Tensor::new(vec![2, 3], vec![0.5; 6]));
+        a.insert_i8("u_q", TensorI8::new(vec![4, 3], vec![-128, -1, 0, 1, 127, 5, 6, 7, 8, 9, 10, 11]));
+        let bytes = a.to_bytes();
+        assert_eq!(&bytes[..4], b"AAT2");
+        let b = TensorArchive::from_bytes(&bytes).unwrap();
+        assert_eq!(a.tensors, b.tensors);
+        assert_eq!(a.tensors_i8, b.tensors_i8);
+        let p = tmpfile("mixed.aat");
+        a.save(&p).unwrap();
+        let c = TensorArchive::load(&p).unwrap();
+        assert_eq!(a.tensors_i8, c.tensors_i8);
+    }
+
+    #[test]
+    fn insert_keeps_dtype_maps_disjoint() {
+        let mut a = TensorArchive::new();
+        a.insert("x", Tensor::new(vec![1], vec![1.0]));
+        a.insert_i8("x", TensorI8::new(vec![1], vec![7]));
+        assert!(a.get("x").is_none());
+        assert_eq!(a.get_i8("x").unwrap().data, vec![7]);
+        a.insert("x", Tensor::new(vec![1], vec![2.0]));
+        assert!(a.get_i8("x").is_none());
+    }
+
+    #[test]
+    fn streaming_v2_writer_matches_archive_bytes() {
+        let mut a = TensorArchive::new();
+        a.insert_i8("a_q", TensorI8::new(vec![2, 2], vec![1, -2, 3, -4]));
+        a.insert("b_s", Tensor::new(vec![2], vec![0.25, 0.5]));
+        let p = tmpfile("stream_v2.aat");
+        // append in global name order — byte-identical to save()
+        let mut w = ArchiveWriter::create_v2(&p, 2).unwrap();
+        w.append_i8("a_q", a.get_i8("a_q").unwrap()).unwrap();
+        w.append("b_s", a.get("b_s").unwrap()).unwrap();
+        let hash = w.finish().unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(bytes, a.to_bytes());
+        assert_eq!(hash, crate::util::hash::fnv1a64(&bytes));
+    }
+
+    #[test]
+    fn v1_writer_rejects_i8_tensors() {
+        let p = tmpfile("v1_no_i8.aat");
+        let mut w = ArchiveWriter::create(&p, 1).unwrap();
+        let err = w
+            .append_i8("q", &TensorI8::new(vec![1], vec![3]))
+            .unwrap_err();
+        assert!(err.to_string().contains("create_v2"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        let mut a = TensorArchive::new();
+        a.insert_i8("q", TensorI8::new(vec![1], vec![3]));
+        let mut bytes = a.to_bytes();
+        // dtype byte sits right after the 4-byte magic + 4-byte count +
+        // 4-byte name length + 1-byte name
+        bytes[13] = 9;
+        let err = TensorArchive::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("dtype"), "{err}");
     }
 }

@@ -1,0 +1,11 @@
+// aasvd-lint: path=src/model/quant_lowrank.rs
+
+// The fused int8 kernels are a sanctioned banded-kernel file: their
+// accumulation order is exactly the f32 kernels' order, which is the
+// bitwise fused-vs-dequant contract. No violation.
+pub fn fused_dot(x: &[f32], q: &[i8], s: f32) -> f32 {
+    x.iter()
+        .zip(q)
+        .map(|(xv, &qv)| xv * (qv as f32 * s))
+        .sum::<f32>()
+}

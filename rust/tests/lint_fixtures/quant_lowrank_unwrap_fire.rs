@@ -1,0 +1,8 @@
+// aasvd-lint: path=src/model/quant_lowrank.rs
+
+// The int8 artifact decode path sits on the serving boot surface: a
+// panic here kills the server at load time instead of surfacing a typed
+// error naming the broken tensor. serve-unwrap fires.
+pub fn first_scale(scales: &[f32]) -> f32 {
+    *scales.first().unwrap()
+}

@@ -73,6 +73,13 @@ const EXPECTED: &[(&str, &[&str])] = &[
     ("manifest_unwrap_suppressed.rs", &[]),
     ("compress_run_unwrap_fire.rs", &["serve-unwrap"]),
     ("compress_run_env_var_fire.rs", &["env-var"]),
+    // src/model/quant_lowrank.rs policy: the fused int8 kernels join the
+    // sanctioned banded-kernel files (ordered float reductions are the
+    // bitwise fused-vs-dequant contract), and the artifact decode path
+    // joins the unwrap-hardened persistence surface — a panic there
+    // kills serving at artifact-load time
+    ("quant_lowrank_float_reduce_sanctioned.rs", &[]),
+    ("quant_lowrank_unwrap_fire.rs", &["serve-unwrap"]),
 ];
 
 #[test]

@@ -1,0 +1,334 @@
+//! End-to-end contract tests for the int8 quantized serving backend
+//! (see README "Quantized serving"):
+//!
+//! - the fused dequant kernels are **bitwise identical** to the
+//!   dequantize-then-f32 oracle at every tested thread count and batch
+//!   size — int8 storage must never change what gets computed, only
+//!   where the bytes live;
+//! - `QuantizedBackend` honors the decode_batch row contract (each
+//!   batched row bitwise equals its `decode_step` twin) and is bitwise
+//!   thread-count invariant;
+//! - the AAT2 quantized artifact round-trips exactly, and a backend
+//!   built from a reloaded artifact decodes bitwise like the original;
+//! - the backend survives randomized engine schedules (admit / cancel /
+//!   deadline churn) with the engine's lifecycle invariants intact;
+//! - the quantized model's perplexity stays within a small bound of the
+//!   f32 compressed model it was quantized from.
+
+use aasvd::data::{Batcher, Corpus, Domain};
+use aasvd::eval::{lowrank_ppl, quant_ppl};
+use aasvd::model::forward::{linear_batch, qlinear_batch};
+use aasvd::model::init::init_params;
+use aasvd::model::lowrank::{exact_factors, BlockFactors};
+use aasvd::model::quant_lowrank::{load_quant_blocks, save_quant_blocks, QuantBlockFactors};
+use aasvd::model::{Config, FlatStore};
+use aasvd::serve::{
+    DecodeMode, Event, GenParams, GenResponse, ModelBackend, QuantizedBackend, Server,
+    ServerOptions, Session, SubmitError,
+};
+use aasvd::util::pool::Pool;
+use aasvd::util::rng::Rng;
+use std::time::Duration;
+
+fn setup(seed: u64) -> (Config, FlatStore, Vec<BlockFactors>, Vec<QuantBlockFactors>) {
+    let cfg = Config::builtin("tiny").unwrap();
+    let params = init_params(&cfg, &mut Rng::new(seed));
+    let blocks: Vec<_> = (0..cfg.n_layers)
+        .map(|i| exact_factors(&cfg, &params, i))
+        .collect();
+    let qblocks: Vec<_> = blocks
+        .iter()
+        .map(|bf| QuantBlockFactors::from_block(&cfg, bf).unwrap())
+        .collect();
+    (cfg, params, blocks, qblocks)
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "{what}: bit mismatch at {i}: {x} vs {y}"
+        );
+    }
+}
+
+/// The tentpole contract at the kernel boundary: the fused int8 matvec
+/// equals dequantize-then-`linear_batch` bit for bit, at every tested
+/// (threads, batch) point.
+#[test]
+fn fused_kernel_matches_dequant_oracle_across_threads_and_batch() {
+    use aasvd::compress::QuantMatrix;
+    let (m, n) = (48, 36);
+    let mut rng = Rng::new(41);
+    let w: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+    let q = QuantMatrix::quantize(&w, m, n).unwrap();
+    let dw = q.dequantize();
+    for threads in [1usize, 4] {
+        let pool = Pool::exact(threads);
+        for rows in [1usize, 8] {
+            let x: Vec<f32> = (0..rows * n).map(|_| rng.normal()).collect();
+            let mut fused = vec![0.0f32; rows * m];
+            let mut oracle = vec![0.0f32; rows * m];
+            qlinear_batch(&x, &q, &pool, &mut fused);
+            linear_batch(&x, &dw, n, m, &pool, &mut oracle);
+            assert_bits_eq(&fused, &oracle, &format!("t={threads} B={rows}"));
+        }
+    }
+}
+
+/// The decode_batch row contract and thread-count invariance of the
+/// quantized backend at threads {1, 4} x B {1, 8}: every batched row is
+/// bitwise its decode_step twin, and the logits do not move with the
+/// worker count.
+#[test]
+fn quant_backend_rows_bitwise_stable_across_threads_and_batch() {
+    let (cfg, params, _blocks, qblocks) = setup(11);
+    let mut baseline: Option<Vec<Vec<f32>>> = None;
+    for threads in [1usize, 4] {
+        for rows in [1usize, 8] {
+            let mut be_batch =
+                QuantizedBackend::new(cfg.clone(), params.clone(), qblocks.clone()).unwrap();
+            let mut be_seq =
+                QuantizedBackend::new(cfg.clone(), params.clone(), qblocks.clone()).unwrap();
+            let mut batched: Vec<Session> = (0..rows)
+                .map(|r| be_batch.prefill(&[r as i32 + 1]).unwrap().session)
+                .collect();
+            let mut solo: Vec<Session> = (0..rows)
+                .map(|r| be_seq.prefill(&[r as i32 + 1]).unwrap().session)
+                .collect();
+            let mut final_rows: Vec<Vec<f32>> = vec![Vec::new(); rows];
+            for step in 0..6usize {
+                let toks: Vec<i32> = (0..rows).map(|r| ((r * 13 + step * 5) % 200) as i32).collect();
+                let out = Pool::exact(threads).install(|| {
+                    let mut refs: Vec<&mut Session> = batched.iter_mut().collect();
+                    be_batch.decode_batch(&mut refs, &toks)
+                });
+                for (r, row) in out.into_iter().enumerate() {
+                    let row = row.unwrap();
+                    let want = be_seq.decode_step(&mut solo[r], toks[r]).unwrap();
+                    assert_bits_eq(
+                        &row,
+                        &want,
+                        &format!("t={threads} B={rows} row {r} step {step}"),
+                    );
+                    final_rows[r] = row;
+                }
+            }
+            // the B=8 logits must be identical at every thread count
+            if rows == 8 {
+                match &baseline {
+                    None => baseline = Some(final_rows),
+                    Some(base) => {
+                        for (r, (a, b)) in base.iter().zip(&final_rows).enumerate() {
+                            assert_bits_eq(a, b, &format!("thread-invariance row {r}"));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// AAT2 artifact round-trip: reloaded blocks are field-for-field and
+/// bit-for-bit the saved ones, and a backend built from them decodes
+/// bitwise like a backend built from the originals.
+#[test]
+fn quant_artifact_roundtrips_and_decodes_identically() {
+    let (cfg, params, _blocks, qblocks) = setup(23);
+    let dir = std::env::temp_dir().join("aasvd-quantized-backend-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tiny_quant.aat");
+    save_quant_blocks(&qblocks, &path).unwrap();
+    let loaded = load_quant_blocks(&cfg, &path).unwrap();
+    assert_eq!(loaded.len(), qblocks.len());
+    for (a, b) in qblocks.iter().zip(&loaded) {
+        assert_eq!(a.attn_norm, b.attn_norm);
+        assert_eq!(a.mlp_norm, b.mlp_norm);
+        for (la, lb) in a.linears.iter().zip(&b.linears) {
+            for (qa, qb) in [(&la.u, &lb.u), (&la.v, &lb.v)] {
+                assert_eq!(qa.rows, qb.rows);
+                assert_eq!(qa.cols, qb.cols);
+                assert_eq!(qa.group_rows, qb.group_rows);
+                assert_eq!(qa.data, qb.data);
+                assert_bits_eq(&qa.scales, &qb.scales, "scales");
+            }
+        }
+    }
+
+    let mut be_orig = QuantizedBackend::new(cfg.clone(), params.clone(), qblocks).unwrap();
+    let mut be_load = QuantizedBackend::new(cfg.clone(), params.clone(), loaded).unwrap();
+    let mut s_orig = be_orig.prefill(&[3, 7, 11]).unwrap();
+    let mut s_load = be_load.prefill(&[3, 7, 11]).unwrap();
+    assert_bits_eq(&s_orig.logits, &s_load.logits, "prefill logits");
+    for tok in [5i32, 9, 2] {
+        let a = be_orig.decode_step(&mut s_orig.session, tok).unwrap();
+        let b = be_load.decode_step(&mut s_load.session, tok).unwrap();
+        assert_bits_eq(&a, &b, "decode logits");
+    }
+}
+
+/// The cached decode path through the quantized backend must match the
+/// full-prefix recompute oracle token for token — speed means nothing if
+/// the KV cache diverges over int8 factors.
+#[test]
+fn quant_cached_decode_matches_recompute_oracle() {
+    let (cfg, params, _blocks, qblocks) = setup(31);
+    let decode_one = |mode: DecodeMode| -> String {
+        let backend_cfg = cfg.clone();
+        let p = params.clone();
+        let qb = qblocks.clone();
+        let server = Server::with_backend(
+            cfg.clone(),
+            ServerOptions {
+                decode: mode,
+                ..Default::default()
+            },
+            move || {
+                Ok(
+                    Box::new(QuantizedBackend::new(backend_cfg.clone(), p.clone(), qb.clone())?)
+                        as Box<dyn ModelBackend>,
+                )
+            },
+        );
+        let resp = server
+            .submit(
+                "the cat",
+                GenParams {
+                    max_new_tokens: 32,
+                    temperature: 0.0,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+            .wait()
+            .unwrap();
+        server.shutdown();
+        resp.text
+    };
+    assert_eq!(
+        decode_one(DecodeMode::Cached),
+        decode_one(DecodeMode::Recompute),
+        "quantized cached decode diverged from the recompute oracle"
+    );
+}
+
+/// Randomized engine schedules over the quantized backend: admit /
+/// cancel / deadline churn must preserve the engine's lifecycle
+/// invariants (exactly one terminal event per request, balanced
+/// counters) with real int8 forwards underneath.
+#[test]
+fn quantized_backend_survives_randomized_schedules() {
+    let (cfg, params, _blocks, qblocks) = setup(47);
+    let mut rng = Rng::new(0x8B17_5EED);
+    for schedule in 0..25u32 {
+        let options = ServerOptions {
+            max_batch: 1 + rng.below(4),
+            max_queue: 1 + rng.below(6),
+            poll_interval: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let backend_cfg = cfg.clone();
+        let p = params.clone();
+        let qb = qblocks.clone();
+        let server = Server::with_backend(cfg.clone(), options, move || {
+            Ok(
+                Box::new(QuantizedBackend::new(backend_cfg.clone(), p.clone(), qb.clone())?)
+                    as Box<dyn ModelBackend>,
+            )
+        });
+
+        let n_requests = 1 + rng.below(6);
+        let mut accepted = Vec::new();
+        let mut rejected = 0usize;
+        for _ in 0..n_requests {
+            let prompt: String = (0..1 + rng.below(5))
+                .map(|_| char::from(b'a' + rng.below(24) as u8))
+                .collect();
+            let gen = GenParams {
+                max_new_tokens: rng.below(9),
+                temperature: 0.0,
+                deadline: if rng.below(6) == 0 {
+                    Some(Duration::ZERO)
+                } else {
+                    None
+                },
+                ..Default::default()
+            };
+            match server.submit(&prompt, gen) {
+                Ok(completion) => {
+                    if rng.below(5) == 0 {
+                        completion.cancel();
+                    }
+                    accepted.push(completion);
+                }
+                Err(SubmitError::Overloaded) => rejected += 1,
+                Err(e) => panic!("schedule {schedule}: unexpected submit error: {e}"),
+            }
+        }
+
+        let mut completed = 0usize;
+        let mut cancelled = 0usize;
+        for completion in accepted {
+            let mut terminals = 0usize;
+            let mut streamed = String::new();
+            let mut done: Option<GenResponse> = None;
+            while let Some(event) = completion.next_event() {
+                match event {
+                    Event::Token(t) => {
+                        assert_eq!(
+                            terminals, 0,
+                            "schedule {schedule}: token after a terminal event"
+                        );
+                        streamed.push(t.ch);
+                    }
+                    Event::Done(resp) => {
+                        terminals += 1;
+                        done = Some(resp);
+                    }
+                    Event::Cancelled { .. } => terminals += 1,
+                }
+            }
+            assert_eq!(
+                terminals, 1,
+                "schedule {schedule}: exactly one terminal event per request"
+            );
+            match done {
+                Some(resp) => {
+                    completed += 1;
+                    assert_eq!(
+                        resp.text, streamed,
+                        "schedule {schedule}: final text vs streamed tokens"
+                    );
+                }
+                None => cancelled += 1,
+            }
+        }
+
+        let metrics = server.shutdown();
+        assert_eq!(metrics.rejected, rejected, "schedule {schedule}: rejected");
+        assert_eq!(
+            n_requests,
+            completed + cancelled + metrics.rejected,
+            "schedule {schedule}: every submission has exactly one outcome"
+        );
+    }
+}
+
+/// Quantization is a compression step, not a lobotomy: the int8 model's
+/// perplexity on a synthetic corpus stays within 10% of the f32
+/// compressed model it was quantized from.
+#[test]
+fn quant_ppl_within_bound_of_f32_compressed() {
+    let (cfg, params, blocks, qblocks) = setup(53);
+    let corpus = Corpus::generate(Domain::Wiki, 20_000, 13);
+    let batches: Vec<_> = Batcher::new(cfg.batch, cfg.seq).sequential(&corpus.valid, 2);
+    assert!(!batches.is_empty());
+    let lr = lowrank_ppl(&cfg, &params, &blocks, &batches);
+    let q = quant_ppl(&cfg, &params, &qblocks, &batches);
+    assert!(lr.is_finite() && q.is_finite(), "lowrank {lr} quant {q}");
+    assert!(
+        (q - lr).abs() <= 0.10 * lr,
+        "quantized ppl {q} drifted beyond 10% of f32 compressed ppl {lr}"
+    );
+}
